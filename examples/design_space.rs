@@ -1,0 +1,72 @@
+//! Design-space exploration across the model zoo: burst length x memory
+//! policy x write-path width — the §VI-A / §IV-C trade-off studies plus
+//! the future-work NAS-style sweep suggested in §VII.
+//!
+//! Run with:  cargo run --release --example design_space
+
+use h2pipe::compiler::compile;
+use h2pipe::config::{BurstLengthPolicy, CompilerOptions, DeviceConfig};
+use h2pipe::coordinator::boot_weights;
+use h2pipe::nn::zoo;
+use h2pipe::sim::pipeline::{simulate, SimConfig};
+
+fn main() -> anyhow::Result<()> {
+    let device = DeviceConfig::stratix10_nx2100();
+    let cfg = SimConfig { images: 4, warmup_images: 1, ..Default::default() };
+
+    println!("=== burst length x memory policy (cycle-simulated) ===");
+    println!(
+        "{:<12} {:>7} {:>8} {:>9} {:>9} {:>8} {:>8}",
+        "model", "policy", "burst", "im/s", "lat(ms)", "M20K%", "freeze"
+    );
+    for name in ["resnet18", "resnet50", "vgg16"] {
+        let net = zoo::by_name(name).unwrap();
+        for all_hbm in [false, true] {
+            for bl in [8u32, 32] {
+                let mut o = CompilerOptions::default();
+                o.all_hbm = all_hbm;
+                o.burst_length = BurstLengthPolicy::Fixed(bl);
+                let plan = compile(&net, &device, &o)?;
+                let rep = simulate(&net, &plan, &cfg)?;
+                println!(
+                    "{:<12} {:>7} {:>8} {:>9.0} {:>9.2} {:>7.0}% {:>8.4}",
+                    name,
+                    if all_hbm { "allHBM" } else { "hybrid" },
+                    bl,
+                    rep.throughput,
+                    rep.latency * 1e3,
+                    100.0 * plan.usage.m20k_frac(&device),
+                    rep.freeze_fraction,
+                );
+            }
+        }
+    }
+
+    println!("\n=== write-path width (boot time vs registers, VGG-16) ===");
+    let net = zoo::vgg16();
+    println!("{:>9} {:>10} {:>9}", "width(b)", "boot(ms)", "regs");
+    for width in [16u32, 30, 64, 128, 256] {
+        let mut o = CompilerOptions::default();
+        o.write_path_bits = width;
+        let plan = compile(&net, &device, &o)?;
+        let r = boot_weights(&plan);
+        println!("{width:>9} {:>10.1} {:>9}", r.seconds * 1e3, r.write_path_registers);
+    }
+
+    println!("\n=== §VII NAS-style sweep: per-layer chain cap (ResNet-50) ===");
+    println!("{:>6} {:>9} {:>9} {:>7}", "cap", "im/s", "HBM lyrs", "M20K%");
+    for cap in [4u32, 8, 16, 32, 64] {
+        let mut o = CompilerOptions::default();
+        o.max_chains_per_layer = cap;
+        let net = zoo::resnet50();
+        let plan = compile(&net, &device, &o)?;
+        let rep = simulate(&net, &plan, &cfg)?;
+        println!(
+            "{cap:>6} {:>9.0} {:>9} {:>6.0}%",
+            rep.throughput,
+            plan.hbm_layers().count(),
+            100.0 * plan.usage.m20k_frac(&device)
+        );
+    }
+    Ok(())
+}

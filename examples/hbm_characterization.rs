@@ -1,0 +1,56 @@
+//! The §III-A characterization instrument as a standalone tool.
+//!
+//! Sweeps address patterns and burst lengths against the simulated HBM2
+//! pseudo-channel and prints the Fig. 3a/3b data, plus the §III-B
+//! three-chain interleaving check that justifies sharing one PC between
+//! three tensor chains.
+//!
+//! Run with:  cargo run --release --example hbm_characterization
+
+use h2pipe::config::DeviceConfig;
+use h2pipe::hbm::{AddressPattern, TrafficConfig, TrafficGen};
+
+fn main() {
+    let device = DeviceConfig::stratix10_nx2100();
+    let gen = TrafficGen::new(&device);
+    println!(
+        "HBM2 pseudo-channel: {}-bit @ {} MHz, peak {:.1} GB/s",
+        device.hbm.interface_bits,
+        device.hbm.controller_mhz,
+        device.hbm.pc_peak_bw() / 1e9
+    );
+
+    for pattern in [AddressPattern::Random, AddressPattern::Sequential, AddressPattern::Interleaved(3)]
+    {
+        println!("\n--- pattern {pattern:?} ---");
+        println!(
+            "{:>4} {:>9} {:>9} {:>10} {:>10} {:>10} {:>10}",
+            "BL", "read_eff", "write_eff", "lat_min", "lat_avg", "lat_max", "read GB/s"
+        );
+        for bl in [1u32, 2, 4, 8, 16, 32] {
+            let r = gen.run(&TrafficConfig::new(pattern, bl));
+            println!(
+                "{bl:>4} {:>9.3} {:>9.3} {:>8.0}ns {:>8.0}ns {:>8.0}ns {:>10.2}",
+                r.read_efficiency,
+                r.write_efficiency,
+                r.read_lat_min_ns,
+                r.read_lat_avg_ns,
+                r.read_lat_max_ns,
+                r.read_efficiency * device.hbm.pc_peak_bw() / 1e9,
+            );
+        }
+    }
+
+    // §III-B: can one PC sustain 3 tensor chains?
+    println!("\n--- §III-B provisioning: 3 chains x 80 bit @ 300 MHz = 9.0 GB/s demand per PC ---");
+    for bl in [8u32, 16, 32] {
+        let bw = gen.interleaved_read_bw(3, bl);
+        let demand = 3.0 * 80.0 / 8.0 * device.core_mhz as f64 * 1e6;
+        println!(
+            "BL{bl:<2}: interleaved-3 sustained {:.2} GB/s vs demand {:.2} GB/s -> {}",
+            bw / 1e9,
+            demand / 1e9,
+            if bw >= demand { "OK" } else { "INSUFFICIENT" }
+        );
+    }
+}

@@ -1,0 +1,88 @@
+//! End-to-end serving driver (the repository's E2E validation run).
+//!
+//! Boots the accelerator — weight download through the §IV-C write path —
+//! then serves a stream of batched inference requests through the L3
+//! coordinator: numerics come from the AOT-compiled PJRT artifact
+//! (JAX + Pallas int8 CNN, Python not involved at runtime), timing comes
+//! from both wall clock and the modelled FPGA pipeline. Results are
+//! recorded in EXPERIMENTS.md §E2E.
+//!
+//! Run with:  cargo run --release --example serve [-- <num_requests>]
+
+use std::sync::Arc;
+
+use h2pipe::compiler::compile;
+use h2pipe::config::{CompilerOptions, DeviceConfig};
+use h2pipe::coordinator::{boot_weights, InferenceServer, ServerConfig};
+use h2pipe::nn::zoo;
+use h2pipe::sim::pipeline::{simulate, SimConfig};
+use h2pipe::util::XorShift64;
+
+fn main() -> anyhow::Result<()> {
+    let n_requests: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(512);
+    let device = DeviceConfig::stratix10_nx2100();
+
+    // --- boot: compile the plan + download weights ----------------------
+    let net = zoo::resnet18();
+    let plan = compile(&net, &device, &CompilerOptions::default())?;
+    let boot = boot_weights(&plan);
+    println!(
+        "boot: {} MiB of weights -> HBM over the {}-bit write path in {:.1} ms (write eff {:.2})",
+        boot.bytes >> 20,
+        boot.write_path_bits,
+        boot.seconds * 1e3,
+        boot.hbm_write_efficiency
+    );
+
+    // --- modelled FPGA timing from the cycle simulator ------------------
+    let sim = simulate(&net, &plan, &SimConfig { images: 4, warmup_images: 1, ..Default::default() })?;
+    println!(
+        "modelled FPGA pipeline ({}): {:.0} im/s, {:.2} ms latency",
+        net.name,
+        sim.throughput,
+        sim.latency * 1e3
+    );
+
+    // --- serve real inference requests ----------------------------------
+    let mut cfg = ServerConfig::cifarnet("artifacts");
+    cfg.batch_size = 16;
+    cfg.modelled_image_s = 1.0 / sim.throughput;
+    let srv = Arc::new(InferenceServer::start(cfg)?);
+
+    // 4 closed-loop clients
+    let mut handles = Vec::new();
+    for t in 0..4u64 {
+        let s = srv.clone();
+        let per_client = n_requests / 4;
+        handles.push(std::thread::spawn(move || {
+            let mut rng = XorShift64::new(100 + t);
+            let mut ok = 0usize;
+            for _ in 0..per_client {
+                let img: Vec<i32> =
+                    (0..32 * 32 * 3).map(|_| rng.next_range(0, 255) as i32 - 128).collect();
+                if s.infer(img).is_ok() {
+                    ok += 1;
+                }
+            }
+            ok
+        }));
+    }
+    let mut total = 0usize;
+    for h in handles {
+        total += h.join().expect("client thread");
+    }
+    let rep = Arc::into_inner(srv).expect("all clients done").shutdown();
+
+    println!("served {total} requests from 4 concurrent clients");
+    println!(
+        "wall:     {:.0} im/s   mean {:.2} ms   p50 {:.2} ms   p99 {:.2} ms   mean batch {:.1}",
+        rep.wall_throughput, rep.mean_latency_ms, rep.p50_ms, rep.p99_ms, rep.mean_batch
+    );
+    println!(
+        "modelled: {:.0} im/s on the simulated Stratix 10 NX + HBM2 pipeline",
+        rep.modelled_throughput
+    );
+    assert_eq!(rep.completed as usize, total);
+    println!("serve OK");
+    Ok(())
+}

@@ -1,0 +1,76 @@
+"""AOT path: lower the L2 graphs to HLO *text* artifacts for the Rust runtime.
+
+HLO text — not a serialized ``HloModuleProto`` — is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which the published
+``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly. Pallas kernels are
+lowered ``interpret=True`` so the resulting HLO contains plain ops the CPU
+PJRT client can execute (real-TPU lowering would emit Mosaic custom-calls).
+
+Usage:  python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_export(name: str) -> tuple[str, dict]:
+    """Lower one EXPORTS entry; returns (hlo_text, manifest_entry)."""
+    fn_factory, (shape, dtype) = model.EXPORTS[name]
+    fn = fn_factory()
+    spec = jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+    lowered = jax.jit(fn).lower(spec)
+    text = to_hlo_text(lowered)
+    entry = {
+        "input_shape": list(shape),
+        "input_dtype": dtype,
+        "sha256": hashlib.sha256(text.encode()).hexdigest(),
+        "bytes": len(text),
+    }
+    return text, entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts", help="artifact output directory")
+    ap.add_argument(
+        "--only", default=None, help="lower a single export (default: all of model.EXPORTS)"
+    )
+    args = ap.parse_args()
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    names = [args.only] if args.only else list(model.EXPORTS)
+    manifest: dict[str, dict] = {}
+    for name in names:
+        text, entry = lower_export(name)
+        path = out_dir / f"{name}.hlo.txt"
+        path.write_text(text)
+        manifest[name] = entry
+        print(f"wrote {path} ({entry['bytes']} bytes)")
+
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2) + "\n")
+    print(f"wrote {out_dir / 'manifest.json'}")
+
+
+if __name__ == "__main__":
+    main()

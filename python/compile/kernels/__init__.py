@@ -1,0 +1,3 @@
+"""L1 Pallas kernels and their pure-jnp reference oracles."""
+
+from . import conv_aitb, pool, ref  # noqa: F401

@@ -1,0 +1,248 @@
+"""L1 Pallas kernels: the H2PIPE compute hot-spot, re-thought for TPU.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation):
+
+On the Stratix 10 NX, HPIPE feeds each AI tensor block a broadcast
+10-element weight vector per cycle and reuses it across 3 horizontally
+adjacent output pixels held in ping-pong registers, so a layer engine needs
+only 80 bits of weight per cycle (the number the whole HBM design of the
+paper is built around). The TPU analogue implemented here:
+
+  * the *weight tile is the streamed operand*: the weight BlockSpec
+    re-fetches the (KH, KW, Cin, BCo) tile for every output-row block,
+    mirroring "kernels are reloaded once per output line" — exactly the
+    traffic Eq. 2 of the paper counts;
+  * the *activation row block stays resident* (the ping-pong registers):
+    each grid step computes a (BH x Wo) output tile so one weight vector is
+    amortized over the whole output width, as in HPIPE's
+    full-width-parallel layer engines;
+  * the contraction is expressed as (BH*Wo, Cin) x (Cin, BCo) matmuls per
+    kernel-window tap — an MXU-shaped int8 -> int32 systolic contraction
+    rather than the FPGA's 10-lane dot products.
+
+All kernels run with ``interpret=True``: real-TPU lowering emits Mosaic
+custom-calls the CPU PJRT plugin cannot execute. Correctness is pinned to
+``ref.py`` by the pytest suite; TPU performance is *estimated* analytically
+(VMEM footprint / MXU utilization) in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+# Flip to False to debug through the (identical) jax-level semantics of the
+# kernels without the Pallas machinery.
+INTERPRET = True
+
+
+def _pick_block(n: int, target: int) -> int:
+    """Largest divisor of ``n`` that is <= ``target`` (>= 1)."""
+    target = max(1, min(n, target))
+    for b in range(target, 0, -1):
+        if n % b == 0:
+            return b
+    return 1
+
+
+def _requant(acc: jnp.ndarray, shift: int, relu: bool) -> jnp.ndarray:
+    """In-kernel requantization: int32 -> int8 (shared with ref semantics)."""
+    if shift > 0:
+        bias = jnp.where(acc >= 0, 1 << (shift - 1), (1 << (shift - 1)) - 1)
+        acc = (acc + bias) >> shift
+    if relu:
+        acc = jnp.maximum(acc, 0)
+    return jnp.clip(acc, -128, 127).astype(jnp.int8)
+
+
+def _conv_kernel(x_ref, w_ref, o_ref, *, bh, wo, stride, kh, kw, shift, relu):
+    """One (output-row-block, output-channel-block) grid step.
+
+    x_ref: (Hp, Wp, Cin) padded activations — resident block.
+    w_ref: (KH, KW, Cin, BCo) weight tile — streamed per grid step.
+    o_ref: (BH, Wo, BCo) output tile.
+    """
+    x = x_ref[...].astype(jnp.int32)
+    w = w_ref[...].astype(jnp.int32)
+    cin = x.shape[-1]
+    bco = w.shape[-1]
+    row_off = pl.program_id(0) * bh * stride
+    span = (bh - 1) * stride + 1
+    acc = jnp.zeros((bh * wo, bco), jnp.int32)
+    # Unrolled walk over the kernel window: each tap is one MXU-shaped
+    # matmul whose weight slice w[i, j] is broadcast over the whole
+    # (BH x Wo) output tile — the AI-TB weight-reuse pattern.
+    for i in range(kh):
+        for j in range(kw):
+            xs = lax.dynamic_slice(x, (row_off + i, 0, 0), (span, x.shape[1], cin))
+            xs = xs[::stride, j : j + (wo - 1) * stride + 1 : stride, :]
+            acc = acc + jnp.dot(
+                xs.reshape(bh * wo, cin), w[i, j], preferred_element_type=jnp.int32
+            )
+    o_ref[...] = _requant(acc.reshape(bh, wo, bco), shift, relu)
+
+
+def conv2d(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    stride: int = 1,
+    pad: int = 0,
+    shift: int = 0,
+    relu: bool = True,
+    block_rows: int = 8,
+    block_cout: int = 64,
+) -> jnp.ndarray:
+    """Dense int8 conv + requantize via the Pallas AI-TB-style kernel.
+
+    Args:
+      x: int8 (H, W, Cin).
+      w: int8 (KH, KW, Cin, Cout).
+      stride, pad: conv geometry.
+      shift: power-of-two requantization shift.
+      relu: fuse ReLU before saturation.
+      block_rows / block_cout: tile-size targets (rounded to divisors).
+
+    Returns:
+      int8 (Ho, Wo, Cout).
+    """
+    assert x.dtype == jnp.int8 and w.dtype == jnp.int8
+    h, ww_, cin = x.shape
+    kh, kw, wcin, cout = w.shape
+    assert wcin == cin, f"Cin mismatch {wcin} != {cin}"
+    ho = (h + 2 * pad - kh) // stride + 1
+    wo = (ww_ + 2 * pad - kw) // stride + 1
+    xp = jnp.pad(x, ((pad, pad), (pad, pad), (0, 0)))
+    # Trim padded input to exactly the receptive field of the output grid
+    # so in-kernel dynamic slices are always in bounds.
+    hp_need = (ho - 1) * stride + kh
+    wp_need = (wo - 1) * stride + kw
+    xp = xp[:hp_need, :wp_need, :]
+
+    bh = _pick_block(ho, block_rows)
+    bco = _pick_block(cout, block_cout)
+    grid = (ho // bh, cout // bco)
+
+    kern = functools.partial(
+        _conv_kernel, bh=bh, wo=wo, stride=stride, kh=kh, kw=kw, shift=shift, relu=relu
+    )
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            # Activations: resident (the "ping-pong registers").
+            pl.BlockSpec(xp.shape, lambda r, c: (0, 0, 0)),
+            # Weights: streamed tile per (row-block, cout-block) — the HBM
+            # -> burst-matching FIFO -> last-stage FIFO schedule.
+            pl.BlockSpec((kh, kw, cin, bco), lambda r, c: (0, 0, 0, c)),
+        ],
+        out_specs=pl.BlockSpec((bh, wo, bco), lambda r, c: (r, 0, c)),
+        out_shape=jax.ShapeDtypeStruct((ho, wo, cout), jnp.int8),
+        interpret=INTERPRET,
+    )(xp, w)
+
+
+def _dw_kernel(x_ref, w_ref, o_ref, *, bh, wo, stride, kh, kw, shift, relu):
+    """Depthwise grid step: x (Hp, Wp, BC), w (KH, KW, BC), o (BH, Wo, BC)."""
+    x = x_ref[...].astype(jnp.int32)
+    w = w_ref[...].astype(jnp.int32)
+    row_off = pl.program_id(0) * bh * stride
+    span = (bh - 1) * stride + 1
+    acc = jnp.zeros((bh, wo, x.shape[-1]), jnp.int32)
+    for i in range(kh):
+        for j in range(kw):
+            xs = lax.dynamic_slice(x, (row_off + i, 0, 0), (span, x.shape[1], x.shape[-1]))
+            xs = xs[::stride, j : j + (wo - 1) * stride + 1 : stride, :]
+            acc = acc + xs * w[i, j][None, None, :]
+    o_ref[...] = _requant(acc, shift, relu)
+
+
+def depthwise_conv2d(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    stride: int = 1,
+    pad: int = 0,
+    shift: int = 0,
+    relu: bool = True,
+    block_rows: int = 8,
+    block_c: int = 128,
+) -> jnp.ndarray:
+    """Depthwise int8 conv + requantize (x: (H, W, C), w: (KH, KW, C))."""
+    assert x.dtype == jnp.int8 and w.dtype == jnp.int8
+    h, ww_, c = x.shape
+    kh, kw, wc = w.shape
+    assert wc == c, f"C mismatch {wc} != {c}"
+    ho = (h + 2 * pad - kh) // stride + 1
+    wo = (ww_ + 2 * pad - kw) // stride + 1
+    xp = jnp.pad(x, ((pad, pad), (pad, pad), (0, 0)))
+    xp = xp[: (ho - 1) * stride + kh, : (wo - 1) * stride + kw, :]
+
+    bh = _pick_block(ho, block_rows)
+    bc = _pick_block(c, block_c)
+    grid = (ho // bh, c // bc)
+    kern = functools.partial(
+        _dw_kernel, bh=bh, wo=wo, stride=stride, kh=kh, kw=kw, shift=shift, relu=relu
+    )
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((xp.shape[0], xp.shape[1], bc), lambda r, c_: (0, 0, c_)),
+            pl.BlockSpec((kh, kw, bc), lambda r, c_: (0, 0, c_)),
+        ],
+        out_specs=pl.BlockSpec((bh, wo, bc), lambda r, c_: (r, 0, c_)),
+        out_shape=jax.ShapeDtypeStruct((ho, wo, c), jnp.int8),
+        interpret=INTERPRET,
+    )(xp, w)
+
+
+def _fc_kernel(x_ref, w_ref, o_ref, *, shift, relu):
+    """FC grid step: x (Cin,), w (Cin, BCo), o (BCo,)."""
+    x = x_ref[...].astype(jnp.int32)
+    w = w_ref[...].astype(jnp.int32)
+    acc = jnp.dot(x, w, preferred_element_type=jnp.int32)
+    o_ref[...] = _requant(acc, shift, relu)
+
+
+def fc(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    shift: int = 0,
+    relu: bool = False,
+    block_cout: int = 128,
+) -> jnp.ndarray:
+    """Fully connected int8 layer + requantize (x: (Cin,), w: (Cin, Cout))."""
+    assert x.dtype == jnp.int8 and w.dtype == jnp.int8
+    cin, cout = w.shape
+    assert x.shape == (cin,)
+    bco = _pick_block(cout, block_cout)
+    kern = functools.partial(_fc_kernel, shift=shift, relu=relu)
+    return pl.pallas_call(
+        kern,
+        grid=(cout // bco,),
+        in_specs=[
+            pl.BlockSpec((cin,), lambda c: (0,)),
+            pl.BlockSpec((cin, bco), lambda c: (0, c)),
+        ],
+        out_specs=pl.BlockSpec((bco,), lambda c: (c,)),
+        out_shape=jax.ShapeDtypeStruct((cout,), jnp.int8),
+        interpret=INTERPRET,
+    )(x, w)
+
+
+def vmem_footprint_bytes(
+    hp: int, wp: int, cin: int, kh: int, kw: int, bh: int, wo: int, bco: int
+) -> int:
+    """Analytic VMEM footprint of one conv grid step (bytes).
+
+    Used by the §Perf analysis: resident activations + streamed weight tile
+    + output tile + int32 accumulator.
+    """
+    act = hp * wp * cin  # int8
+    wt = kh * kw * cin * bco  # int8
+    out = bh * wo * bco  # int8
+    acc = bh * wo * bco * 4  # int32
+    return act + wt + out + acc

@@ -1,0 +1,85 @@
+"""L1 Pallas pooling kernels.
+
+Max pooling is the other on-chip compute unit HPIPE instantiates between
+conv engines; expressed here with the same resident-activation /
+line-blocked structure as the conv kernel so the whole network lowers
+through Pallas (interpret=True; see conv_aitb.py for the TPU-adaptation
+notes).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from .conv_aitb import INTERPRET, _pick_block
+
+
+def _maxpool_kernel(x_ref, o_ref, *, bh, wo, k, stride):
+    """One output-row-block grid step of max pooling."""
+    x = x_ref[...]
+    row_off = pl.program_id(0) * bh * stride
+    span = (bh - 1) * stride + 1
+    acc = jnp.full((bh, wo, x.shape[-1]), -128, jnp.int8)
+    for i in range(k):
+        for j in range(k):
+            xs = lax.dynamic_slice(x, (row_off + i, 0, 0), (span, x.shape[1], x.shape[-1]))
+            xs = xs[::stride, j : j + (wo - 1) * stride + 1 : stride, :]
+            acc = jnp.maximum(acc, xs)
+    o_ref[...] = acc
+
+
+def maxpool2d(
+    x: jnp.ndarray,
+    k: int,
+    stride: int,
+    pad: int = 0,
+    block_rows: int = 8,
+    block_c: int = 128,
+) -> jnp.ndarray:
+    """Pallas max pooling over int8 (H, W, C)."""
+    assert x.dtype == jnp.int8
+    h, w, c = x.shape
+    ho = (h + 2 * pad - k) // stride + 1
+    wo = (w + 2 * pad - k) // stride + 1
+    xp = jnp.pad(x, ((pad, pad), (pad, pad), (0, 0)), constant_values=-128)
+    xp = xp[: (ho - 1) * stride + k, : (wo - 1) * stride + k, :]
+    bh = _pick_block(ho, block_rows)
+    bc = _pick_block(c, block_c)
+    kern = functools.partial(_maxpool_kernel, bh=bh, wo=wo, k=k, stride=stride)
+    return pl.pallas_call(
+        kern,
+        grid=(ho // bh, c // bc),
+        in_specs=[pl.BlockSpec((xp.shape[0], xp.shape[1], bc), lambda r, ci: (0, 0, ci))],
+        out_specs=pl.BlockSpec((bh, wo, bc), lambda r, ci: (r, 0, ci)),
+        out_shape=jax.ShapeDtypeStruct((ho, wo, c), jnp.int8),
+        interpret=INTERPRET,
+    )(xp)
+
+
+def _gap_kernel(x_ref, o_ref, *, n):
+    """Global average pool: int8 (H, W, BC) -> int8 (BC,) with rounding."""
+    x = x_ref[...].astype(jnp.int32)
+    s = jnp.sum(x, axis=(0, 1))
+    avg = (s + n // 2) // n
+    o_ref[...] = jnp.clip(avg, -128, 127).astype(jnp.int8)
+
+
+def global_avgpool(x: jnp.ndarray, block_c: int = 256) -> jnp.ndarray:
+    """Pallas global average pooling over int8 (H, W, C) -> int8 (C,)."""
+    assert x.dtype == jnp.int8
+    h, w, c = x.shape
+    bc = _pick_block(c, block_c)
+    kern = functools.partial(_gap_kernel, n=h * w)
+    return pl.pallas_call(
+        kern,
+        grid=(c // bc,),
+        in_specs=[pl.BlockSpec((h, w, bc), lambda ci: (0, 0, ci))],
+        out_specs=pl.BlockSpec((bc,), lambda ci: (ci,)),
+        out_shape=jax.ShapeDtypeStruct((c,), jnp.int8),
+        interpret=INTERPRET,
+    )(x)

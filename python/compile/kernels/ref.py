@@ -1,0 +1,115 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground truth the L1 kernels are validated against in
+``python/tests/``. They intentionally use only stock ``jax.numpy`` /
+``jax.lax`` ops, no Pallas, so a bug cannot be shared between kernel and
+oracle.
+
+Numeric model (mirrors H2PIPE's 8-bit datapath, paper §VI-A):
+  * activations and weights are int8,
+  * accumulation is int32 (the AI-TB dot-product accumulator),
+  * requantization back to int8 uses a per-tensor power-of-two scale
+    (arithmetic shift with round-half-away-from-zero) followed by
+    saturation, optionally fused with ReLU.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def conv2d_int32(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1, pad: int = 0) -> jnp.ndarray:
+    """Dense 2-D convolution with int8 inputs and int32 accumulation.
+
+    Args:
+      x: int8 activations, shape (H, W, Cin).
+      w: int8 weights, shape (KH, KW, Cin, Cout).
+      stride: spatial stride (same in both dims).
+      pad: symmetric spatial zero padding.
+
+    Returns:
+      int32 accumulator tensor of shape (Ho, Wo, Cout).
+    """
+    assert x.dtype == jnp.int8 and w.dtype == jnp.int8
+    xf = x.astype(jnp.int32)[None]  # NHWC with N=1
+    wf = w.astype(jnp.int32)
+    out = lax.conv_general_dilated(
+        xf,
+        wf,
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=jnp.int32,
+    )
+    return out[0]
+
+
+def depthwise_conv2d_int32(
+    x: jnp.ndarray, w: jnp.ndarray, stride: int = 1, pad: int = 0
+) -> jnp.ndarray:
+    """Depthwise 2-D convolution, int8 in / int32 accumulate.
+
+    Args:
+      x: int8 activations, (H, W, C).
+      w: int8 weights, (KH, KW, C).
+    """
+    assert x.dtype == jnp.int8 and w.dtype == jnp.int8
+    c = x.shape[-1]
+    xf = x.astype(jnp.int32)[None]
+    wf = w.astype(jnp.int32)[:, :, None, :]  # HWIO with I=1, O=C
+    out = lax.conv_general_dilated(
+        xf,
+        wf,
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=c,
+        preferred_element_type=jnp.int32,
+    )
+    return out[0]
+
+
+def requantize(acc: jnp.ndarray, shift: int, relu: bool = True) -> jnp.ndarray:
+    """Requantize an int32 accumulator to int8 by a power-of-two scale.
+
+    Round-half-away-from-zero (a hardware adder + arithmetic shift), then
+    saturate to [-128, 127]; optional fused ReLU.
+    """
+    assert acc.dtype == jnp.int32
+    if shift > 0:
+        bias = jnp.where(acc >= 0, 1 << (shift - 1), (1 << (shift - 1)) - 1)
+        acc = (acc + bias) >> shift
+    if relu:
+        acc = jnp.maximum(acc, 0)
+    return jnp.clip(acc, -128, 127).astype(jnp.int8)
+
+
+def maxpool2d(x: jnp.ndarray, k: int, stride: int, pad: int = 0) -> jnp.ndarray:
+    """Max pooling over (H, W, C) int8 input."""
+    assert x.dtype == jnp.int8
+    return lax.reduce_window(
+        x,
+        jnp.array(-128, jnp.int8),
+        lax.max,
+        window_dimensions=(k, k, 1),
+        window_strides=(stride, stride, 1),
+        padding=[(pad, pad), (pad, pad), (0, 0)],
+    )
+
+
+def global_avgpool_int32(x: jnp.ndarray) -> jnp.ndarray:
+    """Global average pool: int8 (H, W, C) -> int32 (C,), rounded division.
+
+    Mirrors an accumulate-then-divide hardware head.
+    """
+    assert x.dtype == jnp.int8
+    s = jnp.sum(x.astype(jnp.int32), axis=(0, 1))
+    n = x.shape[0] * x.shape[1]
+    return (s + n // 2) // n
+
+
+def fc_int32(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Fully-connected layer: int8 (Cin,) x int8 (Cin, Cout) -> int32."""
+    assert x.dtype == jnp.int8 and w.dtype == jnp.int8
+    return jnp.dot(x.astype(jnp.int32), w.astype(jnp.int32), preferred_element_type=jnp.int32)

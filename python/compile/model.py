@@ -1,0 +1,227 @@
+"""L2: int8 CNN graphs in JAX, built on the L1 Pallas kernels.
+
+Everything here runs at *build time only*. ``aot.py`` lowers the exported
+entry points to HLO text; the Rust runtime executes the artifacts and
+Python never appears on the request path.
+
+Two graph families are exported:
+
+  * ``cifarnet`` — the end-to-end serving model: a ~0.27M-parameter int8
+    CNN over 32x32x3 images producing 10 logits. Small enough that the
+    CPU-PJRT interpret-mode artifact executes in milliseconds, yet it
+    exercises every kernel flavour (dense conv, depthwise conv, maxpool,
+    global-avgpool, FC).
+  * ``resnet_block`` — one ResNet basic block at 56x56x64, the shape the
+    H2PIPE compiler maps to layer engines; used by the quickstart example
+    and the kernel-level §Perf measurements.
+
+Weights are generated deterministically from a seed: the reproduction
+validates *numerics against the reference oracle*, not ImageNet accuracy
+(DESIGN.md, hardware-substitution table).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import conv_aitb as K
+from .kernels import pool as P
+from .kernels import ref as R
+
+
+def _int8_weights(key: jax.Array, shape: tuple[int, ...]) -> jnp.ndarray:
+    """Deterministic int8 weight tensor in [-64, 63] (headroom for acc)."""
+    return jax.random.randint(key, shape, -64, 64, dtype=jnp.int32).astype(jnp.int8)
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    """Geometry of one conv layer in a model definition."""
+
+    name: str
+    kind: str  # "conv" | "dw" | "pool" | "gap" | "fc"
+    k: int = 3
+    stride: int = 1
+    pad: int = 1
+    out_c: int = 0
+    shift: int = 7  # requantization shift keeping int8 ranges stable
+    relu: bool = True
+
+
+# CifarNet: conv32 -> conv64/s2 -> dw64 -> conv128/s2 -> gap -> fc10
+CIFARNET: tuple[ConvSpec, ...] = (
+    ConvSpec("conv1", "conv", k=3, stride=1, pad=1, out_c=32),
+    ConvSpec("conv2", "conv", k=3, stride=2, pad=1, out_c=64),
+    ConvSpec("dw3", "dw", k=3, stride=1, pad=1),
+    ConvSpec("conv4", "conv", k=3, stride=2, pad=1, out_c=128),
+    ConvSpec("gap", "gap"),
+    ConvSpec("fc", "fc", out_c=10, relu=False),
+)
+
+
+def init_params(specs: tuple[ConvSpec, ...], in_c: int, seed: int = 0) -> dict[str, jnp.ndarray]:
+    """Deterministic parameter set for a spec list."""
+    params: dict[str, jnp.ndarray] = {}
+    key = jax.random.PRNGKey(seed)
+    c = in_c
+    for s in specs:
+        key, sub = jax.random.split(key)
+        if s.kind == "conv":
+            params[s.name] = _int8_weights(sub, (s.k, s.k, c, s.out_c))
+            c = s.out_c
+        elif s.kind == "dw":
+            params[s.name] = _int8_weights(sub, (s.k, s.k, c))
+        elif s.kind == "fc":
+            params[s.name] = _int8_weights(sub, (c, s.out_c))
+            c = s.out_c
+    return params
+
+
+def _forward(
+    specs: tuple[ConvSpec, ...],
+    params: dict[str, jnp.ndarray],
+    x: jnp.ndarray,
+    conv,
+    dwconv,
+    fc,
+    maxpool,
+    gap,
+) -> jnp.ndarray:
+    """Shared forward walker, parameterized over the op implementations so
+    the same graph runs through the Pallas kernels or the reference."""
+    for s in specs:
+        if s.kind == "conv":
+            x = conv(x, params[s.name], s.stride, s.pad, s.shift, s.relu)
+        elif s.kind == "dw":
+            x = dwconv(x, params[s.name], s.stride, s.pad, s.shift, s.relu)
+        elif s.kind == "pool":
+            x = maxpool(x, s.k, s.stride, s.pad)
+        elif s.kind == "gap":
+            x = gap(x)
+        elif s.kind == "fc":
+            x = fc(x, params[s.name], s.shift, s.relu)
+        else:
+            raise ValueError(f"unknown layer kind {s.kind}")
+    return x
+
+
+def forward_pallas(specs, params, x):
+    """Forward pass through the L1 Pallas kernels (what gets AOT-lowered)."""
+    return _forward(
+        specs,
+        params,
+        x,
+        conv=lambda x, w, s, p, sh, r: K.conv2d(x, w, stride=s, pad=p, shift=sh, relu=r),
+        dwconv=lambda x, w, s, p, sh, r: K.depthwise_conv2d(
+            x, w, stride=s, pad=p, shift=sh, relu=r
+        ),
+        fc=lambda x, w, sh, r: K.fc(x, w, shift=sh, relu=r),
+        maxpool=P.maxpool2d,
+        gap=P.global_avgpool,
+    )
+
+
+def forward_ref(specs, params, x):
+    """Same graph through the pure-jnp oracles (pytest ground truth)."""
+    return _forward(
+        specs,
+        params,
+        x,
+        conv=lambda x, w, s, p, sh, r: R.requantize(R.conv2d_int32(x, w, s, p), sh, r),
+        dwconv=lambda x, w, s, p, sh, r: R.requantize(
+            R.depthwise_conv2d_int32(x, w, s, p), sh, r
+        ),
+        fc=lambda x, w, sh, r: R.requantize(R.fc_int32(x, w)[None, None, :], sh, r)[0, 0],
+        maxpool=R.maxpool2d,
+        gap=lambda x: R.requantize(R.global_avgpool_int32(x)[None, None, :], 0, False)[0, 0],
+    )
+
+
+def cifarnet_fn(seed: int = 0) -> Callable[[jnp.ndarray], tuple[jnp.ndarray]]:
+    """The exported serving entry point: (32,32,3) image -> logits (10,).
+
+    Weights are closed over as constants so the Rust hot path passes only
+    the image (weights travel to "HBM" through the simulated write path on
+    the timing side; the functional side bakes them into the executable).
+
+    Boundary dtype is int32: the ``xla`` crate's literal API has no i8, so
+    the artifact casts to the int8 datapath on entry and widens the int8
+    logits back to int32 on exit.
+    """
+    params = init_params(CIFARNET, 3, seed)
+
+    def fn(img: jnp.ndarray) -> tuple[jnp.ndarray]:
+        x = jnp.clip(img, -128, 127).astype(jnp.int8)
+        return (forward_pallas(CIFARNET, params, x).astype(jnp.int32),)
+
+    return fn
+
+
+def cifarnet_ref_fn(seed: int = 0) -> Callable[[jnp.ndarray], tuple[jnp.ndarray]]:
+    """Reference-path twin of :func:`cifarnet_fn` for artifact validation."""
+    params = init_params(CIFARNET, 3, seed)
+
+    def fn(img: jnp.ndarray) -> tuple[jnp.ndarray]:
+        x = jnp.clip(img, -128, 127).astype(jnp.int8)
+        return (forward_ref(CIFARNET, params, x).astype(jnp.int32),)
+
+    return fn
+
+
+RESNET_BLOCK_C = 64
+RESNET_BLOCK_HW = 56
+
+
+def resnet_block_fn(seed: int = 0) -> Callable[[jnp.ndarray], tuple[jnp.ndarray]]:
+    """One ResNet basic block (two 3x3 convs + residual add) at 56x56x64.
+
+    This is the layer-engine-shaped compute the H2PIPE compiler schedules;
+    exported as its own artifact for the quickstart and perf benches.
+    """
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    c = RESNET_BLOCK_C
+    w1 = _int8_weights(k1, (3, 3, c, c))
+    w2 = _int8_weights(k2, (3, 3, c, c))
+
+    def fn(x32: jnp.ndarray) -> tuple[jnp.ndarray]:
+        x = jnp.clip(x32, -128, 127).astype(jnp.int8)
+        y = K.conv2d(x, w1, stride=1, pad=1, shift=7, relu=True)
+        y = K.conv2d(y, w2, stride=1, pad=1, shift=7, relu=False)
+        out = jnp.clip(y.astype(jnp.int32) + x.astype(jnp.int32), -128, 127).astype(jnp.int8)
+        return (jnp.maximum(out, 0).astype(jnp.int32),)
+
+    return fn
+
+
+def resnet_block_ref_fn(seed: int = 0) -> Callable[[jnp.ndarray], tuple[jnp.ndarray]]:
+    """Reference twin of :func:`resnet_block_fn`."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    c = RESNET_BLOCK_C
+    w1 = _int8_weights(k1, (3, 3, c, c))
+    w2 = _int8_weights(k2, (3, 3, c, c))
+
+    def fn(x32: jnp.ndarray) -> tuple[jnp.ndarray]:
+        x = jnp.clip(x32, -128, 127).astype(jnp.int8)
+        y = R.requantize(R.conv2d_int32(x, w1, 1, 1), 7, True)
+        y = R.requantize(R.conv2d_int32(y, w2, 1, 1), 7, False)
+        out = jnp.clip(y.astype(jnp.int32) + x.astype(jnp.int32), -128, 127).astype(jnp.int8)
+        return (jnp.maximum(out, 0).astype(jnp.int32),)
+
+    return fn
+
+
+#: Exported artifacts: name -> (fn factory, example-input shape/dtype).
+#: Boundary dtype is int32 (see cifarnet_fn docstring).
+EXPORTS: dict[str, tuple[Callable, tuple[tuple[int, ...], str]]] = {
+    "cifarnet": (cifarnet_fn, ((32, 32, 3), "int32")),
+    "resnet_block": (
+        resnet_block_fn,
+        ((RESNET_BLOCK_HW, RESNET_BLOCK_HW, RESNET_BLOCK_C), "int32"),
+    ),
+}

@@ -1,0 +1,174 @@
+"""Kernel-vs-reference correctness: the core numeric signal of the repo.
+
+Hypothesis sweeps shapes / strides / channel counts; every Pallas kernel
+output must match the pure-jnp oracle bit-exactly (integer arithmetic — no
+tolerance needed or allowed).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv_aitb as K
+from compile.kernels import ref as R
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand_int8(rng: np.random.Generator, shape) -> jnp.ndarray:
+    return jnp.asarray(rng.integers(-128, 128, size=shape, dtype=np.int64).astype(np.int8))
+
+
+def _rand_w(rng: np.random.Generator, shape) -> jnp.ndarray:
+    # weight range [-64, 63] like the deployed models (accumulator headroom)
+    return jnp.asarray(rng.integers(-64, 64, size=shape, dtype=np.int64).astype(np.int8))
+
+
+# ---------------------------------------------------------------- conv2d
+
+@settings(max_examples=25, deadline=None)
+@given(
+    h=st.integers(5, 20),
+    w=st.integers(5, 20),
+    cin=st.sampled_from([1, 3, 8, 16]),
+    cout=st.sampled_from([1, 4, 16, 32]),
+    k=st.sampled_from([1, 3, 5]),
+    stride=st.sampled_from([1, 2]),
+    shift=st.sampled_from([0, 4, 7]),
+    relu=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv2d_matches_ref(h, w, cin, cout, k, stride, shift, relu, seed):
+    pad = k // 2
+    rng = np.random.default_rng(seed)
+    x = _rand_int8(rng, (h, w, cin))
+    wt = _rand_w(rng, (k, k, cin, cout))
+    got = K.conv2d(x, wt, stride=stride, pad=pad, shift=shift, relu=relu)
+    want = R.requantize(R.conv2d_int32(x, wt, stride, pad), shift, relu)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_conv2d_identity_kernel():
+    """1x1 conv with the identity matrix reproduces the input (shift=0)."""
+    rng = np.random.default_rng(0)
+    x = _rand_int8(rng, (6, 6, 4))
+    w = jnp.eye(4, dtype=jnp.int8)[None, None]
+    got = K.conv2d(x, w, stride=1, pad=0, shift=0, relu=False)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(x))
+
+
+def test_conv2d_unpadded_valid():
+    rng = np.random.default_rng(1)
+    x = _rand_int8(rng, (9, 9, 3))
+    w = _rand_w(rng, (3, 3, 3, 8))
+    got = K.conv2d(x, w, stride=1, pad=0, shift=5, relu=True)
+    want = R.requantize(R.conv2d_int32(x, w, 1, 0), 5, True)
+    assert got.shape == (7, 7, 8)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_conv2d_big_channels_blocked():
+    """Channel count larger than the block target exercises the grid."""
+    rng = np.random.default_rng(2)
+    x = _rand_int8(rng, (8, 8, 32))
+    w = _rand_w(rng, (3, 3, 32, 96))
+    got = K.conv2d(x, w, stride=1, pad=1, shift=7, relu=True, block_cout=32)
+    want = R.requantize(R.conv2d_int32(x, w, 1, 1), 7, True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_conv2d_stride2_odd_input():
+    rng = np.random.default_rng(3)
+    x = _rand_int8(rng, (11, 11, 3))
+    w = _rand_w(rng, (3, 3, 3, 16))
+    got = K.conv2d(x, w, stride=2, pad=1, shift=6, relu=False)
+    want = R.requantize(R.conv2d_int32(x, w, 2, 1), 6, False)
+    assert got.shape == want.shape == (6, 6, 16)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------- depthwise
+
+@settings(max_examples=20, deadline=None)
+@given(
+    h=st.integers(5, 16),
+    w=st.integers(5, 16),
+    c=st.sampled_from([1, 4, 16, 32]),
+    k=st.sampled_from([3, 5]),
+    stride=st.sampled_from([1, 2]),
+    shift=st.sampled_from([0, 6]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_depthwise_matches_ref(h, w, c, k, stride, shift, seed):
+    pad = k // 2
+    rng = np.random.default_rng(seed)
+    x = _rand_int8(rng, (h, w, c))
+    wt = _rand_w(rng, (k, k, c))
+    got = K.depthwise_conv2d(x, wt, stride=stride, pad=pad, shift=shift, relu=True)
+    want = R.requantize(R.depthwise_conv2d_int32(x, wt, stride, pad), shift, True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_depthwise_channel_blocking():
+    rng = np.random.default_rng(4)
+    x = _rand_int8(rng, (10, 10, 48))
+    w = _rand_w(rng, (3, 3, 48))
+    got = K.depthwise_conv2d(x, w, stride=1, pad=1, shift=5, relu=False, block_c=16)
+    want = R.requantize(R.depthwise_conv2d_int32(x, w, 1, 1), 5, False)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ------------------------------------------------------------------ fc
+
+@settings(max_examples=20, deadline=None)
+@given(
+    cin=st.sampled_from([8, 64, 130]),
+    cout=st.sampled_from([10, 100, 256]),
+    shift=st.sampled_from([0, 7]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fc_matches_ref(cin, cout, shift, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand_int8(rng, (cin,))
+    w = _rand_w(rng, (cin, cout))
+    got = K.fc(x, w, shift=shift, relu=False)
+    want = R.requantize(R.fc_int32(x, w)[None, None], shift, False)[0, 0]
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# --------------------------------------------------------- requantize
+
+@pytest.mark.parametrize(
+    "acc,shift,relu,want",
+    [
+        (1000, 3, False, 125),  # 1000/8 = 125
+        (1000, 0, False, 127),  # saturate
+        (-1000, 3, False, -125),
+        (-1000, 3, True, 0),  # relu clamps negatives
+        (20, 3, False, 3),  # 20/8 = 2.5 -> round half away = 3
+        (-20, 3, False, -3),
+        (12, 3, False, 2),  # 12/8 = 1.5 -> 2 (half away from zero)
+        (4, 3, False, 1),  # 4/8 = 0.5 -> 1
+        (-4, 3, False, 0),  # -4/8 = -0.5 -> -0 (bias (1<<2)-1=3: (-4+3)>>3 = -1>>3 = -1? )
+    ],
+)
+def test_requantize_cases(acc, shift, relu, want):
+    got = int(R.requantize(jnp.asarray([acc], jnp.int32), shift, relu)[0])
+    if acc == -4:
+        # document the exact hardware rounding: (-4 + 3) >> 3 == -1 (arith
+        # shift rounds toward -inf), i.e. half rounds away from zero for
+        # negatives as well.
+        assert got == -1
+    else:
+        assert got == want
+
+
+def test_requantize_range_is_int8():
+    accs = jnp.arange(-(2**20), 2**20, 997, dtype=jnp.int32)
+    out = np.asarray(R.requantize(accs, 5, False))
+    assert out.dtype == np.int8
+    assert out.min() >= -128 and out.max() <= 127

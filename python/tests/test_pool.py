@@ -1,0 +1,74 @@
+"""Pallas pooling kernels vs the jnp oracles (bit-exact)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import pool as P
+from compile.kernels import ref as R
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand_int8(rng, shape):
+    return jnp.asarray(rng.integers(-128, 128, size=shape, dtype=np.int64).astype(np.int8))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    h=st.integers(4, 16),
+    w=st.integers(4, 16),
+    c=st.sampled_from([1, 3, 16, 40]),
+    k=st.sampled_from([2, 3]),
+    stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_maxpool_matches_ref(h, w, c, k, stride, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand_int8(rng, (h, w, c))
+    got = P.maxpool2d(x, k, stride)
+    want = R.maxpool2d(x, k, stride)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_maxpool_padded():
+    rng = np.random.default_rng(0)
+    x = _rand_int8(rng, (7, 7, 8))
+    got = P.maxpool2d(x, 3, 2, pad=1)
+    want = R.maxpool2d(x, 3, 2, pad=1)
+    assert got.shape == (4, 4, 8)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_maxpool_resnet_stem_shape():
+    # the ResNet stem pool: 3x3 s2 pad1 on 112x112x64
+    rng = np.random.default_rng(1)
+    x = _rand_int8(rng, (112, 112, 64))
+    got = P.maxpool2d(x, 3, 2, pad=1)
+    assert got.shape == (56, 56, 64)
+    want = R.maxpool2d(x, 3, 2, pad=1)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    h=st.integers(1, 14),
+    w=st.integers(1, 14),
+    c=st.sampled_from([4, 64, 100]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_global_avgpool_matches_ref(h, w, c, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand_int8(rng, (h, w, c))
+    got = P.global_avgpool(x)
+    want = R.requantize(R.global_avgpool_int32(x)[None, None, :], 0, False)[0, 0]
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_global_avgpool_constant_input():
+    x = jnp.full((7, 7, 16), 42, jnp.int8)
+    got = P.global_avgpool(x)
+    np.testing.assert_array_equal(np.asarray(got), np.full(16, 42, np.int8))

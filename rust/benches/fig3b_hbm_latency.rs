@@ -1,0 +1,65 @@
+//! Fig. 3b — saturated HBM read latency (min/avg/max) vs burst length.
+//!
+//! Paper reference points: average falls with burst length to ~400 ns at
+//! BL32; minimum is the unloaded latency; the worst case at BL >= 8
+//! (~1214 ns) sizes the 512-deep last-stage FIFOs of §IV-A.
+
+use h2pipe::bench_harness::Bench;
+use h2pipe::config::DeviceConfig;
+use h2pipe::hbm::traffic::controller_to_core_cycles;
+use h2pipe::hbm::{AddressPattern, TrafficConfig, TrafficGen};
+use h2pipe::util::Json;
+
+fn main() {
+    let mut b = Bench::new("fig3b_hbm_latency");
+    let device = DeviceConfig::stratix10_nx2100();
+    let gen = TrafficGen::new(&device);
+
+    let mut rows = Vec::new();
+    let mut series = Json::Arr(vec![]);
+    let mut worst_bl8plus: f64 = 0.0;
+    for bl in [1u32, 2, 4, 8, 16, 32] {
+        let r = gen.run(&TrafficConfig::new(AddressPattern::Random, bl));
+        if bl >= 8 {
+            worst_bl8plus = worst_bl8plus.max(r.read_lat_max_ns);
+        }
+        rows.push(vec![
+            bl.to_string(),
+            format!("{:.0}", r.read_lat_min_ns),
+            format!("{:.0}", r.read_lat_avg_ns),
+            format!("{:.0}", r.read_lat_max_ns),
+            format!("{:.0}", r.read_lat_p99_ns),
+        ]);
+        let mut o = Json::obj();
+        o.set("burst", bl)
+            .set("min_ns", r.read_lat_min_ns)
+            .set("avg_ns", r.read_lat_avg_ns)
+            .set("max_ns", r.read_lat_max_ns)
+            .set("p99_ns", r.read_lat_p99_ns);
+        series.push(o);
+    }
+    b.table(&["BL", "min(ns)", "avg(ns)", "max(ns)", "p99(ns)"], &rows);
+    b.record("series", series);
+
+    // FIFO sizing check (§III-B): worst-case latency at BL>=8 expressed in
+    // 300 MHz core cycles must be covered by the 512-word FIFO depth.
+    let worst_core_cycles =
+        controller_to_core_cycles((worst_bl8plus / 2.5) as u64, 400, device.core_mhz);
+    let mut sizing = Json::obj();
+    sizing
+        .set("worst_case_ns_bl8plus", worst_bl8plus)
+        .set("worst_case_core_cycles", worst_core_cycles)
+        .set("fifo_depth_words", 512u64)
+        .set("covered", worst_core_cycles <= 512);
+    b.record("fifo_sizing", sizing);
+    println!(
+        "worst-case BL>=8 latency {worst_bl8plus:.0} ns = {worst_core_cycles} core cycles \
+         (paper: 1214 ns = 364 cycles; 512-deep FIFO covers it: {})",
+        worst_core_cycles <= 512
+    );
+
+    let mut paper = Json::obj();
+    paper.set("avg_ns_bl32", 400.0).set("worst_ns_bl8plus", 1214.0).set("fifo_words", 512u64);
+    b.record("paper_reference", paper);
+    b.finish();
+}

@@ -1,0 +1,78 @@
+//! Fig. 5 — the shared-pseudo-channel deadlock, and the credit fix.
+//!
+//! Reproduces §V-A: three layers sharing one HBM-to-fabric DCFIFO under
+//! ready/valid flow control deadlock by head-of-line blocking; the same
+//! scenario under the credit protocol completes, at no throughput cost
+//! when no hazard exists. Sweeps buffer depths to show the hazard region.
+
+use h2pipe::bench_harness::Bench;
+use h2pipe::fabric::{run_shared_pc_pipeline, FlowControl, PipelineOutcome};
+use h2pipe::fabric::deadlock::ScenarioConfig;
+use h2pipe::util::Json;
+
+fn outcome_str(o: &PipelineOutcome) -> String {
+    match o {
+        PipelineOutcome::Completed { cycles } => format!("completed in {cycles}"),
+        PipelineOutcome::Deadlocked { cycle, head_layer, starved_layer } => {
+            format!("DEADLOCK @{cycle} (head=L{head_layer}, starved=L{starved_layer})")
+        }
+    }
+}
+
+fn main() {
+    let mut b = Bench::new("fig5_deadlock");
+
+    // The paper's scenario.
+    let cfg = ScenarioConfig::default();
+    let rv = run_shared_pc_pipeline(FlowControl::ReadyValid, &cfg);
+    let cr = run_shared_pc_pipeline(FlowControl::Credit, &cfg);
+    println!("Fig.5 scenario, ready/valid: {}", outcome_str(&rv));
+    println!("Fig.5 scenario, credit:      {}", outcome_str(&cr));
+    assert!(matches!(rv, PipelineOutcome::Deadlocked { .. }));
+    assert!(matches!(cr, PipelineOutcome::Completed { .. }));
+
+    // Sweep burst-FIFO depth: where does ready/valid stop deadlocking?
+    let mut rows = Vec::new();
+    let mut series = Json::Arr(vec![]);
+    for depth in [2usize, 4, 8, 16, 32, 64, 128] {
+        let c = ScenarioConfig { burst_fifo_capacity: depth, ..ScenarioConfig::default() };
+        let rv = run_shared_pc_pipeline(FlowControl::ReadyValid, &c);
+        let cr = run_shared_pc_pipeline(FlowControl::Credit, &c);
+        let cr_cycles = match cr {
+            PipelineOutcome::Completed { cycles } => cycles,
+            _ => unreachable!("credit must complete"),
+        };
+        rows.push(vec![
+            depth.to_string(),
+            outcome_str(&rv),
+            format!("completed in {cr_cycles}"),
+        ]);
+        let mut o = Json::obj();
+        o.set("burst_fifo_depth", depth)
+            .set("ready_valid_deadlocks", matches!(rv, PipelineOutcome::Deadlocked { .. }))
+            .set("credit_cycles", cr_cycles);
+        series.push(o);
+    }
+    b.table(&["burst FIFO depth", "ready/valid", "credit"], &rows);
+    b.record("depth_sweep", series);
+
+    // Throughput parity when no hazard exists (symmetric demand).
+    let sym = ScenarioConfig { weights_per_item: [1, 1, 1], ..ScenarioConfig::default() };
+    let (PipelineOutcome::Completed { cycles: rv_c }, PipelineOutcome::Completed { cycles: cr_c }) = (
+        run_shared_pc_pipeline(FlowControl::ReadyValid, &sym),
+        run_shared_pc_pipeline(FlowControl::Credit, &sym),
+    ) else {
+        panic!("symmetric scenario must complete under both protocols");
+    };
+    println!("symmetric demand: ready/valid {rv_c} cycles, credit {cr_c} cycles");
+    let mut parity = Json::obj();
+    parity.set("ready_valid_cycles", rv_c).set("credit_cycles", cr_c);
+    b.record("no_hazard_parity", parity);
+
+    b.time("fig5_scenario_pair", 1, 10, || {
+        let c = ScenarioConfig::default();
+        std::hint::black_box(run_shared_pc_pipeline(FlowControl::ReadyValid, &c));
+        std::hint::black_box(run_shared_pc_pipeline(FlowControl::Credit, &c));
+    });
+    b.finish();
+}

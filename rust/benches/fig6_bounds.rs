@@ -1,0 +1,81 @@
+//! Fig. 6 — hardware all-HBM and hybrid throughput vs the all-HBM
+//! theoretical upper bound (Eq. 2 over 279 GB/s) and the unlimited-HBM-
+//! bandwidth bound, for ResNet-18/50 and VGG-16.
+//!
+//! Paper claims to check: all-HBM measured lands at 68–78% of its bound;
+//! hybrid ResNet-18 nearly doubles the all-HBM bound; ResNet-50 / VGG-16
+//! would gain ~2.3x / ~2.1x more with unlimited stacks.
+
+use h2pipe::analysis::bounds::bounds_report;
+use h2pipe::analysis::{fig6_json, H2pipeResult};
+use h2pipe::bench_harness::Bench;
+use h2pipe::compiler::compile;
+use h2pipe::config::{CompilerOptions, DeviceConfig};
+use h2pipe::nn::zoo;
+use h2pipe::sim::pipeline::{simulate, SimConfig};
+
+fn main() {
+    let mut b = Bench::new("fig6_bounds");
+    let device = DeviceConfig::stratix10_nx2100();
+    let cfg = SimConfig { images: 5, warmup_images: 2, ..SimConfig::default() };
+    let opts = CompilerOptions::default();
+
+    let paper: &[(&str, f64, f64)] =
+        &[("ResNet-18", 1811.0, 4174.0), ("ResNet-50", 748.0, 1004.0), ("VGG-16", 430.0, 545.0)];
+
+    let mut rows = Vec::new();
+    let mut results = Vec::new();
+    for net in zoo::eval_models() {
+        let hybrid_plan = compile(&net, &device, &opts).unwrap();
+        let hybrid = simulate(&net, &hybrid_plan, &cfg).unwrap();
+        let mut o2 = opts.clone();
+        o2.all_hbm = true;
+        let all_plan = compile(&net, &device, &o2).unwrap();
+        let all = simulate(&net, &all_plan, &cfg).unwrap();
+        let bounds = bounds_report(&net, &device, &opts).unwrap();
+        let (pa, ph) = paper
+            .iter()
+            .find(|(n, _, _)| *n == net.name)
+            .map(|(_, a, h)| (*a, *h))
+            .unwrap();
+
+        rows.push(vec![
+            net.name.clone(),
+            format!("{:.0}", all.throughput),
+            format!("{pa:.0}"),
+            format!("{:.0}", hybrid.throughput),
+            format!("{ph:.0}"),
+            format!("{:.0}", bounds.all_hbm_bound),
+            format!("{:.0}", bounds.unlimited_bw_bound),
+            format!("{:.0}%", 100.0 * all.throughput / bounds.all_hbm_bound),
+        ]);
+        results.push((
+            H2pipeResult {
+                network: net.name.clone(),
+                all_hbm_throughput: all.throughput,
+                hybrid_throughput: hybrid.throughput,
+                latency_ms: hybrid.latency * 1e3,
+                logic_util: hybrid_plan.usage.alm_frac(&device),
+                bram_util: hybrid_plan.usage.m20k_frac(&device),
+                dsp_util: hybrid_plan.usage.tb_frac(&device),
+                freq_mhz: device.core_mhz,
+            },
+            bounds,
+        ));
+    }
+    b.table(
+        &[
+            "Model",
+            "allHBM",
+            "paper",
+            "hybrid",
+            "paper",
+            "bound(allHBM)",
+            "bound(unl.BW)",
+            "hw/bound",
+        ],
+        &rows,
+    );
+    b.record("fig6", fig6_json(&results));
+    b.finish();
+}

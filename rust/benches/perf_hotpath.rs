@@ -1,0 +1,82 @@
+//! §Perf — hot-path microbenchmarks for the optimization pass.
+//!
+//! Measures the three L3 hot loops in isolation so EXPERIMENTS.md §Perf
+//! can record before/after numbers per optimization:
+//!   * HBM pseudo-channel tick rate (the inner loop of every experiment),
+//!   * full-pipeline simulation rate (model-cycles/s),
+//!   * compiler end-to-end time,
+//!   * PJRT artifact execution latency (the serving hot path).
+
+use h2pipe::bench_harness::Bench;
+use h2pipe::compiler::compile;
+use h2pipe::config::{CompilerOptions, DeviceConfig};
+use h2pipe::hbm::controller::{Dir, PcTuning, PseudoChannel, Request};
+use h2pipe::hbm::CmdBus;
+use h2pipe::nn::zoo;
+use h2pipe::sim::pipeline::{PipelineSim, SimConfig};
+use h2pipe::util::{Json, XorShift64};
+
+fn main() {
+    let mut b = Bench::new("perf_hotpath");
+    let device = DeviceConfig::stratix10_nx2100();
+
+    // 1. HBM controller tick rate.
+    let ticks = 2_000_000u64;
+    let m = b.time("hbm_pc_tick_2M_saturated", 1, 5, || {
+        let mut pc = PseudoChannel::new(&device.hbm, &device.hbm_timing, PcTuning::default());
+        let mut rng = XorShift64::new(1);
+        let mut id = 0u64;
+        for _ in 0..ticks {
+            if pc.can_accept(8) {
+                pc.push(Request { id, dir: Dir::Read, addr: rng.next_below(1 << 26) & !31, burst: 8 });
+                id += 1;
+            }
+            let mut bus = CmdBus::new();
+            pc.tick(&mut bus);
+            pc.drain_completions();
+        }
+    });
+    let tick_rate = ticks as f64 / m.mean_s;
+    println!("  -> {:.1} M HBM ticks/s", tick_rate / 1e6);
+    b.record("hbm_ticks_per_s", tick_rate);
+
+    // 2. Pipeline simulation rate (ResNet-50 hybrid, 3 images).
+    let net = zoo::resnet50();
+    let plan = compile(&net, &device, &CompilerOptions::default()).unwrap();
+    let cfg = SimConfig { images: 3, warmup_images: 1, ..SimConfig::default() };
+    let mut core_cycles = 0u64;
+    let m = b.time("pipeline_sim_resnet50_3img", 1, 3, || {
+        let mut sim = PipelineSim::new(&net, &plan).unwrap();
+        let rep = sim.run(&cfg).unwrap();
+        core_cycles = rep.core_cycles;
+    });
+    let sim_rate = core_cycles as f64 / m.mean_s;
+    println!("  -> {:.1} M model-cycles/s ({core_cycles} cycles)", sim_rate / 1e6);
+    b.record("sim_model_cycles_per_s", sim_rate);
+
+    // 3. Compiler end-to-end.
+    b.time("compile_resnet50", 1, 10, || {
+        std::hint::black_box(compile(&net, &device, &CompilerOptions::default()).unwrap());
+    });
+
+    // 4. PJRT execution latency (if artifacts are built).
+    let art = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    if std::path::Path::new(&art).join("cifarnet.hlo.txt").exists() {
+        let rt = h2pipe::runtime::Runtime::cpu(&art).unwrap();
+        let exe = rt.load("cifarnet").unwrap();
+        let img = vec![1i32; 32 * 32 * 3];
+        let m = b.time("pjrt_cifarnet_execute", 3, 30, || {
+            std::hint::black_box(exe.run_i32(&img, &[32, 32, 3]).unwrap());
+        });
+        b.record("pjrt_execute_ms", m.mean_ms());
+    } else {
+        println!("  (artifacts missing — run `make artifacts` for the PJRT measurement)");
+    }
+
+    let mut targets = Json::obj();
+    targets
+        .set("sim_model_cycles_per_s_target", 50_000_000u64)
+        .set("note", "see EXPERIMENTS.md §Perf for the iteration log");
+    b.record("targets", targets);
+    b.finish();
+}

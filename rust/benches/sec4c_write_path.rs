@@ -1,0 +1,60 @@
+//! §IV-C — the boot-time write-path width trade-off.
+//!
+//! Sweeps the write-path width from 8 to 256 bits on the VGG-16 plan (the
+//! heaviest download: ~150 MB of HBM-resident weights) and reports boot
+//! time vs register cost. Paper reference: the default 30-bit path saves
+//! >3000 registers vs a straightforward 256-bit bus.
+
+use h2pipe::bench_harness::Bench;
+use h2pipe::compiler::compile;
+use h2pipe::config::{CompilerOptions, DeviceConfig};
+use h2pipe::coordinator::boot_weights;
+use h2pipe::nn::zoo;
+use h2pipe::util::Json;
+
+fn main() {
+    let mut b = Bench::new("sec4c_write_path");
+    let device = DeviceConfig::stratix10_nx2100();
+    let net = zoo::vgg16();
+
+    let mut rows = Vec::new();
+    let mut series = Json::Arr(vec![]);
+    let mut regs_at_30 = 0u64;
+    let mut regs_at_256 = 0u64;
+    for width in [8u32, 16, 30, 64, 128, 256] {
+        let mut o = CompilerOptions::default();
+        o.write_path_bits = width;
+        let plan = compile(&net, &device, &o).unwrap();
+        let r = boot_weights(&plan);
+        if width == 30 {
+            regs_at_30 = r.write_path_registers;
+        }
+        if width == 256 {
+            regs_at_256 = r.write_path_registers;
+        }
+        rows.push(vec![
+            width.to_string(),
+            format!("{:.1}", r.seconds * 1e3),
+            r.write_path_registers.to_string(),
+            format!("{:.2}", r.hbm_write_efficiency),
+            format!("{}", r.bytes >> 20),
+        ]);
+        let mut jo = Json::obj();
+        jo.set("width_bits", width)
+            .set("boot_ms", r.seconds * 1e3)
+            .set("registers", r.write_path_registers)
+            .set("write_efficiency", r.hbm_write_efficiency)
+            .set("hbm_mib", r.bytes >> 20);
+        series.push(jo);
+    }
+    b.table(&["width(b)", "boot(ms)", "regs", "wr eff", "HBM MiB"], &rows);
+    b.record("sweep", series);
+
+    let saved = regs_at_256.saturating_sub(regs_at_30);
+    println!("registers saved 256b -> 30b: {saved} (paper: >3000)");
+    let mut paper = Json::obj();
+    paper.set("registers_saved_256_to_30", saved).set("paper_claim_min", 3000u64);
+    b.record("paper_reference", paper);
+    assert!(saved > 2500, "register savings {saved} below the paper's claim region");
+    b.finish();
+}

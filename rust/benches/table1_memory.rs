@@ -1,0 +1,62 @@
+//! Table I — weight vs activation memory for the six-model zoo at
+//! minimum parallelism, with the NX2100 140 Mb shading rule.
+
+use h2pipe::bench_harness::Bench;
+use h2pipe::compiler::memory_breakdown;
+use h2pipe::config::{CompilerOptions, DeviceConfig};
+use h2pipe::nn::zoo;
+use h2pipe::util::Json;
+
+fn main() {
+    let mut b = Bench::new("table1_memory");
+    let device = DeviceConfig::stratix10_nx2100();
+    let opts = CompilerOptions::default();
+
+    // paper rows (Mb) for the diff column
+    let paper: &[(&str, f64, f64)] = &[
+        ("MobileNetV1", 35.0, 11.0),
+        ("MobileNetV2", 29.0, 15.0),
+        ("MobileNetV3", 32.0, 12.0),
+        ("ResNet-18", 102.0, 12.0),
+        ("ResNet-50", 219.0, 57.0),
+        ("VGG-16", 1204.0, 14.0),
+    ];
+
+    let mut rows = Vec::new();
+    let mut series = Json::Arr(vec![]);
+    for (net, (pname, pw, pa)) in zoo::table1_models().iter().zip(paper) {
+        assert_eq!(&net.name, pname);
+        let m = memory_breakdown(net, &opts);
+        let w_mb = m.weight_bits as f64 / 1e6;
+        let a_mb = m.act_bits as f64 / 1e6;
+        rows.push(vec![
+            net.name.clone(),
+            format!("{w_mb:.0}"),
+            format!("{pw:.0}"),
+            format!("{a_mb:.0}"),
+            format!("{pa:.0}"),
+            format!("{:.1}%", 100.0 * m.act_fraction()),
+            if m.exceeds(&device) { "SHADED".into() } else { "fits".into() },
+        ]);
+        let mut o = Json::obj();
+        o.set("model", net.name.as_str())
+            .set("weight_mb", w_mb)
+            .set("act_mb", a_mb)
+            .set("act_fraction", m.act_fraction())
+            .set("exceeds_device", m.exceeds(&device))
+            .set("paper_weight_mb", *pw)
+            .set("paper_act_mb", *pa);
+        series.push(o);
+    }
+    b.table(
+        &["Model", "W (Mb)", "paper W", "A (Mb)", "paper A", "Act %", "NX2100"],
+        &rows,
+    );
+    b.record("rows", series);
+    b.time("memory_breakdown_all_models", 1, 10, || {
+        for net in zoo::table1_models() {
+            std::hint::black_box(memory_breakdown(&net, &opts));
+        }
+    });
+    b.finish();
+}

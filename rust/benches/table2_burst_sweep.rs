@@ -1,0 +1,114 @@
+//! Table II — hybrid-memory throughput vs HBM burst length.
+//!
+//! Paper: ResNet-18 is flat from BL8 to BL16 (its bottleneck layer keeps
+//! weights on chip), while ResNet-50 gains ~2% from BL8 to BL32 at the
+//! cost of logic (its bottleneck streams from HBM).
+
+use h2pipe::bench_harness::Bench;
+use h2pipe::compiler::compile;
+use h2pipe::config::{BurstLengthPolicy, CompilerOptions, DeviceConfig};
+use h2pipe::nn::zoo;
+use h2pipe::sim::pipeline::{simulate, SimConfig};
+use h2pipe::util::Json;
+
+fn main() {
+    let mut b = Bench::new("table2_burst_sweep");
+    let device = DeviceConfig::stratix10_nx2100();
+    let cfg = SimConfig { images: 5, warmup_images: 2, ..SimConfig::default() };
+
+    // paper rows: (model, BL, logic util %, im/s)
+    let paper: &[(&str, u32, f64)] = &[
+        ("resnet18", 8, 4174.0),
+        ("resnet18", 16, 4174.0),
+        ("resnet50", 8, 984.0),
+        ("resnet50", 16, 988.0),
+        ("resnet50", 32, 1004.0),
+    ];
+
+    let mut rows = Vec::new();
+    let mut series = Json::Arr(vec![]);
+    for name in ["resnet18", "resnet50"] {
+        let net = zoo::by_name(name).unwrap();
+        let mut base: Option<f64> = None;
+        for bl in [8u32, 16, 32] {
+            let mut o = CompilerOptions::default();
+            o.burst_length = BurstLengthPolicy::Fixed(bl);
+            let plan = compile(&net, &device, &o).unwrap();
+            let rep = simulate(&net, &plan, &cfg).unwrap();
+            let logic = 100.0 * plan.usage.alm_frac(&device);
+            let rel = base.map(|x| rep.throughput / x).unwrap_or(1.0);
+            base.get_or_insert(rep.throughput);
+            let paper_t = paper
+                .iter()
+                .find(|(n, pbl, _)| *n == name && *pbl == bl)
+                .map(|(_, _, t)| *t);
+            rows.push(vec![
+                name.into(),
+                bl.to_string(),
+                format!("{logic:.0}%"),
+                format!("{:.0}", rep.throughput),
+                paper_t.map(|t| format!("{t:.0}")).unwrap_or_else(|| "-".into()),
+                format!("{rel:.3}x"),
+                format!("{:.4}", rep.freeze_fraction),
+            ]);
+            let mut jo = Json::obj();
+            jo.set("model", name)
+                .set("burst", bl)
+                .set("logic_util", logic / 100.0)
+                .set("im_s", rep.throughput)
+                .set("paper_im_s", paper_t.unwrap_or(f64::NAN))
+                .set("relative_to_bl8", rel)
+                .set("freeze_fraction", rep.freeze_fraction)
+                .set("bottleneck_on_hbm", rep.bottleneck_on_hbm);
+            series.push(jo);
+        }
+    }
+    b.table(
+        &["Model", "BL", "Logic", "im/s", "paper", "vs BL8", "freeze"],
+        &rows,
+    );
+    b.record("rows", series);
+
+    // --- stressed configuration -----------------------------------------
+    // In our calibrated substrate the weight streams are sequential
+    // within each kernel region (row hits), so BL8 efficiency leaves a
+    // comfortable margin over the supply threshold (one PC slot feeds a
+    // chain when eff >= 70.3%) and the paper's ~2% R50 burst-length
+    // sensitivity sits inside the margin. To demonstrate the mechanism
+    // the paper describes, we re-run R50 on a degraded controller whose
+    // inter-burst gap is 8 cycles (a conservative PHY that re-steers the
+    // pipeline between bursts): small bursts now amortize the gap badly,
+    // the bottleneck layer freezes at BL8 and recovers at BL32.
+    let mut stressed = device.clone();
+    stressed.hbm_timing.t_rd_gap = 8;
+    let mut srows = Vec::new();
+    let mut sseries = Json::Arr(vec![]);
+    let net = zoo::by_name("resnet50").unwrap();
+    let mut base: Option<f64> = None;
+    for bl in [8u32, 16, 32] {
+        let mut o = CompilerOptions::default();
+        o.burst_length = BurstLengthPolicy::Fixed(bl);
+        let plan = compile(&net, &stressed, &o).unwrap();
+        let rep = simulate(&net, &plan, &cfg).unwrap();
+        let rel = base.map(|x| rep.throughput / x).unwrap_or(1.0);
+        base.get_or_insert(rep.throughput);
+        srows.push(vec![
+            "resnet50*".into(),
+            bl.to_string(),
+            format!("{:.0}", rep.throughput),
+            format!("{rel:.3}x"),
+            format!("{:.4}", rep.freeze_fraction),
+        ]);
+        let mut jo = Json::obj();
+        jo.set("model", "resnet50_stressed_gap8")
+            .set("burst", bl)
+            .set("im_s", rep.throughput)
+            .set("relative_to_bl8", rel)
+            .set("freeze_fraction", rep.freeze_fraction);
+        sseries.push(jo);
+    }
+    println!("\nstressed (8-cycle inter-burst gap — demonstrates the §VI-A mechanism):");
+    b.table(&["Model", "BL", "im/s", "vs BL8", "freeze"], &srows);
+    b.record("stressed_rows", sseries);
+    b.finish();
+}

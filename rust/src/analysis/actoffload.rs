@@ -1,0 +1,186 @@
+//! §III-B design-choice analysis: why H2PIPE offloads *weights*, not
+//! *activations* — and the fpgaConvNet-style alternative it rejects.
+//!
+//! The paper's argument (§III-B): activation reads sit on the critical
+//! path, so offloading every inter-layer activation buffer adds at least
+//! one saturated HBM round trip (~400 ns at BL32) per convolutional
+//! layer — "on MobileNetV2 ... 53 x 0.4 = 21 us ... an increase of at
+//! least 11% in latency" — while weight reads are fully deterministic and
+//! can be prefetched arbitrarily early. This module prices both choices,
+//! plus the §II-B fpgaConvNet alternative (time-multiplexed layer subsets
+//! with per-batch weight reloads).
+
+use crate::compiler::LayerStats;
+use crate::config::{CompilerOptions, DeviceConfig};
+use crate::nn::Network;
+
+/// Latency cost of moving inter-layer activations to HBM.
+#[derive(Debug, Clone)]
+pub struct ActOffloadReport {
+    pub model: String,
+    /// Weight-bearing (conv/FC) layers whose input buffers would move.
+    pub layers: usize,
+    /// Saturated HBM read latency assumed per layer (ns).
+    pub hbm_latency_ns: f64,
+    /// Added pipeline latency (s).
+    pub added_latency: f64,
+    /// Baseline latency used for the relative claim (s).
+    pub base_latency: f64,
+}
+
+impl ActOffloadReport {
+    /// Fractional latency increase.
+    pub fn increase(&self) -> f64 {
+        self.added_latency / self.base_latency
+    }
+}
+
+/// Price the §III-B activation-offload alternative: one saturated HBM
+/// read latency per weight layer, against a given baseline latency.
+pub fn activation_offload_penalty(
+    net: &Network,
+    opts: &CompilerOptions,
+    hbm_latency_ns: f64,
+    base_latency: f64,
+) -> ActOffloadReport {
+    let layers = net
+        .layers()
+        .iter()
+        .filter(|l| LayerStats::from_layer(l, opts).has_weights)
+        .count();
+    ActOffloadReport {
+        model: net.name.clone(),
+        layers,
+        hbm_latency_ns,
+        added_latency: layers as f64 * hbm_latency_ns * 1e-9,
+        base_latency,
+    }
+}
+
+/// fpgaConvNet-style baseline (§II-B): the network is split into the
+/// fewest layer subsets whose weights fit on chip; each subset processes
+/// a whole batch before the next subset's weights are loaded from
+/// off-chip memory. Larger batches amortize the reloads — throughput
+/// rises with batch size at the cost of latency, the trade-off H2PIPE's
+/// always-resident pipeline avoids.
+#[derive(Debug, Clone)]
+pub struct BatchBaselineReport {
+    pub model: String,
+    pub subsets: usize,
+    pub batch: u64,
+    /// Images/s at this batch size.
+    pub throughput: f64,
+    /// End-to-end latency of a batch member (s) — the whole batch must
+    /// finish every subset.
+    pub latency: f64,
+}
+
+pub fn fpgaconvnet_style(
+    net: &Network,
+    device: &DeviceConfig,
+    opts: &CompilerOptions,
+    batch: u64,
+) -> BatchBaselineReport {
+    let stats: Vec<LayerStats> = net
+        .layers()
+        .iter()
+        .map(|l| LayerStats::from_layer(l, opts))
+        .filter(|s| s.has_weights)
+        .collect();
+    // greedily pack layers into on-chip-weight subsets (order preserved)
+    let cap_bits = (device.bram_bits() as f64 * 0.8) as u64; // acts + margin
+    let mut subsets: Vec<Vec<&LayerStats>> = vec![Vec::new()];
+    let mut used = 0u64;
+    for s in &stats {
+        let bits = s.weight_m20k * crate::compiler::resources::M20K_BITS;
+        if used + bits > cap_bits && !subsets.last().unwrap().is_empty() {
+            subsets.push(Vec::new());
+            used = 0;
+        }
+        subsets.last_mut().unwrap().push(s);
+        used += bits;
+    }
+    // per subset: reload its weights once, then stream `batch` images
+    // through its (sub)pipeline at the bottleneck-layer rate
+    let hz = device.core_mhz as f64 * 1e6;
+    let reload_bw = device.hbm.stack_peak_bw() * 0.8; // one stack of ports
+    let mut total_s = 0.0;
+    for sub in &subsets {
+        let reload_bits: u64 = sub.iter().map(|s| s.weight_bits).sum();
+        let reload_s = reload_bits as f64 / 8.0 / reload_bw;
+        // same per-layer engine model as H2PIPE at modest parallelism
+        let bottleneck: u64 =
+            sub.iter().map(|s| s.cycles_per_image(1, 8)).max().unwrap_or(1);
+        let stream_s = batch as f64 * bottleneck as f64 / hz;
+        total_s += reload_s + stream_s;
+    }
+    BatchBaselineReport {
+        model: net.name.clone(),
+        subsets: subsets.len(),
+        batch,
+        throughput: batch as f64 / total_s,
+        latency: total_s,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::zoo;
+
+    #[test]
+    fn paper_claim_mobilenetv2_11_percent() {
+        // §III-B: 53 layers x 400 ns >= 11% of the 190 us HPIPE latency.
+        let net = zoo::mobilenet_v2();
+        let r = activation_offload_penalty(
+            &net,
+            &CompilerOptions::default(),
+            400.0,
+            190e-6,
+        );
+        assert_eq!(r.layers, 53, "paper counts 53 weight layers in V2");
+        assert!(
+            r.increase() >= 0.11,
+            "increase {:.3} below the paper's >=11% claim",
+            r.increase()
+        );
+        // "at least 53 x 0.4 = 21 us"
+        assert!((r.added_latency - 21.2e-6).abs() < 1e-6, "{}", r.added_latency);
+    }
+
+    #[test]
+    fn weight_offload_strictly_cheaper_than_activation_offload() {
+        // weights prefetch deterministically: zero steady-state latency
+        // cost; activations cost one round trip per layer. The analysis
+        // must show a strictly positive penalty for every network.
+        for net in zoo::eval_models() {
+            let r = activation_offload_penalty(&net, &CompilerOptions::default(), 400.0, 1e-3);
+            assert!(r.added_latency > 0.0, "{}", net.name);
+        }
+    }
+
+    #[test]
+    fn fpgaconvnet_baseline_scales_with_batch() {
+        let d = DeviceConfig::stratix10_nx2100();
+        let o = CompilerOptions::default();
+        let net = zoo::vgg16();
+        let b1 = fpgaconvnet_style(&net, &d, &o, 1);
+        let b16 = fpgaconvnet_style(&net, &d, &o, 16);
+        let b256 = fpgaconvnet_style(&net, &d, &o, 256);
+        assert!(b1.subsets >= 2, "VGG-16 weights cannot fit one subset");
+        assert!(b16.throughput > b1.throughput, "batching must help");
+        assert!(b256.throughput > b16.throughput);
+        assert!(b256.latency > b16.latency, "batching costs latency");
+        // batch-1 throughput lands in the low-single-digit im/s range of
+        // the fpgaconvnet Table III row (4.0 im/s on a much smaller chip)
+        assert!(b1.throughput < 120.0, "{}", b1.throughput);
+    }
+
+    #[test]
+    fn small_networks_fit_one_subset() {
+        let d = DeviceConfig::stratix10_nx2100();
+        let o = CompilerOptions::default();
+        let r = fpgaconvnet_style(&zoo::mobilenet_v1(), &d, &o, 1);
+        assert_eq!(r.subsets, 1);
+    }
+}

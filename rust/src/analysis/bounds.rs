@@ -1,0 +1,129 @@
+//! Theoretical throughput bounds (§VI-B, the light bars of Fig. 6).
+
+use crate::compiler::{compile, LayerStats};
+use crate::config::{CompilerOptions, DeviceConfig};
+use crate::nn::Network;
+
+/// Eq. 2: weight memory traffic required to process one image, in bytes
+/// (8-bit weights):
+///
+/// MT_required = sum over layers of kh * kw * ci * co * output_height
+///
+/// HPIPE parallelizes across the activation width, so kernels are
+/// reloaded once per output *line*.
+pub fn weight_traffic_bytes(net: &Network, opts: &CompilerOptions) -> u64 {
+    net.layers()
+        .iter()
+        .map(|l| LayerStats::from_layer(l, opts).weight_traffic_per_image)
+        .sum::<u64>()
+        * opts.weight_bits as u64
+        / 8
+}
+
+/// Fig. 6 bounds for one network.
+#[derive(Debug, Clone)]
+pub struct BoundsReport {
+    pub model: String,
+    /// Eq. 2 traffic per image (bytes).
+    pub traffic_bytes: u64,
+    /// All-HBM upper bound: effective HBM bandwidth (31 PCs x 240 bits @
+    /// core clock = 279 GB/s) / Eq. 2 traffic, with perfect efficiency.
+    pub all_hbm_bound: f64,
+    /// Unlimited-HBM-bandwidth bound: compute-limited throughput at 85%
+    /// device utilization with zero weight-bandwidth constraints.
+    pub unlimited_bw_bound: f64,
+}
+
+/// The all-HBM theoretical throughput bound (light blue bars of Fig. 6).
+pub fn all_hbm_bound(net: &Network, device: &DeviceConfig, opts: &CompilerOptions) -> f64 {
+    device.effective_hbm_bw() / weight_traffic_bytes(net, opts) as f64
+}
+
+/// The unlimited-HBM-bandwidth bound (light green bars of Fig. 6):
+/// compile against a device with effectively infinite pseudo-channels and
+/// take the compute-bound throughput (no HBM stall).
+pub fn unlimited_bw_bound(
+    net: &Network,
+    device: &DeviceConfig,
+    opts: &CompilerOptions,
+) -> anyhow::Result<f64> {
+    let unlimited = device.clone().with_unlimited_hbm();
+    let mut o = opts.clone();
+    o.all_hbm = true;
+    let plan = compile(net, &unlimited, &o)?;
+    // compute-bound: ignore any residual stall factor
+    let hz = device.core_mhz as f64 * 1e6;
+    Ok(hz / plan.bottleneck_cycles as f64)
+}
+
+/// Compute the full bounds report for one network.
+pub fn bounds_report(
+    net: &Network,
+    device: &DeviceConfig,
+    opts: &CompilerOptions,
+) -> anyhow::Result<BoundsReport> {
+    Ok(BoundsReport {
+        model: net.name.clone(),
+        traffic_bytes: weight_traffic_bytes(net, opts),
+        all_hbm_bound: all_hbm_bound(net, device, opts),
+        unlimited_bw_bound: unlimited_bw_bound(net, device, opts)?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::zoo;
+
+    fn dev() -> DeviceConfig {
+        DeviceConfig::stratix10_nx2100()
+    }
+
+    #[test]
+    fn eq2_traffic_increases_with_network_size() {
+        let o = CompilerOptions::default();
+        let r18 = weight_traffic_bytes(&zoo::resnet18(), &o);
+        let r50 = weight_traffic_bytes(&zoo::resnet50(), &o);
+        let vgg = weight_traffic_bytes(&zoo::vgg16(), &o);
+        assert!(r18 < r50, "{r18} < {r50}");
+        assert!(r50 < vgg, "{r50} < {vgg}");
+    }
+
+    #[test]
+    fn all_hbm_bounds_bracket_paper_hw_results() {
+        // paper: hardware all-HBM results are 68%-78% of the bound, i.e.
+        // bound ~= hw / 0.73: R18 ~2400, R50 ~1050, VGG ~560. Allow 2x
+        // model slack on each side.
+        let o = CompilerOptions::default();
+        let d = dev();
+        let cases = [("resnet18", 2400.0), ("resnet50", 1050.0), ("vgg16", 560.0)];
+        for (name, approx) in cases {
+            let b = all_hbm_bound(&zoo::by_name(name).unwrap(), &d, &o);
+            assert!(
+                (approx * 0.5..approx * 2.0).contains(&b),
+                "{name}: bound {b:.0} vs paper-implied {approx}"
+            );
+        }
+    }
+
+    #[test]
+    fn unlimited_bw_exceeds_all_hbm_bound_for_big_nets() {
+        let o = CompilerOptions::default();
+        let d = dev();
+        for name in ["resnet50", "vgg16"] {
+            let net = zoo::by_name(name).unwrap();
+            let a = all_hbm_bound(&net, &d, &o);
+            let u = unlimited_bw_bound(&net, &d, &o).unwrap();
+            assert!(u > a, "{name}: unlimited {u:.0} <= all-HBM bound {a:.0}");
+        }
+    }
+
+    #[test]
+    fn bounds_report_complete() {
+        let o = CompilerOptions::default();
+        let r = bounds_report(&zoo::resnet18(), &dev(), &o).unwrap();
+        assert!(r.traffic_bytes > 10_000_000);
+        assert!(r.all_hbm_bound > 0.0);
+        assert!(r.unlimited_bw_bound > 0.0);
+    }
+}

@@ -1,0 +1,19 @@
+//! Evaluation analysis: the Eq. 2 theoretical bounds behind Fig. 6, the
+//! prior-work comparison dataset of Table III, and report generation.
+
+pub mod actoffload;
+pub mod bounds;
+pub mod priorwork;
+pub mod report;
+
+pub use actoffload::{
+    activation_offload_penalty, fpgaconvnet_style, ActOffloadReport, BatchBaselineReport,
+};
+pub use bounds::{
+    all_hbm_bound, bounds_report, unlimited_bw_bound, weight_traffic_bytes, BoundsReport,
+};
+pub use priorwork::{
+    best_prior, pe_baseline_throughput, prior_work, speedup_vs_best_prior, Accelerator,
+    PE_BASELINE_NOTES,
+};
+pub use report::{fig6_json, gops, table3_text, H2pipeResult};

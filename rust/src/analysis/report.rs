@@ -1,0 +1,164 @@
+//! Report generation: Fig. 6 JSON series and the Table III text table.
+
+use crate::analysis::bounds::BoundsReport;
+use crate::analysis::priorwork::{prior_work, speedup_vs_best_prior, Accelerator};
+use crate::util::Json;
+
+/// Measured H2PIPE results for one network (filled by the simulator).
+#[derive(Debug, Clone)]
+pub struct H2pipeResult {
+    pub network: String,
+    pub all_hbm_throughput: f64,
+    pub hybrid_throughput: f64,
+    pub latency_ms: f64,
+    pub logic_util: f64,
+    pub bram_util: f64,
+    pub dsp_util: f64,
+    pub freq_mhz: u32,
+}
+
+/// Fig. 6 as machine-readable JSON: per network the four bars.
+pub fn fig6_json(results: &[(H2pipeResult, BoundsReport)]) -> Json {
+    let mut arr = Json::Arr(vec![]);
+    for (r, b) in results {
+        let mut o = Json::obj();
+        o.set("network", r.network.as_str())
+            .set("hw_all_hbm_im_s", r.all_hbm_throughput)
+            .set("hw_hybrid_im_s", r.hybrid_throughput)
+            .set("bound_all_hbm_im_s", b.all_hbm_bound)
+            .set("bound_unlimited_bw_im_s", b.unlimited_bw_bound)
+            .set("eq2_traffic_mbytes", b.traffic_bytes as f64 / 1e6)
+            .set("hw_over_bound", r.all_hbm_throughput / b.all_hbm_bound);
+        arr.push(o);
+    }
+    let mut top = Json::obj();
+    top.set("figure", "fig6").set("series", arr);
+    top
+}
+
+/// GOPs at batch 1 for a network given measured throughput.
+pub fn gops(total_macs: u64, throughput: f64) -> f64 {
+    2.0 * total_macs as f64 * throughput / 1e9
+}
+
+/// Render Table III with our measured H2PIPE rows spliced in.
+pub fn table3_text(ours: &[H2pipeResult], macs: &[(String, u64)]) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "{:<26} {:<14} {:>5} {:>6} {:>6} {:>5} {:>10} {:>9} {:>9} {:>8}",
+        "Work", "Device", "Tech", "Freq", "DSP%", "Net", "Precision", "im/s", "lat(ms)", "GOPs"
+    );
+    let fmt_row = |s: &mut String, a: &Accelerator| {
+        let _ = writeln!(
+            s,
+            "{:<26} {:<14} {:>4}n {:>5}M {:>5.0}% {:>5} {:>10} {:>9.1} {:>9} {:>8.0}",
+            a.work,
+            a.device,
+            a.tech_nm,
+            a.freq_mhz,
+            a.dsp_util * 100.0,
+            short_net(a.network),
+            a.precision,
+            a.throughput,
+            a.latency_ms.map(|l| format!("{l:.2}")).unwrap_or_else(|| "-".into()),
+            a.gops,
+        );
+    };
+    for net in ["ResNet-18", "ResNet-50", "VGG-16"] {
+        for a in prior_work().iter().filter(|a| a.network == net) {
+            fmt_row(&mut s, a);
+        }
+        if let Some(r) = ours.iter().find(|r| r.network == net) {
+            let total_macs =
+                macs.iter().find(|(n, _)| n == net).map(|(_, m)| *m).unwrap_or(0);
+            let _ = writeln!(
+                s,
+                "{:<26} {:<14} {:>4}n {:>5}M {:>5.0}% {:>5} {:>10} {:>9.1} {:>9.2} {:>8.0}",
+                "H2PIPE (ours, simulated)",
+                "Stratix 10 NX",
+                14,
+                r.freq_mhz,
+                r.dsp_util * 100.0,
+                short_net(net),
+                "8-bit",
+                r.hybrid_throughput,
+                r.latency_ms,
+                gops(total_macs, r.hybrid_throughput),
+            );
+            if let Some(sp) = speedup_vs_best_prior(net, r.hybrid_throughput) {
+                let _ = writeln!(s, "  -> speedup vs best comparable prior work: {sp:.1}x");
+            }
+        }
+        let _ = writeln!(s);
+    }
+    s
+}
+
+fn short_net(n: &str) -> &str {
+    match n {
+        "ResNet-18" => "R18",
+        "ResNet-50" => "R50",
+        "VGG-16" => "VGG",
+        other => other,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn result(net: &str, hybrid: f64) -> H2pipeResult {
+        H2pipeResult {
+            network: net.to_string(),
+            all_hbm_throughput: hybrid * 0.5,
+            hybrid_throughput: hybrid,
+            latency_ms: 2.0,
+            logic_util: 0.7,
+            bram_util: 0.95,
+            dsp_util: 0.4,
+            freq_mhz: 300,
+        }
+    }
+
+    #[test]
+    fn fig6_json_structure() {
+        let b = BoundsReport {
+            model: "ResNet-18".into(),
+            traffic_bytes: 100_000_000,
+            all_hbm_bound: 2500.0,
+            unlimited_bw_bound: 9000.0,
+        };
+        let j = fig6_json(&[(result("ResNet-18", 4000.0), b)]);
+        let text = j.to_string();
+        assert!(text.contains("\"hw_hybrid_im_s\":4000"));
+        assert!(text.contains("\"figure\":\"fig6\""));
+    }
+
+    #[test]
+    fn table3_contains_all_works_and_speedups() {
+        let ours = vec![
+            result("ResNet-18", 4174.0),
+            result("ResNet-50", 1004.0),
+            result("VGG-16", 545.0),
+        ];
+        let macs = vec![
+            ("ResNet-18".to_string(), 1_800_000_000u64),
+            ("ResNet-50".to_string(), 4_100_000_000),
+            ("VGG-16".to_string(), 15_500_000_000),
+        ];
+        let t = table3_text(&ours, &macs);
+        assert!(t.contains("FILM-QNN"));
+        assert!(t.contains("H2PIPE (ours, simulated)"));
+        assert!(t.contains("19.4x"));
+        assert!(t.contains("5.1x"));
+        assert!(t.contains("10.5x"));
+    }
+
+    #[test]
+    fn gops_arithmetic() {
+        // 1.8 GMACs at 1000 im/s = 3600 GOPs
+        assert!((gops(1_800_000_000, 1000.0) - 3600.0).abs() < 1.0);
+    }
+}

@@ -1,0 +1,170 @@
+//! Minimal benchmark harness (criterion is unavailable offline).
+//!
+//! Each `cargo bench` target regenerates one paper table/figure: benches
+//! print a human-readable table to stdout AND write machine-readable JSON
+//! under `target/bench_results/` so EXPERIMENTS.md numbers can be traced
+//! to artifacts.
+
+use std::time::Instant;
+
+use crate::util::{Json, Percentiles};
+
+/// Timing statistics for one measured closure.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub label: String,
+    pub iters: u32,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub stddev_s: f64,
+    pub min_s: f64,
+}
+
+impl Measurement {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_s * 1e3
+    }
+}
+
+/// A named bench run collecting measurements and result rows.
+pub struct Bench {
+    name: String,
+    measurements: Vec<Measurement>,
+    results: Json,
+    started: Instant,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Self {
+        println!("== bench: {name} ==");
+        Self {
+            name: name.to_string(),
+            measurements: Vec::new(),
+            results: Json::obj(),
+            started: Instant::now(),
+        }
+    }
+
+    /// Time `f` for `iters` iterations after `warmup` unmeasured runs.
+    pub fn time(&mut self, label: &str, warmup: u32, iters: u32, mut f: impl FnMut()) -> Measurement {
+        for _ in 0..warmup {
+            f();
+        }
+        let mut p = Percentiles::new();
+        let mut mean = crate::util::OnlineStats::new();
+        for _ in 0..iters.max(1) {
+            let t = Instant::now();
+            f();
+            let dt = t.elapsed().as_secs_f64();
+            p.push(dt);
+            mean.push(dt);
+        }
+        let m = Measurement {
+            label: label.to_string(),
+            iters,
+            mean_s: mean.mean(),
+            median_s: p.median(),
+            stddev_s: mean.stddev(),
+            min_s: p.min(),
+        };
+        println!(
+            "  {label:40} mean {:>10.3} ms   median {:>10.3} ms   sd {:>8.3} ms",
+            m.mean_s * 1e3,
+            m.median_s * 1e3,
+            m.stddev_s * 1e3
+        );
+        self.measurements.push(m.clone());
+        m
+    }
+
+    /// Attach a result value (a table row, a figure series...) to the
+    /// bench's JSON output.
+    pub fn record(&mut self, key: &str, value: impl Into<Json>) {
+        self.results.set(key, value);
+    }
+
+    /// Print a fixed-width table of rows.
+    pub fn table(&self, headers: &[&str], rows: &[Vec<String>]) {
+        let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+        for r in rows {
+            for (i, c) in r.iter().enumerate() {
+                if i < widths.len() {
+                    widths[i] = widths[i].max(c.len());
+                }
+            }
+        }
+        let fmt_row = |cells: Vec<String>| {
+            cells
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        println!("{}", fmt_row(headers.iter().map(|s| s.to_string()).collect()));
+        for r in rows {
+            println!("{}", fmt_row(r.clone()));
+        }
+    }
+
+    /// Write JSON results to `target/bench_results/<name>.json`.
+    pub fn finish(mut self) {
+        let mut meas = Json::Arr(vec![]);
+        for m in &self.measurements {
+            let mut o = Json::obj();
+            o.set("label", m.label.as_str())
+                .set("iters", m.iters)
+                .set("mean_s", m.mean_s)
+                .set("median_s", m.median_s)
+                .set("stddev_s", m.stddev_s)
+                .set("min_s", m.min_s);
+            meas.push(o);
+        }
+        self.results.set("bench", self.name.as_str());
+        self.results.set("measurements", meas);
+        self.results.set("wall_s", self.started.elapsed().as_secs_f64());
+        let dir = std::path::Path::new("target/bench_results");
+        let _ = std::fs::create_dir_all(dir);
+        let path = dir.join(format!("{}.json", self.name));
+        if let Err(e) = std::fs::write(&path, self.results.to_pretty()) {
+            eprintln!("warning: could not write {}: {e}", path.display());
+        } else {
+            println!("results -> {}", path.display());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_measures_something() {
+        let mut b = Bench::new("test_bench_unit");
+        let m = b.time("spin", 1, 5, || {
+            std::hint::black_box((0..10_000).sum::<u64>());
+        });
+        assert!(m.mean_s > 0.0);
+        assert!(m.min_s <= m.mean_s * 1.5);
+        assert_eq!(m.iters, 5);
+    }
+
+    #[test]
+    fn record_and_finish_writes_json() {
+        let mut b = Bench::new("test_bench_json");
+        b.record("answer", 42u64);
+        b.finish();
+        let p = std::path::Path::new("target/bench_results/test_bench_json.json");
+        let s = std::fs::read_to_string(p).unwrap();
+        assert!(s.contains("\"answer\": 42"));
+    }
+
+    #[test]
+    fn table_renders_without_panic() {
+        let b = Bench::new("test_bench_table");
+        b.table(
+            &["model", "im/s"],
+            &[vec!["ResNet-18".into(), "4174".into()], vec!["VGG-16".into(), "545".into()]],
+        );
+    }
+}

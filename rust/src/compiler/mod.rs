@@ -1,0 +1,344 @@
+//! The H2PIPE compiler.
+//!
+//! Pipeline: IR network -> per-layer [`resources::LayerStats`] ->
+//! balanced-pipeline parallelism allocation ([`parallelism`]) ->
+//! Eq. 1 / Algorithm 1 offload selection + clockwise PC assignment
+//! ([`offload`]) -> burst-length policy -> [`plan::AcceleratorPlan`].
+
+pub mod offload;
+pub mod parallelism;
+pub mod plan;
+pub mod resources;
+
+pub use offload::{algorithm1, assign_pcs, score};
+pub use parallelism::{allocate, Allocation, Budget, Parallelism};
+pub use plan::{AcceleratorPlan, LayerPlan};
+pub use resources::{memory_breakdown, LayerStats, MemoryBreakdown, ResourceUsage};
+
+use crate::config::{BurstLengthPolicy, CompilerOptions, DeviceConfig, WeightPlacement};
+use crate::nn::Network;
+use anyhow::{ensure, Context, Result};
+
+/// Measured HBM random-read efficiency by burst length (calibrated from
+/// the §III-A traffic experiment; regenerate with
+/// `cargo bench --bench fig3a_hbm_efficiency`).
+pub fn hbm_read_efficiency(burst_len: u32) -> f64 {
+    match burst_len {
+        0..=1 => 0.22,
+        2 => 0.44,
+        4 => 0.74,
+        8 => 0.826,
+        16 => 0.875,
+        _ => 0.902,
+    }
+}
+
+/// Compile a network for a device.
+pub fn compile(
+    net: &Network,
+    device: &DeviceConfig,
+    opts: &CompilerOptions,
+) -> Result<AcceleratorPlan> {
+    opts.validate()?;
+    net.validate().context("network validation")?;
+
+    let stats: Vec<LayerStats> =
+        net.layers().iter().map(|l| LayerStats::from_layer(l, opts)).collect();
+
+    let m20k_budget = device.m20k_blocks as u64; // BRAM may fill to ~98%
+    let trial_burst = match opts.burst_length {
+        BurstLengthPolicy::Fixed(b) => b,
+        BurstLengthPolicy::Auto => 8,
+    };
+    // Price the whole memory system for a candidate placement: banked
+    // on-chip weight memories + activation buffers + FIFO costs for
+    // offloaded layers.
+    let m20k_for = |offload: &[bool], par: &[Parallelism]| -> u64 {
+        let mut total = 0u64;
+        for (i, s) in stats.iter().enumerate() {
+            total += ceil_div_m20k(s.act_bits);
+            if !s.has_weights {
+                continue;
+            }
+            if offload[i] {
+                total += s.hbm_weight_m20k(trial_burst);
+            } else {
+                let cap = crate::util::ceil_div(s.weight_bits, resources::M20K_BITS);
+                let bank = 2 * par[i].chains() as u64;
+                total += (cap + bank) * s.dup;
+            }
+        }
+        total
+    };
+
+    // 1+2. Co-iterate parallelism scale with memory fit: compute-budget
+    // parallelism is allocated first; if Algorithm 1 cannot make the
+    // memory system fit (too many chains -> too little offloadable
+    // bandwidth, too much weight-memory banking), the compute budget is
+    // scaled down and the allocation repeated — memory-bound networks
+    // like ResNet-50 trade parallelism for offload capacity exactly as
+    // the paper's resource columns show (R50: 98% BRAM, only 33% DSP).
+    let mut scale = opts.max_utilization;
+    let (alloc, off_plan) = loop {
+        let mut budget = Budget::from_device(device, opts, opts.all_hbm);
+        budget.max_tbs = (device.tensor_blocks as f64 * scale) as u64;
+        budget.max_alms = (device.alms as f64 * scale.min(opts.max_utilization)) as u64;
+        let alloc = allocate(&stats, &budget);
+        let off_plan = algorithm1(
+            &stats,
+            &alloc.par,
+            device.usable_pcs() as u64,
+            device.chains_per_pc() as u64,
+            opts.all_hbm,
+            |offload| m20k_for(offload, &alloc.par) <= (m20k_budget as f64 * 0.98) as u64,
+        );
+        if m20k_for(&off_plan.offload, &alloc.par) <= m20k_budget {
+            break (alloc, off_plan);
+        }
+        scale *= 0.75;
+        ensure!(
+            scale >= 0.005,
+            "{}: memory system does not fit even with maximal HBM offload and \
+             minimal parallelism ({} of {m20k_budget} M20Ks)",
+            net.name,
+            m20k_for(&off_plan.offload, &alloc.par)
+        );
+    };
+
+    // 3. Pseudo-channel assignment (§V-B clockwise).
+    let asg = assign_pcs(&stats, &alloc.par, &off_plan.offload, device)?;
+
+    // 4. Burst-length policy (§VI-A): 8 when the bottleneck layer is on
+    //    chip, 32 when it streams from HBM.
+    let bottleneck_idx = stats
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| s.has_weights)
+        .max_by_key(|(i, s)| s.cycles_per_image(alloc.par[*i].p_i, alloc.par[*i].p_o))
+        .map(|(i, _)| i)
+        .context("no weight layers")?;
+    let burst_len = match opts.burst_length {
+        BurstLengthPolicy::Fixed(b) => b,
+        BurstLengthPolicy::Auto => {
+            if off_plan.offload[bottleneck_idx] {
+                32
+            } else {
+                8
+            }
+        }
+    };
+    let eff = hbm_read_efficiency(burst_len);
+
+    // 5. Assemble the plan + analytic estimates.
+    let layers: Vec<LayerPlan> = stats
+        .iter()
+        .enumerate()
+        .map(|(i, s)| LayerPlan {
+            stats: s.clone(),
+            par: alloc.par[i],
+            placement: if off_plan.offload[i] {
+                WeightPlacement::Hbm
+            } else {
+                WeightPlacement::OnChip
+            },
+            pcs: asg.pcs[i].clone(),
+            score: off_plan.scores[i],
+        })
+        .collect();
+
+    let mut plan = AcceleratorPlan {
+        network: net.name.clone(),
+        device: device.clone(),
+        options: opts.clone(),
+        layers,
+        burst_len,
+        usage: ResourceUsage::default(),
+        bottleneck_cycles: alloc.bottleneck_cycles,
+        est_throughput: 0.0,
+        est_latency: 0.0,
+        hbm_read_efficiency: eff,
+        free_bw_slots: off_plan.free_bw,
+    };
+    plan.usage = plan.recompute_usage();
+
+    // Effective bottleneck includes the steady-state HBM stall factor.
+    let stall = plan.hbm_stall_factor(eff);
+    let eff_bottleneck = plan
+        .layers
+        .iter()
+        .filter(|l| l.stats.has_weights)
+        .map(|l| {
+            let c = l.compute_cycles() as f64;
+            if l.placement == WeightPlacement::Hbm {
+                c * stall
+            } else {
+                c
+            }
+        })
+        .fold(0.0f64, f64::max)
+        .max(1.0);
+    let hz = plan.device.core_mhz as f64 * 1e6;
+    plan.est_throughput = hz / eff_bottleneck;
+    // Latency: pipeline fill (each layer's receptive window) + one image
+    // at the bottleneck rate.
+    let fill: f64 = plan
+        .layers
+        .iter()
+        .filter(|l| l.stats.has_weights)
+        .map(|l| {
+            let per_line = l.compute_cycles() as f64 / l.stats.out_h.max(1) as f64;
+            per_line * (l.stats.kh as f64 + 1.0)
+        })
+        .sum();
+    plan.est_latency = (fill + eff_bottleneck) / hz;
+    Ok(plan)
+}
+
+fn ceil_div_m20k(bits: u64) -> u64 {
+    crate::util::ceil_div(bits, resources::M20K_BITS)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::zoo;
+
+    fn device() -> DeviceConfig {
+        DeviceConfig::stratix10_nx2100()
+    }
+
+    #[test]
+    fn compile_all_table1_models() {
+        let d = device();
+        let o = CompilerOptions::default();
+        for net in zoo::table1_models() {
+            let plan = compile(&net, &d, &o).unwrap_or_else(|e| panic!("{}: {e}", net.name));
+            assert!(plan.est_throughput > 0.0);
+            assert!(plan.usage.m20k <= d.m20k_blocks as u64, "{}", net.name);
+            assert!(plan.usage.tensor_blocks <= d.tensor_blocks as u64);
+        }
+    }
+
+    #[test]
+    fn mobilenets_stay_fully_on_chip() {
+        // They fit in BRAM (Table I), so the hybrid compiler offloads
+        // nothing.
+        let d = device();
+        let o = CompilerOptions::default();
+        for net in [zoo::mobilenet_v1(), zoo::mobilenet_v2()] {
+            let plan = compile(&net, &d, &o).unwrap();
+            assert_eq!(plan.hbm_layers().count(), 0, "{}", net.name);
+        }
+    }
+
+    #[test]
+    fn resnet50_and_vgg_must_offload() {
+        let d = device();
+        let o = CompilerOptions::default();
+        for net in [zoo::resnet50(), zoo::vgg16()] {
+            let plan = compile(&net, &d, &o).unwrap();
+            assert!(plan.hbm_layers().count() > 0, "{}", net.name);
+        }
+    }
+
+    #[test]
+    fn all_hbm_mode_offloads_everything_it_can() {
+        let d = device();
+        let mut o = CompilerOptions::default();
+        o.all_hbm = true;
+        let plan = compile(&zoo::resnet18(), &d, &o).unwrap();
+        let on_chip = plan.onchip_layers().count();
+        // bandwidth-limited: not necessarily zero, but the big layers go
+        let hbm = plan.hbm_layers().count();
+        assert!(hbm >= on_chip, "hbm {hbm} vs on-chip {on_chip}");
+    }
+
+    #[test]
+    fn hybrid_beats_all_hbm() {
+        // Fig. 6's core message: the hybrid memory system outperforms
+        // all-HBM for every network.
+        let d = device();
+        for net in zoo::eval_models() {
+            let hybrid = compile(&net, &d, &CompilerOptions::default()).unwrap();
+            let mut o = CompilerOptions::default();
+            o.all_hbm = true;
+            let all_hbm = compile(&net, &d, &o).unwrap();
+            assert!(
+                hybrid.est_throughput > all_hbm.est_throughput,
+                "{}: hybrid {:.0} vs all-HBM {:.0}",
+                net.name,
+                hybrid.est_throughput,
+                all_hbm.est_throughput
+            );
+        }
+    }
+
+    #[test]
+    fn auto_burst_length_follows_bottleneck_placement() {
+        let d = device();
+        let o = CompilerOptions::default();
+        // ResNet-18's bottleneck stays on chip -> BL8 (§VI-A conclusion)
+        let r18 = compile(&zoo::resnet18(), &d, &o).unwrap();
+        assert_eq!(r18.burst_len, 8, "R18 expected BL8");
+    }
+
+    #[test]
+    fn bandwidth_slots_never_oversubscribed() {
+        let d = device();
+        let mut o = CompilerOptions::default();
+        o.all_hbm = true;
+        for net in zoo::eval_models() {
+            let plan = compile(&net, &d, &o).unwrap();
+            let used: u64 = plan.hbm_layers().map(|l| l.par.chains() as u64).sum();
+            let cap = d.usable_pcs() as u64 * d.chains_per_pc() as u64;
+            assert!(used + plan.free_bw_slots == cap, "{}: {used}+{}", net.name, plan.free_bw_slots);
+        }
+    }
+
+    #[test]
+    fn pc_slots_respected_per_layer() {
+        let d = device();
+        let o = CompilerOptions::default();
+        let plan = compile(&zoo::vgg16(), &d, &o).unwrap();
+        for l in plan.hbm_layers() {
+            assert!(!l.pcs.is_empty(), "{} offloaded but no PCs", l.stats.name);
+            // a layer's PC slots exactly cover its chain demand
+            let slots: u32 = l.pcs.iter().map(|&(_, c)| c).sum();
+            assert_eq!(slots, l.par.chains(), "{}: {:?}", l.stats.name, l.pcs);
+        }
+    }
+
+    #[test]
+    fn throughput_in_plausible_range() {
+        // Analytic estimates should land within ~2.5x of the paper's
+        // hybrid hardware numbers (the cycle simulator does better).
+        let d = device();
+        let o = CompilerOptions::default();
+        let targets = [("ResNet-18", 4174.0), ("ResNet-50", 1004.0), ("VGG-16", 545.0)];
+        for (name, t) in targets {
+            let net = zoo::by_name(name).unwrap();
+            let plan = compile(&net, &d, &o).unwrap();
+            let r = plan.est_throughput / t;
+            assert!(
+                (0.4..2.5).contains(&r),
+                "{name}: est {:.0} vs paper {t} (ratio {r:.2})",
+                plan.est_throughput
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic_compilation() {
+        let d = device();
+        let o = CompilerOptions::default();
+        let a = compile(&zoo::resnet50(), &d, &o).unwrap();
+        let b = compile(&zoo::resnet50(), &d, &o).unwrap();
+        assert_eq!(a.burst_len, b.burst_len);
+        assert_eq!(a.usage.m20k, b.usage.m20k);
+        for (x, y) in a.layers.iter().zip(b.layers.iter()) {
+            assert_eq!(x.par, y.par);
+            assert_eq!(x.placement, y.placement);
+            assert_eq!(x.pcs, y.pcs);
+        }
+    }
+}

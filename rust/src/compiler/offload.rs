@@ -1,0 +1,267 @@
+//! Layer offload selection (Eq. 1 + Algorithm 1) and pseudo-channel
+//! assignment (§V-B).
+
+use crate::compiler::parallelism::Parallelism;
+use crate::compiler::resources::{LayerStats, CHAIN_WEIGHT_BITS, M20K_BITS};
+use crate::config::DeviceConfig;
+use crate::util::ceil_div;
+
+/// Eq. 1: desirability of moving layer `l`'s weights to HBM.
+///
+/// score_l = (ceil(kh*kw*ci*co*8 / 20480) - 2) * ceil(out_w / 18)
+///           -----------------------------------------------------
+///                             p_i * p_o * 80
+///
+/// Numerator: M20Ks saved by replacing every duplicated weight memory
+/// with a 2-M20K last-stage FIFO. Denominator: HBM weight bandwidth the
+/// layer will consume (bits per core cycle).
+pub fn score(s: &LayerStats, p: Parallelism) -> f64 {
+    if !s.has_weights {
+        return f64::NEG_INFINITY;
+    }
+    let m20k_per_dup = ceil_div(s.weight_bits, M20K_BITS) as i64 - 2;
+    let saved = m20k_per_dup * s.dup as i64;
+    let bw = (p.chains() as u64 * CHAIN_WEIGHT_BITS) as f64;
+    saved as f64 / bw
+}
+
+/// Result of Algorithm 1.
+#[derive(Debug, Clone)]
+pub struct OffloadPlan {
+    /// Index-aligned with the stats slice: offload to HBM?
+    pub offload: Vec<bool>,
+    /// Chain-slots of HBM bandwidth left unallocated.
+    pub free_bw: u64,
+    /// Eq. 1 scores (for reporting).
+    pub scores: Vec<f64>,
+}
+
+/// Algorithm 1 (verbatim): offload the best-scoring layers until the
+/// pseudo-channel bandwidth (`n_pc * 3` chain slots) is exhausted.
+///
+/// `force_all` is the paper's all-HBM configuration; otherwise the greedy
+/// stops early once the remaining on-chip layers fit the device
+/// (`fits_on_chip` callback), matching "using as many on-chip weight
+/// buffers as possible" (§VI-A).
+pub fn algorithm1(
+    stats: &[LayerStats],
+    par: &[Parallelism],
+    n_pc: u64,
+    chains_per_pc: u64,
+    force_all: bool,
+    mut fits_on_chip: impl FnMut(&[bool]) -> bool,
+) -> OffloadPlan {
+    let l_count = stats.len();
+    let scores: Vec<f64> =
+        stats.iter().zip(par.iter()).map(|(s, &p)| score(s, p)).collect();
+    let mut offload = vec![false; l_count];
+
+    // order: layer indices sorted by score, best first
+    let mut order: Vec<usize> =
+        (0..l_count).filter(|&i| stats[i].has_weights).collect();
+    order.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+
+    let mut free_bw = n_pc * chains_per_pc;
+    let mut idx = 0;
+    while free_bw != 0 && idx < order.len() {
+        if !force_all && fits_on_chip(&offload) {
+            break; // on-chip memory already fits: stop offloading
+        }
+        let l = order[idx];
+        let need = par[l].chains() as u64;
+        if need <= free_bw {
+            offload[l] = true;
+            free_bw -= need;
+        }
+        idx += 1;
+    }
+    OffloadPlan { offload, free_bw, scores }
+}
+
+/// §V-B pseudo-channel assignment: offloaded layers ordered from network
+/// input to output are assigned clockwise — PCs 0..=15 (bottom stack),
+/// then 31 down to 16 (top stack) — skipping excluded PCs. A layer
+/// needing more than `chains_per_pc` chains takes consecutive PCs, and a
+/// layer may take a *partial* slot count on a PC another layer already
+/// occupies, so assignments carry explicit (pc, chains) pairs.
+#[derive(Debug, Clone)]
+pub struct PcAssignment {
+    /// For each layer index: (pseudo-channel, chain slots taken on it).
+    /// Empty when the layer stays on chip.
+    pub pcs: Vec<Vec<(u32, u32)>>,
+    /// Free chain slots per PC id after assignment.
+    pub free_slots: Vec<u32>,
+}
+
+pub fn assign_pcs(
+    stats: &[LayerStats],
+    par: &[Parallelism],
+    offload: &[bool],
+    device: &DeviceConfig,
+) -> anyhow::Result<PcAssignment> {
+    let total = device.hbm.total_pcs();
+    let per_pc = device.chains_per_pc();
+    // clockwise order: 0..=15, then 31..=16, extended for unlimited-HBM
+    // devices with more than 2 stacks.
+    let mut order: Vec<u32> = Vec::new();
+    let half = total / 2;
+    order.extend(0..half);
+    order.extend((half..total).rev());
+    order.retain(|pc| !device.excluded_pcs.contains(pc));
+
+    let mut free: Vec<u32> = vec![per_pc; total as usize];
+    for &e in &device.excluded_pcs {
+        free[e as usize] = 0;
+    }
+    let mut cursor = 0usize;
+    let mut pcs: Vec<Vec<(u32, u32)>> = vec![Vec::new(); stats.len()];
+    for (i, s) in stats.iter().enumerate() {
+        if !offload[i] || !s.has_weights {
+            continue;
+        }
+        let mut need = par[i].chains();
+        while need > 0 {
+            anyhow::ensure!(
+                cursor < order.len(),
+                "out of pseudo-channels assigning layer {} ({} chains left)",
+                s.name,
+                need
+            );
+            let pc = order[cursor];
+            let take = need.min(free[pc as usize]);
+            if take == 0 {
+                cursor += 1;
+                continue;
+            }
+            free[pc as usize] -= take;
+            need -= take;
+            pcs[i].push((pc, take));
+            if free[pc as usize] == 0 {
+                cursor += 1;
+            }
+        }
+    }
+    Ok(PcAssignment { pcs, free_slots: free })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CompilerOptions;
+    use crate::nn::zoo;
+
+    fn stats_and_par(net: &crate::nn::Network) -> (Vec<LayerStats>, Vec<Parallelism>) {
+        let o = CompilerOptions::default();
+        let stats: Vec<LayerStats> =
+            net.layers().iter().map(|l| LayerStats::from_layer(l, &o)).collect();
+        let par = vec![Parallelism { p_i: 1, p_o: 1 }; stats.len()];
+        (stats, par)
+    }
+
+    #[test]
+    fn score_prefers_big_low_bandwidth_layers() {
+        let net = zoo::vgg16();
+        let (stats, par) = stats_and_par(&net);
+        let fc6 = net.layers().iter().position(|l| l.name == "fc6").unwrap();
+        let conv1_1 = net.layers().iter().position(|l| l.name == "conv1_1").unwrap();
+        assert!(
+            score(&stats[fc6], par[fc6]) > score(&stats[conv1_1], par[conv1_1]),
+            "fc6 (huge, 1 line) must outscore conv1_1 (tiny, 224 lines)"
+        );
+    }
+
+    #[test]
+    fn score_negative_for_tiny_layers() {
+        // A layer with <= 2 M20Ks of weights saves nothing by offloading.
+        let net = zoo::mobilenet_v2();
+        let (stats, par) = stats_and_par(&net);
+        let tiny = stats
+            .iter()
+            .position(|s| s.has_weights && ceil_div(s.weight_bits, M20K_BITS) <= 2)
+            .expect("v2 has tiny pointwise layers");
+        assert!(score(&stats[tiny], par[tiny]) <= 0.0);
+    }
+
+    #[test]
+    fn algorithm1_respects_bandwidth() {
+        let net = zoo::resnet50();
+        let (stats, par) = stats_and_par(&net);
+        let plan = algorithm1(&stats, &par, 31, 3, true, |_| false);
+        let used: u64 = stats
+            .iter()
+            .zip(plan.offload.iter())
+            .zip(par.iter())
+            .filter(|((_, &off), _)| off)
+            .map(|((_, _), p)| p.chains() as u64)
+            .sum();
+        assert!(used <= 93);
+        assert_eq!(plan.free_bw, 93 - used);
+    }
+
+    #[test]
+    fn algorithm1_stops_when_memory_fits() {
+        let net = zoo::resnet50();
+        let (stats, par) = stats_and_par(&net);
+        // pretend memory fits after 3 offloads
+        let mut calls = 0;
+        let plan = algorithm1(&stats, &par, 31, 3, false, |off| {
+            calls += 1;
+            off.iter().filter(|&&b| b).count() >= 3
+        });
+        assert_eq!(plan.offload.iter().filter(|&&b| b).count(), 3);
+        assert!(calls > 0);
+    }
+
+    #[test]
+    fn algorithm1_offloads_best_scores_first() {
+        let net = zoo::vgg16();
+        let (stats, par) = stats_and_par(&net);
+        let plan = algorithm1(&stats, &par, 31, 3, false, |off| {
+            off.iter().filter(|&&b| b).count() >= 2
+        });
+        // the two offloaded layers must be the two best-scoring ones
+        let mut ranked: Vec<usize> =
+            (0..stats.len()).filter(|&i| stats[i].has_weights).collect();
+        ranked.sort_by(|&a, &b| plan.scores[b].partial_cmp(&plan.scores[a]).unwrap());
+        assert!(plan.offload[ranked[0]]);
+        assert!(plan.offload[ranked[1]]);
+    }
+
+    #[test]
+    fn pc_assignment_is_clockwise_and_skips_pc16() {
+        let d = DeviceConfig::stratix10_nx2100();
+        let net = zoo::resnet50();
+        let (stats, par) = stats_and_par(&net);
+        let plan = algorithm1(&stats, &par, 31, 3, true, |_| false);
+        let asg = assign_pcs(&stats, &par, &plan.offload, &d).unwrap();
+        // no layer lands on the excluded PC16
+        for pcs in &asg.pcs {
+            assert!(pcs.iter().all(|&(pc, _)| pc != 16));
+        }
+        assert_eq!(asg.free_slots[16], 0, "PC16 must hold zero slots");
+        // earliest offloaded layer sits on the lowest-numbered PCs
+        let first = asg.pcs.iter().find(|p| !p.is_empty()).unwrap();
+        assert!(first.iter().all(|&(pc, _)| pc < 16), "first layers use bottom stack: {first:?}");
+        // capacity respected
+        for (pc, &f) in asg.free_slots.iter().enumerate() {
+            assert!(f <= 3, "PC{pc} free {f}");
+        }
+    }
+
+    #[test]
+    fn pc_assignment_spans_multiple_pcs_for_wide_layers() {
+        let d = DeviceConfig::stratix10_nx2100();
+        let net = zoo::resnet18();
+        let o = CompilerOptions::default();
+        let stats: Vec<LayerStats> =
+            net.layers().iter().map(|l| LayerStats::from_layer(l, &o)).collect();
+        let mut par = vec![Parallelism { p_i: 1, p_o: 1 }; stats.len()];
+        // give one layer 7 chains -> needs ceil(7/3) = 3 PCs
+        let li = stats.iter().position(|s| s.has_weights).unwrap();
+        par[li] = Parallelism { p_i: 7, p_o: 1 };
+        let mut offload = vec![false; stats.len()];
+        offload[li] = true;
+        let asg = assign_pcs(&stats, &par, &offload, &d).unwrap();
+        assert_eq!(asg.pcs[li].len(), 3, "{:?}", asg.pcs[li]);
+    }
+}

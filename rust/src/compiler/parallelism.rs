@@ -1,0 +1,281 @@
+//! Per-layer parallelism allocation.
+//!
+//! HPIPE "chooses the number of input and output channels processed in
+//! parallel, p_i and p_o for each layer, to increase the throughput of
+//! layers that would otherwise bottleneck the computation" (§II-B). This
+//! is a classic balanced-pipeline allocation: repeatedly give the
+//! bottleneck layer the cheapest useful parallelism increase until the
+//! device (ALMs / AI-TBs / optional chain budget) is exhausted.
+
+use crate::compiler::resources::{LayerStats, ALM_PER_ENGINE, ALM_PER_TB};
+use crate::config::{CompilerOptions, DeviceConfig};
+
+/// Chosen parallelism for one layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Parallelism {
+    /// Input-channel parallelism in units of 10 channels (AI-TB lanes).
+    pub p_i: u32,
+    /// Output channels in parallel.
+    pub p_o: u32,
+}
+
+impl Parallelism {
+    pub fn chains(&self) -> u32 {
+        self.p_i * self.p_o
+    }
+}
+
+/// Smallest p' > p that strictly reduces `ceil(groups / p')`, or None.
+fn next_useful_p(groups: u64, p: u32) -> Option<u32> {
+    let cur = groups.div_ceil(p as u64);
+    if cur <= 1 {
+        return None;
+    }
+    // smallest p' with ceil(groups/p') == cur-1 ... but any reduction works;
+    // take p' = ceil(groups / (cur - 1)) which reduces by exactly one group.
+    let p2 = groups.div_ceil(cur - 1) as u32;
+    (p2 > p).then_some(p2)
+}
+
+/// Allocation result.
+#[derive(Debug, Clone)]
+pub struct Allocation {
+    /// Index-aligned with the `stats` slice passed in.
+    pub par: Vec<Parallelism>,
+    /// Bottleneck compute cycles per image after allocation.
+    pub bottleneck_cycles: u64,
+    pub total_tbs: u64,
+    pub total_alms: u64,
+}
+
+/// Budget the allocator works against.
+#[derive(Debug, Clone)]
+pub struct Budget {
+    pub max_tbs: u64,
+    pub max_alms: u64,
+    /// Optional cap on total tensor chains (all-HBM mode: 3 per usable
+    /// pseudo-channel).
+    pub max_chains: Option<u64>,
+    /// Per-layer chain cap (weight-memory fanout / Fmax limit — see
+    /// `CompilerOptions::max_chains_per_layer`).
+    pub max_chains_per_layer: u32,
+}
+
+impl Budget {
+    pub fn from_device(d: &DeviceConfig, opts: &CompilerOptions, all_hbm: bool) -> Self {
+        Self {
+            max_tbs: (d.tensor_blocks as f64 * opts.max_utilization) as u64,
+            max_alms: (d.alms as f64 * opts.max_utilization) as u64,
+            max_chains: all_hbm.then(|| d.usable_pcs() as u64 * d.chains_per_pc() as u64),
+            max_chains_per_layer: opts.max_chains_per_layer,
+        }
+    }
+}
+
+/// Allocate parallelism for all weight layers.
+pub fn allocate(stats: &[LayerStats], budget: &Budget) -> Allocation {
+    let n = stats.len();
+    let mut par = vec![Parallelism { p_i: 1, p_o: 1 }; n];
+
+    let tbs = |par: &[Parallelism]| -> u64 {
+        stats
+            .iter()
+            .zip(par)
+            .filter(|(s, _)| s.has_weights)
+            .map(|(s, p)| s.tensor_blocks(p.p_i, p.p_o))
+            .sum()
+    };
+    let chains = |par: &[Parallelism]| -> u64 {
+        stats
+            .iter()
+            .zip(par)
+            .filter(|(s, _)| s.has_weights)
+            .map(|(_, p)| p.chains() as u64)
+            .sum()
+    };
+    let alms = |t: u64| -> u64 {
+        let engines = stats.iter().filter(|s| s.has_weights).count() as u64;
+        engines * ALM_PER_ENGINE + t * ALM_PER_TB
+    };
+
+    loop {
+        // Find the bottleneck layer.
+        let (bi, bcycles) = match stats
+            .iter()
+            .zip(par.iter())
+            .enumerate()
+            .filter(|(_, (s, _))| s.has_weights)
+            .map(|(i, (s, p))| (i, s.cycles_per_image(p.p_i, p.p_o)))
+            .max_by_key(|&(_, c)| c)
+        {
+            Some(x) => x,
+            None => break,
+        };
+        if bcycles <= 1 {
+            break;
+        }
+        let s = &stats[bi];
+        let p = par[bi];
+
+        // Candidate moves: bump p_i or p_o to the next useful value.
+        let ci_groups = (s.ci as u64).div_ceil(10).max(1);
+        let co_groups = s.co.max(1) as u64;
+        let mut cands: Vec<Parallelism> = Vec::new();
+        if !s.depthwise {
+            if let Some(pi2) = next_useful_p(ci_groups, p.p_i) {
+                cands.push(Parallelism { p_i: pi2, p_o: p.p_o });
+            }
+        }
+        if let Some(po2) = next_useful_p(co_groups, p.p_o) {
+            cands.push(Parallelism { p_i: p.p_i, p_o: po2 });
+        }
+        cands.retain(|c| c.chains() <= budget.max_chains_per_layer);
+        // Pick the move with the best cycles-saved per extra tensor block.
+        let cur_cycles = s.cycles_per_image(p.p_i, p.p_o);
+        let cur_tb = s.tensor_blocks(p.p_i, p.p_o);
+        let best = cands
+            .into_iter()
+            .filter_map(|c| {
+                let dc = cur_cycles.saturating_sub(s.cycles_per_image(c.p_i, c.p_o));
+                let dt = s.tensor_blocks(c.p_i, c.p_o).saturating_sub(cur_tb).max(1);
+                (dc > 0).then(|| (c, dc as f64 / dt as f64))
+            })
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        let Some((cand, _)) = best else {
+            break; // bottleneck is at max parallelism
+        };
+
+        // Apply tentatively and check budgets.
+        let old = par[bi];
+        par[bi] = cand;
+        let t = tbs(&par);
+        let within = t <= budget.max_tbs
+            && alms(t) <= budget.max_alms
+            && budget.max_chains.is_none_or(|m| chains(&par) <= m);
+        if !within {
+            par[bi] = old;
+            break; // the bottleneck cannot grow further: we're done
+        }
+    }
+
+    let t = tbs(&par);
+    let bottleneck_cycles = stats
+        .iter()
+        .zip(par.iter())
+        .filter(|(s, _)| s.has_weights)
+        .map(|(s, p)| s.cycles_per_image(p.p_i, p.p_o))
+        .max()
+        .unwrap_or(1);
+    Allocation { total_tbs: t, total_alms: alms(t), par, bottleneck_cycles }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CompilerOptions;
+    use crate::nn::zoo;
+
+    fn stats_for(net: &crate::nn::Network) -> Vec<LayerStats> {
+        let o = CompilerOptions::default();
+        net.layers().iter().map(|l| LayerStats::from_layer(l, &o)).collect()
+    }
+
+    fn device_budget() -> Budget {
+        let d = DeviceConfig::stratix10_nx2100();
+        Budget::from_device(&d, &CompilerOptions::default(), false)
+    }
+
+    #[test]
+    fn next_useful_p_reduces_groups() {
+        // 7 groups: p=1 -> 7; next useful p=2 -> ceil(7/2)=4 ... each step
+        // strictly reduces.
+        let mut p = 1;
+        let mut seen = vec![7u64.div_ceil(1)];
+        while let Some(p2) = next_useful_p(7, p) {
+            let g = 7u64.div_ceil(p2 as u64);
+            assert!(g < *seen.last().unwrap());
+            seen.push(g);
+            p = p2;
+        }
+        assert_eq!(*seen.last().unwrap(), 1);
+    }
+
+    #[test]
+    fn allocation_respects_budgets() {
+        let stats = stats_for(&zoo::resnet18());
+        let b = device_budget();
+        let a = allocate(&stats, &b);
+        assert!(a.total_tbs <= b.max_tbs, "{} TBs", a.total_tbs);
+        assert!(a.total_alms <= b.max_alms);
+    }
+
+    #[test]
+    fn allocation_improves_over_minimum() {
+        let stats = stats_for(&zoo::resnet18());
+        let min_bottleneck = stats
+            .iter()
+            .filter(|s| s.has_weights)
+            .map(|s| s.cycles_per_image(1, 1))
+            .max()
+            .unwrap();
+        let a = allocate(&stats, &device_budget());
+        assert!(
+            a.bottleneck_cycles * 4 < min_bottleneck,
+            "allocated {} vs min-parallelism {min_bottleneck}",
+            a.bottleneck_cycles
+        );
+    }
+
+    #[test]
+    fn pipeline_roughly_balanced() {
+        // After allocation, no layer should be drastically faster than the
+        // bottleneck while still holding lots of parallelism (that would
+        // be wasted resources). Check: median layer cycles within 100x of
+        // bottleneck and bottleneck not improvable was reached.
+        let stats = stats_for(&zoo::resnet50());
+        let a = allocate(&stats, &device_budget());
+        let mut cycles: Vec<u64> = stats
+            .iter()
+            .zip(a.par.iter())
+            .filter(|(s, _)| s.has_weights)
+            .map(|(s, p)| s.cycles_per_image(p.p_i, p.p_o))
+            .collect();
+        cycles.sort_unstable();
+        let bottleneck = *cycles.last().unwrap();
+        assert_eq!(bottleneck, a.bottleneck_cycles);
+        assert!(bottleneck > 0);
+    }
+
+    #[test]
+    fn chain_cap_binds_in_all_hbm_mode() {
+        let d = DeviceConfig::stratix10_nx2100();
+        let o = CompilerOptions::default();
+        let stats = stats_for(&zoo::resnet50());
+        let unlimited = allocate(&stats, &Budget::from_device(&d, &o, false));
+        let capped = allocate(&stats, &Budget::from_device(&d, &o, true));
+        let chains = |a: &Allocation| -> u64 {
+            stats
+                .iter()
+                .zip(a.par.iter())
+                .filter(|(s, _)| s.has_weights)
+                .map(|(_, p)| p.chains() as u64)
+                .sum()
+        };
+        assert!(chains(&capped) <= 93);
+        assert!(
+            capped.bottleneck_cycles >= unlimited.bottleneck_cycles,
+            "chain cap must not speed things up"
+        );
+    }
+
+    #[test]
+    fn depthwise_only_scales_po() {
+        let stats = stats_for(&zoo::mobilenet_v1());
+        let a = allocate(&stats, &device_budget());
+        for (s, p) in stats.iter().zip(a.par.iter()) {
+            if s.depthwise {
+                assert_eq!(p.p_i, 1, "{}: depthwise p_i fixed", s.name);
+            }
+        }
+    }
+}

@@ -1,0 +1,197 @@
+//! The compiled accelerator plan: everything the simulator, the serving
+//! runtime, and the report generators need to know about one H2PIPE
+//! instance.
+
+use crate::compiler::parallelism::Parallelism;
+use crate::compiler::resources::{
+    LayerStats, ResourceUsage, ALM_PER_ENGINE, ALM_PER_HBM_LAYER, ALM_PER_TB, M20K_BITS,
+    REG_PER_WRITE_PATH_BIT,
+};
+use crate::config::{CompilerOptions, DeviceConfig, WeightPlacement};
+use crate::util::ceil_div;
+
+/// Per-layer slice of the plan.
+#[derive(Debug, Clone)]
+pub struct LayerPlan {
+    pub stats: LayerStats,
+    pub par: Parallelism,
+    pub placement: WeightPlacement,
+    /// (pseudo-channel, chain slots) feeding this layer (empty when
+    /// on-chip). Slots on one PC can be shared between layers.
+    pub pcs: Vec<(u32, u32)>,
+    /// Eq. 1 score (reporting).
+    pub score: f64,
+}
+
+impl LayerPlan {
+    /// Compute cycles per image, ignoring memory stalls.
+    pub fn compute_cycles(&self) -> u64 {
+        self.stats.cycles_per_image(self.par.p_i, self.par.p_o)
+    }
+
+    /// On-chip M20K cost of this layer's weights at its parallelism:
+    /// every duplicated copy stores the kernel capacity AND must feed
+    /// `chains x 80` bits per cycle from 40-bit-wide M20K ports, so each
+    /// chain adds two banked blocks per duplicate. This growth is what
+    /// pushes ResNet-18 to 98% BRAM at full parallelism (Table III) and
+    /// forces even a network that fits at minimum parallelism to offload.
+    pub fn onchip_weight_m20k(&self) -> u64 {
+        if !self.stats.has_weights {
+            return 0;
+        }
+        let cap_blocks = ceil_div(self.stats.weight_bits, M20K_BITS);
+        let bank_blocks = 2 * self.par.chains() as u64;
+        (cap_blocks + bank_blocks) * self.stats.dup
+    }
+
+    /// M20K cost when streamed from HBM (last-stage + burst-matching
+    /// FIFOs).
+    pub fn hbm_m20k(&self, burst_len: u32) -> u64 {
+        if !self.stats.has_weights {
+            return 0;
+        }
+        self.stats.hbm_weight_m20k(burst_len)
+    }
+
+    /// Activation-buffer M20K cost.
+    pub fn act_m20k(&self) -> u64 {
+        ceil_div(self.stats.act_bits, M20K_BITS)
+    }
+}
+
+/// A fully compiled accelerator.
+#[derive(Debug, Clone)]
+pub struct AcceleratorPlan {
+    pub network: String,
+    pub device: DeviceConfig,
+    pub options: CompilerOptions,
+    pub layers: Vec<LayerPlan>,
+    pub burst_len: u32,
+    pub usage: ResourceUsage,
+    /// Compute-only bottleneck cycles per image.
+    pub bottleneck_cycles: u64,
+    /// Analytic throughput estimate (im/s) including steady-state HBM
+    /// stall factors (the cycle simulator refines this).
+    pub est_throughput: f64,
+    /// Analytic single-image latency estimate (s).
+    pub est_latency: f64,
+    /// HBM read efficiency assumed for the estimate.
+    pub hbm_read_efficiency: f64,
+    /// Unused chain slots after offload.
+    pub free_bw_slots: u64,
+}
+
+impl AcceleratorPlan {
+    /// Layers whose weights stream from HBM.
+    pub fn hbm_layers(&self) -> impl Iterator<Item = &LayerPlan> {
+        self.layers.iter().filter(|l| l.placement == WeightPlacement::Hbm)
+    }
+
+    /// Layers whose weights stay on chip.
+    pub fn onchip_layers(&self) -> impl Iterator<Item = &LayerPlan> {
+        self.layers
+            .iter()
+            .filter(|l| l.stats.has_weights && l.placement == WeightPlacement::OnChip)
+    }
+
+    /// Total HBM weight bytes (what the boot loader writes, §IV-C).
+    pub fn hbm_weight_bytes(&self) -> u64 {
+        self.hbm_layers().map(|l| l.stats.weight_bits / 8).sum()
+    }
+
+    /// Total weight traffic per image from HBM (Eq. 2 restricted to the
+    /// offloaded layers), in bytes.
+    pub fn hbm_traffic_per_image(&self) -> u64 {
+        self.hbm_layers().map(|l| l.stats.weight_traffic_per_image).sum()
+    }
+
+    /// Steady-state stall factor for an offloaded layer: each chain needs
+    /// 80 bits/core-cycle; one PC chain-slot supplies
+    /// 256/3 bits x (400/300) x efficiency per core cycle.
+    pub fn hbm_stall_factor(&self, eff: f64) -> f64 {
+        let supply_per_chain = 256.0 / 3.0
+            * (self.device.hbm.controller_mhz as f64 / self.device.core_mhz as f64)
+            * eff;
+        (80.0 / supply_per_chain).max(1.0)
+    }
+
+    /// Human-readable plan summary.
+    pub fn report(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        let _ = writeln!(s, "=== H2PIPE plan: {} on {} ===", self.network, self.device.name);
+        let _ = writeln!(
+            s,
+            "burst_len={}  M20K {}/{} ({:.0}%)  AI-TB {}/{} ({:.0}%)  ALM {:.0}%",
+            self.burst_len,
+            self.usage.m20k,
+            self.device.m20k_blocks,
+            100.0 * self.usage.m20k_frac(&self.device),
+            self.usage.tensor_blocks,
+            self.device.tensor_blocks,
+            100.0 * self.usage.tb_frac(&self.device),
+            100.0 * self.usage.alm_frac(&self.device),
+        );
+        let _ = writeln!(
+            s,
+            "est throughput {:.0} im/s   est latency {:.2} ms   bottleneck {} cycles",
+            self.est_throughput,
+            self.est_latency * 1e3,
+            self.bottleneck_cycles
+        );
+        let n_hbm = self.hbm_layers().count();
+        let n_chip = self.onchip_layers().count();
+        let _ = writeln!(
+            s,
+            "{n_hbm} layers on HBM ({} MiB, {} free chain slots), {n_chip} on chip",
+            self.hbm_weight_bytes() >> 20,
+            self.free_bw_slots
+        );
+        for l in &self.layers {
+            if !l.stats.has_weights {
+                continue;
+            }
+            let place = match l.placement {
+                WeightPlacement::Hbm => format!("HBM{:?}", l.pcs),
+                WeightPlacement::OnChip => "chip".to_string(),
+            };
+            let _ = writeln!(
+                s,
+                "  {:24} p=({},{}) chains={:3} cycles={:9} score={:8.2} {}",
+                l.stats.name,
+                l.par.p_i,
+                l.par.p_o,
+                l.par.chains(),
+                l.compute_cycles(),
+                l.score,
+                place
+            );
+        }
+        s
+    }
+
+    /// Total resource usage recomputation (sanity checks / tests).
+    pub fn recompute_usage(&self) -> ResourceUsage {
+        let mut m20k = 0u64;
+        let mut tbs = 0u64;
+        let mut alms = 0u64;
+        for l in &self.layers {
+            if l.stats.has_weights {
+                alms += ALM_PER_ENGINE;
+                tbs += l.stats.tensor_blocks(l.par.p_i, l.par.p_o);
+                match l.placement {
+                    WeightPlacement::OnChip => m20k += l.onchip_weight_m20k(),
+                    WeightPlacement::Hbm => {
+                        m20k += l.hbm_m20k(self.burst_len);
+                        alms += ALM_PER_HBM_LAYER;
+                    }
+                }
+            }
+            m20k += l.act_m20k();
+        }
+        alms += tbs * ALM_PER_TB;
+        // §IV-C write path: registers scale with configured width.
+        alms += (self.options.write_path_bits as u64 * REG_PER_WRITE_PATH_BIT) / 2;
+        ResourceUsage { m20k, tensor_blocks: tbs, alms }
+    }
+}

@@ -1,0 +1,387 @@
+//! Per-layer resource accounting — the arithmetic behind Table I, the
+//! Eq. 1 score numerator, and the logic-utilization columns of
+//! Tables II/III.
+//!
+//! Conventions (HPIPE NX, §II-B / §III-B):
+//!   * `p_i` counts input-channel parallelism in units of **10 channels**
+//!     (one AI-TB dot-product lane group = 80 bits of weights/cycle);
+//!     `p_o` counts output channels computed in parallel.
+//!   * one *tensor chain* = the daisy chain of `ceil(out_w/3)` AI-TBs that
+//!     covers the full activation width for one (p_i, p_o) combination;
+//!     a layer uses `p_i * p_o` chains and each chain consumes 80 bits of
+//!     weight data per core cycle.
+//!   * weight memories (and last-stage FIFOs) are duplicated once per
+//!     group of 6 AI-TBs = 18 output pixels (§IV-A), i.e.
+//!     `dup = ceil(out_w / 18)`.
+
+use crate::config::{CompilerOptions, DeviceConfig};
+use crate::nn::{ConvKind, Layer, OpKind};
+use crate::util::ceil_div;
+
+/// Bits per M20K block (20 Kb).
+pub const M20K_BITS: u64 = 20480;
+/// Output pixels covered by one duplicated weight-memory / FIFO group
+/// (6 AI-TBs x 3 pixels).
+pub const DUP_GROUP_PIXELS: u64 = 18;
+/// Weight bits one tensor chain consumes per core cycle.
+pub const CHAIN_WEIGHT_BITS: u64 = 80;
+/// Output pixels one AI-TB computes per cycle.
+pub const TB_PIXELS: u64 = 3;
+/// Input channels one AI-TB lane group covers.
+pub const TB_LANES: u64 = 10;
+
+/// ALM cost model, fitted to the Table III utilization columns.
+pub const ALM_PER_ENGINE: u64 = 5_000;
+pub const ALM_PER_TB: u64 = 170;
+/// Prefetch/distribution logic per HBM-offloaded layer (§IV-A).
+pub const ALM_PER_HBM_LAYER: u64 = 1_800;
+/// Registers per bit of boot-time write-path width (§IV-C: narrowing from
+/// 256 to 30 bits saves >3000 registers ~= 12.8 regs/bit; 2 ALMs ~= 4 regs).
+pub const REG_PER_WRITE_PATH_BIT: u64 = 13;
+
+/// Static per-layer accounting, independent of parallelism.
+#[derive(Debug, Clone)]
+pub struct LayerStats {
+    /// IR layer id.
+    pub layer: usize,
+    pub name: String,
+    /// Raw weight bits (params x weight precision).
+    pub weight_bits: u64,
+    /// On-chip weight storage in M20K blocks *including* the
+    /// `ceil(out_w/18)` duplication (Table I accounting).
+    pub weight_m20k: u64,
+    /// Weight-memory duplication factor.
+    pub dup: u64,
+    /// Activation buffering in bits (line buffers, pooling windows, the
+    /// full-tensor skip buffers of residual adds, x2 Fmax duplication).
+    pub act_bits: u64,
+    /// Weight elements re-read per image: kh*kw*ci*co*out_h (Eq. 2 term —
+    /// HPIPE reloads the kernel once per output line).
+    pub weight_traffic_per_image: u64,
+    /// MACs per image.
+    pub macs: u64,
+    /// Output geometry.
+    pub out_h: u32,
+    pub out_w: u32,
+    /// Per-(p_i=1,p_o=1) cycle count factors: cycles/image =
+    /// out_h * kh * kw * ceil(ci/10/p_i) * ceil(co/p_o).
+    pub kh: u32,
+    pub kw: u32,
+    pub ci: u32,
+    pub co: u32,
+    /// True for layers that hold weights (engines the compiler manages).
+    pub has_weights: bool,
+    /// Depthwise engines have no channel-parallel weight reuse.
+    pub depthwise: bool,
+}
+
+impl LayerStats {
+    /// Build stats for one IR layer under the given options.
+    pub fn from_layer(l: &Layer, opts: &CompilerOptions) -> Self {
+        let wb = opts.weight_bits as u64;
+        let (kh, kw, ci, co, depthwise) = match &l.op {
+            OpKind::Conv { kind, kh, kw, out_c, .. } => {
+                (*kh, *kw, l.in_shape().c, *out_c, *kind == ConvKind::Depthwise)
+            }
+            OpKind::Fc { out_features } => (1, 1, l.in_elems() as u32, *out_features, false),
+            OpKind::SqueezeExcite { squeeze_c } => (1, 1, l.out.c.max(1), 2 * *squeeze_c, false),
+            _ => (0, 0, l.in_shape().c, l.out.c, false),
+        };
+        let weight_bits = l.weight_params() * wb;
+        let dup = ceil_div(l.out.w as u64, DUP_GROUP_PIXELS).max(1);
+        let weight_m20k =
+            if weight_bits > 0 { ceil_div(weight_bits, M20K_BITS) * dup } else { 0 };
+        let act_bits = Self::act_bits_for(l, wb);
+        let weight_traffic_per_image = l.weight_params() * l.out.h as u64;
+        Self {
+            layer: l.id,
+            name: l.name.clone(),
+            weight_bits,
+            weight_m20k,
+            dup,
+            act_bits,
+            weight_traffic_per_image,
+            macs: l.macs(),
+            out_h: l.out.h,
+            out_w: l.out.w,
+            kh,
+            kw,
+            ci,
+            co,
+            has_weights: weight_bits > 0,
+            depthwise,
+        }
+    }
+
+    /// Activation buffering model (validated against Table I):
+    ///   * convs / pools hold a sliding window of `k+1` input lines,
+    ///     double-buffered for Fmax (x2) — §II-B;
+    ///   * residual adds buffer the full skip tensor (the dominant term
+    ///     for the ResNets: ~44 of ResNet-50's 57 Mb);
+    ///   * FC layers hold their input vector, double-buffered.
+    fn act_bits_for(l: &Layer, wb: u64) -> u64 {
+        let in_s = l.in_shape();
+        match &l.op {
+            OpKind::Conv { kh, .. } => {
+                u64::from(*kh + 1) * in_s.w as u64 * in_s.c as u64 * wb * 2
+            }
+            OpKind::MaxPool { k, .. } => {
+                u64::from(*k + 1) * in_s.w as u64 * in_s.c as u64 * wb * 2
+            }
+            OpKind::Add => in_s.elems() * wb,
+            OpKind::Fc { .. } => l.in_elems() * wb * 2,
+            OpKind::GlobalAvgPool => in_s.w as u64 * in_s.c as u64 * wb * 2,
+            OpKind::SqueezeExcite { .. } => l.out.c as u64 * 32 * 2,
+            OpKind::Input { .. } => 0,
+        }
+    }
+
+    /// Tensor chains used at parallelism (p_i, p_o).
+    pub fn chains(&self, p_i: u32, p_o: u32) -> u32 {
+        p_i * p_o
+    }
+
+    /// AI tensor blocks used at (p_i, p_o).
+    pub fn tensor_blocks(&self, p_i: u32, p_o: u32) -> u64 {
+        self.chains(p_i, p_o) as u64 * ceil_div(self.out_w as u64, TB_PIXELS)
+    }
+
+    /// Compute cycles per image at (p_i, p_o), ignoring memory stalls.
+    pub fn cycles_per_image(&self, p_i: u32, p_o: u32) -> u64 {
+        if !self.has_weights {
+            return 0;
+        }
+        let ci_groups = ceil_div(self.ci as u64, TB_LANES * p_i as u64).max(1);
+        let co_groups = ceil_div(self.co as u64, p_o as u64).max(1);
+        let per_line = self.kh as u64 * self.kw as u64 * ci_groups * co_groups;
+        (self.out_h as u64 * per_line).max(1)
+    }
+
+    /// Maximum useful parallelism (beyond this, extra lanes idle).
+    pub fn max_p_i(&self) -> u32 {
+        if self.depthwise {
+            1 // depthwise engines broadcast no channel groups
+        } else {
+            ceil_div(self.ci as u64, TB_LANES) as u32
+        }
+    }
+
+    pub fn max_p_o(&self) -> u32 {
+        self.co.max(1)
+    }
+
+    /// HBM weight-stream demand in bits per core cycle at (p_i, p_o).
+    pub fn weight_bw_bits_per_cycle(&self, p_i: u32, p_o: u32) -> u64 {
+        self.chains(p_i, p_o) as u64 * CHAIN_WEIGHT_BITS
+    }
+
+    /// On-chip M20K cost if this layer's weights stay on chip.
+    pub fn onchip_weight_m20k(&self) -> u64 {
+        self.weight_m20k
+    }
+
+    /// M20K cost if offloaded: 2 M20Ks (512x40 last-stage FIFO) per
+    /// duplicate (Eq. 1's "-2" term) plus the burst-matching FIFO.
+    pub fn hbm_weight_m20k(&self, burst_len: u32) -> u64 {
+        let last_stage = 2 * self.dup;
+        // burst-matching FIFO: sized to hold 4 bursts of 256-bit words
+        let bm_bits = 4 * burst_len as u64 * 256;
+        last_stage + ceil_div(bm_bits, M20K_BITS)
+    }
+
+    /// M20K savings from offloading (the Eq. 1 numerator).
+    pub fn m20k_saved(&self, burst_len: u32) -> i64 {
+        self.onchip_weight_m20k() as i64 - self.hbm_weight_m20k(burst_len) as i64
+    }
+}
+
+/// Whole-accelerator resource totals.
+#[derive(Debug, Clone, Default)]
+pub struct ResourceUsage {
+    pub m20k: u64,
+    pub tensor_blocks: u64,
+    pub alms: u64,
+}
+
+impl ResourceUsage {
+    /// Utilization fractions against a device.
+    pub fn m20k_frac(&self, d: &DeviceConfig) -> f64 {
+        self.m20k as f64 / d.m20k_blocks as f64
+    }
+
+    pub fn tb_frac(&self, d: &DeviceConfig) -> f64 {
+        self.tensor_blocks as f64 / d.tensor_blocks as f64
+    }
+
+    pub fn alm_frac(&self, d: &DeviceConfig) -> f64 {
+        self.alms as f64 / d.alms as f64
+    }
+
+    pub fn fits(&self, d: &DeviceConfig, max_util: f64) -> bool {
+        self.m20k_frac(d) <= max_util.max(0.98).min(1.0)
+            && self.tb_frac(d) <= max_util
+            && self.alm_frac(d) <= max_util
+    }
+}
+
+/// Table I row: memory required by a network at minimum parallelism.
+#[derive(Debug, Clone)]
+pub struct MemoryBreakdown {
+    pub model: String,
+    pub weight_bits: u64,
+    pub act_bits: u64,
+}
+
+impl MemoryBreakdown {
+    pub fn act_fraction(&self) -> f64 {
+        self.act_bits as f64 / (self.weight_bits + self.act_bits) as f64
+    }
+
+    /// Does the total exceed the device BRAM (the shaded cells of
+    /// Table I)?
+    pub fn exceeds(&self, d: &DeviceConfig) -> bool {
+        self.weight_bits + self.act_bits > d.bram_bits()
+    }
+}
+
+/// Compute the Table I accounting for a network: weight memory uses the
+/// duplicated-M20K model, activations the line-buffer/skip model.
+pub fn memory_breakdown(net: &crate::nn::Network, opts: &CompilerOptions) -> MemoryBreakdown {
+    let mut weight_bits = 0u64;
+    let mut act_bits = 0u64;
+    for l in net.layers() {
+        let s = LayerStats::from_layer(l, opts);
+        weight_bits += s.weight_m20k * M20K_BITS;
+        act_bits += s.act_bits;
+    }
+    MemoryBreakdown { model: net.name.clone(), weight_bits, act_bits }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CompilerOptions;
+    use crate::nn::zoo;
+
+    fn opts() -> CompilerOptions {
+        CompilerOptions::default()
+    }
+
+    #[test]
+    fn table1_weight_memory_magnitudes() {
+        // paper Table I (Mb): V1 35, V2 29, V3 32, R18 102, R50 219,
+        // VGG 1204. Allow our model +-35% (the paper's numbers embed
+        // unpublished HPIPE implementation details; MobileNetV3 deviates
+        // most — the published V3-Large checkpoint is 5.4M params = 43 Mb
+        // raw, already above the paper's 32 Mb row, suggesting they used
+        // a slimmer variant. See EXPERIMENTS.md §Table I.)
+        let targets = [
+            ("MobileNetV1", 35.0),
+            ("MobileNetV2", 29.0),
+            ("MobileNetV3", 32.0),
+            ("ResNet-18", 102.0),
+            ("ResNet-50", 219.0),
+            ("VGG-16", 1204.0),
+        ];
+        for (net, (name, mb)) in zoo::table1_models().iter().zip(targets) {
+            assert_eq!(net.name, name);
+            let b = memory_breakdown(net, &opts());
+            let got = b.weight_bits as f64 / 1e6;
+            assert!(
+                (0.65 * mb..1.45 * mb).contains(&got),
+                "{name}: weight mem {got:.0} Mb vs paper {mb} Mb"
+            );
+        }
+    }
+
+    #[test]
+    fn table1_activation_fraction_below_35_percent() {
+        // paper: "In all compared networks, the activations represent less
+        // than 35% of the memory requirements"
+        for net in zoo::table1_models() {
+            let b = memory_breakdown(&net, &opts());
+            assert!(b.act_fraction() < 0.35, "{}: {:.2}", net.name, b.act_fraction());
+        }
+    }
+
+    #[test]
+    fn table1_vgg_activations_tiny() {
+        // paper: VGG-16 activations < 2% of memory
+        let b = memory_breakdown(&zoo::vgg16(), &opts());
+        assert!(b.act_fraction() < 0.02, "{:.3}", b.act_fraction());
+    }
+
+    #[test]
+    fn table1_shading_resnet50_and_vgg_exceed_device() {
+        let d = DeviceConfig::stratix10_nx2100();
+        let fits = |n: &crate::nn::Network| !memory_breakdown(n, &opts()).exceeds(&d);
+        assert!(fits(&zoo::mobilenet_v1()));
+        assert!(fits(&zoo::mobilenet_v2()));
+        assert!(fits(&zoo::mobilenet_v3_large()));
+        assert!(!fits(&zoo::resnet50()), "ResNet-50 must exceed 140 Mb");
+        assert!(!fits(&zoo::vgg16()), "VGG-16 must exceed 140 Mb");
+    }
+
+    #[test]
+    fn resnet50_activations_dominated_by_skip_buffers() {
+        let net = zoo::resnet50();
+        let o = opts();
+        let mut add_bits = 0u64;
+        let mut other = 0u64;
+        for l in net.layers() {
+            let s = LayerStats::from_layer(l, &o);
+            if matches!(l.op, crate::nn::OpKind::Add) {
+                add_bits += s.act_bits;
+            } else {
+                other += s.act_bits;
+            }
+        }
+        assert!(add_bits > other, "skip buffers {add_bits} vs line buffers {other}");
+    }
+
+    #[test]
+    fn chains_and_tensor_blocks() {
+        let net = zoo::resnet18();
+        let l = net.layers().iter().find(|l| l.name == "layer1.0.conv1").unwrap();
+        let s = LayerStats::from_layer(l, &opts());
+        // 56-wide output: 19 AI-TBs per chain
+        assert_eq!(s.tensor_blocks(1, 1), 19);
+        assert_eq!(s.tensor_blocks(2, 3), 19 * 6);
+        assert_eq!(s.chains(2, 3), 6);
+        // dup = ceil(56/18) = 4
+        assert_eq!(s.dup, 4);
+    }
+
+    #[test]
+    fn cycles_scale_inversely_with_parallelism() {
+        let net = zoo::resnet18();
+        let l = net.layers().iter().find(|l| l.name == "layer1.0.conv1").unwrap();
+        let s = LayerStats::from_layer(l, &opts());
+        let c11 = s.cycles_per_image(1, 1);
+        let c12 = s.cycles_per_image(1, 2);
+        let c72 = s.cycles_per_image(7, 64);
+        assert!(c12 < c11);
+        assert!(c72 < c12);
+        // at max useful parallelism one line costs kh*kw cycles
+        assert_eq!(c72, 56 * 9);
+    }
+
+    #[test]
+    fn offload_savings_positive_for_big_layers() {
+        let net = zoo::vgg16();
+        let l = net.layers().iter().find(|l| l.name == "fc6").unwrap();
+        let s = LayerStats::from_layer(l, &opts());
+        assert!(s.m20k_saved(8) > 4000, "fc6 must save thousands of M20Ks");
+        // savings shrink as burst length grows (bigger burst-matching FIFOs)
+        assert!(s.m20k_saved(32) < s.m20k_saved(8));
+    }
+
+    #[test]
+    fn eq2_weight_traffic_counts_per_line_reload() {
+        let net = zoo::resnet18();
+        let l = net.layers().iter().find(|l| l.name == "conv1").unwrap();
+        let s = LayerStats::from_layer(l, &opts());
+        // conv1: 7x7x3x64 weights, 112 output lines
+        assert_eq!(s.weight_traffic_per_image, 7 * 7 * 3 * 64 * 112);
+    }
+}

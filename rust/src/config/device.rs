@@ -1,0 +1,263 @@
+//! FPGA + HBM device models.
+//!
+//! Defaults model the paper's testbed: a Gidel board with a Stratix 10
+//! NX2100 (-2 speed grade) and two 4-Hi HBM2 stacks (§II-C, §VI). All
+//! resource numbers that feed the Table I / Table III accounting are here
+//! in one place.
+
+/// DRAM timing parameters for one HBM2 pseudo-channel, expressed in
+/// *controller clock cycles* (the 400 MHz user-interface clock, 2.5 ns per
+/// cycle). Values follow the HBM2 JEDEC ballpark and are calibrated so the
+/// §III-A traffic experiment reproduces the paper's Fig. 3a/3b curves.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HbmTiming {
+    /// ACTIVATE to internal READ/WRITE delay (tRCD).
+    pub t_rcd: u32,
+    /// PRECHARGE to ACTIVATE delay (tRP).
+    pub t_rp: u32,
+    /// ACTIVATE to PRECHARGE minimum (tRAS).
+    pub t_ras: u32,
+    /// Read CAS latency (CL): column command to first data beat.
+    pub t_cl: u32,
+    /// Write CAS latency (CWL).
+    pub t_cwl: u32,
+    /// Column-to-column delay between bursts to *different* bank groups.
+    pub t_ccd_s: u32,
+    /// Column-to-column delay within the *same* bank group.
+    pub t_ccd_l: u32,
+    /// ACTIVATE-to-ACTIVATE minimum between different banks (tRRD).
+    pub t_rrd: u32,
+    /// Four-activate window (tFAW): at most 4 ACTIVATEs per window.
+    pub t_faw: u32,
+    /// Write recovery: last write beat to PRECHARGE (tWR).
+    pub t_wr: u32,
+    /// Write-to-read bus turnaround (tWTR).
+    pub t_wtr: u32,
+    /// Read-to-write bus turnaround.
+    pub t_rtw: u32,
+    /// Refresh interval (tREFI): one REFRESH command due per interval.
+    pub t_refi: u32,
+    /// Refresh cycle time (tRFC): pseudo-channel blocked per REFRESH.
+    pub t_rfc: u32,
+    /// Minimum data-bus gap between distinct read bursts (DQS preamble +
+    /// command pipeline re-steer in the hardened controller).
+    pub t_rd_gap: u32,
+    /// Minimum data-bus gap between distinct write bursts (write preamble
+    /// is longer; this is the main source of the ~15 pp read/write
+    /// efficiency spread in Fig. 3a).
+    pub t_wr_gap: u32,
+}
+
+impl HbmTiming {
+    /// HBM2 timing at 2.5 ns controller cycles (400 MHz), JEDEC-ballpark.
+    pub fn hbm2_default() -> Self {
+        Self {
+            t_rcd: 6,   // ~14 ns
+            t_rp: 6,    // ~14 ns
+            t_ras: 14,  // ~33 ns
+            t_cl: 6,    // ~14 ns
+            t_cwl: 3,   // ~7 ns
+            t_ccd_s: 1,
+            t_ccd_l: 2,
+            t_rrd: 2,   // ~4 ns
+            t_faw: 8,   // ~20 ns (HBM2 pseudo-channel: small tFAW)
+            t_wr: 7,    // ~16 ns
+            t_wtr: 4,   // ~9 ns
+            t_rtw: 3,
+            t_refi: 1560, // 3.9 us
+            t_rfc: 104,   // 260 ns
+            t_rd_gap: 1,
+            t_wr_gap: 4,
+        }
+    }
+
+    /// Minimum row cycle time tRC = tRAS + tRP.
+    pub fn t_rc(&self) -> u32 {
+        self.t_ras + self.t_rp
+    }
+}
+
+/// Geometry of the HBM subsystem attached to the FPGA.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HbmGeometry {
+    /// Number of HBM stacks on the package (Stratix 10 NX2100: 2).
+    pub stacks: u32,
+    /// Pseudo-channels per stack (4-Hi stack: 4 dies x 2 ch x 2 PC = 16).
+    pub pcs_per_stack: u32,
+    /// Banks addressable within one pseudo-channel.
+    pub banks_per_pc: u32,
+    /// Bank groups per pseudo-channel (tCCD_L applies within a group).
+    pub bank_groups: u32,
+    /// Row size in bytes (columns x device width): 1 KiB rows per PC.
+    pub row_bytes: u32,
+    /// User-interface data width in bits (hardened controller: 256).
+    pub interface_bits: u32,
+    /// Controller user-clock frequency in MHz (max 400 on S10 NX).
+    pub controller_mhz: u32,
+    /// Capacity per pseudo-channel in bytes (4 GB stack / 16 PCs).
+    pub pc_capacity_bytes: u64,
+}
+
+impl HbmGeometry {
+    /// Two 4-Hi HBM2 stacks as on the Gidel Stratix 10 NX2100 board.
+    pub fn nx2100_default() -> Self {
+        Self {
+            stacks: 2,
+            pcs_per_stack: 16,
+            banks_per_pc: 16,
+            bank_groups: 4,
+            row_bytes: 1024,
+            interface_bits: 256,
+            controller_mhz: 400,
+            pc_capacity_bytes: 256 << 20, // 256 MiB
+        }
+    }
+
+    /// Total pseudo-channels across all stacks.
+    pub fn total_pcs(&self) -> u32 {
+        self.stacks * self.pcs_per_stack
+    }
+
+    /// Peak bandwidth of one pseudo-channel in bytes/s.
+    pub fn pc_peak_bw(&self) -> f64 {
+        self.interface_bits as f64 / 8.0 * self.controller_mhz as f64 * 1e6
+    }
+
+    /// Peak bandwidth of one stack in bytes/s (204.8 GB/s for HBM2 @ 2.5ns).
+    pub fn stack_peak_bw(&self) -> f64 {
+        self.pc_peak_bw() * self.pcs_per_stack as f64
+    }
+
+    /// Bytes per interface beat (one controller cycle of data).
+    pub fn beat_bytes(&self) -> u32 {
+        self.interface_bits / 8
+    }
+}
+
+/// FPGA device + board model.
+///
+/// The resource numbers feed the compiler's Table I accounting and the
+/// logic-utilization figures of Table II / Table III.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceConfig {
+    /// Human-readable device name.
+    pub name: String,
+    /// M20K block RAMs available (NX2100: 6847 blocks = 140 Mb).
+    pub m20k_blocks: u32,
+    /// Bits per M20K block (20 Kbit = 20480).
+    pub m20k_bits: u32,
+    /// AI-optimized tensor blocks (NX2100: 3960).
+    pub tensor_blocks: u32,
+    /// Adaptive logic modules (NX2100: ~702k ALMs).
+    pub alms: u32,
+    /// Core (layer-engine) clock in MHz; H2PIPE closes timing at 300.
+    pub core_mhz: u32,
+    /// HBM subsystem geometry.
+    pub hbm: HbmGeometry,
+    /// HBM DRAM timing.
+    pub hbm_timing: HbmTiming,
+    /// Pseudo-channels excluded from use. The paper leaves out PC16
+    /// (adjacent to the secure device manager) for timing-closure reasons.
+    pub excluded_pcs: Vec<u32>,
+}
+
+impl DeviceConfig {
+    /// The paper's testbed: Stratix 10 NX2100 on a Gidel board.
+    pub fn stratix10_nx2100() -> Self {
+        Self {
+            name: "Stratix 10 NX2100".to_string(),
+            m20k_blocks: 6847,
+            m20k_bits: 20480,
+            tensor_blocks: 3960,
+            alms: 702_720,
+            core_mhz: 300,
+            hbm: HbmGeometry::nx2100_default(),
+            hbm_timing: HbmTiming::hbm2_default(),
+            excluded_pcs: vec![16],
+        }
+    }
+
+    /// Hypothetical device with `n` extra HBM stacks and scaled compute,
+    /// used for the Fig. 6 unlimited-bandwidth bound experiments.
+    pub fn with_unlimited_hbm(mut self) -> Self {
+        self.hbm.stacks = 64; // effectively unlimited for our CNNs
+        self.excluded_pcs.clear();
+        self.name = format!("{} (unlimited HBM)", self.name);
+        self
+    }
+
+    /// Total on-chip BRAM capacity in bits (140 Mb for the NX2100).
+    pub fn bram_bits(&self) -> u64 {
+        self.m20k_blocks as u64 * self.m20k_bits as u64
+    }
+
+    /// Number of usable pseudo-channels after exclusions.
+    pub fn usable_pcs(&self) -> u32 {
+        self.hbm.total_pcs() - self.excluded_pcs.len() as u32
+    }
+
+    /// Effective HBM bandwidth available to tensor chains, in bytes/s.
+    ///
+    /// Matches the paper's §VI-B arithmetic: only 240 of the 256 interface
+    /// bits feed 80-bit tensor-chain lanes (3 x 80 = 240), and data is
+    /// consumed at the *core* clock, so the usable rate is
+    /// `usable_pcs x 240 bit x core_mhz` = 279 GB/s for 31 PCs @ 300 MHz.
+    pub fn effective_hbm_bw(&self) -> f64 {
+        let chain_bits_per_pc = 3 * 80;
+        self.usable_pcs() as f64 * chain_bits_per_pc as f64 / 8.0 * self.core_mhz as f64 * 1e6
+    }
+
+    /// Tensor-chain slots a pseudo-channel can feed (256-bit PC word /
+    /// 80-bit chain requirement = 3, §III-B).
+    pub fn chains_per_pc(&self) -> u32 {
+        self.hbm.interface_bits / 80
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nx2100_bram_is_140_mbits() {
+        let d = DeviceConfig::stratix10_nx2100();
+        let mbits = d.bram_bits() as f64 / 1.0e6;
+        // paper: "can only store 140 Mbits of data at a time in its BRAM"
+        assert!((139.0..141.0).contains(&mbits), "{mbits}");
+    }
+
+    #[test]
+    fn stack_bandwidth_is_204_8_gbps() {
+        let g = HbmGeometry::nx2100_default();
+        assert!((g.stack_peak_bw() - 204.8e9).abs() < 1e6);
+        assert_eq!(g.total_pcs(), 32);
+    }
+
+    #[test]
+    fn effective_bandwidth_matches_paper_279_gbps() {
+        let d = DeviceConfig::stratix10_nx2100();
+        assert_eq!(d.usable_pcs(), 31);
+        // paper §VI-B: "maximum available HBM bandwidth of 279 GB/s"
+        let gbps = d.effective_hbm_bw() / 1e9;
+        assert!((278.0..280.0).contains(&gbps), "{gbps}");
+    }
+
+    #[test]
+    fn three_chains_per_pc() {
+        let d = DeviceConfig::stratix10_nx2100();
+        assert_eq!(d.chains_per_pc(), 3);
+    }
+
+    #[test]
+    fn trc_is_ras_plus_rp() {
+        let t = HbmTiming::hbm2_default();
+        assert_eq!(t.t_rc(), t.t_ras + t.t_rp);
+    }
+
+    #[test]
+    fn unlimited_hbm_has_no_exclusions() {
+        let d = DeviceConfig::stratix10_nx2100().with_unlimited_hbm();
+        assert!(d.excluded_pcs.is_empty());
+        assert!(d.usable_pcs() > 1000);
+    }
+}

@@ -1,0 +1,12 @@
+//! Device and compiler configuration.
+//!
+//! [`DeviceConfig`] describes the FPGA + HBM testbed (defaults model the
+//! Gidel Stratix 10 NX2100 board used in the paper); [`HbmTiming`] carries
+//! the DRAM timing parameters the cycle-level HBM substrate enforces;
+//! [`CompilerOptions`] are the user-facing knobs of the H2PIPE compiler.
+
+mod device;
+mod options;
+
+pub use device::{DeviceConfig, HbmGeometry, HbmTiming};
+pub use options::{BurstLengthPolicy, CompilerOptions, WeightPlacement};

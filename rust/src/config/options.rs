@@ -1,0 +1,148 @@
+//! User-facing compiler options (the knobs §IV–§V expose).
+
+/// Where a layer's weights live.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum WeightPlacement {
+    /// Weights in on-chip M20K buffers (original HPIPE behaviour).
+    OnChip,
+    /// Weights streamed from an HBM pseudo-channel (§IV-A).
+    Hbm,
+}
+
+/// How the compiler picks the HBM burst length.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BurstLengthPolicy {
+    /// Force one burst length for every offloaded layer.
+    Fixed(u32),
+    /// The paper's §VI-A conclusion: BL=8 when the pipeline's bottleneck
+    /// layer keeps its weights on chip (saves logic), BL=32 when the
+    /// bottleneck layer streams from HBM (buys ~2% throughput).
+    Auto,
+}
+
+impl BurstLengthPolicy {
+    /// Legal burst lengths on the hardened controller.
+    pub const LEGAL: [u32; 6] = [1, 2, 4, 8, 16, 32];
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if let BurstLengthPolicy::Fixed(bl) = self {
+            anyhow::ensure!(
+                Self::LEGAL.contains(bl),
+                "burst length {bl} not in {:?}",
+                Self::LEGAL
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Options controlling H2PIPE compilation.
+#[derive(Debug, Clone)]
+pub struct CompilerOptions {
+    /// Burst-length selection policy (§III-B / §VI-A).
+    pub burst_length: BurstLengthPolicy,
+    /// Force all weights to HBM (the paper's "all-HBM" configuration) or
+    /// let Algorithm 1 build the hybrid memory system.
+    pub all_hbm: bool,
+    /// Width in bits of the boot-time HBM write path (§IV-C, default 30).
+    pub write_path_bits: u32,
+    /// Depth of the last-stage weight FIFOs in 80-bit words (§IV-A: 512
+    /// words to cover the worst-case ~1214 ns HBM read latency).
+    pub last_stage_fifo_depth: u32,
+    /// Tensor chains grouped per duplicated last-stage FIFO (§IV-A: 6 was
+    /// empirically the best Fmax / duplication trade-off).
+    pub fifo_group_size: u32,
+    /// Maximum fraction of device logic/DSP the compiler may allocate when
+    /// scaling parallelism (the paper uses 85% for the unlimited-BW bound).
+    pub max_utilization: f64,
+    /// Weight precision in bits (the NX port of HPIPE is 8-bit).
+    pub weight_bits: u32,
+    /// Upper bound on total parallelism-doubling iterations, a safety
+    /// valve for the allocation loop.
+    pub max_parallelism_steps: u32,
+    /// Maximum tensor chains (p_i * p_o) per layer engine. A light-touch
+    /// cap (default 32) on weight-broadcast fanout: wider broadcast trees
+    /// and deeper last-stage-FIFO duplication collapse Fmax on the real
+    /// device (§IV-A found 6 AI-TBs per FIFO group was already the
+    /// trade-off point). The paper's bottleneck-layer rates imply their
+    /// engines ran fewer chains still; see EXPERIMENTS.md for the
+    /// resulting calibration deltas.
+    pub max_chains_per_layer: u32,
+}
+
+impl Default for CompilerOptions {
+    fn default() -> Self {
+        Self {
+            burst_length: BurstLengthPolicy::Auto,
+            all_hbm: false,
+            write_path_bits: 30,
+            last_stage_fifo_depth: 512,
+            fifo_group_size: 6,
+            max_utilization: 0.85,
+            weight_bits: 8,
+            max_parallelism_steps: 64,
+            max_chains_per_layer: 32,
+        }
+    }
+}
+
+impl CompilerOptions {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        self.burst_length.validate()?;
+        anyhow::ensure!(
+            (1..=256).contains(&self.write_path_bits),
+            "write path width {} out of range 1..=256",
+            self.write_path_bits
+        );
+        anyhow::ensure!(self.last_stage_fifo_depth.is_power_of_two(), "FIFO depth must be 2^n");
+        anyhow::ensure!(self.fifo_group_size >= 1, "fifo group size must be >= 1");
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.max_utilization),
+            "max_utilization must be in [0,1]"
+        );
+        anyhow::ensure!(self.weight_bits == 8 || self.weight_bits == 16, "8- or 16-bit weights");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_valid_and_match_paper() {
+        let o = CompilerOptions::default();
+        o.validate().unwrap();
+        assert_eq!(o.write_path_bits, 30);
+        assert_eq!(o.last_stage_fifo_depth, 512);
+        assert_eq!(o.fifo_group_size, 6);
+        assert_eq!(o.weight_bits, 8);
+    }
+
+    #[test]
+    fn illegal_burst_rejected() {
+        let mut o = CompilerOptions::default();
+        o.burst_length = BurstLengthPolicy::Fixed(3);
+        assert!(o.validate().is_err());
+        o.burst_length = BurstLengthPolicy::Fixed(8);
+        assert!(o.validate().is_ok());
+    }
+
+    #[test]
+    fn fifo_depth_must_be_power_of_two() {
+        let mut o = CompilerOptions::default();
+        o.last_stage_fifo_depth = 500;
+        assert!(o.validate().is_err());
+    }
+
+    #[test]
+    fn write_path_bounds() {
+        let mut o = CompilerOptions::default();
+        o.write_path_bits = 0;
+        assert!(o.validate().is_err());
+        o.write_path_bits = 257;
+        assert!(o.validate().is_err());
+        o.write_path_bits = 256;
+        assert!(o.validate().is_ok());
+    }
+}

@@ -1,0 +1,86 @@
+//! Serving metrics: request latency percentiles + throughput windows.
+
+use std::time::Instant;
+
+use crate::util::Percentiles;
+
+/// Accumulated serving metrics.
+#[derive(Debug)]
+pub struct Metrics {
+    started: Instant,
+    /// Wall-clock latency per request (seconds).
+    latency: Percentiles,
+    /// Requests completed.
+    pub completed: u64,
+    /// Requests rejected by back-pressure.
+    pub rejected: u64,
+    /// Batches dispatched.
+    pub batches: u64,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self {
+            started: Instant::now(),
+            latency: Percentiles::new(),
+            completed: 0,
+            rejected: 0,
+            batches: 0,
+        }
+    }
+
+    pub fn record(&mut self, latency_s: f64) {
+        self.latency.push(latency_s);
+        self.completed += 1;
+    }
+
+    pub fn record_batch(&mut self, n: usize) {
+        self.batches += 1;
+        let _ = n;
+    }
+
+    pub fn throughput(&self) -> f64 {
+        self.completed as f64 / self.started.elapsed().as_secs_f64().max(1e-9)
+    }
+
+    pub fn latency_ms(&mut self, pct: f64) -> f64 {
+        self.latency.percentile(pct) * 1e3
+    }
+
+    pub fn mean_latency_ms(&self) -> f64 {
+        self.latency.mean() * 1e3
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.completed as f64 / self.batches as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_reports() {
+        let mut m = Metrics::new();
+        for i in 1..=100 {
+            m.record(i as f64 / 1000.0);
+        }
+        m.record_batch(100);
+        assert_eq!(m.completed, 100);
+        assert!((m.mean_latency_ms() - 50.5).abs() < 1e-9);
+        assert!((m.latency_ms(50.0) - 50.5).abs() < 1e-9);
+        assert_eq!(m.mean_batch_size(), 100.0);
+        assert!(m.throughput() > 0.0);
+    }
+}

@@ -1,0 +1,23 @@
+//! L3 serving coordinator.
+//!
+//! The paper's accelerator is driven from a host: weights are downloaded
+//! once over PCIe through the §IV-C write path, then images stream
+//! through the layer pipeline. This module is that host-side runtime:
+//!
+//! * [`boot`] — the one-time weight download through the narrow write
+//!   path (width/boot-time/register trade-off of §IV-C);
+//! * [`server`] — a threaded request router + batcher that executes
+//!   functional inference through the PJRT artifacts ([`crate::runtime`])
+//!   and reports both wall-clock and modelled-FPGA timing;
+//! * [`metrics`] — latency/throughput accounting.
+//!
+//! Python never appears here: the artifacts were AOT-compiled by
+//! `make artifacts` and the binary is self-contained.
+
+pub mod boot;
+pub mod metrics;
+pub mod server;
+
+pub use boot::{boot_weights, BootReport};
+pub use metrics::Metrics;
+pub use server::{InferenceServer, ServerConfig, ServerReport};

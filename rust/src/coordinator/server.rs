@@ -1,0 +1,276 @@
+//! Threaded inference server: request router + dynamic batcher.
+//!
+//! Clients submit images over a bounded channel (back-pressure on
+//! overload); a worker drains up to `batch_size` requests at a time and
+//! executes them through the PJRT executable. Both wall-clock latency
+//! (CPU, interpret-mode numerics) and *modelled FPGA timing* (from the
+//! compiled plan / cycle sim) are reported, so the serving example can
+//! present the paper-relevant numbers next to live measurements.
+
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::metrics::Metrics;
+use crate::runtime::{Executable, Runtime};
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Artifact name to serve (e.g. "cifarnet").
+    pub model: String,
+    /// Artifact directory.
+    pub artifact_dir: String,
+    /// Input tensor dims of the artifact.
+    pub input_dims: Vec<usize>,
+    /// Maximum dynamic batch per dispatch.
+    pub batch_size: usize,
+    /// Bounded queue depth (requests beyond it are rejected).
+    pub queue_depth: usize,
+    /// How long the batcher waits to fill a batch.
+    pub batch_timeout: Duration,
+    /// Modelled per-image FPGA service time in seconds (from the cycle
+    /// sim / plan estimate); used for the modelled-throughput report.
+    pub modelled_image_s: f64,
+}
+
+impl ServerConfig {
+    pub fn cifarnet(artifact_dir: &str) -> Self {
+        Self {
+            model: "cifarnet".into(),
+            artifact_dir: artifact_dir.into(),
+            input_dims: vec![32, 32, 3],
+            batch_size: 8,
+            queue_depth: 256,
+            batch_timeout: Duration::from_millis(2),
+            modelled_image_s: 0.0,
+        }
+    }
+}
+
+/// One inference request.
+struct Request {
+    image: Vec<i32>,
+    enqueued: Instant,
+    resp: SyncSender<Result<Vec<i32>, String>>,
+}
+
+/// Serving summary.
+#[derive(Debug, Clone)]
+pub struct ServerReport {
+    pub completed: u64,
+    pub rejected: u64,
+    pub wall_throughput: f64,
+    pub mean_latency_ms: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub mean_batch: f64,
+    /// What the modelled FPGA would have sustained on this stream.
+    pub modelled_throughput: f64,
+}
+
+/// The inference server.
+pub struct InferenceServer {
+    tx: Option<SyncSender<Request>>,
+    worker: Option<JoinHandle<()>>,
+    metrics: Arc<Mutex<Metrics>>,
+    cfg: ServerConfig,
+}
+
+impl InferenceServer {
+    /// Boot: start the worker thread, which creates the PJRT client and
+    /// compiles the artifact locally (the `xla` crate's handles are not
+    /// `Send`, so the executable must live on the thread that uses it).
+    pub fn start(cfg: ServerConfig) -> Result<Self> {
+        let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
+        let metrics = Arc::new(Mutex::new(Metrics::new()));
+        let m2 = metrics.clone();
+        let wcfg = cfg.clone();
+        let (boot_tx, boot_rx) = sync_channel::<Result<(), String>>(1);
+        let worker = std::thread::spawn(move || {
+            let exe = match Runtime::cpu(&wcfg.artifact_dir)
+                .and_then(|rt| rt.load(&wcfg.model).context("loading model artifact"))
+            {
+                Ok(exe) => {
+                    let _ = boot_tx.send(Ok(()));
+                    exe
+                }
+                Err(e) => {
+                    let _ = boot_tx.send(Err(format!("{e:#}")));
+                    return;
+                }
+            };
+            worker_loop(rx, exe, wcfg, m2)
+        });
+        boot_rx
+            .recv()
+            .context("worker died during boot")?
+            .map_err(|e| anyhow::anyhow!(e))?;
+        Ok(Self { tx: Some(tx), worker: Some(worker), metrics, cfg })
+    }
+
+    /// Submit one image; blocks until the result arrives. Returns an
+    /// error when the queue is full (back-pressure).
+    pub fn infer(&self, image: Vec<i32>) -> Result<Vec<i32>> {
+        let (rtx, rrx) = sync_channel(1);
+        let req = Request { image, enqueued: Instant::now(), resp: rtx };
+        match self.tx.as_ref().expect("server running").try_send(req) {
+            Ok(()) => {}
+            Err(std::sync::mpsc::TrySendError::Full(_)) => {
+                self.metrics.lock().unwrap().rejected += 1;
+                anyhow::bail!("server overloaded (queue full)");
+            }
+            Err(e) => anyhow::bail!("server stopped: {e}"),
+        }
+        rrx.recv()
+            .context("worker dropped the response")?
+            .map_err(|e| anyhow::anyhow!(e))
+    }
+
+    /// Fire-and-collect convenience used by load generators: submit a
+    /// whole stream at a fixed arrival rate from this thread.
+    pub fn run_closed_loop(&self, images: Vec<Vec<i32>>) -> Result<usize> {
+        let mut n = 0;
+        for img in images {
+            if self.infer(img).is_ok() {
+                n += 1;
+            }
+        }
+        Ok(n)
+    }
+
+    /// Stop the worker and produce the final report.
+    pub fn shutdown(mut self) -> ServerReport {
+        drop(self.tx.take());
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+        let mut m = self.metrics.lock().unwrap();
+        let modelled = if self.cfg.modelled_image_s > 0.0 {
+            1.0 / self.cfg.modelled_image_s
+        } else {
+            0.0
+        };
+        ServerReport {
+            completed: m.completed,
+            rejected: m.rejected,
+            wall_throughput: m.throughput(),
+            mean_latency_ms: m.mean_latency_ms(),
+            p50_ms: m.latency_ms(50.0),
+            p99_ms: m.latency_ms(99.0),
+            mean_batch: m.mean_batch_size(),
+            modelled_throughput: modelled,
+        }
+    }
+}
+
+fn worker_loop(
+    rx: Receiver<Request>,
+    exe: Executable,
+    cfg: ServerConfig,
+    metrics: Arc<Mutex<Metrics>>,
+) {
+    loop {
+        // block for the first request of a batch
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => return, // all senders dropped: shutdown
+        };
+        let mut batch = vec![first];
+        let deadline = Instant::now() + cfg.batch_timeout;
+        while batch.len() < cfg.batch_size {
+            let left = deadline.saturating_duration_since(Instant::now());
+            match rx.recv_timeout(left) {
+                Ok(r) => batch.push(r),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        let n = batch.len();
+        for req in batch {
+            let out = exe
+                .run_i32(&req.image, &cfg.input_dims)
+                .map_err(|e| format!("{e:#}"));
+            let lat = req.enqueued.elapsed().as_secs_f64();
+            metrics.lock().unwrap().record(lat);
+            let _ = req.resp.send(out);
+        }
+        metrics.lock().unwrap().record_batch(n);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifact_dir() -> String {
+        format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+    }
+
+    fn have_artifacts() -> bool {
+        std::path::Path::new(&artifact_dir()).join("cifarnet.hlo.txt").exists()
+    }
+
+    #[test]
+    fn serves_and_reports() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let mut cfg = ServerConfig::cifarnet(&artifact_dir());
+        cfg.modelled_image_s = 1.0 / 4174.0;
+        let srv = InferenceServer::start(cfg).unwrap();
+        let img = vec![1i32; 32 * 32 * 3];
+        for _ in 0..20 {
+            let out = srv.infer(img.clone()).unwrap();
+            assert_eq!(out.len(), 10);
+        }
+        let rep = srv.shutdown();
+        assert_eq!(rep.completed, 20);
+        assert!(rep.mean_latency_ms > 0.0);
+        assert!((rep.modelled_throughput - 4174.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn deterministic_outputs() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let srv = InferenceServer::start(ServerConfig::cifarnet(&artifact_dir())).unwrap();
+        let img = vec![7i32; 32 * 32 * 3];
+        let a = srv.infer(img.clone()).unwrap();
+        let b = srv.infer(img).unwrap();
+        assert_eq!(a, b);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let srv = std::sync::Arc::new(
+            InferenceServer::start(ServerConfig::cifarnet(&artifact_dir())).unwrap(),
+        );
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let s = srv.clone();
+            handles.push(std::thread::spawn(move || {
+                let img = vec![t as i32; 32 * 32 * 3];
+                for _ in 0..5 {
+                    s.infer(img.clone()).unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let rep = std::sync::Arc::into_inner(srv).unwrap().shutdown();
+        assert_eq!(rep.completed, 20);
+    }
+}

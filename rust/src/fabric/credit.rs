@@ -1,0 +1,115 @@
+//! Credit-based flow control (§V-A).
+//!
+//! The weight prefetching logic holds one credit counter per downstream
+//! burst-matching FIFO, initialized to that FIFO's free capacity. An HBM
+//! read for a layer is only issued when the layer's counter holds enough
+//! credits for the whole burst, which guarantees the shared DCFIFO can
+//! always drain — the head word's destination FIFO has reserved space, so
+//! head-of-line blocking (and the Fig. 5 deadlock) is impossible.
+
+/// A hardware-style credit counter.
+#[derive(Debug, Clone)]
+pub struct CreditCounter {
+    credits: u32,
+    max: u32,
+}
+
+impl CreditCounter {
+    /// Counter initialized to (and capped at) `max` credits.
+    pub fn new(max: u32) -> Self {
+        Self { credits: max, max }
+    }
+
+    pub fn available(&self) -> u32 {
+        self.credits
+    }
+
+    pub fn max(&self) -> u32 {
+        self.max
+    }
+
+    /// Outstanding (consumed, not yet returned) credits.
+    pub fn outstanding(&self) -> u32 {
+        self.max - self.credits
+    }
+
+    /// Can `n` credits be acquired?
+    pub fn can_acquire(&self, n: u32) -> bool {
+        self.credits >= n
+    }
+
+    /// Acquire `n` credits (decrement when an HBM read request is issued).
+    /// Returns false and does nothing if insufficient.
+    pub fn acquire(&mut self, n: u32) -> bool {
+        if self.credits < n {
+            return false;
+        }
+        self.credits -= n;
+        true
+    }
+
+    /// Return `n` credits (the layer engine's `dequeue` signal in
+    /// Fig. 4a). Panics on over-return — that is a protocol bug, never a
+    /// recoverable runtime condition.
+    pub fn release(&mut self, n: u32) {
+        assert!(
+            self.credits + n <= self.max,
+            "credit over-return: {} + {n} > {}",
+            self.credits,
+            self.max
+        );
+        self.credits += n;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn acquire_release_roundtrip() {
+        let mut c = CreditCounter::new(8);
+        assert_eq!(c.available(), 8);
+        assert!(c.acquire(5));
+        assert_eq!(c.available(), 3);
+        assert_eq!(c.outstanding(), 5);
+        c.release(5);
+        assert_eq!(c.available(), 8);
+    }
+
+    #[test]
+    fn acquire_fails_without_credits() {
+        let mut c = CreditCounter::new(4);
+        assert!(c.acquire(4));
+        assert!(!c.acquire(1));
+        assert_eq!(c.available(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "credit over-return")]
+    fn over_release_panics() {
+        let mut c = CreditCounter::new(4);
+        c.release(1);
+    }
+
+    #[test]
+    fn never_negative_never_above_max_under_random_ops() {
+        let mut rng = crate::util::XorShift64::new(77);
+        let mut c = CreditCounter::new(16);
+        let mut outstanding = 0u32;
+        for _ in 0..100_000 {
+            if rng.next_bool(0.5) {
+                let n = rng.next_range(1, 4) as u32;
+                if c.acquire(n) {
+                    outstanding += n;
+                }
+            } else if outstanding > 0 {
+                let n = (rng.next_range(1, 4) as u32).min(outstanding);
+                c.release(n);
+                outstanding -= n;
+            }
+            assert!(c.available() <= 16);
+            assert_eq!(c.available() + outstanding, 16, "credit conservation");
+        }
+    }
+}

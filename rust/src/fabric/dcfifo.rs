@@ -1,0 +1,140 @@
+//! Dual-clock FIFO (DCFIFO): the HBM-to-fabric clock crossing of §IV-A.
+//!
+//! The weight prefetch path runs in the 400 MHz HBM controller domain
+//! while layer engines run at the 300 MHz core clock. A DCFIFO's read
+//! side observes writes only after the gray-coded write pointer has been
+//! synchronized — modelled here as a fixed number of *read-domain* ticks
+//! of visibility latency.
+//!
+//! The simulator drives both domains from a common base tick (1200 MHz =
+//! lcm(400, 300)): the write side ticks every 3 base ticks, the read side
+//! every 4.
+
+use std::collections::VecDeque;
+
+/// Dual-clock FIFO with synchronizer latency.
+#[derive(Debug, Clone)]
+pub struct DcFifo<T> {
+    q: VecDeque<(T, u64)>, // (item, read-domain tick when it becomes visible)
+    capacity: usize,
+    sync_ticks: u64,
+    read_tick: u64,
+    max_occupancy: usize,
+}
+
+impl<T> DcFifo<T> {
+    /// `sync_ticks` read-domain cycles of pointer-synchronizer latency
+    /// (2 flops is typical).
+    pub fn new(capacity: usize, sync_ticks: u64) -> Self {
+        assert!(capacity > 0, "zero-capacity DCFIFO");
+        Self { q: VecDeque::with_capacity(capacity), capacity, sync_ticks, read_tick: 0, max_occupancy: 0 }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Total words held (write-side view; includes not-yet-visible words).
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.q.len() == self.capacity
+    }
+
+    pub fn max_occupancy(&self) -> usize {
+        self.max_occupancy
+    }
+
+    /// Advance the read-domain clock one tick.
+    pub fn tick_read(&mut self) {
+        self.read_tick += 1;
+    }
+
+    /// Write-side push (HBM domain). Fails when full.
+    pub fn push(&mut self, v: T) -> bool {
+        if self.is_full() {
+            return false;
+        }
+        self.q.push_back((v, self.read_tick + self.sync_ticks));
+        self.max_occupancy = self.max_occupancy.max(self.q.len());
+        true
+    }
+
+    /// True if the read side currently sees a word.
+    pub fn readable(&self) -> bool {
+        matches!(self.q.front(), Some((_, vis)) if *vis <= self.read_tick)
+    }
+
+    /// Read-side pop; `None` until the head word's synchronizer delay has
+    /// elapsed.
+    pub fn pop(&mut self) -> Option<T> {
+        if self.readable() {
+            self.q.pop_front().map(|(v, _)| v)
+        } else {
+            None
+        }
+    }
+
+    /// Read-side peek.
+    pub fn peek(&self) -> Option<&T> {
+        match self.q.front() {
+            Some((v, vis)) if *vis <= self.read_tick => Some(v),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn visibility_delayed_by_sync() {
+        let mut f = DcFifo::new(8, 2);
+        f.push(42u32);
+        assert!(!f.readable(), "word must not be visible immediately");
+        f.tick_read();
+        assert!(!f.readable());
+        f.tick_read();
+        assert!(f.readable());
+        assert_eq!(f.pop(), Some(42));
+    }
+
+    #[test]
+    fn zero_sync_is_immediate() {
+        let mut f = DcFifo::new(4, 0);
+        f.push(1u8);
+        assert_eq!(f.pop(), Some(1));
+    }
+
+    #[test]
+    fn order_preserved_across_domains() {
+        let mut f = DcFifo::new(16, 2);
+        for i in 0..10u32 {
+            f.push(i);
+        }
+        let mut out = Vec::new();
+        for _ in 0..20 {
+            f.tick_read();
+            while let Some(v) = f.pop() {
+                out.push(v);
+            }
+        }
+        assert_eq!(out, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn full_rejects_push() {
+        let mut f = DcFifo::new(2, 1);
+        assert!(f.push(1u8));
+        assert!(f.push(2));
+        assert!(!f.push(3));
+        assert_eq!(f.len(), 2);
+    }
+}

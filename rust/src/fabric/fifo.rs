@@ -1,0 +1,151 @@
+//! Single-clock FIFO (SCFIFO) with almost-full / almost-empty thresholds.
+//!
+//! Burst-matching FIFOs (§IV-A, sized proportionally to the burst length)
+//! and the 512-word last-stage weight FIFOs are both instances of this.
+//! The `almost_empty` threshold is what drives the §IV-B `freeze` signal;
+//! `almost_full` drove the original ready/valid design that §V-A replaces
+//! with credits.
+
+use std::collections::VecDeque;
+
+/// Bounded FIFO with HW-style occupancy flags.
+#[derive(Debug, Clone)]
+pub struct ScFifo<T> {
+    q: VecDeque<T>,
+    capacity: usize,
+    almost_full_slack: usize,
+    almost_empty_level: usize,
+    /// High-water mark for sizing studies.
+    max_occupancy: usize,
+}
+
+impl<T> ScFifo<T> {
+    /// A FIFO of `capacity` words. `almost_full` asserts when fewer than
+    /// `almost_full_slack` slots remain; `almost_empty` when at most
+    /// `almost_empty_level` words remain.
+    pub fn new(capacity: usize, almost_full_slack: usize, almost_empty_level: usize) -> Self {
+        assert!(capacity > 0, "zero-capacity FIFO");
+        Self {
+            q: VecDeque::with_capacity(capacity),
+            capacity,
+            almost_full_slack,
+            almost_empty_level,
+            max_occupancy: 0,
+        }
+    }
+
+    /// Convenience: thresholds at 1/8 capacity either side.
+    pub fn with_capacity(capacity: usize) -> Self {
+        let t = (capacity / 8).max(1);
+        Self::new(capacity, t, t)
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.q.len() == self.capacity
+    }
+
+    pub fn free(&self) -> usize {
+        self.capacity - self.q.len()
+    }
+
+    /// HW `almost_full` flag.
+    pub fn almost_full(&self) -> bool {
+        self.free() < self.almost_full_slack
+    }
+
+    /// HW `almost_empty` flag (the §IV-B freeze trigger).
+    pub fn almost_empty(&self) -> bool {
+        self.q.len() <= self.almost_empty_level
+    }
+
+    /// Highest occupancy ever observed (FIFO sizing studies).
+    pub fn max_occupancy(&self) -> usize {
+        self.max_occupancy
+    }
+
+    /// Push; returns false (dropping nothing) when full.
+    pub fn push(&mut self, v: T) -> bool {
+        if self.is_full() {
+            return false;
+        }
+        self.q.push_back(v);
+        self.max_occupancy = self.max_occupancy.max(self.q.len());
+        true
+    }
+
+    pub fn pop(&mut self) -> Option<T> {
+        self.q.pop_front()
+    }
+
+    pub fn peek(&self) -> Option<&T> {
+        self.q.front()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order_and_capacity() {
+        let mut f = ScFifo::with_capacity(3);
+        assert!(f.push(1));
+        assert!(f.push(2));
+        assert!(f.push(3));
+        assert!(f.is_full());
+        assert!(!f.push(4), "push to full FIFO must fail");
+        assert_eq!(f.pop(), Some(1));
+        assert_eq!(f.pop(), Some(2));
+        assert_eq!(f.pop(), Some(3));
+        assert_eq!(f.pop(), None);
+    }
+
+    #[test]
+    fn flags() {
+        let mut f: ScFifo<u32> = ScFifo::new(8, 2, 2);
+        assert!(f.almost_empty());
+        assert!(!f.almost_full());
+        for i in 0..7 {
+            f.push(i);
+        }
+        assert!(f.almost_full(), "7/8 with slack 2");
+        assert!(!f.almost_empty());
+        while f.len() > 2 {
+            f.pop();
+        }
+        assert!(f.almost_empty());
+    }
+
+    #[test]
+    fn high_water_mark() {
+        let mut f = ScFifo::with_capacity(16);
+        for i in 0..10 {
+            f.push(i);
+        }
+        for _ in 0..5 {
+            f.pop();
+        }
+        for i in 0..3 {
+            f.push(i);
+        }
+        assert_eq!(f.max_occupancy(), 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "zero-capacity")]
+    fn zero_capacity_panics() {
+        let _ = ScFifo::<u8>::new(0, 1, 1);
+    }
+}

@@ -1,0 +1,25 @@
+//! On-chip flow-control fabric.
+//!
+//! The paper's §IV-A weight distribution network is built from: a weight
+//! prefetcher in the HBM clock domain, a dual-clock FIFO per pseudo-
+//! channel, per-layer burst-matching single-clock FIFOs, an 80-bit
+//! serializer, and daisy-chained 512-deep last-stage FIFOs feeding groups
+//! of AI tensor blocks. §V-A shows the ready/valid version of this network
+//! deadlocks under head-of-line blocking (Fig. 5) and replaces it with a
+//! credit-based latency-insensitive protocol.
+//!
+//! This module provides those primitives ([`ScFifo`], [`DcFifo`],
+//! [`CreditCounter`], [`ReadyValid`]) plus an executable reproduction of
+//! the Fig. 5 deadlock ([`deadlock`]).
+
+pub mod credit;
+pub mod dcfifo;
+pub mod deadlock;
+pub mod fifo;
+pub mod ready_valid;
+
+pub use credit::CreditCounter;
+pub use dcfifo::DcFifo;
+pub use deadlock::{run_shared_pc_pipeline, FlowControl, PipelineOutcome};
+pub use fifo::ScFifo;
+pub use ready_valid::ReadyValid;

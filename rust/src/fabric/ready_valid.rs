@@ -1,0 +1,80 @@
+//! Ready/valid (AXI-stream style) link — the §V-A baseline protocol.
+//!
+//! A single-register latency-insensitive link: the producer may load a
+//! word when the register is empty (`ready`), the consumer may take it
+//! when `valid`. H2PIPE's original HPIPE fabric used this style; the
+//! paper shows it deadlocks when a shared DCFIFO fans out to multiple
+//! burst-matching FIFOs (Fig. 5), motivating [`super::credit`].
+
+/// One-deep ready/valid pipeline register.
+#[derive(Debug, Clone)]
+pub struct ReadyValid<T> {
+    slot: Option<T>,
+}
+
+impl<T> Default for ReadyValid<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> ReadyValid<T> {
+    pub fn new() -> Self {
+        Self { slot: None }
+    }
+
+    /// Producer-side `ready`: can a word be loaded this cycle?
+    pub fn ready(&self) -> bool {
+        self.slot.is_none()
+    }
+
+    /// Consumer-side `valid`: is a word present?
+    pub fn valid(&self) -> bool {
+        self.slot.is_some()
+    }
+
+    /// Producer handshake: load when ready.
+    pub fn send(&mut self, v: T) -> bool {
+        if self.slot.is_some() {
+            return false;
+        }
+        self.slot = Some(v);
+        true
+    }
+
+    /// Consumer handshake: take when valid.
+    pub fn recv(&mut self) -> Option<T> {
+        self.slot.take()
+    }
+
+    /// Consumer peek without dequeue.
+    pub fn peek(&self) -> Option<&T> {
+        self.slot.as_ref()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn handshake() {
+        let mut l = ReadyValid::new();
+        assert!(l.ready() && !l.valid());
+        assert!(l.send(7u32));
+        assert!(!l.ready() && l.valid());
+        assert!(!l.send(8), "backpressure while occupied");
+        assert_eq!(l.recv(), Some(7));
+        assert!(l.ready());
+        assert_eq!(l.recv(), None);
+    }
+
+    #[test]
+    fn peek_does_not_consume() {
+        let mut l = ReadyValid::new();
+        l.send("w");
+        assert_eq!(l.peek(), Some(&"w"));
+        assert!(l.valid());
+        assert_eq!(l.recv(), Some("w"));
+    }
+}

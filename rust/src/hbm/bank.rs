@@ -1,0 +1,179 @@
+//! DRAM bank state machine.
+//!
+//! Each HBM2 pseudo-channel owns 16 banks (4 groups of 4). A bank is a
+//! row-addressed array: a row must be ACTIVATEd into the row buffer before
+//! column reads/writes, and PRECHARGEd before a different row can open.
+//! The controller consults [`Bank`] for *when* each command becomes legal;
+//! the bank enforces tRCD / tRP / tRAS and write-recovery locally, while
+//! inter-bank constraints (tRRD, tFAW, bus contention) live in the
+//! controller.
+
+use crate::config::HbmTiming;
+
+/// Observable bank state (for tests and debugging).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BankState {
+    /// No row open.
+    Idle,
+    /// Row open and usable (possibly still settling tRCD — check
+    /// `ready_for_cas`).
+    Active(u64),
+}
+
+/// One DRAM bank.
+#[derive(Debug, Clone)]
+pub struct Bank {
+    /// Open row, if any.
+    open_row: Option<u64>,
+    /// Cycle at which the most recent ACTIVATE was issued.
+    act_cycle: u64,
+    /// Earliest cycle a CAS (RD/WR) may issue (tRCD after ACT).
+    cas_ready_at: u64,
+    /// Earliest cycle a PRECHARGE may issue (tRAS after ACT, and write
+    /// recovery tWR after the last write burst ends).
+    pre_ready_at: u64,
+    /// Earliest cycle an ACTIVATE may issue (tRP after PRE).
+    act_ready_at: u64,
+}
+
+impl Default for Bank {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bank {
+    pub fn new() -> Self {
+        Self { open_row: None, act_cycle: 0, cas_ready_at: 0, pre_ready_at: 0, act_ready_at: 0 }
+    }
+
+    pub fn state(&self) -> BankState {
+        match self.open_row {
+            Some(r) => BankState::Active(r),
+            None => BankState::Idle,
+        }
+    }
+
+    /// Is `row` open in the row buffer (a "row hit")?
+    pub fn row_hit(&self, row: u64) -> bool {
+        self.open_row == Some(row)
+    }
+
+    /// True if the bank is idle (no open row) and an ACT may issue at
+    /// `cycle`.
+    pub fn can_activate(&self, cycle: u64) -> bool {
+        self.open_row.is_none() && cycle >= self.act_ready_at
+    }
+
+    /// True if a PRECHARGE may issue at `cycle` (row open, tRAS and tWR
+    /// satisfied).
+    pub fn can_precharge(&self, cycle: u64) -> bool {
+        self.open_row.is_some() && cycle >= self.pre_ready_at
+    }
+
+    /// True if a CAS to `row` may issue at `cycle`.
+    pub fn can_cas(&self, row: u64, cycle: u64) -> bool {
+        self.row_hit(row) && cycle >= self.cas_ready_at
+    }
+
+    /// Issue ACTIVATE of `row` at `cycle`. Caller must have checked
+    /// `can_activate`.
+    pub fn activate(&mut self, row: u64, cycle: u64, t: &HbmTiming) {
+        debug_assert!(self.can_activate(cycle), "illegal ACT at {cycle}");
+        self.open_row = Some(row);
+        self.act_cycle = cycle;
+        self.cas_ready_at = cycle + t.t_rcd as u64;
+        self.pre_ready_at = cycle + t.t_ras as u64;
+    }
+
+    /// Issue PRECHARGE at `cycle`. Caller must have checked
+    /// `can_precharge`.
+    pub fn precharge(&mut self, cycle: u64, t: &HbmTiming) {
+        debug_assert!(self.can_precharge(cycle), "illegal PRE at {cycle}");
+        self.open_row = None;
+        self.act_ready_at = cycle + t.t_rp as u64;
+    }
+
+    /// Record a read CAS at `cycle` (no extra bank-local constraint beyond
+    /// tRAS already tracked; data-bus scheduling is the controller's job).
+    pub fn read_cas(&mut self, _cycle: u64) {}
+
+    /// Record a write CAS at `cycle` whose data burst ends at
+    /// `data_end`: precharge must additionally wait tWR after the burst.
+    pub fn write_cas(&mut self, data_end: u64, t: &HbmTiming) {
+        self.pre_ready_at = self.pre_ready_at.max(data_end + t.t_wr as u64);
+    }
+
+    /// Force-close for refresh bookkeeping.
+    pub fn close_for_refresh(&mut self, cycle: u64, t: &HbmTiming) {
+        self.open_row = None;
+        self.act_ready_at = self.act_ready_at.max(cycle + t.t_rp as u64);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t() -> HbmTiming {
+        HbmTiming::hbm2_default()
+    }
+
+    #[test]
+    fn fresh_bank_is_idle_and_activatable() {
+        let b = Bank::new();
+        assert_eq!(b.state(), BankState::Idle);
+        assert!(b.can_activate(0));
+        assert!(!b.can_precharge(0));
+        assert!(!b.can_cas(3, 0));
+    }
+
+    #[test]
+    fn act_then_cas_respects_trcd() {
+        let timing = t();
+        let mut b = Bank::new();
+        b.activate(7, 100, &timing);
+        assert_eq!(b.state(), BankState::Active(7));
+        assert!(!b.can_cas(7, 100 + timing.t_rcd as u64 - 1));
+        assert!(b.can_cas(7, 100 + timing.t_rcd as u64));
+        // wrong row is never CAS-able
+        assert!(!b.can_cas(8, 100 + timing.t_rcd as u64));
+    }
+
+    #[test]
+    fn precharge_respects_tras_then_act_respects_trp() {
+        let timing = t();
+        let mut b = Bank::new();
+        b.activate(7, 100, &timing);
+        let pre_at = 100 + timing.t_ras as u64;
+        assert!(!b.can_precharge(pre_at - 1));
+        assert!(b.can_precharge(pre_at));
+        b.precharge(pre_at, &timing);
+        assert_eq!(b.state(), BankState::Idle);
+        assert!(!b.can_activate(pre_at + timing.t_rp as u64 - 1));
+        assert!(b.can_activate(pre_at + timing.t_rp as u64));
+    }
+
+    #[test]
+    fn write_recovery_delays_precharge() {
+        let timing = t();
+        let mut b = Bank::new();
+        b.activate(1, 0, &timing);
+        let data_end = 50;
+        b.write_cas(data_end, &timing);
+        let want = data_end + timing.t_wr as u64;
+        assert!(!b.can_precharge(want - 1));
+        assert!(b.can_precharge(want));
+    }
+
+    #[test]
+    fn refresh_close_requires_trp_before_act() {
+        let timing = t();
+        let mut b = Bank::new();
+        b.activate(1, 0, &timing);
+        b.close_for_refresh(200, &timing);
+        assert_eq!(b.state(), BankState::Idle);
+        assert!(!b.can_activate(200 + timing.t_rp as u64 - 1));
+        assert!(b.can_activate(200 + timing.t_rp as u64));
+    }
+}

@@ -1,0 +1,38 @@
+//! Cycle-level HBM2 substrate.
+//!
+//! The paper characterizes one pseudo-channel of the Stratix 10 NX's HBM2
+//! (§III-A, Fig. 3) and builds the whole H2PIPE memory system on the
+//! result. We do not have the silicon, so this module implements the
+//! substrate the paper measured: DRAM banks with JEDEC-style timing
+//! ([`bank`]), a pseudo-channel controller with a row/column command bus
+//! shared between the two PCs of a channel ([`controller`]), 4-Hi stacks
+//! ([`stack`]), and the AXI traffic generator used to regenerate
+//! Fig. 3a/3b ([`traffic`]).
+//!
+//! All time is in *controller clock cycles* (400 MHz, 2.5 ns).
+
+pub mod bank;
+pub mod controller;
+pub mod stack;
+pub mod traffic;
+
+pub use bank::{Bank, BankState};
+pub use controller::{Completion, Dir, PcStats, PseudoChannel, Request};
+pub use stack::{CmdBus, Channel, HbmStack};
+pub use traffic::{AddressPattern, TrafficConfig, TrafficGen, TrafficReport};
+
+/// Convert controller cycles to nanoseconds (2.5 ns per cycle at 400 MHz).
+pub fn cycles_to_ns(cycles: u64, controller_mhz: u32) -> f64 {
+    cycles as f64 * 1e3 / controller_mhz as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cycle_conversion() {
+        assert_eq!(cycles_to_ns(400, 400), 1000.0);
+        assert_eq!(cycles_to_ns(160, 400), 400.0);
+    }
+}

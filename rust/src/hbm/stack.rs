@@ -1,0 +1,193 @@
+//! HBM channel and stack composition.
+//!
+//! A 4-Hi HBM2 stack has 4 dies x 2 channels; each channel splits into two
+//! pseudo-channels with private data paths but a *shared* row/column
+//! command bus (§II-C, Fig. 2). [`CmdBus`] models that sharing: per cycle
+//! there is one row-command slot and one column-command slot for the two
+//! PCs of a channel, with alternating priority for fairness.
+
+use crate::config::{HbmGeometry, HbmTiming};
+use crate::hbm::controller::{PcTuning, PseudoChannel};
+
+/// Per-cycle command-slot availability for one channel.
+#[derive(Debug)]
+pub struct CmdBus {
+    row_free: bool,
+    col_free: bool,
+}
+
+impl Default for CmdBus {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CmdBus {
+    pub fn new() -> Self {
+        Self { row_free: true, col_free: true }
+    }
+
+    /// Claim this cycle's row-command slot (ACT/PRE/REF).
+    pub fn take_row_slot(&mut self) -> bool {
+        std::mem::take(&mut self.row_free)
+    }
+
+    /// Claim this cycle's column-command slot (RD/WR).
+    pub fn take_col_slot(&mut self) -> bool {
+        std::mem::take(&mut self.col_free)
+    }
+}
+
+/// One HBM channel: two pseudo-channels sharing a command bus.
+#[derive(Debug, Clone)]
+pub struct Channel {
+    pub pcs: [PseudoChannel; 2],
+    /// Alternates each cycle so neither PC starves on command slots.
+    priority: usize,
+}
+
+impl Channel {
+    pub fn new(geom: &HbmGeometry, timing: &HbmTiming, tuning: PcTuning) -> Self {
+        Self {
+            pcs: [
+                PseudoChannel::new(geom, timing, tuning.clone()),
+                PseudoChannel::new(geom, timing, tuning),
+            ],
+            priority: 0,
+        }
+    }
+
+    /// Advance both PCs one cycle, arbitrating the shared command bus.
+    pub fn tick(&mut self) {
+        let mut bus = CmdBus::new();
+        let first = self.priority;
+        let second = 1 - first;
+        self.pcs[first].tick(&mut bus);
+        self.pcs[second].tick(&mut bus);
+        self.priority = second;
+    }
+}
+
+/// A full HBM stack: `pcs_per_stack / 2` channels.
+#[derive(Debug, Clone)]
+pub struct HbmStack {
+    pub channels: Vec<Channel>,
+}
+
+impl HbmStack {
+    pub fn new(geom: &HbmGeometry, timing: &HbmTiming, tuning: PcTuning) -> Self {
+        let n_ch = (geom.pcs_per_stack / 2) as usize;
+        Self {
+            channels: (0..n_ch).map(|_| Channel::new(geom, timing, tuning.clone())).collect(),
+        }
+    }
+
+    /// Pseudo-channel count.
+    pub fn num_pcs(&self) -> usize {
+        self.channels.len() * 2
+    }
+
+    /// Borrow a PC by stack-local index (0..num_pcs).
+    pub fn pc(&mut self, idx: usize) -> &mut PseudoChannel {
+        &mut self.channels[idx / 2].pcs[idx % 2]
+    }
+
+    /// Advance the whole stack one controller cycle.
+    pub fn tick(&mut self) {
+        for ch in &mut self.channels {
+            ch.tick();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DeviceConfig;
+    use crate::hbm::controller::{Dir, Request};
+
+    #[test]
+    fn stack_has_16_pcs() {
+        let d = DeviceConfig::stratix10_nx2100();
+        let s = HbmStack::new(&d.hbm, &d.hbm_timing, PcTuning::default());
+        assert_eq!(s.num_pcs(), 16);
+        assert_eq!(s.channels.len(), 8);
+    }
+
+    #[test]
+    fn cmd_bus_slots_are_single_use() {
+        let mut bus = CmdBus::new();
+        assert!(bus.take_row_slot());
+        assert!(!bus.take_row_slot());
+        assert!(bus.take_col_slot());
+        assert!(!bus.take_col_slot());
+    }
+
+    #[test]
+    fn shared_command_bus_throttles_paired_pcs() {
+        // Saturate both PCs of one channel with small random bursts, then
+        // compare against a PC that owns its command bus alone: sharing
+        // must cost efficiency at small burst lengths.
+        let d = DeviceConfig::stratix10_nx2100();
+        let run_shared = || {
+            let mut ch = Channel::new(&d.hbm, &d.hbm_timing, PcTuning::default());
+            let mut rng = crate::util::XorShift64::new(3);
+            let mut id = 0;
+            for _ in 0..40_000 {
+                for pc in ch.pcs.iter_mut() {
+                    if pc.can_accept(8) {
+                        let addr = rng.next_below(1 << 26) & !31;
+                        pc.push(Request { id, dir: Dir::Read, addr, burst: 2 });
+                        id += 1;
+                    }
+                }
+                ch.tick();
+            }
+            (ch.pcs[0].stats.efficiency() + ch.pcs[1].stats.efficiency()) / 2.0
+        };
+        let run_alone = || {
+            let mut pc = PseudoChannel::new(&d.hbm, &d.hbm_timing, PcTuning::default());
+            let mut rng = crate::util::XorShift64::new(3);
+            let mut id = 0;
+            for _ in 0..40_000 {
+                if pc.can_accept(8) {
+                    let addr = rng.next_below(1 << 26) & !31;
+                    pc.push(Request { id, dir: Dir::Read, addr, burst: 2 });
+                    id += 1;
+                }
+                let mut bus = CmdBus::new();
+                pc.tick(&mut bus);
+            }
+            pc.stats.efficiency()
+        };
+        let shared = run_shared();
+        let alone = run_alone();
+        assert!(
+            shared < alone,
+            "shared command bus ({shared:.3}) should be slower than dedicated ({alone:.3})"
+        );
+    }
+
+    #[test]
+    fn both_pcs_make_progress() {
+        let d = DeviceConfig::stratix10_nx2100();
+        let mut ch = Channel::new(&d.hbm, &d.hbm_timing, PcTuning::default());
+        let mut id = 0;
+        let mut rng = crate::util::XorShift64::new(11);
+        for _ in 0..20_000 {
+            for pc in ch.pcs.iter_mut() {
+                if pc.can_accept(8) {
+                    let addr = rng.next_below(1 << 24) & !31;
+                    pc.push(Request { id, dir: Dir::Read, addr, burst: 8 });
+                    id += 1;
+                }
+            }
+            ch.tick();
+        }
+        let r0 = ch.pcs[0].stats.reads;
+        let r1 = ch.pcs[1].stats.reads;
+        assert!(r0 > 0 && r1 > 0);
+        let ratio = r0 as f64 / r1 as f64;
+        assert!((0.8..1.25).contains(&ratio), "unfair arbitration: {r0} vs {r1}");
+    }
+}

@@ -1,0 +1,53 @@
+//! # H2PIPE — layer-pipelined CNN inference with High-Bandwidth Memory
+//!
+//! Reproduction of *H2PIPE: High Throughput CNN Inference on FPGAs with
+//! High-Bandwidth Memory* (Doumet, Stan, Hall, Betz — FPL 2024).
+//!
+//! The crate is organized as the Layer-3 (rust) part of a three-layer
+//! rust + JAX + Pallas stack:
+//!
+//! * [`nn`] — CNN graph IR and the model zoo used in the paper
+//!   (ResNet-18/50, VGG-16, MobileNetV1/2/3).
+//! * [`hbm`] — a cycle-level HBM2 substrate: DRAM banks, pseudo-channel
+//!   controllers, channel command-bus sharing, 4-Hi stacks, and the AXI
+//!   traffic generator used for the paper's §III-A characterization.
+//! * [`fabric`] — on-chip flow-control fabric: SCFIFOs, dual-clock FIFOs,
+//!   ready/valid links (to reproduce the Fig. 5 deadlock) and the
+//!   credit-based weight-distribution network that fixes it.
+//! * [`compiler`] — the H2PIPE compiler: per-layer parallelism selection,
+//!   the Eq. 1 offload score, Algorithm 1 layer selection, pseudo-channel
+//!   assignment, burst-length policy and full resource accounting against
+//!   the Stratix 10 NX2100 device model.
+//! * [`sim`] — the cycle-level layer-pipelined dataflow simulator that
+//!   stands in for the FPGA: layer engines with AI-TB semantics, activation
+//!   line buffers, freeze-signal stalling, and end-to-end throughput /
+//!   latency measurement.
+//! * [`coordinator`] — the serving runtime: boot-time weight download
+//!   through the §IV-C write path, request batching, and dispatch to both
+//!   the timing model and the PJRT-executed AOT artifacts.
+//! * [`runtime`] — PJRT CPU client wrapper that loads `artifacts/*.hlo.txt`
+//!   produced by `python/compile/aot.py` and executes them on the hot path.
+//! * [`analysis`] — Eq. 2 memory-traffic bounds, the Fig. 6 theoretical
+//!   upper bounds, the Table III prior-work dataset and report generation.
+//! * [`bench_harness`], [`testkit`], [`util`] — in-repo replacements for
+//!   criterion / proptest / serde, which are unavailable in the offline
+//!   crate set this build runs against.
+//!
+//! See `DESIGN.md` for the experiment index mapping every paper table and
+//! figure to a bench target, and `EXPERIMENTS.md` for measured results.
+
+pub mod analysis;
+pub mod bench_harness;
+pub mod compiler;
+pub mod config;
+pub mod coordinator;
+pub mod fabric;
+pub mod hbm;
+pub mod nn;
+pub mod runtime;
+pub mod sim;
+pub mod testkit;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,274 @@
+//! H2PIPE command-line launcher.
+//!
+//! Subcommands (arg parsing is hand-rolled — `clap` is not in the offline
+//! crate set):
+//!
+//! ```text
+//! h2pipe compile      --model resnet50 [--all-hbm] [--burst N] [--write-path-bits N]
+//! h2pipe simulate     --model resnet50 [--all-hbm] [--burst N] [--images N]
+//! h2pipe characterize [--bursts 1,2,4,8,16,32] [--pattern random|sequential|interleaved3]
+//! h2pipe table1
+//! h2pipe bounds
+//! h2pipe table3
+//! h2pipe boot         --model vgg16 [--write-path-bits N]
+//! h2pipe serve        [--requests N] [--batch N]
+//! h2pipe infer
+//! ```
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+use h2pipe::analysis;
+use h2pipe::compiler::{compile, memory_breakdown};
+use h2pipe::config::{BurstLengthPolicy, CompilerOptions, DeviceConfig};
+use h2pipe::coordinator::{boot_weights, InferenceServer, ServerConfig};
+use h2pipe::hbm::{AddressPattern, TrafficConfig, TrafficGen};
+use h2pipe::nn::zoo;
+use h2pipe::sim::pipeline::{simulate, SimConfig};
+use h2pipe::util::{fmt_mbits, XorShift64};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Parsed `--key value` / `--flag` arguments.
+struct Args {
+    cmd: String,
+    kv: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+fn parse_args() -> Result<Args> {
+    let mut it = std::env::args().skip(1);
+    let cmd = it.next().unwrap_or_else(|| "help".to_string());
+    let mut kv = HashMap::new();
+    let mut flags = Vec::new();
+    let rest: Vec<String> = it.collect();
+    let mut i = 0;
+    while i < rest.len() {
+        let a = &rest[i];
+        if let Some(key) = a.strip_prefix("--") {
+            if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
+                kv.insert(key.to_string(), rest[i + 1].clone());
+                i += 2;
+            } else {
+                flags.push(key.to_string());
+                i += 1;
+            }
+        } else {
+            bail!("unexpected argument {a:?}");
+        }
+    }
+    Ok(Args { cmd, kv, flags })
+}
+
+impl Args {
+    fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    fn get<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.kv.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow::anyhow!("--{name} {v:?}: {e}")),
+        }
+    }
+
+    fn model(&self) -> Result<h2pipe::nn::Network> {
+        let name = self.kv.get("model").map(String::as_str).unwrap_or("resnet18");
+        zoo::by_name(name).with_context(|| format!("unknown model {name:?}"))
+    }
+
+    fn compiler_options(&self) -> Result<CompilerOptions> {
+        let mut o = CompilerOptions::default();
+        if self.flag("all-hbm") {
+            o.all_hbm = true;
+        }
+        if let Some(b) = self.kv.get("burst") {
+            o.burst_length = BurstLengthPolicy::Fixed(b.parse()?);
+        }
+        o.write_path_bits = self.get("write-path-bits", o.write_path_bits)?;
+        o.validate()?;
+        Ok(o)
+    }
+}
+
+fn run() -> Result<()> {
+    let args = parse_args()?;
+    let device = DeviceConfig::stratix10_nx2100();
+    match args.cmd.as_str() {
+        "compile" => {
+            let net = args.model()?;
+            let plan = compile(&net, &device, &args.compiler_options()?)?;
+            print!("{}", plan.report());
+        }
+        "simulate" => {
+            let net = args.model()?;
+            let plan = compile(&net, &device, &args.compiler_options()?)?;
+            let cfg = SimConfig {
+                images: args.get("images", 5u64)?,
+                warmup_images: args.get("warmup", 2u64)?,
+                ..SimConfig::default()
+            };
+            let rep = simulate(&net, &plan, &cfg)?;
+            println!(
+                "{}: {:.0} im/s   latency {:.2} ms   freeze {:.3}   bottleneck {} ({})   hbm eff {:.3}",
+                rep.network,
+                rep.throughput,
+                rep.latency * 1e3,
+                rep.freeze_fraction,
+                rep.bottleneck,
+                if rep.bottleneck_on_hbm { "HBM" } else { "on-chip" },
+                rep.hbm_efficiency,
+            );
+        }
+        "characterize" => {
+            let bursts: Vec<u32> = args
+                .kv
+                .get("bursts")
+                .map(String::as_str)
+                .unwrap_or("1,2,4,8,16,32")
+                .split(',')
+                .map(|s| s.parse().context("burst list"))
+                .collect::<Result<_>>()?;
+            let pattern = match args.kv.get("pattern").map(String::as_str).unwrap_or("random") {
+                "random" => AddressPattern::Random,
+                "sequential" => AddressPattern::Sequential,
+                "interleaved3" => AddressPattern::Interleaved(3),
+                p => bail!("unknown pattern {p:?}"),
+            };
+            let gen = TrafficGen::new(&device);
+            println!("pattern {pattern:?}");
+            println!(
+                "{:>5} {:>9} {:>9} {:>10} {:>10} {:>10}",
+                "BL", "read_eff", "write_eff", "lat_min", "lat_avg", "lat_max"
+            );
+            for bl in bursts {
+                let r = gen.run(&TrafficConfig::new(pattern, bl));
+                println!(
+                    "{bl:>5} {:>9.3} {:>9.3} {:>8.0}ns {:>8.0}ns {:>8.0}ns",
+                    r.read_efficiency,
+                    r.write_efficiency,
+                    r.read_lat_min_ns,
+                    r.read_lat_avg_ns,
+                    r.read_lat_max_ns
+                );
+            }
+        }
+        "table1" => {
+            let o = CompilerOptions::default();
+            println!(
+                "{:<14} {:>12} {:>10} {:>8}  {}",
+                "Model", "Weight Mem", "Act Mem", "Act %", "fits NX2100?"
+            );
+            for net in zoo::table1_models() {
+                let b = memory_breakdown(&net, &o);
+                println!(
+                    "{:<14} {:>12} {:>10} {:>7.1}%  {}",
+                    b.model,
+                    fmt_mbits(b.weight_bits),
+                    fmt_mbits(b.act_bits),
+                    100.0 * b.act_fraction(),
+                    if b.exceeds(&device) { "NO (shaded)" } else { "yes" }
+                );
+            }
+        }
+        "bounds" => {
+            let o = CompilerOptions::default();
+            for net in zoo::eval_models() {
+                let b = analysis::bounds::bounds_report(&net, &device, &o)?;
+                println!(
+                    "{:<10} Eq2 traffic {:>7.1} MB/img   all-HBM bound {:>6.0} im/s   unlimited-BW bound {:>6.0} im/s",
+                    b.model,
+                    b.traffic_bytes as f64 / 1e6,
+                    b.all_hbm_bound,
+                    b.unlimited_bw_bound
+                );
+            }
+        }
+        "table3" => {
+            // quick analytic H2PIPE rows (benches use the full simulator)
+            let o = CompilerOptions::default();
+            let mut ours = Vec::new();
+            let mut macs = Vec::new();
+            for net in zoo::eval_models() {
+                let plan = compile(&net, &device, &o)?;
+                macs.push((net.name.clone(), net.total_macs()));
+                ours.push(analysis::H2pipeResult {
+                    network: net.name.clone(),
+                    all_hbm_throughput: 0.0,
+                    hybrid_throughput: plan.est_throughput,
+                    latency_ms: plan.est_latency * 1e3,
+                    logic_util: plan.usage.alm_frac(&device),
+                    bram_util: plan.usage.m20k_frac(&device),
+                    dsp_util: plan.usage.tb_frac(&device),
+                    freq_mhz: device.core_mhz,
+                });
+            }
+            print!("{}", analysis::table3_text(&ours, &macs));
+        }
+        "boot" => {
+            let net = args.model()?;
+            let plan = compile(&net, &device, &args.compiler_options()?)?;
+            let r = boot_weights(&plan);
+            println!(
+                "{}: {} MiB to HBM over a {}-bit write path: {:.1} ms boot, {} write-path regs, write eff {:.2}",
+                net.name,
+                r.bytes >> 20,
+                r.write_path_bits,
+                r.seconds * 1e3,
+                r.write_path_registers,
+                r.hbm_write_efficiency
+            );
+        }
+        "serve" => {
+            let n_req: usize = args.get("requests", 64usize)?;
+            let mut cfg = ServerConfig::cifarnet("artifacts");
+            cfg.batch_size = args.get("batch", 8usize)?;
+            // modelled FPGA rate: ResNet-18 hybrid plan
+            let plan = compile(&zoo::resnet18(), &device, &CompilerOptions::default())?;
+            cfg.modelled_image_s = 1.0 / plan.est_throughput;
+            let srv = InferenceServer::start(cfg)?;
+            let mut rng = XorShift64::new(7);
+            let images: Vec<Vec<i32>> = (0..n_req)
+                .map(|_| {
+                    (0..32 * 32 * 3).map(|_| rng.next_range(0, 255) as i32 - 128).collect()
+                })
+                .collect();
+            let ok = srv.run_closed_loop(images)?;
+            let rep = srv.shutdown();
+            println!(
+                "served {ok} requests: wall {:.0} im/s, mean {:.2} ms, p50 {:.2} ms, p99 {:.2} ms, mean batch {:.1}",
+                rep.wall_throughput, rep.mean_latency_ms, rep.p50_ms, rep.p99_ms, rep.mean_batch
+            );
+            println!(
+                "modelled FPGA rate (ResNet-18 hybrid plan): {:.0} im/s",
+                rep.modelled_throughput
+            );
+        }
+        "infer" => {
+            let rt = h2pipe::runtime::Runtime::cpu("artifacts")?;
+            let exe = rt.load("cifarnet")?;
+            let img = vec![1i32; 32 * 32 * 3];
+            let out = exe.run_i32(&img, &[32, 32, 3])?;
+            println!("cifarnet logits: {out:?}");
+        }
+        _ => {
+            println!(
+                "h2pipe — H2PIPE (FPL 2024) reproduction\n\
+                 commands: compile | simulate | characterize | table1 | bounds | table3 | boot | serve | infer\n\
+                 common:   --model resnet18|resnet50|vgg16|mobilenetv1|mobilenetv2|mobilenetv3\n\
+                 compile:  --all-hbm --burst 8|16|32 --write-path-bits N\n\
+                 simulate: --images N --warmup N\n\
+                 serve:    --requests N --batch N"
+            );
+        }
+    }
+    Ok(())
+}

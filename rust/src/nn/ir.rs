@@ -1,0 +1,415 @@
+//! The layer-graph IR.
+//!
+//! A [`Network`] is a DAG of [`Layer`]s in topological order (builders
+//! append producers before consumers). Shape inference runs at
+//! construction, so every layer carries its concrete output [`Shape`];
+//! the compiler and simulator never re-derive geometry.
+
+use anyhow::{bail, ensure, Result};
+
+/// Index of a layer within its [`Network`].
+pub type LayerId = usize;
+
+/// A 3-D activation shape: height x width x channels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Shape {
+    pub h: u32,
+    pub w: u32,
+    pub c: u32,
+}
+
+impl Shape {
+    pub fn new(h: u32, w: u32, c: u32) -> Self {
+        Self { h, w, c }
+    }
+
+    /// Total element count.
+    pub fn elems(&self) -> u64 {
+        self.h as u64 * self.w as u64 * self.c as u64
+    }
+}
+
+impl std::fmt::Display for Shape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}x{}x{}", self.h, self.w, self.c)
+    }
+}
+
+/// Convolution flavour; HPIPE instantiates a different compute unit for
+/// each (§I), and they differ in weight volume and MAC count.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ConvKind {
+    /// Traditional dense convolution over all input channels.
+    Standard,
+    /// Depthwise: one filter per channel, `c_o == c_i`.
+    Depthwise,
+    /// Pointwise: 1x1 standard convolution (kept distinct because HPIPE
+    /// maps it to a dedicated engine).
+    Pointwise,
+}
+
+/// Operator payload of a layer.
+#[derive(Debug, Clone, PartialEq)]
+pub enum OpKind {
+    /// Network input placeholder.
+    Input { shape: Shape },
+    /// 2-D convolution (+ optional fused activation, which does not change
+    /// memory/compute accounting and is therefore just a flag).
+    Conv {
+        kind: ConvKind,
+        kh: u32,
+        kw: u32,
+        stride: u32,
+        /// "same"-style symmetric padding amount.
+        pad: u32,
+        out_c: u32,
+    },
+    /// Max pooling.
+    MaxPool { k: u32, stride: u32, pad: u32 },
+    /// Global average pooling to 1x1.
+    GlobalAvgPool,
+    /// Elementwise residual addition of exactly two inputs.
+    Add,
+    /// Fully connected layer (HPIPE maps it as a 1x1 conv over 1x1xC).
+    Fc { out_features: u32 },
+    /// Squeeze-and-excite scale (MobileNetV3): global pool + two FCs +
+    /// channelwise multiply. `squeeze_c` is the bottleneck width.
+    SqueezeExcite { squeeze_c: u32 },
+}
+
+/// One node in the network DAG.
+#[derive(Debug, Clone)]
+pub struct Layer {
+    pub id: LayerId,
+    pub name: String,
+    pub op: OpKind,
+    /// Producer layers (empty for `Input`, two for `Add`, one otherwise).
+    pub inputs: Vec<LayerId>,
+    /// Inferred output shape.
+    pub out: Shape,
+    /// Shape of the first input, captured at insertion time so layers are
+    /// self-contained for accounting.
+    in_shape: Shape,
+}
+
+impl Layer {
+    /// Number of weight parameters this layer stores.
+    pub fn weight_params(&self) -> u64 {
+        match &self.op {
+            OpKind::Conv { kind, kh, kw, out_c, .. } => {
+                let (kh, kw, out_c) = (*kh as u64, *kw as u64, *out_c as u64);
+                match kind {
+                    ConvKind::Depthwise => kh * kw * out_c,
+                    _ => kh * kw * self.in_c() as u64 * out_c,
+                }
+            }
+            OpKind::Fc { out_features } => self.in_elems() * *out_features as u64,
+            OpKind::SqueezeExcite { squeeze_c } => {
+                // two dense layers: C -> squeeze -> C
+                let c = self.out.c as u64;
+                let s = *squeeze_c as u64;
+                c * s + s * c
+            }
+            _ => 0,
+        }
+    }
+
+    /// Multiply-accumulate operations per inference for this layer.
+    pub fn macs(&self) -> u64 {
+        match &self.op {
+            OpKind::Conv { kind, kh, kw, out_c, .. } => {
+                let spatial = self.out.h as u64 * self.out.w as u64;
+                let (kh, kw, out_c) = (*kh as u64, *kw as u64, *out_c as u64);
+                match kind {
+                    ConvKind::Depthwise => spatial * kh * kw * out_c,
+                    _ => spatial * kh * kw * self.in_c() as u64 * out_c,
+                }
+            }
+            OpKind::Fc { out_features } => self.in_elems() * *out_features as u64,
+            OpKind::SqueezeExcite { squeeze_c } => {
+                let c = self.out.c as u64;
+                2 * c * *squeeze_c as u64
+            }
+            OpKind::Add => self.out.elems(),
+            _ => 0,
+        }
+    }
+
+    /// Input channel count (first input's shape channels); stored at build
+    /// time so layers are self-contained.
+    pub fn in_c(&self) -> u32 {
+        self.in_shape.c
+    }
+
+    /// Total input element count.
+    pub fn in_elems(&self) -> u64 {
+        self.in_shape.elems()
+    }
+
+    /// Input shape (first input).
+    pub fn in_shape(&self) -> Shape {
+        self.in_shape
+    }
+}
+
+/// A CNN as a topologically-ordered layer list.
+#[derive(Debug, Clone)]
+pub struct Network {
+    pub name: String,
+    layers: Vec<Layer>,
+}
+
+impl Network {
+    /// Start a new network with the given input shape.
+    pub fn new(name: &str, input: Shape) -> Self {
+        let mut n = Self { name: name.to_string(), layers: Vec::new() };
+        n.layers.push(Layer {
+            id: 0,
+            name: "input".to_string(),
+            op: OpKind::Input { shape: input },
+            inputs: vec![],
+            out: input,
+            in_shape: input,
+        });
+        n
+    }
+
+    /// Append a layer consuming `inputs`; returns its id.
+    ///
+    /// Inputs must already exist (topological construction). Shape
+    /// inference validates geometry and fails on mismatched residual adds
+    /// or non-positive output sizes.
+    pub fn add(&mut self, name: &str, op: OpKind, inputs: &[LayerId]) -> Result<LayerId> {
+        let id = self.layers.len();
+        for &i in inputs {
+            ensure!(i < id, "layer {name}: input {i} does not precede {id}");
+        }
+        let in_shape = if inputs.is_empty() {
+            bail!("layer {name}: non-input layer needs at least one input")
+        } else {
+            self.layers[inputs[0]].out
+        };
+        let out = self.infer_shape(name, &op, inputs, in_shape)?;
+        self.layers.push(Layer { id, name: name.to_string(), op, inputs: inputs.to_vec(), out, in_shape });
+        Ok(id)
+    }
+
+    fn infer_shape(&self, name: &str, op: &OpKind, inputs: &[LayerId], in_shape: Shape) -> Result<Shape> {
+        let conv_out = |h: u32, w: u32, k: u32, s: u32, p: u32| -> Result<(u32, u32)> {
+            ensure!(s >= 1, "layer {name}: stride 0");
+            ensure!(h + 2 * p >= k && w + 2 * p >= k, "layer {name}: kernel larger than padded input");
+            Ok(((h + 2 * p - k) / s + 1, (w + 2 * p - k) / s + 1))
+        };
+        Ok(match op {
+            OpKind::Input { shape } => *shape,
+            OpKind::Conv { kind, kh, kw, stride, pad, out_c } => {
+                ensure!(*kh > 0 && *kw > 0, "layer {name}: zero kernel");
+                if *kind == ConvKind::Pointwise {
+                    ensure!(*kh == 1 && *kw == 1, "layer {name}: pointwise must be 1x1");
+                }
+                if *kind == ConvKind::Depthwise {
+                    ensure!(*out_c == in_shape.c, "layer {name}: depthwise c_o must equal c_i");
+                }
+                let (h, w) = conv_out(in_shape.h, in_shape.w, *kh, *stride, *pad)?;
+                ensure!(h > 0 && w > 0, "layer {name}: empty output");
+                Shape::new(h, w, *out_c)
+            }
+            OpKind::MaxPool { k, stride, pad } => {
+                let (h, w) = conv_out(in_shape.h, in_shape.w, *k, *stride, *pad)?;
+                Shape::new(h, w, in_shape.c)
+            }
+            OpKind::GlobalAvgPool => Shape::new(1, 1, in_shape.c),
+            OpKind::Add => {
+                ensure!(inputs.len() == 2, "layer {name}: Add requires exactly 2 inputs");
+                let a = self.layers[inputs[0]].out;
+                let b = self.layers[inputs[1]].out;
+                ensure!(a == b, "layer {name}: residual shape mismatch {a} vs {b}");
+                a
+            }
+            OpKind::Fc { out_features } => {
+                ensure!(*out_features > 0, "layer {name}: empty FC");
+                Shape::new(1, 1, *out_features)
+            }
+            OpKind::SqueezeExcite { squeeze_c } => {
+                ensure!(*squeeze_c > 0, "layer {name}: zero squeeze width");
+                in_shape
+            }
+        })
+    }
+
+    pub fn layers(&self) -> &[Layer] {
+        &self.layers
+    }
+
+    pub fn layer(&self, id: LayerId) -> &Layer {
+        &self.layers[id]
+    }
+
+    pub fn len(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.layers.is_empty()
+    }
+
+    /// Layers that perform weight-bearing convolutions / FCs, in order —
+    /// the units the H2PIPE compiler assigns engines and memory to.
+    pub fn weight_layers(&self) -> impl Iterator<Item = &Layer> {
+        self.layers.iter().filter(|l| l.weight_params() > 0)
+    }
+
+    /// Total weight parameters across the network.
+    pub fn total_params(&self) -> u64 {
+        self.layers.iter().map(|l| l.weight_params()).sum()
+    }
+
+    /// Total MACs per inference.
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+
+    /// Input shape of the network.
+    pub fn input_shape(&self) -> Shape {
+        match &self.layers[0].op {
+            OpKind::Input { shape } => *shape,
+            _ => unreachable!("layer 0 is always Input"),
+        }
+    }
+
+    /// The consumers of each layer (adjacency of the DAG), index-aligned
+    /// with `layers()`. Used by the simulator to wire activation queues.
+    pub fn consumers(&self) -> Vec<Vec<LayerId>> {
+        let mut out = vec![Vec::new(); self.layers.len()];
+        for l in &self.layers {
+            for &i in &l.inputs {
+                out[i].push(l.id);
+            }
+        }
+        out
+    }
+
+    /// Structural validation: every non-input layer reachable, exactly one
+    /// sink, add-nodes well-formed. Builders call this before returning.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(!self.layers.is_empty(), "empty network");
+        let consumers = self.consumers();
+        let sinks: Vec<_> =
+            self.layers.iter().filter(|l| consumers[l.id].is_empty()).map(|l| l.id).collect();
+        ensure!(sinks.len() == 1, "{}: expected 1 sink, found {:?}", self.name, sinks);
+        for l in &self.layers[1..] {
+            ensure!(!l.inputs.is_empty(), "{}: layer {} has no inputs", self.name, l.name);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Network {
+        let mut n = Network::new("tiny", Shape::new(8, 8, 3));
+        let c1 = n
+            .add(
+                "conv1",
+                OpKind::Conv { kind: ConvKind::Standard, kh: 3, kw: 3, stride: 1, pad: 1, out_c: 16 },
+                &[0],
+            )
+            .unwrap();
+        let p = n.add("pool", OpKind::MaxPool { k: 2, stride: 2, pad: 0 }, &[c1]).unwrap();
+        let g = n.add("gap", OpKind::GlobalAvgPool, &[p]).unwrap();
+        n.add("fc", OpKind::Fc { out_features: 10 }, &[g]).unwrap();
+        n
+    }
+
+    #[test]
+    fn shape_inference_chain() {
+        let n = tiny();
+        assert_eq!(n.layer(1).out, Shape::new(8, 8, 16));
+        assert_eq!(n.layer(2).out, Shape::new(4, 4, 16));
+        assert_eq!(n.layer(3).out, Shape::new(1, 1, 16));
+        assert_eq!(n.layer(4).out, Shape::new(1, 1, 10));
+        n.validate().unwrap();
+    }
+
+    #[test]
+    fn weight_and_mac_accounting() {
+        let n = tiny();
+        // conv1: 3*3*3*16 weights, 8*8 spatial
+        assert_eq!(n.layer(1).weight_params(), 3 * 3 * 3 * 16);
+        assert_eq!(n.layer(1).macs(), 8 * 8 * 3 * 3 * 3 * 16);
+        // fc: 16 -> 10
+        assert_eq!(n.layer(4).weight_params(), 160);
+        assert_eq!(n.total_params(), 3 * 3 * 3 * 16 + 160);
+    }
+
+    #[test]
+    fn depthwise_constraints() {
+        let mut n = Network::new("t", Shape::new(8, 8, 4));
+        // wrong out_c
+        let err = n.add(
+            "dw",
+            OpKind::Conv { kind: ConvKind::Depthwise, kh: 3, kw: 3, stride: 1, pad: 1, out_c: 8 },
+            &[0],
+        );
+        assert!(err.is_err());
+        let ok = n
+            .add(
+                "dw",
+                OpKind::Conv { kind: ConvKind::Depthwise, kh: 3, kw: 3, stride: 1, pad: 1, out_c: 4 },
+                &[0],
+            )
+            .unwrap();
+        assert_eq!(n.layer(ok).weight_params(), 3 * 3 * 4);
+    }
+
+    #[test]
+    fn pointwise_must_be_1x1() {
+        let mut n = Network::new("t", Shape::new(8, 8, 4));
+        assert!(n
+            .add(
+                "pw",
+                OpKind::Conv { kind: ConvKind::Pointwise, kh: 3, kw: 3, stride: 1, pad: 0, out_c: 8 },
+                &[0],
+            )
+            .is_err());
+    }
+
+    #[test]
+    fn residual_add_shape_check() {
+        let mut n = Network::new("t", Shape::new(8, 8, 4));
+        let a = n
+            .add(
+                "a",
+                OpKind::Conv { kind: ConvKind::Standard, kh: 3, kw: 3, stride: 1, pad: 1, out_c: 4 },
+                &[0],
+            )
+            .unwrap();
+        let ok = n.add("add", OpKind::Add, &[a, 0]).unwrap();
+        assert_eq!(n.layer(ok).out, Shape::new(8, 8, 4));
+        // mismatched channels
+        let b = n
+            .add(
+                "b",
+                OpKind::Conv { kind: ConvKind::Standard, kh: 1, kw: 1, stride: 1, pad: 0, out_c: 8 },
+                &[0],
+            )
+            .unwrap();
+        assert!(n.add("bad", OpKind::Add, &[b, 0]).is_err());
+    }
+
+    #[test]
+    fn topological_order_enforced() {
+        let mut n = Network::new("t", Shape::new(8, 8, 3));
+        assert!(n.add("x", OpKind::GlobalAvgPool, &[5]).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_two_sinks() {
+        let mut n = Network::new("t", Shape::new(8, 8, 3));
+        n.add("a", OpKind::GlobalAvgPool, &[0]).unwrap();
+        n.add("b", OpKind::MaxPool { k: 2, stride: 2, pad: 0 }, &[0]).unwrap();
+        assert!(n.validate().is_err());
+    }
+}

@@ -1,0 +1,11 @@
+//! CNN graph intermediate representation and the paper's model zoo.
+//!
+//! The H2PIPE compiler consumes a [`Network`]: a topologically-ordered DAG
+//! of layers with inferred activation shapes. The zoo provides the six
+//! networks of Table I — MobileNetV1/V2/V3, ResNet-18, ResNet-50 and
+//! VGG-16 — with exact ImageNet (224x224x3) shapes.
+
+mod ir;
+pub mod zoo;
+
+pub use ir::{ConvKind, Layer, LayerId, Network, OpKind, Shape};

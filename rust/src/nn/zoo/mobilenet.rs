@@ -1,0 +1,255 @@
+//! MobileNet V1/V2/V3-Large (Howard et al., Sandler et al.).
+//!
+//! These are the networks the original HPIPE NX port targeted; in this
+//! reproduction they exercise the depthwise/pointwise engine paths and the
+//! Table I accounting rows that *fit* on chip.
+
+use crate::nn::{ConvKind, LayerId, Network, OpKind, Shape};
+
+fn conv(
+    n: &mut Network,
+    name: &str,
+    from: LayerId,
+    k: u32,
+    stride: u32,
+    pad: u32,
+    out_c: u32,
+) -> LayerId {
+    let kind = if k == 1 { ConvKind::Pointwise } else { ConvKind::Standard };
+    n.add(name, OpKind::Conv { kind, kh: k, kw: k, stride, pad, out_c }, &[from])
+        .expect("mobilenet conv")
+}
+
+fn dwconv(n: &mut Network, name: &str, from: LayerId, k: u32, stride: u32) -> LayerId {
+    let c = n.layer(from).out.c;
+    n.add(
+        name,
+        OpKind::Conv { kind: ConvKind::Depthwise, kh: k, kw: k, stride, pad: k / 2, out_c: c },
+        &[from],
+    )
+    .expect("mobilenet dwconv")
+}
+
+/// MobileNetV1: 3x3 stem + 13 depthwise-separable blocks + classifier.
+pub fn mobilenet_v1() -> Network {
+    let mut n = Network::new("MobileNetV1", Shape::new(224, 224, 3));
+    let mut x = conv(&mut n, "conv0", 0, 3, 2, 1, 32);
+    // (out_c, stride) per separable block, width multiplier 1.0
+    let blocks: [(u32, u32); 13] = [
+        (64, 1),
+        (128, 2),
+        (128, 1),
+        (256, 2),
+        (256, 1),
+        (512, 2),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (1024, 2),
+        (1024, 1),
+    ];
+    for (i, (c, s)) in blocks.iter().enumerate() {
+        x = dwconv(&mut n, &format!("block{i}.dw"), x, 3, *s);
+        x = conv(&mut n, &format!("block{i}.pw"), x, 1, 1, 0, *c);
+    }
+    let gap = n.add("avgpool", OpKind::GlobalAvgPool, &[x]).expect("gap");
+    n.add("fc", OpKind::Fc { out_features: 1000 }, &[gap]).expect("fc");
+    n.validate().expect("mobilenetv1 validates");
+    n
+}
+
+/// MobileNetV2 inverted-residual block: 1x1 expand (ratio `t`) -> 3x3
+/// depthwise (stride `s`) -> 1x1 linear project; residual when the block
+/// preserves shape.
+fn inverted_residual(
+    n: &mut Network,
+    name: &str,
+    from: LayerId,
+    t: u32,
+    out_c: u32,
+    stride: u32,
+) -> LayerId {
+    let in_c = n.layer(from).out.c;
+    let mid = in_c * t;
+    let mut x = from;
+    if t != 1 {
+        x = conv(n, &format!("{name}.expand"), x, 1, 1, 0, mid);
+    }
+    x = dwconv(n, &format!("{name}.dw"), x, 3, stride);
+    x = conv(n, &format!("{name}.project"), x, 1, 1, 0, out_c);
+    if stride == 1 && in_c == out_c {
+        n.add(&format!("{name}.add"), OpKind::Add, &[x, from]).expect("v2 add")
+    } else {
+        x
+    }
+}
+
+/// MobileNetV2 (width 1.0): stem, 17 inverted-residual blocks, 1x1x1280
+/// head, classifier.
+pub fn mobilenet_v2() -> Network {
+    let mut n = Network::new("MobileNetV2", Shape::new(224, 224, 3));
+    let mut x = conv(&mut n, "conv0", 0, 3, 2, 1, 32);
+    // (expand t, out_c, repeats, first-stride) per stage, per the paper.
+    let cfg: [(u32, u32, u32, u32); 7] = [
+        (1, 16, 1, 1),
+        (6, 24, 2, 2),
+        (6, 32, 3, 2),
+        (6, 64, 4, 2),
+        (6, 96, 3, 1),
+        (6, 160, 3, 2),
+        (6, 320, 1, 1),
+    ];
+    let mut bi = 0;
+    for (t, c, reps, s) in cfg {
+        for r in 0..reps {
+            let stride = if r == 0 { s } else { 1 };
+            x = inverted_residual(&mut n, &format!("block{bi}"), x, t, c, stride);
+            bi += 1;
+        }
+    }
+    x = conv(&mut n, "conv_last", x, 1, 1, 0, 1280);
+    let gap = n.add("avgpool", OpKind::GlobalAvgPool, &[x]).expect("gap");
+    n.add("fc", OpKind::Fc { out_features: 1000 }, &[gap]).expect("fc");
+    n.validate().expect("mobilenetv2 validates");
+    n
+}
+
+/// MobileNetV3 bneck: expand -> depthwise (k, stride) -> optional SE ->
+/// project, residual when shape-preserving.
+#[allow(clippy::too_many_arguments)]
+fn bneck(
+    n: &mut Network,
+    name: &str,
+    from: LayerId,
+    k: u32,
+    exp: u32,
+    out_c: u32,
+    se: bool,
+    stride: u32,
+) -> LayerId {
+    let in_c = n.layer(from).out.c;
+    let mut x = from;
+    if exp != in_c {
+        x = conv(n, &format!("{name}.expand"), x, 1, 1, 0, exp);
+    }
+    x = dwconv(n, &format!("{name}.dw"), x, k, stride);
+    if se {
+        x = n
+            .add(&format!("{name}.se"), OpKind::SqueezeExcite { squeeze_c: exp / 4 }, &[x])
+            .expect("v3 se");
+    }
+    x = conv(n, &format!("{name}.project"), x, 1, 1, 0, out_c);
+    if stride == 1 && in_c == out_c {
+        n.add(&format!("{name}.add"), OpKind::Add, &[x, from]).expect("v3 add")
+    } else {
+        x
+    }
+}
+
+/// MobileNetV3-Large (width 1.0): the 15-bneck configuration from the
+/// paper's Table 1 (Howard et al., 2019) plus the 960/1280 head.
+pub fn mobilenet_v3_large() -> Network {
+    let mut n = Network::new("MobileNetV3", Shape::new(224, 224, 3));
+    let mut x = conv(&mut n, "conv0", 0, 3, 2, 1, 16);
+    // (k, exp, out, se, stride)
+    let cfg: [(u32, u32, u32, bool, u32); 15] = [
+        (3, 16, 16, false, 1),
+        (3, 64, 24, false, 2),
+        (3, 72, 24, false, 1),
+        (5, 72, 40, true, 2),
+        (5, 120, 40, true, 1),
+        (5, 120, 40, true, 1),
+        (3, 240, 80, false, 2),
+        (3, 200, 80, false, 1),
+        (3, 184, 80, false, 1),
+        (3, 184, 80, false, 1),
+        (3, 480, 112, true, 1),
+        (3, 672, 112, true, 1),
+        (5, 672, 160, true, 2),
+        (5, 960, 160, true, 1),
+        (5, 960, 160, true, 1),
+    ];
+    for (i, (k, exp, c, se, s)) in cfg.iter().enumerate() {
+        x = bneck(&mut n, &format!("bneck{i}"), x, *k, *exp, *c, *se, *s);
+    }
+    x = conv(&mut n, "conv_last", x, 1, 1, 0, 960);
+    let gap = n.add("avgpool", OpKind::GlobalAvgPool, &[x]).expect("gap");
+    let fc1 = n.add("fc1", OpKind::Fc { out_features: 1280 }, &[gap]).expect("fc1");
+    n.add("fc2", OpKind::Fc { out_features: 1000 }, &[fc1]).expect("fc2");
+    n.validate().expect("mobilenetv3 validates");
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::OpKind;
+
+    #[test]
+    fn v1_params_match_literature() {
+        // MobileNetV1 1.0: 4.23M params (incl. 1.0M classifier).
+        let m = mobilenet_v1().total_params() as f64 / 1e6;
+        assert!((4.0..4.4).contains(&m), "params {m}M");
+    }
+
+    #[test]
+    fn v2_params_match_literature() {
+        // MobileNetV2 1.0: 3.50M params.
+        let m = mobilenet_v2().total_params() as f64 / 1e6;
+        assert!((3.2..3.7).contains(&m), "params {m}M");
+    }
+
+    #[test]
+    fn v3_params_match_literature() {
+        // MobileNetV3-Large 1.0: 5.48M params.
+        let m = mobilenet_v3_large().total_params() as f64 / 1e6;
+        assert!((5.1..5.7).contains(&m), "params {m}M");
+    }
+
+    #[test]
+    fn v1_macs_match_literature() {
+        // ~569 MMACs.
+        let m = mobilenet_v1().total_macs() as f64 / 1e6;
+        assert!((540.0..600.0).contains(&m), "MMACs {m}");
+    }
+
+    #[test]
+    fn v2_macs_match_literature() {
+        // ~301 MMACs (+ elementwise adds in our accounting).
+        let m = mobilenet_v2().total_macs() as f64 / 1e6;
+        assert!((290.0..330.0).contains(&m), "MMACs {m}");
+    }
+
+    #[test]
+    fn v2_has_53ish_conv_layers() {
+        // paper §III-B: "each of the 53 convolutional layers" of V2.
+        let n = mobilenet_v2();
+        let convs =
+            n.layers().iter().filter(|l| matches!(l.op, OpKind::Conv { .. })).count();
+        assert_eq!(convs, 52); // 52 convs + 1 FC = 53 weight layers
+        assert_eq!(n.weight_layers().count(), 53);
+    }
+
+    #[test]
+    fn v3_has_se_blocks() {
+        let n = mobilenet_v3_large();
+        let se = n
+            .layers()
+            .iter()
+            .filter(|l| matches!(l.op, OpKind::SqueezeExcite { .. }))
+            .count();
+        assert_eq!(se, 8);
+    }
+
+    #[test]
+    fn depthwise_blocks_preserve_channels() {
+        let n = mobilenet_v1();
+        for l in n.layers() {
+            if let OpKind::Conv { kind: crate::nn::ConvKind::Depthwise, out_c, .. } = l.op {
+                assert_eq!(out_c, n.layer(l.inputs[0]).out.c, "{}", l.name);
+            }
+        }
+    }
+}

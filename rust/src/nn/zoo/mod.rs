@@ -1,0 +1,60 @@
+//! Model zoo: the six ImageNet CNNs of Table I.
+//!
+//! All builders produce 224x224x3-input networks with exact published
+//! layer geometry; parameter totals are asserted against the literature in
+//! the tests at the bottom of each builder module.
+
+mod mobilenet;
+mod resnet;
+mod vgg;
+
+pub use mobilenet::{mobilenet_v1, mobilenet_v2, mobilenet_v3_large};
+pub use resnet::{resnet18, resnet50};
+pub use vgg::vgg16;
+
+use crate::nn::Network;
+
+/// All Table I networks, in the paper's row order.
+pub fn table1_models() -> Vec<Network> {
+    vec![mobilenet_v1(), mobilenet_v2(), mobilenet_v3_large(), resnet18(), resnet50(), vgg16()]
+}
+
+/// The three evaluation networks of §VI (Fig. 6, Tables II/III).
+pub fn eval_models() -> Vec<Network> {
+    vec![resnet18(), resnet50(), vgg16()]
+}
+
+/// Look a zoo model up by name (used by the CLI).
+pub fn by_name(name: &str) -> Option<Network> {
+    match name.to_ascii_lowercase().as_str() {
+        "mobilenetv1" | "mobilenet_v1" => Some(mobilenet_v1()),
+        "mobilenetv2" | "mobilenet_v2" => Some(mobilenet_v2()),
+        "mobilenetv3" | "mobilenet_v3" => Some(mobilenet_v3_large()),
+        "resnet18" | "resnet-18" => Some(resnet18()),
+        "resnet50" | "resnet-50" => Some(resnet50()),
+        "vgg16" | "vgg-16" => Some(vgg16()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_builds_and_validates() {
+        for n in table1_models() {
+            n.validate().unwrap_or_else(|e| panic!("{}: {e}", n.name));
+            assert_eq!(n.input_shape().h, 224);
+            assert_eq!(n.input_shape().c, 3);
+        }
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for name in ["resnet18", "resnet50", "vgg16", "mobilenetv1", "mobilenetv2", "mobilenetv3"] {
+            assert!(by_name(name).is_some(), "{name}");
+        }
+        assert!(by_name("alexnet").is_none());
+    }
+}

@@ -1,0 +1,137 @@
+//! ResNet-18 and ResNet-50 (He et al., 2015) with exact ImageNet geometry.
+
+use crate::nn::{ConvKind, LayerId, Network, OpKind, Shape};
+
+fn conv(
+    n: &mut Network,
+    name: &str,
+    from: LayerId,
+    k: u32,
+    stride: u32,
+    pad: u32,
+    out_c: u32,
+) -> LayerId {
+    let kind = if k == 1 { ConvKind::Pointwise } else { ConvKind::Standard };
+    n.add(name, OpKind::Conv { kind, kh: k, kw: k, stride, pad, out_c }, &[from])
+        .expect("resnet conv")
+}
+
+/// Basic block (two 3x3 convs) used by ResNet-18/34.
+fn basic_block(n: &mut Network, name: &str, from: LayerId, out_c: u32, stride: u32) -> LayerId {
+    let c1 = conv(n, &format!("{name}.conv1"), from, 3, stride, 1, out_c);
+    let c2 = conv(n, &format!("{name}.conv2"), c1, 3, 1, 1, out_c);
+    let skip = if stride != 1 || n.layer(from).out.c != out_c {
+        conv(n, &format!("{name}.down"), from, 1, stride, 0, out_c)
+    } else {
+        from
+    };
+    n.add(&format!("{name}.add"), OpKind::Add, &[c2, skip]).expect("resnet add")
+}
+
+/// Bottleneck block (1x1 -> 3x3 -> 1x1, 4x expansion) used by ResNet-50+.
+fn bottleneck(n: &mut Network, name: &str, from: LayerId, mid_c: u32, stride: u32) -> LayerId {
+    let out_c = mid_c * 4;
+    let c1 = conv(n, &format!("{name}.conv1"), from, 1, 1, 0, mid_c);
+    let c2 = conv(n, &format!("{name}.conv2"), c1, 3, stride, 1, mid_c);
+    let c3 = conv(n, &format!("{name}.conv3"), c2, 1, 1, 0, out_c);
+    let skip = if stride != 1 || n.layer(from).out.c != out_c {
+        conv(n, &format!("{name}.down"), from, 1, stride, 0, out_c)
+    } else {
+        from
+    };
+    n.add(&format!("{name}.add"), OpKind::Add, &[c3, skip]).expect("resnet add")
+}
+
+fn stem(n: &mut Network) -> LayerId {
+    let c = conv(n, "conv1", 0, 7, 2, 3, 64);
+    n.add("maxpool", OpKind::MaxPool { k: 3, stride: 2, pad: 1 }, &[c]).expect("stem pool")
+}
+
+fn head(n: &mut Network, from: LayerId) {
+    let gap = n.add("avgpool", OpKind::GlobalAvgPool, &[from]).expect("gap");
+    n.add("fc", OpKind::Fc { out_features: 1000 }, &[gap]).expect("fc");
+}
+
+/// ResNet-18: stages [2,2,2,2] of basic blocks, widths 64..512.
+pub fn resnet18() -> Network {
+    let mut n = Network::new("ResNet-18", Shape::new(224, 224, 3));
+    let mut x = stem(&mut n);
+    for (stage, (c, blocks)) in [(64u32, 2u32), (128, 2), (256, 2), (512, 2)].iter().enumerate() {
+        for b in 0..*blocks {
+            let stride = if stage > 0 && b == 0 { 2 } else { 1 };
+            x = basic_block(&mut n, &format!("layer{}.{}", stage + 1, b), x, *c, stride);
+        }
+    }
+    head(&mut n, x);
+    n.validate().expect("resnet18 validates");
+    n
+}
+
+/// ResNet-50: stages [3,4,6,3] of bottleneck blocks, mid widths 64..512.
+pub fn resnet50() -> Network {
+    let mut n = Network::new("ResNet-50", Shape::new(224, 224, 3));
+    let mut x = stem(&mut n);
+    for (stage, (c, blocks)) in [(64u32, 3u32), (128, 4), (256, 6), (512, 3)].iter().enumerate() {
+        for b in 0..*blocks {
+            let stride = if stage > 0 && b == 0 { 2 } else { 1 };
+            x = bottleneck(&mut n, &format!("layer{}.{}", stage + 1, b), x, *c, stride);
+        }
+    }
+    head(&mut n, x);
+    n.validate().expect("resnet50 validates");
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet18_params_match_literature() {
+        // torchvision resnet18: 11.69M params; ours has no batchnorm params
+        // (folded into conv at int8 deploy) and no conv biases, so compare
+        // to the conv+fc weight total: 11.68M.
+        let n = resnet18();
+        let m = n.total_params() as f64 / 1e6;
+        assert!((11.0..12.0).contains(&m), "params {m}M");
+    }
+
+    #[test]
+    fn resnet50_params_match_literature() {
+        // torchvision resnet50: 25.56M params incl. BN; conv+fc ~25.5M.
+        let n = resnet50();
+        let m = n.total_params() as f64 / 1e6;
+        assert!((25.0..26.0).contains(&m), "params {m}M");
+    }
+
+    #[test]
+    fn resnet18_macs_match_literature() {
+        // ~1.82 GMACs for ResNet-18 at 224x224.
+        let g = resnet18().total_macs() as f64 / 1e9;
+        assert!((1.7..1.95).contains(&g), "GMACs {g}");
+    }
+
+    #[test]
+    fn resnet50_macs_match_literature() {
+        // ~4.1 GMACs for ResNet-50 at 224x224.
+        let g = resnet50().total_macs() as f64 / 1e9;
+        assert!((3.9..4.3).contains(&g), "GMACs {g}");
+    }
+
+    #[test]
+    fn resnet50_final_channels_are_2048() {
+        let n = resnet50();
+        // paper §II-A: "2048 in the case of ResNet-50"
+        let gap = n.layers().iter().find(|l| l.name == "avgpool").unwrap();
+        assert_eq!(n.layer(gap.inputs[0]).out.c, 2048);
+    }
+
+    #[test]
+    fn stage_resolutions() {
+        let n = resnet18();
+        let l41 = n.layers().iter().find(|l| l.name == "layer4.1.add").unwrap();
+        assert_eq!(l41.out, Shape::new(7, 7, 512));
+        let l1 = n.layers().iter().find(|l| l.name == "layer1.1.add").unwrap();
+        assert_eq!(l1.out, Shape::new(56, 56, 64));
+    }
+}

@@ -1,0 +1,80 @@
+//! VGG-16 (Simonyan & Zisserman, 2015), configuration D.
+
+use crate::nn::{ConvKind, LayerId, Network, OpKind, Shape};
+
+/// VGG-16: 13 3x3 convolutions in 5 stages + 3 fully-connected layers.
+///
+/// The FC layers dominate weight storage (fc6 alone is 102.8M params),
+/// which is why the paper's Table I puts VGG-16 at 1204 Mb of weight
+/// memory — ~9x the NX2100's 140 Mb of BRAM.
+pub fn vgg16() -> Network {
+    let mut n = Network::new("VGG-16", Shape::new(224, 224, 3));
+    let stages: [(u32, u32); 5] = [(64, 2), (128, 2), (256, 3), (512, 3), (512, 3)];
+    let mut x: LayerId = 0;
+    for (si, (c, reps)) in stages.iter().enumerate() {
+        for r in 0..*reps {
+            x = n
+                .add(
+                    &format!("conv{}_{}", si + 1, r + 1),
+                    OpKind::Conv { kind: ConvKind::Standard, kh: 3, kw: 3, stride: 1, pad: 1, out_c: *c },
+                    &[x],
+                )
+                .expect("vgg conv");
+        }
+        x = n
+            .add(&format!("pool{}", si + 1), OpKind::MaxPool { k: 2, stride: 2, pad: 0 }, &[x])
+            .expect("vgg pool");
+    }
+    // Classifier: 7x7x512 -> 4096 -> 4096 -> 1000.
+    x = n.add("fc6", OpKind::Fc { out_features: 4096 }, &[x]).expect("fc6");
+    x = n.add("fc7", OpKind::Fc { out_features: 4096 }, &[x]).expect("fc7");
+    n.add("fc8", OpKind::Fc { out_features: 1000 }, &[x]).expect("fc8");
+    n.validate().expect("vgg16 validates");
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn params_match_literature() {
+        // VGG-16: 138.36M params (conv 14.71M + fc 123.64M), no-bias count
+        // is ~138.34M.
+        let m = vgg16().total_params() as f64 / 1e6;
+        assert!((137.0..139.0).contains(&m), "params {m}M");
+    }
+
+    #[test]
+    fn macs_match_literature() {
+        // ~15.5 GMACs at 224x224.
+        let g = vgg16().total_macs() as f64 / 1e9;
+        assert!((15.0..16.0).contains(&g), "GMACs {g}");
+    }
+
+    #[test]
+    fn fc6_is_the_biggest_layer() {
+        let n = vgg16();
+        let fc6 = n.layers().iter().find(|l| l.name == "fc6").unwrap();
+        assert_eq!(fc6.weight_params(), 7 * 7 * 512 * 4096);
+        let max = n.layers().iter().map(|l| l.weight_params()).max().unwrap();
+        assert_eq!(max, fc6.weight_params());
+    }
+
+    #[test]
+    fn feature_map_is_7x7_before_classifier() {
+        let n = vgg16();
+        let pool5 = n.layers().iter().find(|l| l.name == "pool5").unwrap();
+        assert_eq!(pool5.out, Shape::new(7, 7, 512));
+    }
+
+    #[test]
+    fn thirteen_convs_three_fcs() {
+        let n = vgg16();
+        let convs =
+            n.layers().iter().filter(|l| matches!(l.op, OpKind::Conv { .. })).count();
+        let fcs = n.layers().iter().filter(|l| matches!(l.op, OpKind::Fc { .. })).count();
+        assert_eq!(convs, 13);
+        assert_eq!(fcs, 3);
+    }
+}

@@ -1,0 +1,148 @@
+//! PJRT runtime: load and execute the AOT artifacts on the hot path.
+//!
+//! `python/compile/aot.py` lowers the L2 JAX graphs (which call the L1
+//! Pallas kernels with `interpret=True`) to **HLO text** under
+//! `artifacts/`. This module wraps the `xla` crate (PJRT C API) to compile
+//! those artifacts once at boot and execute them per request — Python is
+//! never on the request path.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{ensure, Context, Result};
+
+/// A compiled artifact: one PJRT executable per model variant.
+pub struct Executable {
+    name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT client plus the artifact directory executables are loaded from.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifact_dir: PathBuf,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client rooted at an artifact directory.
+    pub fn cpu(artifact_dir: impl AsRef<Path>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client, artifact_dir: artifact_dir.as_ref().to_path_buf() })
+    }
+
+    /// Platform string of the underlying PJRT client (e.g. "cpu").
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load `<name>.hlo.txt` from the artifact directory and compile it.
+    ///
+    /// HLO *text* is the interchange format: jax >= 0.5 serialized protos
+    /// carry 64-bit instruction ids that xla_extension 0.5.1 rejects; the
+    /// text parser reassigns ids (see DESIGN.md §9 / aot.py docstring).
+    pub fn load(&self, name: &str) -> Result<Executable> {
+        let path = self.artifact_dir.join(format!("{name}.hlo.txt"));
+        ensure!(
+            path.exists(),
+            "artifact {} missing — run `make artifacts` first",
+            path.display()
+        );
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("PJRT compile of {name}"))?;
+        Ok(Executable { name: name.to_string(), exe })
+    }
+}
+
+impl Executable {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute with a single int32 tensor input of the given dims; the
+    /// artifact returns a 1-tuple (aot.py lowers with `return_tuple=True`).
+    ///
+    /// The artifact boundary is int32 because the `xla` crate's literal
+    /// API has no i8; the graph casts to the int8 datapath internally.
+    pub fn run_i32(&self, input: &[i32], dims: &[usize]) -> Result<Vec<i32>> {
+        let n: usize = dims.iter().product();
+        ensure!(n == input.len(), "input length {} != dims product {}", input.len(), n);
+        let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(input).reshape(&dims_i64).context("reshaping input")?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[lit])
+            .with_context(|| format!("executing {}", self.name))?[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let out = result.to_tuple1().context("unwrapping 1-tuple result")?;
+        out.to_vec::<i32>().context("converting result to i32 vec")
+    }
+
+    /// Convenience for int8-ranged data (the datapath dtype).
+    pub fn run_int8(&self, input: &[i8], dims: &[usize]) -> Result<Vec<i8>> {
+        let wide: Vec<i32> = input.iter().map(|&v| v as i32).collect();
+        let out = self.run_i32(&wide, dims)?;
+        Ok(out.into_iter().map(|v| v.clamp(-128, 127) as i8).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts().join("cifarnet.hlo.txt").exists()
+    }
+
+    #[test]
+    fn cpu_client_comes_up() {
+        let rt = Runtime::cpu(artifacts()).unwrap();
+        assert_eq!(rt.platform().to_lowercase(), "cpu");
+    }
+
+    #[test]
+    fn load_and_run_cifarnet() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = Runtime::cpu(artifacts()).unwrap();
+        let exe = rt.load("cifarnet").unwrap();
+        let img = vec![1i8; 32 * 32 * 3];
+        let out = exe.run_int8(&img, &[32, 32, 3]).unwrap();
+        assert_eq!(out.len(), 10);
+        // deterministic graph + deterministic input => deterministic output
+        let out2 = exe.run_int8(&img, &[32, 32, 3]).unwrap();
+        assert_eq!(out, out2);
+    }
+
+    #[test]
+    fn run_rejects_bad_dims() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = Runtime::cpu(artifacts()).unwrap();
+        let exe = rt.load("cifarnet").unwrap();
+        let img = vec![0i8; 7];
+        assert!(exe.run_int8(&img, &[32, 32, 3]).is_err());
+    }
+
+    #[test]
+    fn missing_artifact_is_clear_error() {
+        let rt = Runtime::cpu(artifacts()).unwrap();
+        let err = match rt.load("nonexistent_model") {
+            Ok(_) => panic!("expected load failure"),
+            Err(e) => e,
+        };
+        assert!(format!("{err}").contains("make artifacts"));
+    }
+}

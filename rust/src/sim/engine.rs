@@ -1,0 +1,257 @@
+//! One layer engine in the simulated pipeline.
+//!
+//! An engine walks its output tensor line by line. Each output line costs
+//! `kh * kw * ceil(ci/10/p_i) * ceil(co/p_o)` core cycles (the AI-TB chain
+//! timing of §III-B) and consumes `p_i * p_o` 80-bit weight words per
+//! cycle. The engine advances only when:
+//!   * its producers have delivered the input lines the current output
+//!     line's receptive field needs,
+//!   * downstream line buffers have space (back-pressure),
+//!   * its weight source is ready — on-chip weights always are; HBM
+//!     weights require the last-stage FIFO to hold one cycle's words, and
+//!     an empty FIFO asserts the §IV-B `freeze`.
+
+use crate::compiler::LayerPlan;
+use crate::config::WeightPlacement;
+
+/// Why an engine did not advance this cycle (stall accounting).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineState {
+    /// Advanced one compute cycle.
+    Active,
+    /// Waiting for producer lines.
+    InputStarved,
+    /// Waiting for downstream buffer space.
+    OutputBlocked,
+    /// Frozen: weight FIFO (HBM path) cannot supply this cycle's words.
+    WeightFrozen,
+    /// Finished all images.
+    Done,
+}
+
+/// Per-engine stall counters.
+#[derive(Debug, Clone, Default)]
+pub struct EngineStats {
+    pub active: u64,
+    pub input_starved: u64,
+    pub output_blocked: u64,
+    pub weight_frozen: u64,
+}
+
+/// Cycle-level state of one layer engine.
+#[derive(Debug, Clone)]
+pub struct LayerEngineSim {
+    /// Index into the plan's layer vec.
+    pub layer_idx: usize,
+    /// Cycles to produce one output line.
+    pub cycles_per_line: u64,
+    /// 80-bit weight words consumed per compute cycle (p_i * p_o).
+    pub words_per_cycle: u32,
+    /// Output lines per image.
+    pub out_h: u32,
+    /// Geometry for input-dependency computation.
+    pub kh: u32,
+    pub stride: u32,
+    pub pad: u32,
+    /// Needs every producer line before starting (FC / GAP / SE heads).
+    pub needs_full_input: bool,
+    /// Weights stream from HBM (freeze semantics apply).
+    pub hbm_fed: bool,
+
+    /// Progress: current image index and output line within it.
+    pub image: u64,
+    pub line: u32,
+    /// Cycle within the current line.
+    pub line_cycle: u64,
+    /// Cumulative output lines produced (across images).
+    pub lines_produced: u64,
+    /// Completion cycle of each finished image (first N kept).
+    pub image_done_cycles: Vec<u64>,
+    pub stats: EngineStats,
+}
+
+impl LayerEngineSim {
+    /// Build from a compiled layer plan. `stride`/`pad` come from the IR.
+    pub fn from_plan(idx: usize, lp: &LayerPlan, stride: u32, pad: u32, full_input: bool) -> Self {
+        let s = &lp.stats;
+        let cycles_per_line =
+            (s.cycles_per_image(lp.par.p_i, lp.par.p_o) / s.out_h.max(1) as u64).max(1);
+        Self {
+            layer_idx: idx,
+            cycles_per_line,
+            words_per_cycle: lp.par.chains(),
+            out_h: s.out_h.max(1),
+            kh: s.kh.max(1),
+            stride: stride.max(1),
+            pad,
+            needs_full_input: full_input,
+            hbm_fed: lp.placement == WeightPlacement::Hbm && s.has_weights,
+            image: 0,
+            line: 0,
+            line_cycle: 0,
+            lines_produced: 0,
+            image_done_cycles: Vec::new(),
+            stats: EngineStats::default(),
+        }
+    }
+
+    /// Producer lines (within the current image) required before output
+    /// line `y` can compute: the bottom row of its receptive field.
+    pub fn input_lines_needed(&self, y: u32, in_h: u32) -> u32 {
+        if self.needs_full_input {
+            return in_h;
+        }
+        let last = y as i64 * self.stride as i64 + self.kh as i64 - 1 - self.pad as i64;
+        (last + 1).clamp(1, in_h as i64) as u32
+    }
+
+    /// Cumulative producer lines needed for the engine's *current*
+    /// position.
+    pub fn cum_input_needed(&self, in_h: u32) -> u64 {
+        self.image * in_h as u64 + self.input_lines_needed(self.line, in_h) as u64
+    }
+
+    /// First input line still referenced by the current output line — the
+    /// producer may not run further than `buffer_lines` past it.
+    pub fn oldest_input_needed(&self, in_h: u32) -> u64 {
+        if self.needs_full_input {
+            return self.image * in_h as u64;
+        }
+        let first = (self.line as i64 * self.stride as i64 - self.pad as i64).max(0) as u64;
+        self.image * in_h as u64 + first.min(in_h as u64)
+    }
+
+    /// True once all `images` are complete.
+    pub fn done(&self, images: u64) -> bool {
+        self.image >= images
+    }
+
+    /// Attempt to advance one core cycle.
+    ///
+    /// `input_ok` / `output_ok`: dependency checks computed by the
+    /// pipeline; `weight_words_available`: last-stage FIFO level for
+    /// HBM-fed engines (ignored otherwise). Returns what happened; on an
+    /// `Active` cycle the caller must deduct `words_per_cycle` from the
+    /// FIFO when HBM-fed.
+    pub fn tick(
+        &mut self,
+        now: u64,
+        images: u64,
+        input_ok: bool,
+        output_ok: bool,
+        weight_words_available: u64,
+    ) -> EngineState {
+        if self.done(images) {
+            return EngineState::Done;
+        }
+        if !input_ok {
+            self.stats.input_starved += 1;
+            return EngineState::InputStarved;
+        }
+        if !output_ok {
+            self.stats.output_blocked += 1;
+            return EngineState::OutputBlocked;
+        }
+        if self.hbm_fed && weight_words_available < self.words_per_cycle as u64 {
+            self.stats.weight_frozen += 1;
+            return EngineState::WeightFrozen;
+        }
+        self.stats.active += 1;
+        self.line_cycle += 1;
+        if self.line_cycle >= self.cycles_per_line {
+            self.line_cycle = 0;
+            self.line += 1;
+            self.lines_produced += 1;
+            if self.line >= self.out_h {
+                self.line = 0;
+                self.image += 1;
+                if self.image_done_cycles.len() < 64 {
+                    self.image_done_cycles.push(now);
+                }
+            }
+        }
+        EngineState::Active
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine(out_h: u32, cpl: u64) -> LayerEngineSim {
+        LayerEngineSim {
+            layer_idx: 0,
+            cycles_per_line: cpl,
+            words_per_cycle: 2,
+            out_h,
+            kh: 3,
+            stride: 1,
+            pad: 1,
+            needs_full_input: false,
+            hbm_fed: false,
+            image: 0,
+            line: 0,
+            line_cycle: 0,
+            lines_produced: 0,
+            image_done_cycles: Vec::new(),
+            stats: EngineStats::default(),
+        }
+    }
+
+    #[test]
+    fn produces_lines_at_expected_rate() {
+        let mut e = engine(4, 10);
+        for t in 0..40 {
+            assert_eq!(e.tick(t, 10, true, true, 0), EngineState::Active);
+        }
+        assert_eq!(e.lines_produced, 4);
+        assert_eq!(e.image, 1, "one image after out_h * cycles_per_line");
+    }
+
+    #[test]
+    fn receptive_field_dependency() {
+        let e = engine(8, 1);
+        // 3x3 stride 1 pad 1: line 0 needs input lines 0..=1 -> 2 lines
+        assert_eq!(e.input_lines_needed(0, 8), 2);
+        assert_eq!(e.input_lines_needed(1, 8), 3);
+        // clamped at the bottom edge
+        assert_eq!(e.input_lines_needed(7, 8), 8);
+    }
+
+    #[test]
+    fn strided_dependency() {
+        let mut e = engine(4, 1);
+        e.stride = 2;
+        e.kh = 3;
+        e.pad = 1;
+        // y=1: rows 1..=3 -> 4 lines
+        assert_eq!(e.input_lines_needed(1, 8), 4);
+    }
+
+    #[test]
+    fn full_input_layers_wait_for_whole_image() {
+        let mut e = engine(1, 5);
+        e.needs_full_input = true;
+        assert_eq!(e.input_lines_needed(0, 7), 7);
+    }
+
+    #[test]
+    fn hbm_freeze_blocks_without_words() {
+        let mut e = engine(4, 10);
+        e.hbm_fed = true;
+        assert_eq!(e.tick(0, 1, true, true, 1), EngineState::WeightFrozen);
+        assert_eq!(e.stats.weight_frozen, 1);
+        assert_eq!(e.tick(1, 1, true, true, 2), EngineState::Active);
+    }
+
+    #[test]
+    fn stall_accounting() {
+        let mut e = engine(4, 10);
+        e.tick(0, 1, false, true, 0);
+        e.tick(1, 1, true, false, 0);
+        e.tick(2, 1, true, true, 0);
+        assert_eq!(e.stats.input_starved, 1);
+        assert_eq!(e.stats.output_blocked, 1);
+        assert_eq!(e.stats.active, 1);
+    }
+}

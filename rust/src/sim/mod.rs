@@ -1,0 +1,21 @@
+//! Cycle-level simulation of the H2PIPE dataflow pipeline.
+//!
+//! This is the testbed substitute for the Stratix 10 NX board: layer
+//! engines with AI-TB timing semantics ([`engine`]), the §IV-A weight
+//! distribution network wired to the [`crate::hbm`] substrate
+//! ([`weights`]), and the whole layer-pipelined accelerator
+//! ([`pipeline`]) with the freeze-signal stall mechanism of §IV-B.
+//!
+//! Two clock domains are modelled exactly as on the board: layer engines
+//! tick at the 300 MHz core clock, HBM controllers at 400 MHz; the
+//! simulator advances both from a 1200 MHz base tick (core = every 4th,
+//! HBM = every 3rd base tick) and the [`crate::fabric::DcFifo`] crossing
+//! sits between them.
+
+pub mod engine;
+pub mod pipeline;
+pub mod weights;
+
+pub use engine::{EngineState, LayerEngineSim};
+pub use pipeline::{PipelineSim, SimConfig, SimReport};
+pub use weights::WeightSubsystem;

@@ -1,0 +1,357 @@
+//! The whole layer-pipelined accelerator, cycle by cycle.
+//!
+//! [`PipelineSim`] instantiates one [`LayerEngineSim`] per IR layer
+//! (weightless layers — pools, adds, global pools — become width-parallel
+//! pass-through engines at one cycle per line), wires inter-layer line
+//! dependencies and back-pressure from the IR DAG, attaches the
+//! [`WeightSubsystem`] for HBM-fed layers, and advances core (300 MHz)
+//! and HBM (400 MHz) domains from a common 1200 MHz base tick.
+
+use anyhow::{bail, Result};
+
+use crate::compiler::AcceleratorPlan;
+use crate::nn::{Network, OpKind};
+use crate::sim::engine::{EngineState, LayerEngineSim};
+use crate::sim::weights::WeightSubsystem;
+
+/// Simulation parameters.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// Images to push through the pipeline.
+    pub images: u64,
+    /// Leading images excluded from the throughput measurement.
+    pub warmup_images: u64,
+    /// Safety valve on base ticks.
+    pub max_base_ticks: u64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        Self { images: 6, warmup_images: 2, max_base_ticks: 40_000_000_000 }
+    }
+}
+
+/// Simulation results.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub network: String,
+    /// Measured steady-state throughput (images/s).
+    pub throughput: f64,
+    /// First-image latency (s).
+    pub latency: f64,
+    /// Fraction of bottleneck-engine cycles lost to the weight freeze.
+    pub freeze_fraction: f64,
+    /// Name of the engine with the most active cycles.
+    pub bottleneck: String,
+    /// Whether the bottleneck engine streams weights from HBM.
+    pub bottleneck_on_hbm: bool,
+    /// Mean busy-cycle HBM read efficiency observed.
+    pub hbm_efficiency: f64,
+    /// Total core cycles simulated.
+    pub core_cycles: u64,
+    /// Per-engine (name, active, input_starved, output_blocked, frozen).
+    pub engine_stats: Vec<(String, u64, u64, u64, u64)>,
+}
+
+/// One full-accelerator simulation instance.
+///
+/// Hot-loop layout note (§Perf): producer/consumer adjacency is stored as
+/// flat per-engine vectors carrying the values the inner loop needs
+/// (producer out_h, edge capacity), so the per-cycle dependency checks are
+/// pure indexed reads — no hash lookups on the hot path.
+pub struct PipelineSim {
+    plan: AcceleratorPlan,
+    engines: Vec<LayerEngineSim>,
+    /// producers_meta[i] = (producer idx, producer out_h).
+    producers_meta: Vec<Vec<(usize, u32)>>,
+    /// consumers_meta[i] = (consumer idx, edge capacity in producer lines).
+    consumers_meta: Vec<Vec<(usize, u64)>>,
+    /// §Perf caches: dependency thresholds only change when an engine
+    /// crosses a line boundary, so they are recomputed on line events
+    /// instead of every cycle.
+    /// need_cache[i][k] = cumulative producer-k lines engine i waits for.
+    need_cache: Vec<Vec<u64>>,
+    /// limit_cache[i][j] = line bound imposed on producer i by consumer j
+    /// (consumer's oldest needed line + edge capacity).
+    limit_cache: Vec<Vec<u64>>,
+    weights: WeightSubsystem,
+}
+
+impl PipelineSim {
+    /// Build a simulator from a compiled plan and its source network.
+    pub fn new(net: &Network, plan: &AcceleratorPlan) -> Result<Self> {
+        anyhow::ensure!(net.len() == plan.layers.len(), "plan does not match network");
+        let mut engines = Vec::with_capacity(net.len());
+        for (i, l) in net.layers().iter().enumerate() {
+            let (stride, pad, full) = match &l.op {
+                OpKind::Conv { stride, pad, .. } => (*stride, *pad, false),
+                OpKind::MaxPool { stride, pad, .. } => (*stride, *pad, false),
+                OpKind::GlobalAvgPool | OpKind::Fc { .. } | OpKind::SqueezeExcite { .. } => {
+                    (1, 0, true)
+                }
+                OpKind::Input { .. } | OpKind::Add => (1, 0, false),
+            };
+            let mut e = LayerEngineSim::from_plan(i, &plan.layers[i], stride, pad, full);
+            // weightless layers: width-parallel pass-through, 1 cycle/line
+            if !plan.layers[i].stats.has_weights {
+                e.cycles_per_line = 1;
+                e.out_h = l.out.h.max(1);
+                e.kh = match &l.op {
+                    OpKind::MaxPool { k, .. } => *k,
+                    _ => 1,
+                };
+            }
+            engines.push(e);
+        }
+        // Edge capacities: sliding-window consumers hold kh+3 producer
+        // lines; full-input consumers and residual adds hold the whole
+        // tensor (+2 lines of slack for the next image's head).
+        let edge_cap = |l: &crate::nn::Layer, p: usize| -> u64 {
+            match &l.op {
+                OpKind::Add | OpKind::Fc { .. } | OpKind::GlobalAvgPool
+                | OpKind::SqueezeExcite { .. } => net.layer(p).out.h as u64 + 2,
+                OpKind::Conv { kh, .. } => *kh as u64 + 3,
+                OpKind::MaxPool { k, .. } => *k as u64 + 3,
+                OpKind::Input { .. } => unreachable!("input has no producers"),
+            }
+        };
+        let mut producers_meta: Vec<Vec<(usize, u32)>> = vec![Vec::new(); net.len()];
+        let mut consumers_meta: Vec<Vec<(usize, u64)>> = vec![Vec::new(); net.len()];
+        for l in net.layers() {
+            for &p in &l.inputs {
+                producers_meta[l.id].push((p, engines[p].out_h));
+                consumers_meta[p].push((l.id, edge_cap(l, p)));
+            }
+        }
+        let mut sim = Self {
+            plan: plan.clone(),
+            need_cache: producers_meta.iter().map(|v| vec![0; v.len()]).collect(),
+            limit_cache: consumers_meta.iter().map(|v| vec![0; v.len()]).collect(),
+            engines,
+            producers_meta,
+            consumers_meta,
+            weights: WeightSubsystem::new(plan),
+        };
+        for i in 0..sim.engines.len() {
+            sim.refresh_caches(i);
+        }
+        Ok(sim)
+    }
+
+    /// Recompute the dependency thresholds that depend on engine `i`'s
+    /// position: what it waits for (need_cache[i]) and the back-pressure
+    /// bound it imposes on each of its producers (limit_cache[p][..]).
+    fn refresh_caches(&mut self, i: usize) {
+        for (k, &(p, p_out_h)) in self.producers_meta[i].iter().enumerate() {
+            self.need_cache[i][k] = self.engines[i].cum_input_needed(p_out_h);
+            let oldest = self.engines[i].oldest_input_needed(p_out_h);
+            // locate edge (p -> i) in p's consumer list
+            for (j, &(c, cap)) in self.consumers_meta[p].iter().enumerate() {
+                if c == i {
+                    self.limit_cache[p][j] = oldest + cap;
+                }
+            }
+        }
+    }
+
+    /// Run the simulation.
+    pub fn run(&mut self, cfg: &SimConfig) -> Result<SimReport> {
+        let images = cfg.images.max(cfg.warmup_images + 1);
+        let n = self.engines.len();
+        let sink = n - 1;
+        let mut core_cycles: u64 = 0;
+        let mut warmup_done_at: Option<u64> = None;
+        let mut t: u64 = 0;
+        loop {
+            if t >= cfg.max_base_ticks {
+                bail!("simulation exceeded max_base_ticks — pipeline wedged?");
+            }
+            // HBM domain @400 MHz: 3 of every 4 base ticks of the core...
+            // base tick 1200 MHz: hbm every 3 ticks, core every 4.
+            if t % 3 == 0 {
+                self.weights.hbm_tick();
+            }
+            if t % 4 == 0 {
+                core_cycles += 1;
+                for i in 0..n {
+                    if self.engines[i].done(images) {
+                        continue;
+                    }
+                    // input dependency (cached thresholds)
+                    let input_ok = self.producers_meta[i]
+                        .iter()
+                        .zip(self.need_cache[i].iter())
+                        .all(|(&(p, _), &need)| self.engines[p].lines_produced >= need);
+                    // output back-pressure (cached bounds)
+                    let lines = self.engines[i].lines_produced;
+                    let output_ok = self.consumers_meta[i]
+                        .iter()
+                        .zip(self.limit_cache[i].iter())
+                        .all(|(&(c, _), &limit)| {
+                            lines < limit || self.engines[c].done(images)
+                        });
+                    // weight readiness: only HBM-fed engines consult the
+                    // distribution network
+                    let wa = if !self.engines[i].hbm_fed || self.weights.layer_ready(i) {
+                        u64::MAX
+                    } else {
+                        0
+                    };
+                    let before_lines = self.engines[i].lines_produced;
+                    let st = self.engines[i].tick(core_cycles, images, input_ok, output_ok, wa);
+                    if st == EngineState::Active {
+                        if self.engines[i].hbm_fed {
+                            self.weights.consume(i);
+                        }
+                        if self.engines[i].lines_produced != before_lines {
+                            self.refresh_caches(i);
+                        }
+                    }
+                }
+                // progress checks on the sink engine
+                let sink_done = self.engines[sink].image;
+                if warmup_done_at.is_none() && sink_done >= cfg.warmup_images {
+                    warmup_done_at = Some(core_cycles);
+                }
+                if self.engines.iter().all(|e| e.done(images)) {
+                    break;
+                }
+            }
+            t += 1;
+        }
+
+        let hz = self.plan.device.core_mhz as f64 * 1e6;
+        let measured_images = images - cfg.warmup_images;
+        let span = core_cycles - warmup_done_at.unwrap_or(0);
+        let throughput = measured_images as f64 * hz / span.max(1) as f64;
+        let latency = self.engines[sink]
+            .image_done_cycles
+            .first()
+            .map(|&c| c as f64 / hz)
+            .unwrap_or(f64::NAN);
+
+        // bottleneck: weight engine with the most active cycles
+        let (bi, _) = self
+            .engines
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| self.plan.layers[*i].stats.has_weights)
+            .max_by_key(|(_, e)| e.stats.active)
+            .expect("some weight engine");
+        let be = &self.engines[bi];
+        let freeze_fraction = be.stats.weight_frozen as f64
+            / (be.stats.active + be.stats.weight_frozen).max(1) as f64;
+
+        let engine_stats = self
+            .engines
+            .iter()
+            .map(|e| {
+                let s = &e.stats;
+                (
+                    self.plan.layers[e.layer_idx].stats.name.clone(),
+                    s.active,
+                    s.input_starved,
+                    s.output_blocked,
+                    s.weight_frozen,
+                )
+            })
+            .collect();
+
+        Ok(SimReport {
+            network: self.plan.network.clone(),
+            throughput,
+            latency,
+            freeze_fraction,
+            bottleneck: self.plan.layers[bi].stats.name.clone(),
+            bottleneck_on_hbm: self.engines[bi].hbm_fed,
+            hbm_efficiency: self.weights.mean_read_efficiency(),
+            core_cycles,
+            engine_stats,
+        })
+    }
+}
+
+/// Compile + simulate in one call (the main entry used by benches).
+pub fn simulate(
+    net: &Network,
+    plan: &AcceleratorPlan,
+    cfg: &SimConfig,
+) -> Result<SimReport> {
+    PipelineSim::new(net, plan)?.run(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::compile;
+    use crate::config::{CompilerOptions, DeviceConfig};
+    use crate::nn::zoo;
+
+    fn quick_cfg() -> SimConfig {
+        SimConfig { images: 3, warmup_images: 1, max_base_ticks: 20_000_000_000 }
+    }
+
+    #[test]
+    fn resnet18_hybrid_simulates() {
+        let d = DeviceConfig::stratix10_nx2100();
+        let net = zoo::resnet18();
+        let plan = compile(&net, &d, &CompilerOptions::default()).unwrap();
+        let rep = simulate(&net, &plan, &quick_cfg()).unwrap();
+        assert!(rep.throughput > 500.0, "throughput {:.0}", rep.throughput);
+        assert!(rep.latency > 0.0 && rep.latency < 0.1, "latency {}", rep.latency);
+    }
+
+    #[test]
+    fn mobilenet_v2_no_hbm_no_freeze() {
+        let d = DeviceConfig::stratix10_nx2100();
+        let net = zoo::mobilenet_v2();
+        let plan = compile(&net, &d, &CompilerOptions::default()).unwrap();
+        let rep = simulate(&net, &plan, &quick_cfg()).unwrap();
+        assert_eq!(rep.freeze_fraction, 0.0, "on-chip weights never freeze");
+        assert!(rep.throughput > 100.0);
+    }
+
+    #[test]
+    fn throughput_close_to_analytic_estimate() {
+        // The cycle sim should land within ~40% of the compiler's analytic
+        // estimate for an on-chip-bottleneck network.
+        let d = DeviceConfig::stratix10_nx2100();
+        let net = zoo::resnet18();
+        let plan = compile(&net, &d, &CompilerOptions::default()).unwrap();
+        let rep = simulate(&net, &plan, &quick_cfg()).unwrap();
+        let ratio = rep.throughput / plan.est_throughput;
+        assert!((0.4..1.3).contains(&ratio), "sim/est ratio {ratio:.2}");
+    }
+
+    #[test]
+    fn all_hbm_slower_than_hybrid_in_sim() {
+        let d = DeviceConfig::stratix10_nx2100();
+        let net = zoo::resnet18();
+        let hybrid = compile(&net, &d, &CompilerOptions::default()).unwrap();
+        let mut o = CompilerOptions::default();
+        o.all_hbm = true;
+        let all = compile(&net, &d, &o).unwrap();
+        let rh = simulate(&net, &hybrid, &quick_cfg()).unwrap();
+        let ra = simulate(&net, &all, &quick_cfg()).unwrap();
+        assert!(
+            rh.throughput > ra.throughput,
+            "hybrid {:.0} vs all-HBM {:.0}",
+            rh.throughput,
+            ra.throughput
+        );
+    }
+
+    #[test]
+    fn conservation_every_engine_finishes_every_image() {
+        let d = DeviceConfig::stratix10_nx2100();
+        let net = zoo::resnet18();
+        let plan = compile(&net, &d, &CompilerOptions::default()).unwrap();
+        let mut sim = PipelineSim::new(&net, &plan).unwrap();
+        let cfg = quick_cfg();
+        sim.run(&cfg).unwrap();
+        for e in &sim.engines {
+            assert!(e.done(cfg.images), "engine {} incomplete", e.layer_idx);
+            assert_eq!(e.lines_produced, cfg.images * e.out_h as u64);
+        }
+    }
+}

@@ -1,0 +1,64 @@
+//! Small shared utilities: deterministic RNG, statistics, and lightweight
+//! JSON/CSV emission (the offline crate set has no `rand`/`serde`).
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+pub use json::Json;
+pub use rng::XorShift64;
+pub use stats::{OnlineStats, Percentiles};
+
+/// Integer ceiling division: `ceil(a / b)` for non-negative integers.
+///
+/// Used throughout the resource model — e.g. the Eq. 1 M20K count is
+/// `ceil(bits / 20480)`.
+#[inline]
+pub fn ceil_div(a: u64, b: u64) -> u64 {
+    debug_assert!(b > 0, "ceil_div by zero");
+    a.div_ceil(b)
+}
+
+/// Round `a` up to the nearest multiple of `m`.
+#[inline]
+pub fn round_up(a: u64, m: u64) -> u64 {
+    ceil_div(a, m) * m
+}
+
+/// Format a bit count as human-readable megabits with one decimal,
+/// matching the units in the paper's Table I.
+pub fn fmt_mbits(bits: u64) -> String {
+    format!("{:.1} Mb", bits as f64 / 1.0e6)
+}
+
+/// Format bytes/s as GB/s with one decimal (paper convention: 1 GB = 1e9 B).
+pub fn fmt_gbps(bytes_per_s: f64) -> String {
+    format!("{:.1} GB/s", bytes_per_s / 1.0e9)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_exact_and_inexact() {
+        assert_eq!(ceil_div(10, 5), 2);
+        assert_eq!(ceil_div(11, 5), 3);
+        assert_eq!(ceil_div(0, 5), 0);
+        assert_eq!(ceil_div(1, 1), 1);
+    }
+
+    #[test]
+    fn round_up_works() {
+        assert_eq!(round_up(0, 8), 0);
+        assert_eq!(round_up(1, 8), 8);
+        assert_eq!(round_up(8, 8), 8);
+        assert_eq!(round_up(9, 8), 16);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_mbits(102_000_000), "102.0 Mb");
+        assert_eq!(fmt_gbps(204.8e9), "204.8 GB/s");
+    }
+}

@@ -1,0 +1,178 @@
+//! Integration: compiler -> cycle simulator across the model zoo, and the
+//! paper's qualitative claims end to end.
+
+use h2pipe::compiler::compile;
+use h2pipe::config::{BurstLengthPolicy, CompilerOptions, DeviceConfig, WeightPlacement};
+use h2pipe::nn::zoo;
+use h2pipe::sim::pipeline::{simulate, SimConfig};
+
+fn device() -> DeviceConfig {
+    DeviceConfig::stratix10_nx2100()
+}
+
+fn quick() -> SimConfig {
+    SimConfig { images: 3, warmup_images: 1, ..SimConfig::default() }
+}
+
+#[test]
+fn every_zoo_model_compiles_and_simulates() {
+    let d = device();
+    let o = CompilerOptions::default();
+    for net in zoo::table1_models() {
+        let plan = compile(&net, &d, &o).unwrap_or_else(|e| panic!("{}: {e}", net.name));
+        let rep = simulate(&net, &plan, &quick()).unwrap_or_else(|e| panic!("{}: {e}", net.name));
+        assert!(rep.throughput > 50.0, "{}: {:.0} im/s", net.name, rep.throughput);
+        assert!(rep.latency > 0.0 && rep.latency < 1.0, "{}: {}s", net.name, rep.latency);
+    }
+}
+
+#[test]
+fn paper_headline_shape_hybrid_vs_all_hbm() {
+    // Fig. 6 shape: hybrid > all-HBM for all three evaluation networks,
+    // with ResNet-18 gaining the most (its weights mostly fit on chip).
+    let d = device();
+    let mut gains = Vec::new();
+    for net in zoo::eval_models() {
+        let hybrid = compile(&net, &d, &CompilerOptions::default()).unwrap();
+        let mut o = CompilerOptions::default();
+        o.all_hbm = true;
+        let all = compile(&net, &d, &o).unwrap();
+        let rh = simulate(&net, &hybrid, &quick()).unwrap();
+        let ra = simulate(&net, &all, &quick()).unwrap();
+        assert!(
+            rh.throughput > ra.throughput,
+            "{}: hybrid {:.0} <= all-HBM {:.0}",
+            net.name,
+            rh.throughput,
+            ra.throughput
+        );
+        gains.push((net.name.clone(), rh.throughput / ra.throughput));
+    }
+    let r18 = gains.iter().find(|(n, _)| n == "ResNet-18").unwrap().1;
+    let vgg = gains.iter().find(|(n, _)| n == "VGG-16").unwrap().1;
+    assert!(r18 > vgg, "R18 hybrid gain {r18:.2} should exceed VGG {vgg:.2}");
+}
+
+#[test]
+fn paper_throughput_ordering_r18_r50_vgg() {
+    let d = device();
+    let o = CompilerOptions::default();
+    let mut t = Vec::new();
+    for net in zoo::eval_models() {
+        let plan = compile(&net, &d, &o).unwrap();
+        t.push(simulate(&net, &plan, &quick()).unwrap().throughput);
+    }
+    assert!(t[0] > t[1], "R18 {:.0} > R50 {:.0}", t[0], t[1]);
+    assert!(t[1] > t[2], "R50 {:.0} > VGG {:.0}", t[1], t[2]);
+}
+
+#[test]
+fn table2_shape_burst_length_sensitivity() {
+    // R18's bottleneck is on-chip: BL8 == BL16 throughput. R50's is on
+    // HBM: throughput must not decrease as BL grows.
+    let d = device();
+    let run = |name: &str, bl: u32| {
+        let net = zoo::by_name(name).unwrap();
+        let mut o = CompilerOptions::default();
+        o.burst_length = BurstLengthPolicy::Fixed(bl);
+        let plan = compile(&net, &d, &o).unwrap();
+        simulate(&net, &plan, &quick()).unwrap().throughput
+    };
+    let r18_8 = run("resnet18", 8);
+    let r18_16 = run("resnet18", 16);
+    assert!(
+        (r18_8 - r18_16).abs() / r18_8 < 0.02,
+        "R18 flat across BL: {r18_8:.0} vs {r18_16:.0}"
+    );
+    let r50_8 = run("resnet50", 8);
+    let r50_32 = run("resnet50", 32);
+    assert!(
+        r50_32 >= r50_8 * 0.995,
+        "R50 should gain (or hold) with BL: {r50_8:.0} -> {r50_32:.0}"
+    );
+}
+
+#[test]
+fn mobilenets_identical_to_hpipe_baseline() {
+    // Networks that fit on chip never touch HBM: H2PIPE == HPIPE.
+    let d = device();
+    let o = CompilerOptions::default();
+    for name in ["mobilenetv1", "mobilenetv2", "mobilenetv3"] {
+        let net = zoo::by_name(name).unwrap();
+        let plan = compile(&net, &d, &o).unwrap();
+        assert_eq!(plan.hbm_layers().count(), 0, "{name}");
+        let rep = simulate(&net, &plan, &quick()).unwrap();
+        assert_eq!(rep.freeze_fraction, 0.0, "{name}");
+    }
+}
+
+#[test]
+fn all_hbm_vgg_offloads_every_weight_layer_it_can() {
+    let d = device();
+    let mut o = CompilerOptions::default();
+    o.all_hbm = true;
+    let net = zoo::vgg16();
+    let plan = compile(&net, &d, &o).unwrap();
+    // every weight layer either offloaded or blocked by chain bandwidth
+    let onchip: Vec<_> = plan.onchip_layers().map(|l| l.stats.name.clone()).collect();
+    for l in plan.onchip_layers() {
+        assert!(
+            l.par.chains() as u64 > plan.free_bw_slots,
+            "{} kept on chip despite {} free slots",
+            l.stats.name,
+            plan.free_bw_slots
+        );
+    }
+    // VGG-16 has few layers: nearly all should be on HBM
+    assert!(onchip.len() <= 2, "on-chip remnants: {onchip:?}");
+}
+
+#[test]
+fn latency_scales_with_pipeline_depth() {
+    let d = device();
+    let o = CompilerOptions::default();
+    let r18 = {
+        let net = zoo::resnet18();
+        let plan = compile(&net, &d, &o).unwrap();
+        simulate(&net, &plan, &quick()).unwrap().latency
+    };
+    let r50 = {
+        let net = zoo::resnet50();
+        let plan = compile(&net, &d, &o).unwrap();
+        simulate(&net, &plan, &quick()).unwrap().latency
+    };
+    assert!(r50 > r18, "deeper net, longer latency: {r50} vs {r18}");
+}
+
+#[test]
+fn simulation_is_deterministic() {
+    let d = device();
+    let o = CompilerOptions::default();
+    let net = zoo::resnet50();
+    let plan = compile(&net, &d, &o).unwrap();
+    let a = simulate(&net, &plan, &quick()).unwrap();
+    let b = simulate(&net, &plan, &quick()).unwrap();
+    assert_eq!(a.throughput, b.throughput);
+    assert_eq!(a.latency, b.latency);
+    assert_eq!(a.core_cycles, b.core_cycles);
+}
+
+#[test]
+fn plan_resource_usage_is_consistent() {
+    let d = device();
+    let o = CompilerOptions::default();
+    for net in zoo::eval_models() {
+        let plan = compile(&net, &d, &o).unwrap();
+        let u = plan.recompute_usage();
+        assert_eq!(u.m20k, plan.usage.m20k, "{}", net.name);
+        assert_eq!(u.tensor_blocks, plan.usage.tensor_blocks);
+        assert_eq!(u.alms, plan.usage.alms);
+        // offloaded layers must carry PC assignments and vice versa
+        for l in &plan.layers {
+            match l.placement {
+                WeightPlacement::Hbm => assert!(!l.pcs.is_empty(), "{}", l.stats.name),
+                WeightPlacement::OnChip => assert!(l.pcs.is_empty(), "{}", l.stats.name),
+            }
+        }
+    }
+}

@@ -1,0 +1,231 @@
+//! Property-based integration tests (via the in-repo testkit): flow
+//! control, HBM scheduling legality, offload invariants, and simulator
+//! conservation under randomized configurations.
+
+use h2pipe::compiler::{algorithm1, compile, LayerStats, Parallelism};
+use h2pipe::config::{BurstLengthPolicy, CompilerOptions, DeviceConfig};
+use h2pipe::fabric::deadlock::ScenarioConfig;
+use h2pipe::fabric::{run_shared_pc_pipeline, CreditCounter, FlowControl, PipelineOutcome, ScFifo};
+use h2pipe::hbm::controller::{Dir, PcTuning, PseudoChannel, Request};
+use h2pipe::hbm::CmdBus;
+use h2pipe::nn::zoo;
+use h2pipe::testkit::{check, Gen};
+
+#[test]
+fn prop_credit_conservation_under_random_traffic() {
+    check("credit-conservation", 200, |g: &mut Gen| {
+        let max = g.u32(1, 64);
+        let mut c = CreditCounter::new(max);
+        let mut out = 0u32;
+        for _ in 0..g.usize(10, 300) {
+            if g.bool(0.5) {
+                let n = g.u32(1, 8);
+                if c.acquire(n) {
+                    out += n;
+                }
+            } else if out > 0 {
+                let n = g.u32(1, 8).min(out);
+                c.release(n);
+                out -= n;
+            }
+            if c.available() + out != max {
+                return Err(format!("conservation broken: {} + {out} != {max}", c.available()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fifo_never_overflows_or_loses_order() {
+    check("fifo-order", 100, |g: &mut Gen| {
+        let cap = g.usize(1, 64);
+        let mut f = ScFifo::with_capacity(cap);
+        let mut next_in = 0u64;
+        let mut next_out = 0u64;
+        for _ in 0..g.usize(10, 500) {
+            if g.bool(0.6) {
+                if f.push(next_in) {
+                    next_in += 1;
+                }
+            } else if let Some(v) = f.pop() {
+                if v != next_out {
+                    return Err(format!("order broken: {v} != {next_out}"));
+                }
+                next_out += 1;
+            }
+            if f.len() > cap {
+                return Err("overflow".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_hbm_every_accepted_request_completes_once() {
+    let d = DeviceConfig::stratix10_nx2100();
+    check("hbm-completion", 25, |g: &mut Gen| {
+        let mut pc = PseudoChannel::new(
+            &d.hbm,
+            &d.hbm_timing,
+            PcTuning { outstanding_beats: g.u32(32, 256), lookahead: g.usize(1, 12) },
+        );
+        let bursts = [1u32, 2, 4, 8, 16, 32];
+        let mut accepted = std::collections::HashSet::new();
+        let mut completed = std::collections::HashSet::new();
+        let mut id = 0u64;
+        for _ in 0..g.usize(2_000, 10_000) {
+            let bl = *g.choose(&bursts);
+            if g.bool(0.7) && pc.can_accept(bl) {
+                let dir = if g.bool(0.3) { Dir::Write } else { Dir::Read };
+                let addr = g.u64(0, (1 << 26) - 1) & !31;
+                pc.push(Request { id, dir, addr, burst: bl });
+                accepted.insert(id);
+                id += 1;
+            }
+            let mut bus = CmdBus::new();
+            pc.tick(&mut bus);
+            for c in pc.drain_completions() {
+                if !completed.insert(c.id) {
+                    return Err(format!("request {} completed twice", c.id));
+                }
+                if c.done_cycle <= c.accept_cycle {
+                    return Err("non-causal completion".into());
+                }
+            }
+        }
+        let mut guard = 0;
+        while !pc.is_idle() {
+            let mut bus = CmdBus::new();
+            pc.tick(&mut bus);
+            for c in pc.drain_completions() {
+                completed.insert(c.id);
+            }
+            guard += 1;
+            if guard > 2_000_000 {
+                return Err("drain did not converge".into());
+            }
+        }
+        if accepted != completed {
+            return Err(format!(
+                "{} accepted vs {} completed",
+                accepted.len(),
+                completed.len()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_algorithm1_never_oversubscribes_bandwidth() {
+    let nets = [zoo::resnet18(), zoo::resnet50(), zoo::vgg16(), zoo::mobilenet_v2()];
+    let o = CompilerOptions::default();
+    check("alg1-bandwidth", 60, |g: &mut Gen| {
+        let net = g.choose(&nets);
+        let stats: Vec<LayerStats> =
+            net.layers().iter().map(|l| LayerStats::from_layer(l, &o)).collect();
+        let par: Vec<Parallelism> = stats
+            .iter()
+            .map(|_| Parallelism { p_i: g.u32(1, 4), p_o: g.u32(1, 8) })
+            .collect();
+        let n_pc = g.u64(1, 31);
+        let force = g.bool(0.5);
+        let plan = algorithm1(&stats, &par, n_pc, 3, force, |_| false);
+        let used: u64 = stats
+            .iter()
+            .zip(plan.offload.iter())
+            .zip(par.iter())
+            .filter(|((_, &off), _)| off)
+            .map(|((_, _), p)| p.chains() as u64)
+            .sum();
+        if used + plan.free_bw > n_pc * 3 || used > n_pc * 3 {
+            return Err(format!("oversubscribed: used {used} of {}", n_pc * 3));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_credit_protocol_never_deadlocks() {
+    check("credit-no-deadlock", 40, |g: &mut Gen| {
+        let cfg = ScenarioConfig {
+            weights_per_item: [g.u32(1, 8), g.u32(1, 8), g.u32(1, 8)],
+            burst_fifo_capacity: g.usize(1, 16),
+            dcfifo_capacity: g.usize(4, 32),
+            act_queue_capacity: g.usize(1, 6),
+            items: 40,
+            hbm_latency: g.u64(1, 60),
+            watchdog: 20_000,
+        };
+        match run_shared_pc_pipeline(FlowControl::Credit, &cfg) {
+            PipelineOutcome::Completed { .. } => Ok(()),
+            PipelineOutcome::Deadlocked { .. } => Err(format!("deadlocked: {cfg:?}")),
+        }
+    });
+}
+
+#[test]
+fn prop_compiled_plans_fit_device_for_random_options() {
+    let d = DeviceConfig::stratix10_nx2100();
+    let nets = [zoo::resnet18(), zoo::resnet50(), zoo::vgg16()];
+    check("plan-fits", 25, |g: &mut Gen| {
+        let net = g.choose(&nets);
+        let mut o = CompilerOptions::default();
+        o.all_hbm = g.bool(0.3);
+        o.burst_length = BurstLengthPolicy::Fixed(*g.choose(&[8u32, 16, 32]));
+        o.write_path_bits = g.u32(8, 256);
+        o.max_chains_per_layer = g.u32(4, 48);
+        let plan = compile(net, &d, &o).map_err(|e| format!("{e:#}"))?;
+        if plan.usage.m20k > d.m20k_blocks as u64 {
+            return Err(format!("M20K overflow {}", plan.usage.m20k));
+        }
+        if plan.usage.tensor_blocks > d.tensor_blocks as u64 {
+            return Err("TB overflow".into());
+        }
+        // every offloaded layer within per-PC slot capacity
+        let mut per_pc = std::collections::HashMap::new();
+        for l in plan.hbm_layers() {
+            let slots: u32 = l.pcs.iter().map(|&(_, c)| c).sum();
+            if slots != l.par.chains() {
+                return Err(format!("{}: slots {slots} != chains {}", l.stats.name, l.par.chains()));
+            }
+            for &(pc, c) in &l.pcs {
+                *per_pc.entry(pc).or_insert(0u32) += c;
+            }
+        }
+        for (pc, used) in per_pc {
+            if used > 3 {
+                return Err(format!("PC{pc} oversubscribed: {used}"));
+            }
+            if d.excluded_pcs.contains(&pc) {
+                return Err(format!("excluded PC{pc} used"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_failure_injection_watchdog_catches_starved_pipeline() {
+    // Failure injection: a prefetcher that can never issue (zero-capacity
+    // burst FIFOs are not constructible, so use weights_per_item with a
+    // DCFIFO too small to ever hold a full round) must be detected as a
+    // deadlock by the watchdog rather than hanging.
+    let cfg = ScenarioConfig {
+        weights_per_item: [8, 8, 8],
+        burst_fifo_capacity: 1,
+        dcfifo_capacity: 1,
+        act_queue_capacity: 1,
+        items: 1000,
+        hbm_latency: 4000, // latency far beyond the watchdog
+        watchdog: 2000,
+        ..ScenarioConfig::default()
+    };
+    let out = run_shared_pc_pipeline(FlowControl::ReadyValid, &cfg);
+    // either it (slowly) completes or the watchdog fires — it must return
+    match out {
+        PipelineOutcome::Completed { .. } | PipelineOutcome::Deadlocked { .. } => {}
+    }
+}

@@ -1,0 +1,134 @@
+//! Integration: PJRT runtime + serving coordinator against the real AOT
+//! artifacts (skipped gracefully when `make artifacts` has not run).
+
+use h2pipe::coordinator::{InferenceServer, ServerConfig};
+use h2pipe::runtime::Runtime;
+
+fn artifact_dir() -> String {
+    format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+}
+
+fn have_artifacts() -> bool {
+    std::path::Path::new(&artifact_dir()).join("cifarnet.hlo.txt").exists()
+        && std::path::Path::new(&artifact_dir()).join("resnet_block.hlo.txt").exists()
+}
+
+#[test]
+fn both_artifacts_load_and_execute() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let rt = Runtime::cpu(artifact_dir()).unwrap();
+
+    let cifar = rt.load("cifarnet").unwrap();
+    let out = cifar.run_i32(&vec![3i32; 32 * 32 * 3], &[32, 32, 3]).unwrap();
+    assert_eq!(out.len(), 10);
+    assert!(out.iter().all(|&v| (-128..=127).contains(&v)), "int8-ranged logits");
+
+    let block = rt.load("resnet_block").unwrap();
+    let x = vec![1i32; 56 * 56 * 64];
+    let y = block.run_i32(&x, &[56, 56, 64]).unwrap();
+    assert_eq!(y.len(), 56 * 56 * 64);
+    // block output is post-ReLU
+    assert!(y.iter().all(|&v| (0..=127).contains(&v)));
+}
+
+#[test]
+fn artifact_outputs_differ_across_inputs() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let rt = Runtime::cpu(artifact_dir()).unwrap();
+    let exe = rt.load("cifarnet").unwrap();
+    let a = exe.run_i32(&vec![1i32; 32 * 32 * 3], &[32, 32, 3]).unwrap();
+    let b = exe.run_i32(&vec![-7i32; 32 * 32 * 3], &[32, 32, 3]).unwrap();
+    assert_ne!(a, b, "different inputs must produce different logits");
+}
+
+#[test]
+fn int8_clipping_at_artifact_boundary() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let rt = Runtime::cpu(artifact_dir()).unwrap();
+    let exe = rt.load("cifarnet").unwrap();
+    // out-of-int8-range inputs are clipped inside the graph: 500 -> 127
+    let wide = exe.run_i32(&vec![500i32; 32 * 32 * 3], &[32, 32, 3]).unwrap();
+    let clipped = exe.run_i32(&vec![127i32; 32 * 32 * 3], &[32, 32, 3]).unwrap();
+    assert_eq!(wide, clipped);
+}
+
+#[test]
+fn server_backpressure_rejects_when_overloaded() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let mut cfg = ServerConfig::cifarnet(&artifact_dir());
+    cfg.queue_depth = 1;
+    cfg.batch_size = 1;
+    let srv = std::sync::Arc::new(InferenceServer::start(cfg).unwrap());
+    // flood from several threads; some requests may be rejected, none may
+    // hang, and completed + rejected must equal submitted
+    let mut handles = Vec::new();
+    for t in 0..4u64 {
+        let s = srv.clone();
+        handles.push(std::thread::spawn(move || {
+            let img = vec![t as i32; 32 * 32 * 3];
+            let mut ok = 0u64;
+            let mut rejected = 0u64;
+            for _ in 0..10 {
+                match s.infer(img.clone()) {
+                    Ok(_) => ok += 1,
+                    Err(_) => rejected += 1,
+                }
+            }
+            (ok, rejected)
+        }));
+    }
+    let mut total_ok = 0;
+    let mut total_rej = 0;
+    for h in handles {
+        let (o, r) = h.join().unwrap();
+        total_ok += o;
+        total_rej += r;
+    }
+    assert_eq!(total_ok + total_rej, 40);
+    let rep = std::sync::Arc::into_inner(srv).unwrap().shutdown();
+    assert_eq!(rep.completed, total_ok);
+}
+
+#[test]
+fn server_batches_under_load() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let mut cfg = ServerConfig::cifarnet(&artifact_dir());
+    cfg.batch_size = 8;
+    cfg.batch_timeout = std::time::Duration::from_millis(20);
+    let srv = std::sync::Arc::new(InferenceServer::start(cfg).unwrap());
+    let mut handles = Vec::new();
+    for t in 0..8u64 {
+        let s = srv.clone();
+        handles.push(std::thread::spawn(move || {
+            let img = vec![t as i32; 32 * 32 * 3];
+            for _ in 0..6 {
+                let _ = s.infer(img.clone());
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let rep = std::sync::Arc::into_inner(srv).unwrap().shutdown();
+    assert!(rep.completed > 0);
+    assert!(
+        rep.mean_batch > 1.05,
+        "8 concurrent clients should produce some batching: {:.2}",
+        rep.mean_batch
+    );
+}

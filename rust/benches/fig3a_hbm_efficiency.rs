@@ -18,15 +18,20 @@ fn main() {
     let device = DeviceConfig::stratix10_nx2100();
     let gen = TrafficGen::new(&device);
     let bursts = [1u32, 2, 4, 8, 16, 32];
+    // paper procedure is 10k transactions/phase; smoke runs use 400
+    let txns = h2pipe::bench_harness::scaled(10_000, 400);
 
     let mut rows = Vec::new();
     let mut series = Json::Arr(vec![]);
     for &bl in &bursts {
         // "hardware" calibration
-        let hw = gen.run(&TrafficConfig::new(AddressPattern::Random, bl));
+        let mut hw_cfg = TrafficConfig::new(AddressPattern::Random, bl);
+        hw_cfg.transactions = txns;
+        let hw = gen.run(&hw_cfg);
         // "simulation model" calibration: deeper reorder window is the
         // main idealization of the vendor model at small bursts
         let mut sim_cfg = TrafficConfig::new(AddressPattern::Random, bl);
+        sim_cfg.transactions = txns;
         sim_cfg.tuning = PcTuning { outstanding_beats: 256, lookahead: 16 };
         let sim = gen.run(&sim_cfg);
         rows.push(vec![
@@ -57,8 +62,11 @@ fn main() {
     b.record("paper_reference", paper);
 
     // wall-time of a full characterization run (the "instrument cost")
-    b.time("characterize_bl8_10k_txns", 0, 3, || {
-        let _ = gen.run(&TrafficConfig::new(AddressPattern::Random, 8));
+    let iters = h2pipe::bench_harness::scaled(3, 1) as u32;
+    b.time("characterize_bl8_10k_txns", 0, iters, || {
+        let mut cfg = TrafficConfig::new(AddressPattern::Random, 8);
+        cfg.transactions = txns;
+        let _ = gen.run(&cfg);
     });
     b.finish();
 }

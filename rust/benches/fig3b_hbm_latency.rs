@@ -15,11 +15,14 @@ fn main() {
     let device = DeviceConfig::stratix10_nx2100();
     let gen = TrafficGen::new(&device);
 
+    let txns = h2pipe::bench_harness::scaled(10_000, 400);
     let mut rows = Vec::new();
     let mut series = Json::Arr(vec![]);
     let mut worst_bl8plus: f64 = 0.0;
     for bl in [1u32, 2, 4, 8, 16, 32] {
-        let r = gen.run(&TrafficConfig::new(AddressPattern::Random, bl));
+        let mut cfg = TrafficConfig::new(AddressPattern::Random, bl);
+        cfg.transactions = txns;
+        let r = gen.run(&cfg);
         if bl >= 8 {
             worst_bl8plus = worst_bl8plus.max(r.read_lat_max_ns);
         }

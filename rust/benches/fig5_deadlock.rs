@@ -69,7 +69,8 @@ fn main() {
     parity.set("ready_valid_cycles", rv_c).set("credit_cycles", cr_c);
     b.record("no_hazard_parity", parity);
 
-    b.time("fig5_scenario_pair", 1, 10, || {
+    let iters = h2pipe::bench_harness::scaled(10, 2) as u32;
+    b.time("fig5_scenario_pair", 1, iters, || {
         let c = ScenarioConfig::default();
         std::hint::black_box(run_shared_pc_pipeline(FlowControl::ReadyValid, &c));
         std::hint::black_box(run_shared_pc_pipeline(FlowControl::Credit, &c));

@@ -17,7 +17,11 @@ use h2pipe::sim::pipeline::{simulate, SimConfig};
 fn main() {
     let mut b = Bench::new("fig6_bounds");
     let device = DeviceConfig::stratix10_nx2100();
-    let cfg = SimConfig { images: 5, warmup_images: 2, ..SimConfig::default() };
+    let cfg = SimConfig {
+        images: h2pipe::bench_harness::scaled(5, 2),
+        warmup_images: h2pipe::bench_harness::scaled(2, 1),
+        ..SimConfig::default()
+    };
     let opts = CompilerOptions::default();
 
     let paper: &[(&str, f64, f64)] =

@@ -19,10 +19,11 @@ use h2pipe::util::{Json, XorShift64};
 fn main() {
     let mut b = Bench::new("perf_hotpath");
     let device = DeviceConfig::stratix10_nx2100();
+    use h2pipe::bench_harness::scaled;
 
     // 1. HBM controller tick rate.
-    let ticks = 2_000_000u64;
-    let m = b.time("hbm_pc_tick_2M_saturated", 1, 5, || {
+    let ticks = scaled(2_000_000, 100_000);
+    let m = b.time("hbm_pc_tick_2M_saturated", 1, scaled(5, 1) as u32, || {
         let mut pc = PseudoChannel::new(&device.hbm, &device.hbm_timing, PcTuning::default());
         let mut rng = XorShift64::new(1);
         let mut id = 0u64;
@@ -43,9 +44,9 @@ fn main() {
     // 2. Pipeline simulation rate (ResNet-50 hybrid, 3 images).
     let net = zoo::resnet50();
     let plan = compile(&net, &device, &CompilerOptions::default()).unwrap();
-    let cfg = SimConfig { images: 3, warmup_images: 1, ..SimConfig::default() };
+    let cfg = SimConfig { images: scaled(3, 2), warmup_images: 1, ..SimConfig::default() };
     let mut core_cycles = 0u64;
-    let m = b.time("pipeline_sim_resnet50_3img", 1, 3, || {
+    let m = b.time("pipeline_sim_resnet50_3img", scaled(1, 0) as u32, scaled(3, 1) as u32, || {
         let mut sim = PipelineSim::new(&net, &plan).unwrap();
         let rep = sim.run(&cfg).unwrap();
         core_cycles = rep.core_cycles;
@@ -55,22 +56,25 @@ fn main() {
     b.record("sim_model_cycles_per_s", sim_rate);
 
     // 3. Compiler end-to-end.
-    b.time("compile_resnet50", 1, 10, || {
+    b.time("compile_resnet50", 1, scaled(10, 2) as u32, || {
         std::hint::black_box(compile(&net, &device, &CompilerOptions::default()).unwrap());
     });
 
-    // 4. PJRT execution latency (if artifacts are built).
+    // 4. Runtime execution latency (the serving hot path): the reference
+    // interpreter offline, the PJRT artifact with `--features pjrt`.
     let art = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
-    if std::path::Path::new(&art).join("cifarnet.hlo.txt").exists() {
-        let rt = h2pipe::runtime::Runtime::cpu(&art).unwrap();
-        let exe = rt.load("cifarnet").unwrap();
-        let img = vec![1i32; 32 * 32 * 3];
-        let m = b.time("pjrt_cifarnet_execute", 3, 30, || {
-            std::hint::black_box(exe.run_i32(&img, &[32, 32, 3]).unwrap());
-        });
-        b.record("pjrt_execute_ms", m.mean_ms());
-    } else {
-        println!("  (artifacts missing — run `make artifacts` for the PJRT measurement)");
+    let rt = h2pipe::runtime::Runtime::cpu(&art).unwrap();
+    match rt.load("cifarnet") {
+        Ok(exe) => {
+            let img = vec![1i32; 32 * 32 * 3];
+            let label = format!("runtime_cifarnet_execute_{}", rt.backend_name());
+            let m = b.time(&label, scaled(3, 1) as u32, scaled(30, 3) as u32, || {
+                std::hint::black_box(exe.run_i32(&img, &[32, 32, 3]).unwrap());
+            });
+            b.record("runtime_backend", rt.backend_name());
+            b.record("runtime_execute_ms", m.mean_ms());
+        }
+        Err(e) => println!("  (runtime measurement skipped: {e:#})"),
     }
 
     let mut targets = Json::obj();

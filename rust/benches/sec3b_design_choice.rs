@@ -18,19 +18,19 @@ fn main() {
     let mut b = Bench::new("sec3b_design_choice");
     let device = DeviceConfig::stratix10_nx2100();
     let opts = CompilerOptions::default();
-    let cfg = SimConfig { images: 4, warmup_images: 1, ..SimConfig::default() };
+    let cfg = SimConfig {
+        images: h2pipe::bench_harness::scaled(4, 2),
+        warmup_images: 1,
+        ..SimConfig::default()
+    };
 
     // (a) activation-offload penalty, against our own simulated latency
     println!("--- offloading activations instead of weights (saturated 400 ns/read) ---");
     let mut rows = Vec::new();
     let mut series = Json::Arr(vec![]);
     for net in zoo::table1_models() {
-        let base = if net.name.starts_with("MobileNet") || true {
-            let plan = compile(&net, &device, &opts).unwrap();
-            simulate(&net, &plan, &cfg).unwrap().latency
-        } else {
-            0.0
-        };
+        let plan = compile(&net, &device, &opts).unwrap();
+        let base = simulate(&net, &plan, &cfg).unwrap().latency;
         let r = activation_offload_penalty(&net, &opts, 400.0, base);
         rows.push(vec![
             net.name.clone(),

@@ -53,7 +53,7 @@ fn main() {
         &rows,
     );
     b.record("rows", series);
-    b.time("memory_breakdown_all_models", 1, 10, || {
+    b.time("memory_breakdown_all_models", 1, h2pipe::bench_harness::scaled(10, 1) as u32, || {
         for net in zoo::table1_models() {
             std::hint::black_box(memory_breakdown(&net, &opts));
         }

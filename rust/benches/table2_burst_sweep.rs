@@ -14,7 +14,11 @@ use h2pipe::util::Json;
 fn main() {
     let mut b = Bench::new("table2_burst_sweep");
     let device = DeviceConfig::stratix10_nx2100();
-    let cfg = SimConfig { images: 5, warmup_images: 2, ..SimConfig::default() };
+    let cfg = SimConfig {
+        images: h2pipe::bench_harness::scaled(5, 2),
+        warmup_images: h2pipe::bench_harness::scaled(2, 1),
+        ..SimConfig::default()
+    };
 
     // paper rows: (model, BL, logic util %, im/s)
     let paper: &[(&str, u32, f64)] = &[

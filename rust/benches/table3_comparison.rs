@@ -21,7 +21,11 @@ fn main() {
     let mut b = Bench::new("table3_comparison");
     let device = DeviceConfig::stratix10_nx2100();
     let opts = CompilerOptions::default();
-    let cfg = SimConfig { images: 5, warmup_images: 2, ..SimConfig::default() };
+    let cfg = SimConfig {
+        images: h2pipe::bench_harness::scaled(5, 2),
+        warmup_images: h2pipe::bench_harness::scaled(2, 1),
+        ..SimConfig::default()
+    };
 
     let mut ours = Vec::new();
     let mut macs = Vec::new();

@@ -52,10 +52,12 @@ fn main() -> anyhow::Result<()> {
         rep.latency * 1e3
     );
 
-    // --- 3. Execute the AOT artifact on the PJRT runtime ---------------
-    // (functional path: JAX/Pallas-authored int8 CNN, compiled to HLO text
-    //  by `make artifacts`, loaded and run from rust with no Python.)
+    // --- 3. Execute a functional CNN through the runtime backend -------
+    // Default build: the pure-Rust int8 reference interpreter (works with
+    // no artifacts). With `--features pjrt` + `make artifacts`: the real
+    // JAX/Pallas-authored AOT artifact through the PJRT CPU client.
     let rt = Runtime::cpu("artifacts")?;
+    println!("runtime backend: {} ({})", rt.backend_name(), rt.platform());
     let exe = rt.load("cifarnet")?;
     let img: Vec<i32> = (0..32 * 32 * 3).map(|i| (i % 256) as i32 - 128).collect();
     let logits = exe.run_i32(&img, &[32, 32, 3])?;

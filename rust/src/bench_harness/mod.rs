@@ -9,6 +9,25 @@ use std::time::Instant;
 
 use crate::util::{Json, Percentiles};
 
+/// True for a full paper-figure run, false for the 1-iteration smoke
+/// configuration.
+///
+/// Cargo passes `--bench` to `harness = false` targets only under
+/// `cargo bench`; the same binaries run under `cargo test` (they are
+/// registered with `test = true`) receive no such flag and default to the
+/// smoke configuration, so every bench target's entry path is compiled
+/// AND executed by the tier-1 gate and cannot silently rot. Set
+/// `H2PIPE_BENCH_FULL=1` to force a full run regardless of invocation.
+pub fn full_run() -> bool {
+    std::env::args().any(|a| a == "--bench")
+        || matches!(std::env::var("H2PIPE_BENCH_FULL"), Ok(v) if !v.is_empty() && v != "0")
+}
+
+/// `full` when [`full_run`], else `quick` — for scaling bench workloads.
+pub fn scaled(full: u64, quick: u64) -> u64 {
+    if full_run() { full } else { quick }
+}
+
 /// Timing statistics for one measured closure.
 #[derive(Debug, Clone)]
 pub struct Measurement {
@@ -107,8 +126,12 @@ impl Bench {
         }
     }
 
-    /// Write JSON results to `target/bench_results/<name>.json`.
+    /// Write JSON results to `target/bench_results/<name>.json` for full
+    /// runs; smoke runs (see [`full_run`]) go to
+    /// `target/bench_results/smoke/<name>.json` so `cargo test` can never
+    /// clobber recorded paper-figure data with scaled-down numbers.
     pub fn finish(mut self) {
+        let full = full_run();
         let mut meas = Json::Arr(vec![]);
         for m in &self.measurements {
             let mut o = Json::obj();
@@ -121,9 +144,14 @@ impl Bench {
             meas.push(o);
         }
         self.results.set("bench", self.name.as_str());
+        self.results.set("mode", if full { "full" } else { "smoke" });
         self.results.set("measurements", meas);
         self.results.set("wall_s", self.started.elapsed().as_secs_f64());
-        let dir = std::path::Path::new("target/bench_results");
+        let dir = if full {
+            std::path::Path::new("target/bench_results")
+        } else {
+            std::path::Path::new("target/bench_results/smoke")
+        };
         let _ = std::fs::create_dir_all(dir);
         let path = dir.join(format!("{}.json", self.name));
         if let Err(e) = std::fs::write(&path, self.results.to_pretty()) {
@@ -154,9 +182,11 @@ mod tests {
         let mut b = Bench::new("test_bench_json");
         b.record("answer", 42u64);
         b.finish();
-        let p = std::path::Path::new("target/bench_results/test_bench_json.json");
+        // under `cargo test` (no --bench flag) results land in smoke/
+        let p = std::path::Path::new("target/bench_results/smoke/test_bench_json.json");
         let s = std::fs::read_to_string(p).unwrap();
         assert!(s.contains("\"answer\": 42"));
+        assert!(s.contains("\"mode\": \"smoke\""));
     }
 
     #[test]

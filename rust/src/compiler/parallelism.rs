@@ -151,7 +151,7 @@ pub fn allocate(stats: &[LayerStats], budget: &Budget) -> Allocation {
         let t = tbs(&par);
         let within = t <= budget.max_tbs
             && alms(t) <= budget.max_alms
-            && budget.max_chains.is_none_or(|m| chains(&par) <= m);
+            && budget.max_chains.map_or(true, |m| chains(&par) <= m);
         if !within {
             par[bi] = old;
             break; // the bottleneck cannot grow further: we're done

@@ -7,12 +7,13 @@
 //! * [`boot`] — the one-time weight download through the narrow write
 //!   path (width/boot-time/register trade-off of §IV-C);
 //! * [`server`] — a threaded request router + batcher that executes
-//!   functional inference through the PJRT artifacts ([`crate::runtime`])
-//!   and reports both wall-clock and modelled-FPGA timing;
+//!   functional inference through a [`crate::runtime`] backend (the
+//!   reference interpreter by default, PJRT artifacts with `--features
+//!   pjrt`) and reports both wall-clock and modelled-FPGA timing;
 //! * [`metrics`] — latency/throughput accounting.
 //!
-//! Python never appears here: the artifacts were AOT-compiled by
-//! `make artifacts` and the binary is self-contained.
+//! Python never appears here: the binary is self-contained in either
+//! backend configuration.
 
 pub mod boot;
 pub mod metrics;

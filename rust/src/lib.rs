@@ -25,8 +25,11 @@
 //! * [`coordinator`] — the serving runtime: boot-time weight download
 //!   through the §IV-C write path, request batching, and dispatch to both
 //!   the timing model and the PJRT-executed AOT artifacts.
-//! * [`runtime`] — PJRT CPU client wrapper that loads `artifacts/*.hlo.txt`
-//!   produced by `python/compile/aot.py` and executes them on the hot path.
+//! * [`runtime`] — pluggable execution backends behind one [`runtime::Backend`]
+//!   trait: a pure-Rust int8 reference interpreter (default, works in the
+//!   offline crate set with no artifacts) and, behind the non-default
+//!   `pjrt` feature, a PJRT CPU client that loads `artifacts/*.hlo.txt`
+//!   produced by `python/compile/aot.py`.
 //! * [`analysis`] — Eq. 2 memory-traffic bounds, the Fig. 6 theoretical
 //!   upper bounds, the Table III prior-work dataset and report generation.
 //! * [`bench_harness`], [`testkit`], [`util`] — in-repo replacements for

@@ -1,85 +1,130 @@
-//! PJRT runtime: load and execute the AOT artifacts on the hot path.
+//! Runtime backends: functional CNN execution on the serving hot path.
 //!
-//! `python/compile/aot.py` lowers the L2 JAX graphs (which call the L1
-//! Pallas kernels with `interpret=True`) to **HLO text** under
-//! `artifacts/`. This module wraps the `xla` crate (PJRT C API) to compile
-//! those artifacts once at boot and execute them per request — Python is
-//! never on the request path.
+//! The serving coordinator needs a *functional* executor next to the
+//! timing model. A [`Backend`] loads [`Model`]s by name and executes
+//! them; two implementations are provided:
+//!
+//! * [`reference`] (default) — a pure-Rust int8 reference interpreter
+//!   over the [`crate::nn`] IR with deterministic weights. It needs no
+//!   external crates and no prebuilt artifacts, so `h2pipe serve` /
+//!   `h2pipe infer`, the coordinator, and every test work in the
+//!   offline crate set.
+//! * [`pjrt`] (`--features pjrt`) — the PJRT CPU client that compiles
+//!   and runs the `artifacts/*.hlo.txt` lowered by
+//!   `python/compile/aot.py` (L2 JAX graphs calling the L1 Pallas
+//!   kernels with `interpret=True`). Requires the `xla` crate; see
+//!   DESIGN.md §9 for the HLO-text interchange rationale. Python is
+//!   never on the request path in either backend.
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{ensure, Context, Result};
+use anyhow::{ensure, Result};
 
-/// A compiled artifact: one PJRT executable per model variant.
-pub struct Executable {
-    name: String,
-    exe: xla::PjRtLoadedExecutable,
+pub mod reference;
+
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+
+pub use reference::ReferenceBackend;
+
+#[cfg(feature = "pjrt")]
+pub use pjrt::PjrtBackend;
+
+/// A loaded, executable model (one artifact or built-in graph).
+///
+/// Implementations are created on (and stay on) the thread that uses
+/// them — the PJRT handles are not `Send`, so the trait imposes no
+/// threading bound and the server worker loads its model in-thread.
+pub trait Model {
+    fn name(&self) -> &str;
+
+    /// Execute with a single int32 tensor input of the given dims. The
+    /// boundary is int32 (the `xla` crate's literal API has no i8); the
+    /// graph clips to the int8 datapath internally.
+    fn run_i32(&self, input: &[i32], dims: &[usize]) -> Result<Vec<i32>>;
 }
 
-/// The PJRT client plus the artifact directory executables are loaded from.
+/// An execution backend that can load models by name from an artifact
+/// directory.
+pub trait Backend {
+    /// Short backend identifier: "reference" or "pjrt".
+    fn name(&self) -> &'static str;
+
+    /// Platform string (PJRT naming), e.g. "cpu".
+    fn platform_name(&self) -> String;
+
+    /// Load the named model. Backends must fail with a clear,
+    /// actionable error when the model is unknown or its artifact is
+    /// missing.
+    fn load_model(&self, artifact_dir: &Path, name: &str) -> Result<Box<dyn Model>>;
+}
+
+/// A backend plus the artifact directory models are loaded from.
 pub struct Runtime {
-    client: xla::PjRtClient,
+    backend: Box<dyn Backend>,
     artifact_dir: PathBuf,
 }
 
 impl Runtime {
-    /// Create a CPU PJRT client rooted at an artifact directory.
+    /// CPU runtime rooted at an artifact directory: the PJRT client when
+    /// the `pjrt` feature is enabled, the reference interpreter
+    /// otherwise — callers never need to know which.
     pub fn cpu(artifact_dir: impl AsRef<Path>) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Self { client, artifact_dir: artifact_dir.as_ref().to_path_buf() })
+        #[cfg(feature = "pjrt")]
+        {
+            Ok(Self::with_backend(Box::new(pjrt::PjrtBackend::cpu()?), artifact_dir))
+        }
+        #[cfg(not(feature = "pjrt"))]
+        {
+            Ok(Self::with_backend(Box::new(ReferenceBackend::new()), artifact_dir))
+        }
     }
 
-    /// Platform string of the underlying PJRT client (e.g. "cpu").
+    /// Explicitly use the pure-Rust reference interpreter.
+    pub fn reference(artifact_dir: impl AsRef<Path>) -> Self {
+        Self::with_backend(Box::new(ReferenceBackend::new()), artifact_dir)
+    }
+
+    /// Use a caller-provided backend.
+    pub fn with_backend(backend: Box<dyn Backend>, artifact_dir: impl AsRef<Path>) -> Self {
+        Self { backend, artifact_dir: artifact_dir.as_ref().to_path_buf() }
+    }
+
+    /// Platform string of the underlying backend (e.g. "cpu").
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        self.backend.platform_name()
     }
 
-    /// Load `<name>.hlo.txt` from the artifact directory and compile it.
-    ///
-    /// HLO *text* is the interchange format: jax >= 0.5 serialized protos
-    /// carry 64-bit instruction ids that xla_extension 0.5.1 rejects; the
-    /// text parser reassigns ids (see DESIGN.md §9 / aot.py docstring).
-    pub fn load(&self, name: &str) -> Result<Executable> {
-        let path = self.artifact_dir.join(format!("{name}.hlo.txt"));
-        ensure!(
-            path.exists(),
-            "artifact {} missing — run `make artifacts` first",
-            path.display()
-        );
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("PJRT compile of {name}"))?;
-        Ok(Executable { name: name.to_string(), exe })
+    /// Which backend is in use: "reference" or "pjrt".
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
     }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.artifact_dir
+    }
+
+    /// Load the named model through the backend.
+    pub fn load(&self, name: &str) -> Result<Executable> {
+        Ok(Executable { model: self.backend.load_model(&self.artifact_dir, name)? })
+    }
+}
+
+/// A loaded model, ready to execute requests.
+pub struct Executable {
+    model: Box<dyn Model>,
 }
 
 impl Executable {
     pub fn name(&self) -> &str {
-        &self.name
+        self.model.name()
     }
 
-    /// Execute with a single int32 tensor input of the given dims; the
-    /// artifact returns a 1-tuple (aot.py lowers with `return_tuple=True`).
-    ///
-    /// The artifact boundary is int32 because the `xla` crate's literal
-    /// API has no i8; the graph casts to the int8 datapath internally.
+    /// Execute with a single int32 tensor input of the given dims.
     pub fn run_i32(&self, input: &[i32], dims: &[usize]) -> Result<Vec<i32>> {
         let n: usize = dims.iter().product();
         ensure!(n == input.len(), "input length {} != dims product {}", input.len(), n);
-        let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
-        let lit = xla::Literal::vec1(input).reshape(&dims_i64).context("reshaping input")?;
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&[lit])
-            .with_context(|| format!("executing {}", self.name))?[0][0]
-            .to_literal_sync()
-            .context("fetching result literal")?;
-        let out = result.to_tuple1().context("unwrapping 1-tuple result")?;
-        out.to_vec::<i32>().context("converting result to i32 vec")
+        self.model.run_i32(input, dims)
     }
 
     /// Convenience for int8-ranged data (the datapath dtype).
@@ -98,24 +143,28 @@ mod tests {
         PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
     }
 
-    fn have_artifacts() -> bool {
-        artifacts().join("cifarnet.hlo.txt").exists()
-    }
-
     #[test]
     fn cpu_client_comes_up() {
+        // Works with no `xla` crate and no artifacts present: without the
+        // `pjrt` feature this is the reference interpreter.
         let rt = Runtime::cpu(artifacts()).unwrap();
         assert_eq!(rt.platform().to_lowercase(), "cpu");
     }
 
     #[test]
-    fn load_and_run_cifarnet() {
-        if !have_artifacts() {
-            eprintln!("skipping: artifacts not built");
-            return;
-        }
+    fn default_backend_is_reference_without_pjrt_feature() {
         let rt = Runtime::cpu(artifacts()).unwrap();
+        #[cfg(not(feature = "pjrt"))]
+        assert_eq!(rt.backend_name(), "reference");
+        #[cfg(feature = "pjrt")]
+        assert_eq!(rt.backend_name(), "pjrt");
+    }
+
+    #[test]
+    fn load_and_run_cifarnet() {
+        let rt = Runtime::reference(artifacts());
         let exe = rt.load("cifarnet").unwrap();
+        assert_eq!(exe.name(), "cifarnet");
         let img = vec![1i8; 32 * 32 * 3];
         let out = exe.run_int8(&img, &[32, 32, 3]).unwrap();
         assert_eq!(out.len(), 10);
@@ -126,23 +175,26 @@ mod tests {
 
     #[test]
     fn run_rejects_bad_dims() {
-        if !have_artifacts() {
-            eprintln!("skipping: artifacts not built");
-            return;
-        }
-        let rt = Runtime::cpu(artifacts()).unwrap();
+        let rt = Runtime::reference(artifacts());
         let exe = rt.load("cifarnet").unwrap();
         let img = vec![0i8; 7];
         assert!(exe.run_int8(&img, &[32, 32, 3]).is_err());
+        // right element count, wrong tensor shape
+        let img = vec![0i8; 32 * 32 * 3];
+        assert!(exe.run_int8(&img, &[3, 32, 32]).is_err());
     }
 
     #[test]
     fn missing_artifact_is_clear_error() {
+        // Must pass with no `xla` crate and no artifacts: both backends
+        // point the user at `make artifacts` for unknown models.
         let rt = Runtime::cpu(artifacts()).unwrap();
         let err = match rt.load("nonexistent_model") {
             Ok(_) => panic!("expected load failure"),
             Err(e) => e,
         };
-        assert!(format!("{err}").contains("make artifacts"));
+        let msg = format!("{err:#}");
+        assert!(msg.contains("make artifacts"), "unhelpful error: {msg}");
+        assert!(msg.contains("nonexistent_model"), "error must name the model: {msg}");
     }
 }

@@ -1,0 +1,85 @@
+//! PJRT backend: load and execute the AOT artifacts on the hot path.
+//!
+//! Enabled with `--features pjrt`, which requires the `xla` crate (PJRT
+//! C API bindings) — uncomment its line in `rust/Cargo.toml`; it is not
+//! part of the offline crate set. `python/compile/aot.py` lowers the L2
+//! JAX graphs (which call the L1 Pallas kernels with `interpret=True`)
+//! to **HLO text** under `artifacts/`; this backend compiles those
+//! artifacts once at boot and executes them per request.
+
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::runtime::{Backend, Model};
+
+/// PJRT CPU client backend.
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+}
+
+impl PjrtBackend {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        Ok(Self { client: xla::PjRtClient::cpu().context("creating PJRT CPU client")? })
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load `<name>.hlo.txt` from the artifact directory and compile it.
+    ///
+    /// HLO *text* is the interchange format: jax >= 0.5 serialized protos
+    /// carry 64-bit instruction ids that xla_extension 0.5.1 rejects; the
+    /// text parser reassigns ids (see DESIGN.md §9 / aot.py docstring).
+    fn load_model(&self, artifact_dir: &Path, name: &str) -> Result<Box<dyn Model>> {
+        let path = artifact_dir.join(format!("{name}.hlo.txt"));
+        ensure!(
+            path.exists(),
+            "artifact {} missing — run `make artifacts` first",
+            path.display()
+        );
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("PJRT compile of {name}"))?;
+        Ok(Box::new(PjrtModel { name: name.to_string(), exe }))
+    }
+}
+
+/// A compiled artifact: one PJRT executable per model variant.
+struct PjrtModel {
+    name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Model for PjrtModel {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute with a single int32 tensor input; the artifact returns a
+    /// 1-tuple (aot.py lowers with `return_tuple=True`).
+    fn run_i32(&self, input: &[i32], dims: &[usize]) -> Result<Vec<i32>> {
+        let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(input).reshape(&dims_i64).context("reshaping input")?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[lit])
+            .with_context(|| format!("executing {}", self.name))?[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let out = result.to_tuple1().context("unwrapping 1-tuple result")?;
+        out.to_vec::<i32>().context("converting result to i32 vec")
+    }
+}

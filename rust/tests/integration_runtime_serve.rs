@@ -1,5 +1,10 @@
-//! Integration: PJRT runtime + serving coordinator against the real AOT
-//! artifacts (skipped gracefully when `make artifacts` has not run).
+//! Integration: runtime backend + serving coordinator.
+//!
+//! Runs unconditionally in the offline crate set: `Runtime::cpu` resolves
+//! to the pure-Rust reference interpreter by default, and to the PJRT
+//! client against the real AOT artifacts under `--features pjrt` (after
+//! `make artifacts`). The assertions hold for both backends — they pin
+//! the int8-datapath contract, not backend-specific numerics.
 
 use h2pipe::coordinator::{InferenceServer, ServerConfig};
 use h2pipe::runtime::Runtime;
@@ -8,17 +13,8 @@ fn artifact_dir() -> String {
     format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
 }
 
-fn have_artifacts() -> bool {
-    std::path::Path::new(&artifact_dir()).join("cifarnet.hlo.txt").exists()
-        && std::path::Path::new(&artifact_dir()).join("resnet_block.hlo.txt").exists()
-}
-
 #[test]
-fn both_artifacts_load_and_execute() {
-    if !have_artifacts() {
-        eprintln!("skipping: run `make artifacts`");
-        return;
-    }
+fn both_models_load_and_execute() {
     let rt = Runtime::cpu(artifact_dir()).unwrap();
 
     let cifar = rt.load("cifarnet").unwrap();
@@ -35,11 +31,7 @@ fn both_artifacts_load_and_execute() {
 }
 
 #[test]
-fn artifact_outputs_differ_across_inputs() {
-    if !have_artifacts() {
-        eprintln!("skipping: run `make artifacts`");
-        return;
-    }
+fn model_outputs_differ_across_inputs() {
     let rt = Runtime::cpu(artifact_dir()).unwrap();
     let exe = rt.load("cifarnet").unwrap();
     let a = exe.run_i32(&vec![1i32; 32 * 32 * 3], &[32, 32, 3]).unwrap();
@@ -48,11 +40,7 @@ fn artifact_outputs_differ_across_inputs() {
 }
 
 #[test]
-fn int8_clipping_at_artifact_boundary() {
-    if !have_artifacts() {
-        eprintln!("skipping: run `make artifacts`");
-        return;
-    }
+fn int8_clipping_at_model_boundary() {
     let rt = Runtime::cpu(artifact_dir()).unwrap();
     let exe = rt.load("cifarnet").unwrap();
     // out-of-int8-range inputs are clipped inside the graph: 500 -> 127
@@ -63,10 +51,6 @@ fn int8_clipping_at_artifact_boundary() {
 
 #[test]
 fn server_backpressure_rejects_when_overloaded() {
-    if !have_artifacts() {
-        eprintln!("skipping: run `make artifacts`");
-        return;
-    }
     let mut cfg = ServerConfig::cifarnet(&artifact_dir());
     cfg.queue_depth = 1;
     cfg.batch_size = 1;
@@ -103,10 +87,6 @@ fn server_backpressure_rejects_when_overloaded() {
 
 #[test]
 fn server_batches_under_load() {
-    if !have_artifacts() {
-        eprintln!("skipping: run `make artifacts`");
-        return;
-    }
     let mut cfg = ServerConfig::cifarnet(&artifact_dir());
     cfg.batch_size = 8;
     cfg.batch_timeout = std::time::Duration::from_millis(20);
@@ -131,4 +111,15 @@ fn server_batches_under_load() {
         "8 concurrent clients should produce some batching: {:.2}",
         rep.mean_batch
     );
+}
+
+#[test]
+fn reference_backend_always_available() {
+    // Even with the pjrt feature on, the reference interpreter must work
+    // with no artifacts — it is the serving fallback.
+    let rt = Runtime::reference(artifact_dir());
+    assert_eq!(rt.backend_name(), "reference");
+    let exe = rt.load("cifarnet").unwrap();
+    let out = exe.run_int8(&[5i8; 32 * 32 * 3], &[32, 32, 3]).unwrap();
+    assert_eq!(out.len(), 10);
 }

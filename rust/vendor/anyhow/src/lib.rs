@@ -1,0 +1,232 @@
+//! Minimal, offline-compatible subset of the `anyhow` error-handling API.
+//!
+//! The offline crate set this workspace builds against has no registry
+//! access, so the real `anyhow` cannot be fetched. This vendored path
+//! crate implements exactly the surface the codebase uses, with the same
+//! names and semantics:
+//!
+//! * [`Error`] — a context-chained, message-based error value;
+//! * [`Result<T>`] — `Result` with [`Error`] as the default error type;
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — the construction macros;
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result`
+//!   (both std errors and [`Error`] itself) and on `Option`;
+//! * `{e}` prints the outermost message, `{e:#}` the full `": "`-joined
+//!   chain, and `{e:?}` an anyhow-style "Caused by" listing.
+//!
+//! Unsupported pieces of real anyhow (downcasting, backtraces) are
+//! intentionally absent — nothing in this workspace uses them.
+
+// `anyhow!("plain literal")` must expand through `format!` so inline
+// captures (`anyhow!("got {x}")`) work; allow the no-arg case in-crate.
+#![allow(clippy::useless_format)]
+
+use std::fmt;
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A context-chained error. `chain[0]` is the outermost message; each
+/// `.context(..)` pushes a new front entry, mirroring anyhow's wrapping.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Self { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context message (what `.context(..)` does).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The `": "`-joined cause chain, outermost first (the `{:#}` form).
+    pub fn chain_string(&self) -> String {
+        self.chain.join(": ")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain_string())
+        } else {
+            f.write_str(&self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.chain[0])?;
+        if self.chain.len() > 1 {
+            f.write_str("\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`; that
+// is what makes the blanket `From` below coherent (exactly as in real
+// anyhow) and lets `?` convert any std error into an `Error`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Self { chain }
+    }
+}
+
+mod private {
+    /// Unifies "a std error" and "already an `Error`" for the [`super::Context`]
+    /// impl on `Result` — the sealed-trait trick real anyhow uses.
+    pub trait IntoError {
+        fn into_error(self) -> super::Error;
+    }
+
+    impl IntoError for super::Error {
+        fn into_error(self) -> super::Error {
+            self
+        }
+    }
+
+    impl<E: std::error::Error + Send + Sync + 'static> IntoError for E {
+        fn into_error(self) -> super::Error {
+            super::Error::from(self)
+        }
+    }
+}
+
+/// Extension trait providing `.context(..)` / `.with_context(..)`.
+pub trait Context<T> {
+    /// Wrap the error (or `None`) with a context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+
+    /// Like [`Context::context`], evaluating the message lazily.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: private::IntoError> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into_error().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into_error().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or any displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($fmt:literal $(, $($arg:tt)*)?) => {
+        $crate::Error::msg(format!($fmt $(, $($arg)*)?))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`] built by [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($t:tt)+) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($t)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "file gone")
+    }
+
+    #[test]
+    fn display_and_alternate_chain() {
+        let e: Error = Error::from(io_err()).context("loading plan");
+        assert_eq!(format!("{e}"), "loading plan");
+        assert_eq!(format!("{e:#}"), "loading plan: file gone");
+    }
+
+    #[test]
+    fn debug_prints_caused_by() {
+        let e = Error::msg("inner").context("outer");
+        let d = format!("{e:?}");
+        assert!(d.starts_with("outer"));
+        assert!(d.contains("Caused by:"));
+        assert!(d.contains("inner"));
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<u32> {
+            Ok(s.parse::<u32>()?)
+        }
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("nope").is_err());
+    }
+
+    #[test]
+    fn context_on_result_option_and_error() {
+        let r: Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("ctx").unwrap_err();
+        assert_eq!(format!("{e:#}"), "ctx: file gone");
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", "thing")).unwrap_err();
+        assert_eq!(format!("{e}"), "missing thing");
+
+        // .context on a Result that already carries an `Error`
+        let r: Result<()> = Err(anyhow!("base"));
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: base");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 7 {
+                bail!("unlucky {}", x);
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert!(format!("{:#}", f(12).unwrap_err()).contains("x too big: 12"));
+        assert!(format!("{:#}", f(7).unwrap_err()).contains("unlucky 7"));
+        let from_string: Error = anyhow!(String::from("owned message"));
+        assert_eq!(format!("{from_string}"), "owned message");
+    }
+}

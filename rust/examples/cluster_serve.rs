@@ -1,0 +1,93 @@
+//! Fleet serving driver (the cluster subsystem's E2E validation run).
+//!
+//! 1. Partitions ResNet-18 into two pipeline-parallel shards, each
+//!    compiled as a standalone accelerator (offload decisions re-run per
+//!    shard).
+//! 2. Co-simulates the shards cycle-accurately — one pipeline sim per
+//!    device, inter-device links as credit-based FIFOs — and reports the
+//!    2-replica (shared-nothing) aggregate next to the per-replica rate.
+//! 3. Serves real inference requests through the fleet router: two
+//!    replica servers of the residual-free `mobilenet_edge` built-in,
+//!    least-outstanding-requests routing, merged metrics emitted as JSON.
+//!
+//! Run with:  cargo run --release --example cluster_serve [-- <num_requests>]
+
+use std::sync::Arc;
+
+use h2pipe::cluster::{partition, FleetConfig, FleetRouter, FleetSim, PartitionOptions};
+use h2pipe::config::{CompilerOptions, DeviceConfig};
+use h2pipe::coordinator::ServerConfig;
+use h2pipe::nn::zoo;
+use h2pipe::util::XorShift64;
+
+fn main() -> anyhow::Result<()> {
+    let n_requests: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(256);
+    let device = DeviceConfig::stratix10_nx2100();
+    let opts = CompilerOptions::default();
+
+    // --- partition: two devices, offload re-planned per shard -----------
+    let net = zoo::resnet18();
+    let pp = partition(
+        &net,
+        &device,
+        &opts,
+        &PartitionOptions { shards: Some(2), max_shards: 2 },
+    )?;
+    print!("{}", pp.report());
+
+    // --- fleet sim: credit-linked shards, 2 shared-nothing replicas ------
+    let fleet = FleetSim::new(&pp)?;
+    let two = fleet
+        .run(&FleetConfig { images: 4, warmup_images: 1, replicas: 2, ..Default::default() })?;
+    println!(
+        "fleet sim: per replica {:.0} im/s, 2-replica aggregate {:.0} im/s (bottleneck shard {} / {})",
+        two.per_replica_throughput,
+        two.aggregate_throughput,
+        two.bottleneck_shard,
+        two.bottleneck_engine
+    );
+    assert!(
+        two.aggregate_throughput >= 1.8 * two.per_replica_throughput,
+        "replication must scale: {:.0} vs {:.0}",
+        two.aggregate_throughput,
+        two.per_replica_throughput
+    );
+    println!("{}", two.to_json().to_string());
+
+    // --- fleet serving: 2 replicas behind the router ---------------------
+    let mut cfg = ServerConfig::builtin("mobilenet_edge", "artifacts")?;
+    cfg.batch_size = 8;
+    cfg.modelled_image_s = 1.0 / pp.est_throughput();
+    let router = Arc::new(FleetRouter::start(cfg, 2)?);
+    let mut handles = Vec::new();
+    for t in 0..4u64 {
+        let r = router.clone();
+        let per_client = n_requests / 4;
+        handles.push(std::thread::spawn(move || {
+            let mut rng = XorShift64::new(500 + t);
+            let mut ok = 0usize;
+            for _ in 0..per_client {
+                let img: Vec<i32> =
+                    (0..32 * 32 * 3).map(|_| rng.next_range(0, 255) as i32 - 128).collect();
+                if r.infer(img).is_ok() {
+                    ok += 1;
+                }
+            }
+            ok
+        }));
+    }
+    let mut total = 0usize;
+    for h in handles {
+        total += h.join().expect("client thread");
+    }
+    let rep = Arc::into_inner(router).expect("all clients done").shutdown();
+    println!(
+        "served {total} requests over {} replicas: wall {:.0} im/s, p99 {:.2} ms",
+        rep.replicas, rep.wall_throughput, rep.p99_ms
+    );
+    println!("{}", rep.to_json().to_string());
+    assert_eq!(rep.completed as usize, total);
+    assert!(rep.per_replica.iter().all(|r| r.completed > 0), "both replicas must serve");
+    println!("cluster serve OK");
+    Ok(())
+}

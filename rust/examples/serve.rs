@@ -46,6 +46,8 @@ fn main() -> anyhow::Result<()> {
     // --- serve real inference requests ----------------------------------
     let mut cfg = ServerConfig::cifarnet("artifacts");
     cfg.batch_size = 16;
+    // modelled service time: prefer the cycle sim's measured rate over
+    // the plan estimate (`with_modelled_plan` is the analytic shortcut)
     cfg.modelled_image_s = 1.0 / sim.throughput;
     let srv = Arc::new(InferenceServer::start(cfg)?);
 

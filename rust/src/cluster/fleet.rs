@@ -1,0 +1,337 @@
+//! Fleet-level cycle simulation: one [`PipelineSim`] per shard, composed
+//! through credit-based inter-device links.
+//!
+//! Each shard runs on its own simulated FPGA (own HBM stacks, own weight
+//! distribution network, own §IV-B freeze semantics). The boundary
+//! activation stream between consecutive shards crosses a credit-based
+//! link modelled exactly like the §V-A weight fabric: the downstream
+//! device exposes its receive FIFO as a credit window (in boundary-tensor
+//! lines), the upstream sink may only run `capacity` lines ahead of the
+//! downstream head, and at the bound it blocks — back-pressure propagates
+//! through the upstream shard instead of dropping data. All shards step
+//! from the same 1200 MHz base tick, so the core/HBM clock-domain
+//! relationship of the single-device simulator composes unchanged.
+
+use anyhow::{ensure, Result};
+
+use crate::cluster::partition::PartitionPlan;
+use crate::fabric::CreditCounter;
+use crate::sim::pipeline::PipelineSim;
+use crate::util::Json;
+
+/// Fleet simulation parameters.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Images pushed through every replica pipeline.
+    pub images: u64,
+    /// Leading images excluded from the throughput measurement.
+    pub warmup_images: u64,
+    /// Safety valve on base ticks (per replica).
+    pub max_base_ticks: u64,
+    /// Inter-device link capacity in boundary-tensor lines — the receive
+    /// FIFO a downstream device advertises as credits.
+    pub link_capacity_lines: u32,
+    /// Identical replicas of the whole sharded pipeline.
+    pub replicas: u32,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        Self {
+            images: 6,
+            warmup_images: 2,
+            max_base_ticks: 40_000_000_000,
+            link_capacity_lines: 4,
+            replicas: 1,
+        }
+    }
+}
+
+/// Per-link measurement (shard `i` -> shard `i + 1`).
+#[derive(Debug, Clone)]
+pub struct LinkStats {
+    /// Boundary lines transferred over the link.
+    pub lines: u64,
+    /// Peak link occupancy in lines (never exceeds the capacity).
+    pub peak_occupancy: u64,
+    /// Core cycles the upstream sink spent blocked on link credit.
+    pub upstream_blocked: u64,
+}
+
+/// Per-shard measurement within one replica.
+#[derive(Debug, Clone)]
+pub struct ShardStats {
+    pub name: String,
+    /// Busiest weight engine of the shard and its active cycles.
+    pub bottleneck_engine: String,
+    pub bottleneck_active: u64,
+}
+
+/// Aggregate fleet simulation results.
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    pub network: String,
+    pub shards: usize,
+    pub replicas: u32,
+    /// Mean steady-state throughput of one replica (im/s).
+    pub per_replica_throughput: f64,
+    /// Summed throughput across replicas (im/s).
+    pub aggregate_throughput: f64,
+    /// First-image latency through the whole shard pipeline (s).
+    pub latency: f64,
+    /// Index of the slowest shard (the fleet bottleneck).
+    pub bottleneck_shard: usize,
+    /// Busiest engine within the bottleneck shard.
+    pub bottleneck_engine: String,
+    pub shard_stats: Vec<ShardStats>,
+    pub links: Vec<LinkStats>,
+    /// Core cycles one replica ran for.
+    pub core_cycles: u64,
+}
+
+impl FleetReport {
+    /// Machine-scrapable form (see `Metrics::to_json` for the serving
+    /// counterpart).
+    pub fn to_json(&self) -> Json {
+        let mut links = Json::Arr(Vec::new());
+        for l in &self.links {
+            let mut o = Json::obj();
+            o.set("lines", l.lines)
+                .set("peak_occupancy", l.peak_occupancy)
+                .set("upstream_blocked", l.upstream_blocked);
+            links.push(o);
+        }
+        let mut shards = Json::Arr(Vec::new());
+        for s in &self.shard_stats {
+            let mut o = Json::obj();
+            o.set("name", s.name.as_str())
+                .set("bottleneck_engine", s.bottleneck_engine.as_str())
+                .set("bottleneck_active", s.bottleneck_active);
+            shards.push(o);
+        }
+        let mut o = Json::obj();
+        o.set("network", self.network.as_str())
+            .set("shards", self.shards)
+            .set("replicas", self.replicas)
+            .set("per_replica_throughput", self.per_replica_throughput)
+            .set("aggregate_throughput", self.aggregate_throughput)
+            .set("latency_s", self.latency)
+            .set("bottleneck_shard", self.bottleneck_shard)
+            .set("bottleneck_engine", self.bottleneck_engine.as_str())
+            .set("shard_stats", shards)
+            .set("links", links)
+            .set("core_cycles", self.core_cycles);
+        o
+    }
+}
+
+/// Result of one replica run.
+struct ReplicaRun {
+    throughput: f64,
+    latency: f64,
+    bottleneck_shard: usize,
+    bottleneck_engine: String,
+    shard_stats: Vec<ShardStats>,
+    links: Vec<LinkStats>,
+    core_cycles: u64,
+}
+
+/// The fleet: N replicas of an M-shard pipeline.
+pub struct FleetSim {
+    pp: PartitionPlan,
+}
+
+impl FleetSim {
+    /// Build from a partition plan; validates the boundary tensors.
+    pub fn new(pp: &PartitionPlan) -> Result<Self> {
+        ensure!(!pp.shards.is_empty(), "partition has no shards");
+        for w in pp.shards.windows(2) {
+            let up = w[0].net.layers().last().expect("non-empty shard").out;
+            let down = w[1].net.input_shape();
+            ensure!(up == down, "boundary shape mismatch: {up} -> {down}");
+        }
+        Ok(Self { pp: pp.clone() })
+    }
+
+    /// Run the fleet. One replica's shard pipeline is co-simulated
+    /// cycle-accurately; replicas share no simulated hardware and the
+    /// simulation is fully deterministic, so N identical replicas are an
+    /// exact N-fold scale-out of that run rather than N redundant
+    /// simulations.
+    pub fn run(&self, cfg: &FleetConfig) -> Result<FleetReport> {
+        ensure!(cfg.replicas >= 1, "need at least one replica");
+        ensure!(cfg.link_capacity_lines >= 1, "link capacity must be >= 1 line");
+        let run = self.run_replica(cfg)?;
+        Ok(FleetReport {
+            network: self.pp.network.clone(),
+            shards: self.pp.shards.len(),
+            replicas: cfg.replicas,
+            per_replica_throughput: run.throughput,
+            aggregate_throughput: run.throughput * cfg.replicas as f64,
+            latency: run.latency,
+            bottleneck_shard: run.bottleneck_shard,
+            bottleneck_engine: run.bottleneck_engine,
+            shard_stats: run.shard_stats,
+            links: run.links,
+            core_cycles: run.core_cycles,
+        })
+    }
+
+    /// Cycle-accurate co-simulation of one replica's shard pipeline.
+    fn run_replica(&self, cfg: &FleetConfig) -> Result<ReplicaRun> {
+        let images = cfg.images.max(cfg.warmup_images + 1);
+        let shards = &self.pp.shards;
+        let mut sims = shards
+            .iter()
+            .map(|s| PipelineSim::new(&s.net, &s.plan))
+            .collect::<Result<Vec<_>>>()?;
+        let n = sims.len();
+        let cap = cfg.link_capacity_lines as u64;
+        let mut credits: Vec<CreditCounter> =
+            (1..n).map(|_| CreditCounter::new(cfg.link_capacity_lines)).collect();
+        let mut peak = vec![0u64; n.saturating_sub(1)];
+
+        // Initial bounds: nothing has arrived downstream yet; every
+        // upstream sink may run one credit window ahead.
+        for i in 0..n.saturating_sub(1) {
+            sims[i].set_sink_limit(cap);
+            sims[i + 1].set_input_limit(0);
+        }
+
+        let mut warmup_done_at: Option<u64> = None;
+        loop {
+            ensure!(
+                sims[n - 1].base_ticks() < cfg.max_base_ticks,
+                "fleet simulation exceeded max_base_ticks — pipeline wedged?"
+            );
+            for s in sims.iter_mut() {
+                s.step_base_tick(images);
+            }
+            // Exchange link state: occupancy is lines offered upstream
+            // minus lines retired downstream; the hardware-style counter
+            // must never be overdrawn (that would mean dropped data).
+            for i in 0..n - 1 {
+                let produced = sims[i].sink_lines_produced();
+                let consumed = sims[i + 1].head_lines_consumed();
+                let occupancy = produced - consumed;
+                let held = credits[i].outstanding() as u64;
+                if occupancy > held {
+                    ensure!(
+                        credits[i].acquire((occupancy - held) as u32),
+                        "link {i} overran its credit window"
+                    );
+                } else if held > occupancy {
+                    credits[i].release((held - occupancy) as u32);
+                }
+                peak[i] = peak[i].max(occupancy);
+                sims[i].set_sink_limit(consumed + cap);
+                sims[i + 1].set_input_limit(produced);
+            }
+            if warmup_done_at.is_none() && sims[n - 1].sink_images_done() >= cfg.warmup_images {
+                warmup_done_at = Some(sims[n - 1].core_cycles());
+            }
+            if sims.iter().all(|s| s.all_done(images)) {
+                break;
+            }
+        }
+
+        let hz = shards[0].plan.device.core_mhz as f64 * 1e6;
+        let last = &sims[n - 1];
+        let span = last.core_cycles() - warmup_done_at.unwrap_or(0);
+        let throughput = (images - cfg.warmup_images) as f64 * hz / span.max(1) as f64;
+        let latency = last.first_image_done_cycle().map(|c| c as f64 / hz).unwrap_or(f64::NAN);
+
+        let shard_stats: Vec<ShardStats> = sims
+            .iter()
+            .zip(shards.iter())
+            .map(|(sim, sh)| {
+                let (engine, active) = sim.busiest_engine();
+                ShardStats {
+                    name: sh.plan.network.clone(),
+                    bottleneck_engine: engine,
+                    bottleneck_active: active,
+                }
+            })
+            .collect();
+        let bottleneck_shard = shard_stats
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, s)| s.bottleneck_active)
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        let bottleneck_engine = shard_stats[bottleneck_shard].bottleneck_engine.clone();
+        let links = (0..n - 1)
+            .map(|i| LinkStats {
+                lines: sims[i].sink_lines_produced(),
+                peak_occupancy: peak[i],
+                upstream_blocked: sims[i].sink_output_blocked(),
+            })
+            .collect();
+        Ok(ReplicaRun {
+            throughput,
+            latency,
+            bottleneck_shard,
+            bottleneck_engine,
+            shard_stats,
+            links,
+            core_cycles: last.core_cycles(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::partition::{partition, PartitionOptions};
+    use crate::config::{CompilerOptions, DeviceConfig};
+    use crate::nn::zoo;
+
+    fn quick() -> FleetConfig {
+        FleetConfig { images: 3, warmup_images: 1, ..Default::default() }
+    }
+
+    #[test]
+    fn single_shard_fleet_matches_plain_sim() {
+        let d = DeviceConfig::stratix10_nx2100();
+        let net = zoo::resnet18();
+        let o = CompilerOptions::default();
+        let pp = partition(&net, &d, &o, &PartitionOptions::default()).unwrap();
+        assert_eq!(pp.num_shards(), 1);
+        let fleet = FleetSim::new(&pp).unwrap();
+        let rep = fleet.run(&quick()).unwrap();
+        let plain = crate::sim::pipeline::simulate(
+            &net,
+            &crate::compiler::compile(&net, &d, &o).unwrap(),
+            &crate::sim::pipeline::SimConfig {
+                images: 3,
+                warmup_images: 1,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let ratio = rep.aggregate_throughput / plain.throughput;
+        assert!(
+            (0.95..1.05).contains(&ratio),
+            "1-shard fleet {:.0} vs plain sim {:.0}",
+            rep.aggregate_throughput,
+            plain.throughput
+        );
+        assert!(rep.links.is_empty());
+    }
+
+    #[test]
+    fn two_shard_fleet_conserves_lines() {
+        let d = DeviceConfig::stratix10_nx2100();
+        let net = zoo::resnet18();
+        let o = CompilerOptions::default();
+        let pp = partition(&net, &d, &o, &PartitionOptions { shards: Some(2), max_shards: 2 })
+            .unwrap();
+        let fleet = FleetSim::new(&pp).unwrap();
+        let cfg = quick();
+        let rep = fleet.run(&cfg).unwrap();
+        assert!(rep.aggregate_throughput > 0.0);
+        let boundary_h = pp.shards[0].net.layers().last().unwrap().out.h as u64;
+        assert_eq!(rep.links[0].lines, cfg.images * boundary_h, "no line lost or duplicated");
+        assert!(rep.links[0].peak_occupancy <= cfg.link_capacity_lines as u64);
+    }
+}

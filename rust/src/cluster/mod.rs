@@ -1,0 +1,29 @@
+//! Multi-FPGA clustering: sharding, replication, and fleet serving.
+//!
+//! The single-device pipeline stops scaling when a network's memory
+//! system outgrows one FPGA's M20K and pseudo-channel budget. This
+//! module scales it out in three layers:
+//!
+//! * [`partition`] — cuts a network into pipeline-parallel shards at
+//!   layer boundaries where a single activation stream crosses, balances
+//!   per-shard M20K/DSP and HBM demand, and compiles each shard as a
+//!   standalone accelerator (Eq. 1 / Algorithm 1 offload decisions are
+//!   re-run per shard against a full device);
+//! * [`fleet`] — cycle-level co-simulation of all shards, one
+//!   [`crate::sim::pipeline::PipelineSim`] per device, with inter-device
+//!   links modelled as credit-based FIFOs so shard-to-shard back-pressure
+//!   and the §IV-B freeze semantics compose across devices;
+//! * [`router`] — fleet-level serving: least-outstanding-requests routing
+//!   across N replicas with per-replica bounded queues, failover, and
+//!   merged metrics.
+//!
+//! Entry points: `h2pipe serve --replicas N --shards M` and the
+//! `cluster_serve` example.
+
+pub mod fleet;
+pub mod partition;
+pub mod router;
+
+pub use fleet::{FleetConfig, FleetReport, FleetSim, LinkStats, ShardStats};
+pub use partition::{partition, partition_at, PartitionOptions, PartitionPlan, ShardPlan};
+pub use router::{FleetRouter, FleetServeReport};

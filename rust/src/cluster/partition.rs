@@ -1,0 +1,443 @@
+//! Pipeline-parallel partitioning of one CNN across multiple FPGAs.
+//!
+//! H2PIPE's layer-pipelined dataflow trades chip area for throughput, so
+//! the largest networks saturate a single device's M20K and
+//! pseudo-channel budget. The partition planner cuts a network into
+//! contiguous layer ranges ("shards") at boundaries where exactly one
+//! activation stream crosses — a residual skip spanning a cut would need
+//! a second inter-device link — and compiles every shard as a standalone
+//! accelerator against the *same* per-device budget. Compiling per shard
+//! re-runs the whole single-device pipeline (parallelism allocation, the
+//! Eq. 1 score, Algorithm 1 offload, §V-B PC assignment), so each device
+//! gets its own hybrid memory system sized to the layers it actually
+//! hosts.
+//!
+//! Balancing uses the per-layer M20K floor (activation buffers plus the
+//! cheaper of on-chip weight storage at minimum parallelism or the HBM
+//! FIFO cost): memory fit is the binding constraint that forces
+//! multi-device plans in the first place, and the compiler's own
+//! memory-fit co-iteration then settles compute within each shard.
+
+use anyhow::{ensure, Context, Result};
+
+use crate::compiler::{self, resources::M20K_BITS, AcceleratorPlan, LayerStats};
+use crate::config::{CompilerOptions, DeviceConfig};
+use crate::nn::Network;
+use crate::util::ceil_div;
+
+/// Options controlling the partition search.
+#[derive(Debug, Clone)]
+pub struct PartitionOptions {
+    /// Exact shard count, or `None` for the smallest count whose shards
+    /// all fit the device.
+    pub shards: Option<usize>,
+    /// Upper bound on the auto search.
+    pub max_shards: usize,
+}
+
+impl Default for PartitionOptions {
+    fn default() -> Self {
+        Self { shards: None, max_shards: 8 }
+    }
+}
+
+/// One shard: a contiguous run of the original network compiled as a
+/// standalone accelerator.
+#[derive(Debug, Clone)]
+pub struct ShardPlan {
+    /// First original-network layer id in the shard (layer 0, the input
+    /// placeholder, belongs to no shard).
+    pub first_layer: usize,
+    /// Last original-network layer id in the shard (inclusive).
+    pub last_layer: usize,
+    /// The shard as a standalone network: a synthetic input carrying the
+    /// boundary tensor, then the original layers.
+    pub net: Network,
+    /// The shard's compiled plan — offload decisions re-run per shard.
+    pub plan: AcceleratorPlan,
+}
+
+/// A network partitioned into pipeline-parallel shards.
+#[derive(Debug, Clone)]
+pub struct PartitionPlan {
+    pub network: String,
+    pub shards: Vec<ShardPlan>,
+}
+
+impl PartitionPlan {
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Analytic fleet throughput bound: the slowest shard paces the
+    /// pipeline.
+    pub fn est_throughput(&self) -> f64 {
+        self.shards.iter().map(|s| s.plan.est_throughput).fold(f64::INFINITY, f64::min)
+    }
+
+    /// Index of the analytically slowest shard.
+    pub fn bottleneck_shard(&self) -> usize {
+        self.shards
+            .iter()
+            .enumerate()
+            .min_by(|(_, a), (_, b)| {
+                a.plan.est_throughput.partial_cmp(&b.plan.est_throughput).unwrap()
+            })
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+
+    /// Human-readable partition summary.
+    pub fn report(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "=== partition: {} into {} shard(s), est {:.0} im/s ===",
+            self.network,
+            self.shards.len(),
+            self.est_throughput()
+        );
+        for (i, sh) in self.shards.iter().enumerate() {
+            let _ = writeln!(
+                s,
+                "  shard{i}: layers {:3}..={:3}  M20K {:5}/{} ({:.0}%)  AI-TB {:.0}%  \
+                 {} on HBM  est {:.0} im/s",
+                sh.first_layer,
+                sh.last_layer,
+                sh.plan.usage.m20k,
+                sh.plan.device.m20k_blocks,
+                100.0 * sh.plan.usage.m20k_frac(&sh.plan.device),
+                100.0 * sh.plan.usage.tb_frac(&sh.plan.device),
+                sh.plan.hbm_layers().count(),
+                sh.plan.est_throughput,
+            );
+        }
+        s
+    }
+}
+
+/// Cut validity per position: `valid[p]` means a shard boundary *before*
+/// original layer `p` is legal — the only edge crossing the cut is the
+/// boundary activation stream out of layer `p - 1`. Any other crossing
+/// edge (a residual skip spanning the cut) would need a second
+/// inter-device stream, which the single-link fleet fabric does not
+/// provide.
+fn valid_cuts(net: &Network) -> Vec<bool> {
+    let n = net.len();
+    let mut ok = vec![true; n + 1];
+    for l in net.layers() {
+        for &u in &l.inputs {
+            // edge u -> l.id crosses every cut p in (u+1, l.id]; only
+            // p == u + 1 keeps the producer on the boundary.
+            for v in &mut ok[(u + 2)..=l.id] {
+                *v = false;
+            }
+        }
+    }
+    ok
+}
+
+/// Per-layer M20K floor used for balancing: activation buffers plus the
+/// cheaper weight home (on-chip at minimum parallelism vs. HBM FIFOs at
+/// BL8) — the quantity the per-device budget binds on.
+fn layer_cost(s: &LayerStats) -> u64 {
+    let act = ceil_div(s.act_bits, M20K_BITS);
+    let weights = if s.has_weights {
+        // on-chip at p=(1,1): capacity + one chain's 2-block banking, per
+        // duplicate (matches LayerPlan::onchip_weight_m20k)
+        (s.weight_m20k + 2 * s.dup).min(s.hbm_weight_m20k(8))
+    } else {
+        0
+    };
+    act + weights
+}
+
+/// Choose `m - 1` cut positions from the valid set minimizing the maximum
+/// shard cost; every shard must hold at least one weight layer. Returns
+/// `None` when the valid cuts cannot support `m` shards.
+fn balanced_cuts(stats: &[LayerStats], valid: &[bool], m: usize) -> Option<Vec<usize>> {
+    let n = stats.len();
+    // prefix sums over real layers 1..n
+    let mut cost = vec![0u64; n + 1];
+    let mut weighted = vec![0u64; n + 1];
+    for i in 1..n {
+        cost[i + 1] = cost[i] + layer_cost(&stats[i]);
+        weighted[i + 1] = weighted[i] + u64::from(stats[i].has_weights);
+    }
+    let seg_cost = |a: usize, b: usize| cost[b] - cost[a];
+    let seg_weights = |a: usize, b: usize| weighted[b] - weighted[a];
+
+    // dp[k][p]: minimal max-shard-cost splitting layers 1..p into k shards
+    // with a boundary at p; prev[k][p] reconstructs the cuts.
+    const INF: u64 = u64::MAX;
+    let mut dp = vec![vec![INF; n + 1]; m + 1];
+    let mut prev = vec![vec![0usize; n + 1]; m + 1];
+    dp[0][1] = 0;
+    for k in 1..=m {
+        for p in 2..=n {
+            if p != n && !valid[p] {
+                continue;
+            }
+            let mut best = INF;
+            let mut arg = 0usize;
+            for q in 1..p {
+                if dp[k - 1][q] == INF || seg_weights(q, p) == 0 {
+                    continue;
+                }
+                let c = dp[k - 1][q].max(seg_cost(q, p));
+                if c < best {
+                    best = c;
+                    arg = q;
+                }
+            }
+            dp[k][p] = best;
+            prev[k][p] = arg;
+        }
+    }
+    if dp[m][n] == INF {
+        return None;
+    }
+    let mut cuts = Vec::with_capacity(m - 1);
+    let mut p = n;
+    for k in (2..=m).rev() {
+        p = prev[k][p];
+        cuts.push(p);
+    }
+    cuts.reverse();
+    Some(cuts)
+}
+
+/// Materialize original layers `[first, end)` as a standalone network
+/// whose input carries the boundary producer's output tensor.
+fn build_shard_net(net: &Network, first: usize, end: usize, shard_idx: usize) -> Result<Network> {
+    let boundary = first - 1;
+    let name = format!("{}.shard{shard_idx}", net.name);
+    let mut sub = Network::new(&name, net.layer(boundary).out);
+    let mut map = vec![usize::MAX; net.len()];
+    map[boundary] = 0;
+    for id in first..end {
+        let l = net.layer(id);
+        let inputs = l
+            .inputs
+            .iter()
+            .map(|&u| {
+                ensure!(
+                    map[u] != usize::MAX,
+                    "layer {} consumes layer {u} from outside shard {shard_idx}",
+                    l.name
+                );
+                Ok(map[u])
+            })
+            .collect::<Result<Vec<_>>>()?;
+        map[id] = sub.add(&l.name, l.op.clone(), &inputs)?;
+    }
+    sub.validate().with_context(|| format!("shard {shard_idx} of {}", net.name))?;
+    Ok(sub)
+}
+
+/// Partition at explicit cut positions (`cuts[i]` is the first original
+/// layer id of shard `i + 1`), compiling every shard against `device`.
+pub fn partition_at(
+    net: &Network,
+    device: &DeviceConfig,
+    opts: &CompilerOptions,
+    cuts: &[usize],
+) -> Result<PartitionPlan> {
+    net.validate()?;
+    let valid = valid_cuts(net);
+    let n = net.len();
+    let mut bounds = Vec::with_capacity(cuts.len() + 2);
+    bounds.push(1usize);
+    for &c in cuts {
+        ensure!((2..n).contains(&c), "cut position {c} out of range 2..{n}");
+        ensure!(
+            valid[c],
+            "cut before layer {c} ({}) is crossed by a residual edge",
+            net.layer(c).name
+        );
+        ensure!(*bounds.last().unwrap() < c, "cut positions must be strictly increasing");
+        bounds.push(c);
+    }
+    bounds.push(n);
+
+    let mut shards = Vec::with_capacity(bounds.len() - 1);
+    for (i, w) in bounds.windows(2).enumerate() {
+        let sub = build_shard_net(net, w[0], w[1], i)?;
+        ensure!(
+            sub.weight_layers().next().is_some(),
+            "shard {i} (layers {}..={}) holds no weight layer",
+            w[0],
+            w[1] - 1
+        );
+        let plan = compiler::compile(&sub, device, opts)
+            .with_context(|| format!("compiling shard {i} (layers {}..={})", w[0], w[1] - 1))?;
+        shards.push(ShardPlan { first_layer: w[0], last_layer: w[1] - 1, net: sub, plan });
+    }
+    Ok(PartitionPlan { network: net.name.clone(), shards })
+}
+
+/// Partition a network across identical devices: the smallest shard count
+/// (or the exact count in [`PartitionOptions::shards`]) whose
+/// cost-balanced shards all compile within the per-device budget.
+pub fn partition(
+    net: &Network,
+    device: &DeviceConfig,
+    opts: &CompilerOptions,
+    popts: &PartitionOptions,
+) -> Result<PartitionPlan> {
+    net.validate()?;
+    let stats: Vec<LayerStats> =
+        net.layers().iter().map(|l| LayerStats::from_layer(l, opts)).collect();
+    let valid = valid_cuts(net);
+    let (lo, hi) = match popts.shards {
+        Some(m) => {
+            ensure!(m >= 1, "shard count must be >= 1");
+            (m, m)
+        }
+        None => (1, popts.max_shards.max(1)),
+    };
+    let mut last_err: Option<anyhow::Error> = None;
+    for m in lo..=hi {
+        let cuts = if m == 1 { Some(Vec::new()) } else { balanced_cuts(&stats, &valid, m) };
+        let Some(cuts) = cuts else { continue };
+        match partition_at(net, device, opts, &cuts) {
+            Ok(plan) => return Ok(plan),
+            Err(e) => last_err = Some(e),
+        }
+    }
+    Err(last_err.unwrap_or_else(|| {
+        anyhow::anyhow!("no legal cut set yields the requested shard count")
+    }))
+    .with_context(|| {
+        format!("partitioning {} into {lo}..={hi} shard(s) on {}", net.name, device.name)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::zoo;
+
+    fn device() -> DeviceConfig {
+        DeviceConfig::stratix10_nx2100()
+    }
+
+    #[test]
+    fn residual_spans_invalidate_cuts() {
+        let net = zoo::resnet18();
+        let valid = valid_cuts(&net);
+        // layers: 0 input, 1 conv1, 2 maxpool, 3 layer1.0.conv1,
+        // 4 layer1.0.conv2, 5 layer1.0.add (skip 2 -> 5).
+        assert!(valid[3], "cut before the first residual block is legal");
+        assert!(!valid[4], "cut inside a residual block crosses the skip");
+        assert!(!valid[5]);
+        assert!(valid[6], "cut between blocks is legal");
+    }
+
+    #[test]
+    fn plain_chains_cut_anywhere() {
+        let net = zoo::vgg16();
+        let valid = valid_cuts(&net);
+        for p in 2..net.len() {
+            assert!(valid[p], "VGG-16 has no skips; cut {p} must be legal");
+        }
+    }
+
+    #[test]
+    fn explicit_two_way_partition_covers_the_network() {
+        let net = zoo::resnet18();
+        let pp = partition_at(&net, &device(), &CompilerOptions::default(), &[6]).unwrap();
+        assert_eq!(pp.num_shards(), 2);
+        assert_eq!(pp.shards[0].first_layer, 1);
+        assert_eq!(pp.shards[1].last_layer, net.len() - 1);
+        assert_eq!(pp.shards[1].first_layer, pp.shards[0].last_layer + 1);
+        // boundary tensors line up
+        assert_eq!(
+            pp.shards[1].net.input_shape(),
+            pp.shards[0].net.layers().last().unwrap().out
+        );
+        // every shard fits the device on its own
+        for sh in &pp.shards {
+            assert!(sh.plan.usage.m20k <= device().m20k_blocks as u64);
+        }
+    }
+
+    #[test]
+    fn auto_partition_uses_one_shard_when_it_fits() {
+        let net = zoo::mobilenet_v2();
+        let pp = partition(
+            &net,
+            &device(),
+            &CompilerOptions::default(),
+            &PartitionOptions::default(),
+        )
+        .unwrap();
+        assert_eq!(pp.num_shards(), 1);
+    }
+
+    #[test]
+    fn forced_shard_count_balances_cost() {
+        let net = zoo::vgg16();
+        let o = CompilerOptions::default();
+        let pp = partition(
+            &net,
+            &device(),
+            &o,
+            &PartitionOptions { shards: Some(3), max_shards: 3 },
+        )
+        .unwrap();
+        assert_eq!(pp.num_shards(), 3);
+        // balanced: no shard may carry (nearly) the whole cost
+        let stats: Vec<LayerStats> =
+            net.layers().iter().map(|l| LayerStats::from_layer(l, &o)).collect();
+        let total: u64 = stats[1..].iter().map(layer_cost).sum();
+        for sh in &pp.shards {
+            let c: u64 =
+                (sh.first_layer..=sh.last_layer).map(|i| layer_cost(&stats[i])).sum();
+            assert!(
+                c < total * 3 / 4,
+                "shard {}..{} holds {c}/{total}",
+                sh.first_layer,
+                sh.last_layer
+            );
+        }
+    }
+
+    #[test]
+    fn weightless_shard_is_rejected() {
+        // cuts [2, 3] isolate the stem maxpool alone in the middle shard
+        let net = zoo::resnet18();
+        let err =
+            partition_at(&net, &device(), &CompilerOptions::default(), &[2, 3]).unwrap_err();
+        assert!(format!("{err:#}").contains("no weight layer"), "{err:#}");
+    }
+
+    #[test]
+    fn invalid_cut_is_rejected() {
+        let net = zoo::resnet18();
+        let err = partition_at(&net, &device(), &CompilerOptions::default(), &[4]).unwrap_err();
+        assert!(format!("{err:#}").contains("residual"), "{err:#}");
+    }
+
+    #[test]
+    fn shard_offload_decisions_are_local() {
+        // Each shard re-runs Algorithm 1 against a full device. Either
+        // half of VGG-16 still exceeds the 140 Mb BRAM on its own, so
+        // every shard must offload to its *own* HBM — and stay within its
+        // own pseudo-channel bandwidth.
+        let net = zoo::vgg16();
+        let o = CompilerOptions::default();
+        let d = device();
+        let pp =
+            partition(&net, &d, &o, &PartitionOptions { shards: Some(2), max_shards: 2 })
+                .unwrap();
+        let cap = d.usable_pcs() as u64 * d.chains_per_pc() as u64;
+        for (i, sh) in pp.shards.iter().enumerate() {
+            let offloaded = sh.plan.hbm_layers().count();
+            assert!(offloaded > 0, "shard {i} must offload to its own HBM");
+            let slots: u64 = sh.plan.hbm_layers().map(|l| l.par.chains() as u64).sum();
+            assert!(slots + sh.plan.free_bw_slots == cap, "shard {i} oversubscribed: {slots}");
+        }
+    }
+}

@@ -1,0 +1,209 @@
+//! Fleet-level request router: least-outstanding-requests over N replica
+//! servers.
+//!
+//! Each replica is a full [`InferenceServer`] (own worker thread, own
+//! bounded queue, own batcher), standing in for one sharded accelerator
+//! fleet. The router keeps an outstanding-request count per replica,
+//! sends every request to the least-loaded replica (ties rotate
+//! round-robin so idle fleets still share work), and fails over to the
+//! next-least-loaded replica when a bounded queue rejects. Latency and
+//! rejection accounting happens at the router in a merged
+//! [`Metrics`], so the fleet report reflects what clients observed —
+//! including failover time — next to the per-replica breakdowns.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{InferenceServer, Metrics, ServerConfig, ServerReport};
+use crate::util::Json;
+
+struct Replica {
+    server: InferenceServer,
+    outstanding: AtomicUsize,
+}
+
+/// Router over N identical replicas.
+pub struct FleetRouter {
+    replicas: Vec<Replica>,
+    /// Round-robin tie-break cursor.
+    rr: AtomicUsize,
+    metrics: Mutex<Metrics>,
+}
+
+/// Fleet serving summary: merged client-side metrics plus the per-replica
+/// server reports.
+#[derive(Debug, Clone)]
+pub struct FleetServeReport {
+    pub replicas: usize,
+    pub completed: u64,
+    /// Requests no replica could absorb.
+    pub rejected: u64,
+    pub wall_throughput: f64,
+    pub mean_latency_ms: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    /// Summed modelled FPGA rate across replicas.
+    pub modelled_throughput: f64,
+    /// Merged router-level [`Metrics::to_json`] snapshot — the single
+    /// source for the scalar metric keys in the JSON form.
+    pub metrics: Json,
+    pub per_replica: Vec<ServerReport>,
+}
+
+impl FleetServeReport {
+    /// Machine-scrapable form (the serve CLI emits this). Scalar metric
+    /// keys live in the embedded `metrics` object so the field list is
+    /// defined once, in [`Metrics::to_json`].
+    pub fn to_json(&self) -> Json {
+        let mut reps = Json::Arr(Vec::new());
+        for r in &self.per_replica {
+            reps.push(r.to_json());
+        }
+        let mut o = Json::obj();
+        o.set("replicas", self.replicas)
+            .set("metrics", self.metrics.clone())
+            .set("modelled_throughput_rps", self.modelled_throughput)
+            .set("per_replica", reps);
+        o
+    }
+}
+
+impl FleetRouter {
+    /// Boot `replicas` identical servers from one config.
+    pub fn start(cfg: ServerConfig, replicas: usize) -> Result<Self> {
+        anyhow::ensure!(replicas >= 1, "need at least one replica");
+        let replicas = (0..replicas)
+            .map(|i| {
+                Ok(Replica {
+                    server: InferenceServer::start(cfg.clone())
+                        .with_context(|| format!("starting replica {i}"))?,
+                    outstanding: AtomicUsize::new(0),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self { replicas, rr: AtomicUsize::new(0), metrics: Mutex::new(Metrics::new()) })
+    }
+
+    pub fn num_replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// Route one request to the replica with the fewest outstanding
+    /// requests; on rejection, fail over through the remaining replicas
+    /// in load order before giving up.
+    pub fn infer(&self, image: Vec<i32>) -> Result<Vec<i32>> {
+        let n = self.replicas.len();
+        let start = Instant::now();
+        let rot = self.rr.fetch_add(1, Ordering::Relaxed);
+        let mut order: Vec<usize> = (0..n).map(|k| (rot + k) % n).collect();
+        // stable sort: equal loads keep the rotated order
+        order.sort_by_key(|&i| self.replicas[i].outstanding.load(Ordering::SeqCst));
+        let mut last_err = None;
+        for &i in &order {
+            let r = &self.replicas[i];
+            r.outstanding.fetch_add(1, Ordering::SeqCst);
+            let res = r.server.infer(image.clone());
+            r.outstanding.fetch_sub(1, Ordering::SeqCst);
+            match res {
+                Ok(out) => {
+                    self.metrics.lock().unwrap().record(start.elapsed().as_secs_f64());
+                    return Ok(out);
+                }
+                Err(e) => last_err = Some(e),
+            }
+        }
+        self.metrics.lock().unwrap().rejected += 1;
+        Err(last_err.expect("at least one replica attempted"))
+            .context("all replicas rejected the request")
+    }
+
+    /// Stop every replica and produce the merged fleet report.
+    pub fn shutdown(self) -> FleetServeReport {
+        let per_replica: Vec<ServerReport> =
+            self.replicas.into_iter().map(|r| r.server.shutdown()).collect();
+        let mut m = self.metrics.into_inner().unwrap();
+        FleetServeReport {
+            replicas: per_replica.len(),
+            completed: m.completed,
+            rejected: m.rejected,
+            wall_throughput: m.throughput(),
+            mean_latency_ms: m.mean_latency_ms(),
+            p50_ms: m.latency_ms(50.0),
+            p99_ms: m.latency_ms(99.0),
+            modelled_throughput: per_replica.iter().map(|r| r.modelled_throughput).sum(),
+            metrics: m.to_json(),
+            per_replica,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifact_dir() -> String {
+        format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+    }
+
+    #[test]
+    fn round_robin_tie_break_spreads_idle_load() {
+        let cfg = ServerConfig::cifarnet(&artifact_dir());
+        let router = FleetRouter::start(cfg, 2).unwrap();
+        let img = vec![1i32; 32 * 32 * 3];
+        // strictly sequential traffic: every replica is idle at dispatch
+        // time, so the rotation alone must alternate them
+        for _ in 0..6 {
+            router.infer(img.clone()).unwrap();
+        }
+        let rep = router.shutdown();
+        assert_eq!(rep.completed, 6);
+        assert_eq!(rep.rejected, 0);
+        for (i, r) in rep.per_replica.iter().enumerate() {
+            assert_eq!(r.completed, 3, "replica {i} served {}", r.completed);
+        }
+    }
+
+    #[test]
+    fn failover_absorbs_a_full_replica_queue() {
+        // queue_depth 1 + batch 1: easy to overflow one replica; the
+        // router must fail over rather than reject while another replica
+        // has room.
+        let mut cfg = ServerConfig::cifarnet(&artifact_dir());
+        cfg.queue_depth = 1;
+        cfg.batch_size = 1;
+        let router = std::sync::Arc::new(FleetRouter::start(cfg, 3).unwrap());
+        let mut handles = Vec::new();
+        for t in 0..6u64 {
+            let r = router.clone();
+            handles.push(std::thread::spawn(move || {
+                let img = vec![t as i32; 32 * 32 * 3];
+                let mut ok = 0u64;
+                for _ in 0..8 {
+                    if r.infer(img.clone()).is_ok() {
+                        ok += 1;
+                    }
+                }
+                ok
+            }));
+        }
+        let total: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        let rep = std::sync::Arc::into_inner(router).unwrap().shutdown();
+        assert_eq!(rep.completed, total);
+        assert_eq!(rep.completed + rep.rejected, 48, "every request accounted for");
+    }
+
+    #[test]
+    fn merged_report_sums_modelled_rate() {
+        let mut cfg = ServerConfig::cifarnet(&artifact_dir());
+        cfg.modelled_image_s = 1.0 / 1000.0;
+        let router = FleetRouter::start(cfg, 4).unwrap();
+        let rep = router.shutdown();
+        assert_eq!(rep.replicas, 4);
+        assert!((rep.modelled_throughput - 4000.0).abs() < 1.0);
+        let j = rep.to_json().to_string();
+        assert!(j.contains("\"replicas\":4"), "{j}");
+    }
+}

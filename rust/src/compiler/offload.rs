@@ -227,6 +227,84 @@ mod tests {
         assert!(plan.offload[ranked[1]]);
     }
 
+    /// Synthetic weight layer for precise Algorithm 1 edge-case control.
+    fn synth_layer(name: &str, weight_bits: u64, dup: u64) -> LayerStats {
+        LayerStats {
+            layer: 0,
+            name: name.to_string(),
+            weight_bits,
+            weight_m20k: if weight_bits > 0 { ceil_div(weight_bits, M20K_BITS) * dup } else { 0 },
+            dup,
+            act_bits: 1 << 14,
+            weight_traffic_per_image: weight_bits / 8,
+            macs: 1_000,
+            out_h: 16,
+            out_w: 16,
+            kh: 3,
+            kw: 3,
+            ci: 16,
+            co: 16,
+            has_weights: weight_bits > 0,
+            depthwise: false,
+        }
+    }
+
+    #[test]
+    fn algorithm1_all_weightless_network_offloads_nothing() {
+        // pools/adds only: there is nothing Algorithm 1 can move, and the
+        // full pseudo-channel bandwidth must remain free.
+        let stats = vec![synth_layer("pool1", 0, 1), synth_layer("pool2", 0, 1)];
+        let par = vec![Parallelism { p_i: 1, p_o: 1 }; 2];
+        for force_all in [false, true] {
+            let plan = algorithm1(&stats, &par, 31, 3, force_all, |_| false);
+            assert!(plan.offload.iter().all(|&b| !b));
+            assert_eq!(plan.free_bw, 93, "bandwidth untouched");
+            assert!(plan.scores.iter().all(|s| *s == f64::NEG_INFINITY));
+        }
+    }
+
+    #[test]
+    fn algorithm1_bandwidth_exhausted_before_first_offload() {
+        // The best-scoring layer needs more chain slots than the whole
+        // HBM subsystem offers: it must be skipped without panicking, the
+        // remaining bandwidth intact for smaller layers behind it.
+        let wide = synth_layer("wide", 200 * M20K_BITS, 4);
+        let narrow = synth_layer("narrow", 50 * M20K_BITS, 1);
+        let stats = vec![wide, narrow];
+        let par = vec![
+            Parallelism { p_i: 7, p_o: 1 }, // 7 chains > 2 PCs x 3
+            Parallelism { p_i: 1, p_o: 1 },
+        ];
+        let plan = algorithm1(&stats, &par, 2, 3, true, |_| false);
+        assert!(!plan.offload[0], "over-wide layer cannot offload");
+        assert!(plan.offload[1], "bandwidth must flow to the next candidate");
+        assert_eq!(plan.free_bw, 5);
+
+        // zero usable pseudo-channels: nothing offloads at all
+        let plan = algorithm1(&stats, &par, 0, 3, true, |_| false);
+        assert!(plan.offload.iter().all(|&b| !b));
+        assert_eq!(plan.free_bw, 0);
+    }
+
+    #[test]
+    fn algorithm1_tie_break_on_equal_scores_is_deterministic() {
+        // Two identical layers have identical Eq. 1 scores; the stable
+        // sort must keep index order, so with bandwidth for only one of
+        // them the earlier layer wins — on every run.
+        let stats = vec![
+            synth_layer("twin_a", 100 * M20K_BITS, 2),
+            synth_layer("twin_b", 100 * M20K_BITS, 2),
+        ];
+        let par = vec![Parallelism { p_i: 1, p_o: 1 }; 2];
+        assert_eq!(score(&stats[0], par[0]), score(&stats[1], par[1]));
+        for _ in 0..3 {
+            let plan = algorithm1(&stats, &par, 1, 1, true, |_| false);
+            assert!(plan.offload[0], "first twin must win the tie");
+            assert!(!plan.offload[1]);
+            assert_eq!(plan.free_bw, 0);
+        }
+    }
+
     #[test]
     fn pc_assignment_is_clockwise_and_skips_pc16() {
         let d = DeviceConfig::stratix10_nx2100();

@@ -2,7 +2,7 @@
 
 use std::time::Instant;
 
-use crate::util::Percentiles;
+use crate::util::{Json, Percentiles};
 
 /// Accumulated serving metrics.
 #[derive(Debug)]
@@ -64,6 +64,22 @@ impl Metrics {
             self.completed as f64 / self.batches as f64
         }
     }
+
+    /// Machine-scrapable snapshot (`util::json` — NaN percentiles of an
+    /// empty window serialize as `null`). Server and fleet reports embed
+    /// this so serving metrics can be diffed and plotted like the bench
+    /// outputs.
+    pub fn to_json(&mut self) -> Json {
+        let mut o = Json::obj();
+        o.set("completed", self.completed)
+            .set("rejected", self.rejected)
+            .set("batches", self.batches)
+            .set("throughput_rps", self.throughput())
+            .set("mean_latency_ms", self.mean_latency_ms())
+            .set("p50_ms", self.latency_ms(50.0))
+            .set("p99_ms", self.latency_ms(99.0));
+        o
+    }
 }
 
 #[cfg(test)]
@@ -82,5 +98,19 @@ mod tests {
         assert!((m.latency_ms(50.0) - 50.5).abs() < 1e-9);
         assert_eq!(m.mean_batch_size(), 100.0);
         assert!(m.throughput() > 0.0);
+    }
+
+    #[test]
+    fn json_snapshot_is_scrapable() {
+        let mut m = Metrics::new();
+        m.record(0.010);
+        m.record(0.030);
+        m.record_batch(2);
+        let j = m.to_json().to_string();
+        assert!(j.contains("\"completed\":2"), "{j}");
+        assert!(j.contains("\"p50_ms\":20"), "{j}");
+        // an empty window must serialize NaN percentiles as null
+        let j = Metrics::new().to_json().to_string();
+        assert!(j.contains("\"mean_latency_ms\":null"), "{j}");
     }
 }

@@ -14,8 +14,10 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use crate::compiler::AcceleratorPlan;
 use crate::coordinator::metrics::Metrics;
-use crate::runtime::{Executable, Runtime};
+use crate::runtime::{reference, Executable, Runtime};
+use crate::util::Json;
 
 /// Server configuration.
 #[derive(Debug, Clone)]
@@ -32,22 +34,47 @@ pub struct ServerConfig {
     pub queue_depth: usize,
     /// How long the batcher waits to fill a batch.
     pub batch_timeout: Duration,
-    /// Modelled per-image FPGA service time in seconds (from the cycle
-    /// sim / plan estimate); used for the modelled-throughput report.
+    /// Modelled per-image FPGA service time in seconds. Populate it from
+    /// a compiled plan with [`ServerConfig::with_modelled_plan`] (or the
+    /// cycle sim's measured rate); left at 0.0 the report's
+    /// `modelled_throughput` is 0 rather than wrong.
     pub modelled_image_s: f64,
 }
 
 impl ServerConfig {
-    pub fn cifarnet(artifact_dir: &str) -> Self {
-        Self {
-            model: "cifarnet".into(),
+    /// Config for any built-in reference model (`runtime::reference`
+    /// `BUILTIN_MODELS`); input dims come from the model graph itself, so
+    /// they cannot drift from the backend.
+    pub fn builtin(model: &str, artifact_dir: &str) -> Result<Self> {
+        let input_dims = reference::builtin_input_dims(model).with_context(|| {
+            format!(
+                "model {model:?} is not a built-in reference model (available: {:?})",
+                reference::BUILTIN_MODELS
+            )
+        })?;
+        Ok(Self {
+            model: model.into(),
             artifact_dir: artifact_dir.into(),
-            input_dims: vec![32, 32, 3],
+            input_dims,
             batch_size: 8,
             queue_depth: 256,
             batch_timeout: Duration::from_millis(2),
             modelled_image_s: 0.0,
-        }
+        })
+    }
+
+    pub fn cifarnet(artifact_dir: &str) -> Self {
+        Self::builtin("cifarnet", artifact_dir).expect("cifarnet is a built-in model")
+    }
+
+    /// Derive the modelled FPGA service time from a compiled plan's
+    /// throughput estimate — the wiring every serve entry point needs, so
+    /// callers no longer hand-compute `1.0 / est_throughput` (or forget
+    /// and silently report a modelled rate of zero).
+    pub fn with_modelled_plan(mut self, plan: &AcceleratorPlan) -> Self {
+        self.modelled_image_s =
+            if plan.est_throughput > 0.0 { 1.0 / plan.est_throughput } else { 0.0 };
+        self
     }
 }
 
@@ -70,6 +97,23 @@ pub struct ServerReport {
     pub mean_batch: f64,
     /// What the modelled FPGA would have sustained on this stream.
     pub modelled_throughput: f64,
+}
+
+impl ServerReport {
+    /// Machine-scrapable form (emitted by the serve CLI and embedded in
+    /// fleet reports).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("completed", self.completed)
+            .set("rejected", self.rejected)
+            .set("wall_throughput_rps", self.wall_throughput)
+            .set("mean_latency_ms", self.mean_latency_ms)
+            .set("p50_ms", self.p50_ms)
+            .set("p99_ms", self.p99_ms)
+            .set("mean_batch", self.mean_batch)
+            .set("modelled_throughput_rps", self.modelled_throughput);
+        o
+    }
 }
 
 /// The inference server.
@@ -226,6 +270,51 @@ mod tests {
         assert_eq!(rep.completed, 20);
         assert!(rep.mean_latency_ms > 0.0);
         assert!((rep.modelled_throughput - 4174.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn modelled_rate_derives_from_plan() {
+        let d = crate::config::DeviceConfig::stratix10_nx2100();
+        let plan = crate::compiler::compile(
+            &crate::nn::zoo::resnet18(),
+            &d,
+            &crate::config::CompilerOptions::default(),
+        )
+        .unwrap();
+        let cfg = ServerConfig::cifarnet(&artifact_dir()).with_modelled_plan(&plan);
+        assert!(cfg.modelled_image_s > 0.0);
+        let srv = InferenceServer::start(cfg).unwrap();
+        srv.infer(vec![1i32; 32 * 32 * 3]).unwrap();
+        let rep = srv.shutdown();
+        assert!(
+            (rep.modelled_throughput - plan.est_throughput).abs() < 1.0,
+            "modelled {:.0} vs plan {:.0}",
+            rep.modelled_throughput,
+            plan.est_throughput
+        );
+        let j = rep.to_json().to_string();
+        assert!(j.contains("\"completed\":1"), "{j}");
+    }
+
+    #[test]
+    fn serves_residual_free_builtin() {
+        // mobilenet_edge: depthwise-separable, no skip path
+        let cfg = ServerConfig::builtin("mobilenet_edge", &artifact_dir()).unwrap();
+        assert_eq!(cfg.input_dims, vec![32, 32, 3]);
+        let srv = InferenceServer::start(cfg).unwrap();
+        let img = vec![9i32; 32 * 32 * 3];
+        let a = srv.infer(img.clone()).unwrap();
+        let b = srv.infer(img).unwrap();
+        assert_eq!(a.len(), 10);
+        assert_eq!(a, b);
+        let rep = srv.shutdown();
+        assert_eq!(rep.completed, 2);
+    }
+
+    #[test]
+    fn builtin_rejects_unknown_model() {
+        let err = ServerConfig::builtin("alexnet", &artifact_dir()).unwrap_err();
+        assert!(format!("{err:#}").contains("alexnet"));
     }
 
     #[test]

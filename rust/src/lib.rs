@@ -25,6 +25,10 @@
 //! * [`coordinator`] — the serving runtime: boot-time weight download
 //!   through the §IV-C write path, request batching, and dispatch to both
 //!   the timing model and the PJRT-executed AOT artifacts.
+//! * [`cluster`] — multi-FPGA scale-out: the partition planner that cuts
+//!   a network into pipeline-parallel shards, the fleet simulator that
+//!   composes one pipeline sim per device through credit-based
+//!   inter-device links, and the replica router for fleet serving.
 //! * [`runtime`] — pluggable execution backends behind one [`runtime::Backend`]
 //!   trait: a pure-Rust int8 reference interpreter (default, works in the
 //!   offline crate set with no artifacts) and, behind the non-default
@@ -41,6 +45,7 @@
 
 pub mod analysis;
 pub mod bench_harness;
+pub mod cluster;
 pub mod compiler;
 pub mod config;
 pub mod coordinator;

@@ -11,7 +11,7 @@
 //! h2pipe bounds
 //! h2pipe table3
 //! h2pipe boot         --model vgg16 [--write-path-bits N]
-//! h2pipe serve        [--requests N] [--batch N]
+//! h2pipe serve        [--requests N] [--batch N] [--replicas N] [--shards M]
 //! h2pipe infer
 //! ```
 
@@ -19,9 +19,10 @@ use std::collections::HashMap;
 
 use anyhow::{bail, Context, Result};
 use h2pipe::analysis;
+use h2pipe::cluster::{partition, FleetRouter, PartitionOptions};
 use h2pipe::compiler::{compile, memory_breakdown};
 use h2pipe::config::{BurstLengthPolicy, CompilerOptions, DeviceConfig};
-use h2pipe::coordinator::{boot_weights, InferenceServer, ServerConfig};
+use h2pipe::coordinator::{boot_weights, ServerConfig};
 use h2pipe::hbm::{AddressPattern, TrafficConfig, TrafficGen};
 use h2pipe::nn::zoo;
 use h2pipe::sim::pipeline::{simulate, SimConfig};
@@ -229,28 +230,50 @@ fn run() -> Result<()> {
         }
         "serve" => {
             let n_req: usize = args.get("requests", 64usize)?;
-            let mut cfg = ServerConfig::cifarnet("artifacts");
+            let replicas: usize = args.get("replicas", 1usize)?;
+            let shards: usize = args.get("shards", 1usize)?;
+            let model = args.kv.get("serve-model").map(String::as_str).unwrap_or("cifarnet");
+            let mut cfg = ServerConfig::builtin(model, "artifacts")?;
             cfg.batch_size = args.get("batch", 8usize)?;
-            // modelled FPGA rate: ResNet-18 hybrid plan
-            let plan = compile(&zoo::resnet18(), &device, &CompilerOptions::default())?;
-            cfg.modelled_image_s = 1.0 / plan.est_throughput;
-            let srv = InferenceServer::start(cfg)?;
+            // modelled FPGA rate: ResNet-18 hybrid plan, optionally cut
+            // into pipeline-parallel shards
+            let net = zoo::resnet18();
+            let modelled = if shards > 1 {
+                let pp = partition(
+                    &net,
+                    &device,
+                    &CompilerOptions::default(),
+                    &PartitionOptions { shards: Some(shards), max_shards: shards },
+                )?;
+                print!("{}", pp.report());
+                cfg.modelled_image_s = 1.0 / pp.est_throughput();
+                format!("{shards}-shard ResNet-18 plan")
+            } else {
+                let plan = compile(&net, &device, &CompilerOptions::default())?;
+                cfg = cfg.with_modelled_plan(&plan);
+                "ResNet-18 hybrid plan".to_string()
+            };
+            let router = FleetRouter::start(cfg.clone(), replicas)?;
+            let pixels: usize = cfg.input_dims.iter().product();
             let mut rng = XorShift64::new(7);
-            let images: Vec<Vec<i32>> = (0..n_req)
-                .map(|_| {
-                    (0..32 * 32 * 3).map(|_| rng.next_range(0, 255) as i32 - 128).collect()
-                })
-                .collect();
-            let ok = srv.run_closed_loop(images)?;
-            let rep = srv.shutdown();
+            let mut ok = 0usize;
+            for _ in 0..n_req {
+                let img: Vec<i32> =
+                    (0..pixels).map(|_| rng.next_range(0, 255) as i32 - 128).collect();
+                if router.infer(img).is_ok() {
+                    ok += 1;
+                }
+            }
+            let rep = router.shutdown();
             println!(
-                "served {ok} requests: wall {:.0} im/s, mean {:.2} ms, p50 {:.2} ms, p99 {:.2} ms, mean batch {:.1}",
-                rep.wall_throughput, rep.mean_latency_ms, rep.p50_ms, rep.p99_ms, rep.mean_batch
+                "served {ok} requests over {replicas} replica(s): wall {:.0} im/s, mean {:.2} ms, p50 {:.2} ms, p99 {:.2} ms",
+                rep.wall_throughput, rep.mean_latency_ms, rep.p50_ms, rep.p99_ms
             );
             println!(
-                "modelled FPGA rate (ResNet-18 hybrid plan): {:.0} im/s",
+                "modelled FPGA rate ({modelled} x {replicas} replica(s)): {:.0} im/s",
                 rep.modelled_throughput
             );
+            println!("{}", rep.to_json().to_string());
         }
         "infer" => {
             let rt = h2pipe::runtime::Runtime::cpu("artifacts")?;
@@ -266,7 +289,8 @@ fn run() -> Result<()> {
                  common:   --model resnet18|resnet50|vgg16|mobilenetv1|mobilenetv2|mobilenetv3\n\
                  compile:  --all-hbm --burst 8|16|32 --write-path-bits N\n\
                  simulate: --images N --warmup N\n\
-                 serve:    --requests N --batch N"
+                 serve:    --requests N --batch N --replicas N --shards M \
+                 --serve-model cifarnet|resnet_block|mobilenet_edge"
             );
         }
     }

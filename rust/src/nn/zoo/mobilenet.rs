@@ -182,6 +182,27 @@ pub fn mobilenet_v3_large() -> Network {
     n
 }
 
+/// MobileNet-Edge: a compact depthwise-separable stack (V1-style, no
+/// residual path, no squeeze-excite) over a 32x32 input. This is the
+/// third built-in serving model (`runtime::reference`): small enough to
+/// execute per request on the functional backend, and it exercises the
+/// depthwise engine path with *no* skip connection — the scenario the
+/// Table I MobileNets cover in the compiler but the serving tests
+/// previously did not.
+pub fn mobilenet_edge() -> Network {
+    let mut n = Network::new("mobilenet_edge", Shape::new(32, 32, 3));
+    let mut x = conv(&mut n, "conv0", 0, 3, 2, 1, 8);
+    // (out_c, stride) per separable block
+    for (i, (c, s)) in [(16u32, 1u32), (32, 2), (64, 2)].iter().enumerate() {
+        x = dwconv(&mut n, &format!("block{i}.dw"), x, 3, *s);
+        x = conv(&mut n, &format!("block{i}.pw"), x, 1, 1, 0, *c);
+    }
+    let gap = n.add("avgpool", OpKind::GlobalAvgPool, &[x]).expect("gap");
+    n.add("fc", OpKind::Fc { out_features: 10 }, &[gap]).expect("fc");
+    n.validate().expect("mobilenet_edge validates");
+    n
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -241,6 +262,24 @@ mod tests {
             .filter(|l| matches!(l.op, OpKind::SqueezeExcite { .. }))
             .count();
         assert_eq!(se, 8);
+    }
+
+    #[test]
+    fn edge_is_small_and_residual_free() {
+        let n = mobilenet_edge();
+        assert_eq!(n.input_shape(), crate::nn::Shape::new(32, 32, 3));
+        assert!(n.layers().iter().all(|l| !matches!(l.op, OpKind::Add)), "no residual path");
+        let dw = n
+            .layers()
+            .iter()
+            .filter(|l| {
+                matches!(l.op, OpKind::Conv { kind: crate::nn::ConvKind::Depthwise, .. })
+            })
+            .count();
+        assert_eq!(dw, 3, "three depthwise stages");
+        // small enough to execute per request on the functional backend
+        assert!(n.total_macs() < 5_000_000, "{} MACs", n.total_macs());
+        assert_eq!(n.layers().last().unwrap().out.c, 10);
     }
 
     #[test]

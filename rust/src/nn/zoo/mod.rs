@@ -8,7 +8,7 @@ mod mobilenet;
 mod resnet;
 mod vgg;
 
-pub use mobilenet::{mobilenet_v1, mobilenet_v2, mobilenet_v3_large};
+pub use mobilenet::{mobilenet_edge, mobilenet_v1, mobilenet_v2, mobilenet_v3_large};
 pub use resnet::{resnet18, resnet50};
 pub use vgg::vgg16;
 
@@ -30,6 +30,7 @@ pub fn by_name(name: &str) -> Option<Network> {
         "mobilenetv1" | "mobilenet_v1" => Some(mobilenet_v1()),
         "mobilenetv2" | "mobilenet_v2" => Some(mobilenet_v2()),
         "mobilenetv3" | "mobilenet_v3" => Some(mobilenet_v3_large()),
+        "mobilenet_edge" | "mobilenetedge" => Some(mobilenet_edge()),
         "resnet18" | "resnet-18" => Some(resnet18()),
         "resnet50" | "resnet-50" => Some(resnet50()),
         "vgg16" | "vgg-16" => Some(vgg16()),

@@ -9,11 +9,14 @@
 //! derived from the model and layer names, so outputs are bit-exact
 //! across runs and platforms — the property the serving tests rely on.
 //!
-//! Two built-in graphs mirror the two AOT artifacts `python/compile/aot.py`
-//! produces, so the offline crate set exercises the same serving paths:
+//! Three built-in graphs cover the serving paths the offline crate set
+//! exercises (the first two mirror the AOT artifacts
+//! `python/compile/aot.py` produces):
 //!
 //! * `cifarnet` — 32x32x3 -> conv/pool/conv/pool/GAP/FC -> 10 logits;
-//! * `resnet_block` — 56x56x64 residual block, post-ReLU output.
+//! * `resnet_block` — 56x56x64 residual block, post-ReLU output;
+//! * `mobilenet_edge` — compact depthwise-separable stack from
+//!   `nn::zoo`, 32x32x3 -> 10 logits, *no* residual path.
 
 use std::path::Path;
 
@@ -24,7 +27,23 @@ use crate::runtime::{Backend, Model};
 use crate::util::XorShift64;
 
 /// Models the reference backend can serve with no artifacts present.
-pub const BUILTIN_MODELS: [&str; 2] = ["cifarnet", "resnet_block"];
+pub const BUILTIN_MODELS: [&str; 3] = ["cifarnet", "resnet_block", "mobilenet_edge"];
+
+/// Input tensor dims (h, w, c) of a built-in model, derived from the
+/// model graph itself so server configs cannot drift from the backend.
+pub fn builtin_input_dims(name: &str) -> Option<Vec<usize>> {
+    builtin_model(name).map(|m| m.input_dims().to_vec())
+}
+
+/// Construct a built-in model by name.
+fn builtin_model(name: &str) -> Option<ReferenceModel> {
+    match name {
+        "cifarnet" => Some(ReferenceModel::cifarnet()),
+        "resnet_block" => Some(ReferenceModel::resnet_block()),
+        "mobilenet_edge" => Some(ReferenceModel::mobilenet_edge()),
+        _ => None,
+    }
+}
 
 /// The pure-Rust fallback backend (the default without `--features pjrt`).
 #[derive(Debug, Default)]
@@ -46,10 +65,9 @@ impl Backend for ReferenceBackend {
     }
 
     fn load_model(&self, _artifact_dir: &Path, name: &str) -> Result<Box<dyn Model>> {
-        match name {
-            "cifarnet" => Ok(Box::new(ReferenceModel::cifarnet())),
-            "resnet_block" => Ok(Box::new(ReferenceModel::resnet_block())),
-            _ => bail!(
+        match builtin_model(name) {
+            Some(m) => Ok(Box::new(m)),
+            None => bail!(
                 "model {name:?} is not a built-in reference model (available: \
                  {BUILTIN_MODELS:?}); for AOT artifacts run `make artifacts` and \
                  build with `--features pjrt`"
@@ -126,6 +144,13 @@ impl ReferenceModel {
         // residual semantics: pre-add conv output is linear, the add is
         // followed by the block's ReLU
         Self::from_network(n, &[("conv2", 5, false), ("add", 0, true)])
+    }
+
+    /// The mobilenet_edge serving model: the depthwise-separable stack
+    /// from [`crate::nn::zoo::mobilenet_edge`] — no residual path, so the
+    /// serving tests cover the skip-free execution scenario.
+    pub fn mobilenet_edge() -> Self {
+        Self::from_network(crate::nn::zoo::mobilenet_edge(), &[])
     }
 
     /// Build execution state for a network. `overrides` replaces the
@@ -370,6 +395,34 @@ mod tests {
         assert_eq!(y.len(), 56 * 56 * 64);
         assert!(y.iter().all(|&v| (0..=127).contains(&v)), "post-ReLU range violated");
         assert!(y.iter().any(|&v| v > 0), "all-zero block output is suspicious");
+    }
+
+    #[test]
+    fn mobilenet_edge_executes_deterministically() {
+        let m = ReferenceModel::mobilenet_edge();
+        assert_eq!(m.input_dims(), &[32, 32, 3]);
+        let img: Vec<i32> = (0..32 * 32 * 3).map(|i| (i % 197) as i32 - 98).collect();
+        let a = m.run_i32(&img, &[32, 32, 3]).unwrap();
+        let b = m.run_i32(&img, &[32, 32, 3]).unwrap();
+        assert_eq!(a.len(), 10);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|&v| (-128..=127).contains(&v)), "int8-ranged logits: {a:?}");
+        // the depthwise path must carry signal, not collapse to a constant
+        let c = m.run_i32(&vec![33; 32 * 32 * 3], &[32, 32, 3]).unwrap();
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn every_builtin_has_input_dims_and_loads() {
+        let b = ReferenceBackend::new();
+        for name in BUILTIN_MODELS {
+            let dims = builtin_input_dims(name).unwrap_or_else(|| panic!("{name} dims"));
+            let m = b.load_model(Path::new("artifacts"), name).unwrap();
+            let n: usize = dims.iter().product();
+            let out = m.run_i32(&vec![1i32; n], &dims).unwrap();
+            assert!(!out.is_empty(), "{name}");
+        }
+        assert!(builtin_input_dims("alexnet").is_none());
     }
 
     #[test]

@@ -75,6 +75,18 @@ pub struct PipelineSim {
     /// (consumer's oldest needed line + edge capacity).
     limit_cache: Vec<Vec<u64>>,
     weights: WeightSubsystem,
+    /// Base-tick (1200 MHz) counter the clock domains derive from.
+    t: u64,
+    /// Core cycles elapsed (one per 4 base ticks).
+    core_cycles: u64,
+    /// Cumulative line budget granted to the head (Input) engine by an
+    /// external feeder — the lines that have arrived over an inter-device
+    /// link. `u64::MAX` (default) models a free-running source.
+    input_limit: u64,
+    /// Cumulative line budget granted to the sink engine by a downstream
+    /// consumer — the credit bound of an inter-device link's receive
+    /// FIFO. `u64::MAX` (default) models an always-ready consumer.
+    sink_limit: u64,
 }
 
 impl PipelineSim {
@@ -131,6 +143,10 @@ impl PipelineSim {
             producers_meta,
             consumers_meta,
             weights: WeightSubsystem::new(plan),
+            t: 0,
+            core_cycles: 0,
+            input_limit: u64::MAX,
+            sink_limit: u64::MAX,
         };
         for i in 0..sim.engines.len() {
             sim.refresh_caches(i);
@@ -154,81 +170,161 @@ impl PipelineSim {
         }
     }
 
+    /// Grant the head (Input) engine a cumulative line budget: the lines
+    /// delivered so far over an inter-device link. The head engine stalls
+    /// input-starved once it has forwarded every granted line.
+    pub fn set_input_limit(&mut self, lines: u64) {
+        self.input_limit = lines;
+    }
+
+    /// Bound the sink engine's cumulative output lines: the credit bound
+    /// imposed by a downstream device's receive FIFO. At the bound the
+    /// sink blocks, back-pressuring the whole shard (no data is dropped).
+    pub fn set_sink_limit(&mut self, lines: u64) {
+        self.sink_limit = lines;
+    }
+
+    /// Lines the head (Input) engine has forwarded — what an upstream
+    /// link may retire (credit return).
+    pub fn head_lines_consumed(&self) -> u64 {
+        self.engines[0].lines_produced
+    }
+
+    /// Lines the sink engine has produced — what a downstream link has
+    /// been offered.
+    pub fn sink_lines_produced(&self) -> u64 {
+        self.engines[self.engines.len() - 1].lines_produced
+    }
+
+    /// Images fully emitted by the sink engine.
+    pub fn sink_images_done(&self) -> u64 {
+        self.engines[self.engines.len() - 1].image
+    }
+
+    /// Core cycles the sink engine spent output-blocked (for a sharded
+    /// sink, that is exactly the inter-device credit stall).
+    pub fn sink_output_blocked(&self) -> u64 {
+        self.engines[self.engines.len() - 1].stats.output_blocked
+    }
+
+    /// Core-cycle timestamp of the first completed image, if any.
+    pub fn first_image_done_cycle(&self) -> Option<u64> {
+        self.engines[self.engines.len() - 1].image_done_cycles.first().copied()
+    }
+
+    /// (name, active cycles) of the busiest weight engine — the shard's
+    /// bottleneck candidate.
+    pub fn busiest_engine(&self) -> (String, u64) {
+        self.engines
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| self.plan.layers[*i].stats.has_weights)
+            .map(|(i, e)| (self.plan.layers[i].stats.name.clone(), e.stats.active))
+            .max_by_key(|&(_, a)| a)
+            .unwrap_or_else(|| ("<none>".to_string(), 0))
+    }
+
+    /// Base ticks (1200 MHz) elapsed.
+    pub fn base_ticks(&self) -> u64 {
+        self.t
+    }
+
+    /// Core cycles (300 MHz) elapsed.
+    pub fn core_cycles(&self) -> u64 {
+        self.core_cycles
+    }
+
+    /// True once every engine has finished `images`.
+    pub fn all_done(&self, images: u64) -> bool {
+        self.engines.iter().all(|e| e.done(images))
+    }
+
+    /// Advance one 1200 MHz base tick: the HBM domain (400 MHz) fires
+    /// every 3rd tick, the core domain (300 MHz) every 4th. This is the
+    /// composition point for multi-device simulation — a fleet steps all
+    /// of its shards' sims in lockstep and exchanges line/credit state
+    /// between ticks.
+    pub fn step_base_tick(&mut self, images: u64) {
+        if self.t % 3 == 0 {
+            self.weights.hbm_tick();
+        }
+        if self.t % 4 == 0 {
+            self.core_cycles += 1;
+            self.step_core(images);
+        }
+        self.t += 1;
+    }
+
+    /// One core-domain cycle across all engines.
+    fn step_core(&mut self, images: u64) {
+        let n = self.engines.len();
+        let sink = n - 1;
+        for i in 0..n {
+            if self.engines[i].done(images) {
+                continue;
+            }
+            // input dependency (cached thresholds); the head engine is
+            // additionally gated by the external line budget
+            let input_ok = if i == 0 {
+                self.engines[0].lines_produced < self.input_limit
+            } else {
+                self.producers_meta[i]
+                    .iter()
+                    .zip(self.need_cache[i].iter())
+                    .all(|(&(p, _), &need)| self.engines[p].lines_produced >= need)
+            };
+            // output back-pressure (cached bounds); the sink engine is
+            // additionally gated by the downstream credit bound
+            let lines = self.engines[i].lines_produced;
+            let mut output_ok = self.consumers_meta[i]
+                .iter()
+                .zip(self.limit_cache[i].iter())
+                .all(|(&(c, _), &limit)| lines < limit || self.engines[c].done(images));
+            if i == sink {
+                output_ok = output_ok && lines < self.sink_limit;
+            }
+            // weight readiness: only HBM-fed engines consult the
+            // distribution network
+            let wa = if !self.engines[i].hbm_fed || self.weights.layer_ready(i) {
+                u64::MAX
+            } else {
+                0
+            };
+            let before_lines = self.engines[i].lines_produced;
+            let st = self.engines[i].tick(self.core_cycles, images, input_ok, output_ok, wa);
+            if st == EngineState::Active {
+                if self.engines[i].hbm_fed {
+                    self.weights.consume(i);
+                }
+                if self.engines[i].lines_produced != before_lines {
+                    self.refresh_caches(i);
+                }
+            }
+        }
+    }
+
     /// Run the simulation.
     pub fn run(&mut self, cfg: &SimConfig) -> Result<SimReport> {
         let images = cfg.images.max(cfg.warmup_images + 1);
-        let n = self.engines.len();
-        let sink = n - 1;
-        let mut core_cycles: u64 = 0;
         let mut warmup_done_at: Option<u64> = None;
-        let mut t: u64 = 0;
         loop {
-            if t >= cfg.max_base_ticks {
+            if self.t >= cfg.max_base_ticks {
                 bail!("simulation exceeded max_base_ticks — pipeline wedged?");
             }
-            // HBM domain @400 MHz: 3 of every 4 base ticks of the core...
-            // base tick 1200 MHz: hbm every 3 ticks, core every 4.
-            if t % 3 == 0 {
-                self.weights.hbm_tick();
+            self.step_base_tick(images);
+            if warmup_done_at.is_none() && self.sink_images_done() >= cfg.warmup_images {
+                warmup_done_at = Some(self.core_cycles);
             }
-            if t % 4 == 0 {
-                core_cycles += 1;
-                for i in 0..n {
-                    if self.engines[i].done(images) {
-                        continue;
-                    }
-                    // input dependency (cached thresholds)
-                    let input_ok = self.producers_meta[i]
-                        .iter()
-                        .zip(self.need_cache[i].iter())
-                        .all(|(&(p, _), &need)| self.engines[p].lines_produced >= need);
-                    // output back-pressure (cached bounds)
-                    let lines = self.engines[i].lines_produced;
-                    let output_ok = self.consumers_meta[i]
-                        .iter()
-                        .zip(self.limit_cache[i].iter())
-                        .all(|(&(c, _), &limit)| {
-                            lines < limit || self.engines[c].done(images)
-                        });
-                    // weight readiness: only HBM-fed engines consult the
-                    // distribution network
-                    let wa = if !self.engines[i].hbm_fed || self.weights.layer_ready(i) {
-                        u64::MAX
-                    } else {
-                        0
-                    };
-                    let before_lines = self.engines[i].lines_produced;
-                    let st = self.engines[i].tick(core_cycles, images, input_ok, output_ok, wa);
-                    if st == EngineState::Active {
-                        if self.engines[i].hbm_fed {
-                            self.weights.consume(i);
-                        }
-                        if self.engines[i].lines_produced != before_lines {
-                            self.refresh_caches(i);
-                        }
-                    }
-                }
-                // progress checks on the sink engine
-                let sink_done = self.engines[sink].image;
-                if warmup_done_at.is_none() && sink_done >= cfg.warmup_images {
-                    warmup_done_at = Some(core_cycles);
-                }
-                if self.engines.iter().all(|e| e.done(images)) {
-                    break;
-                }
+            if self.all_done(images) {
+                break;
             }
-            t += 1;
         }
 
         let hz = self.plan.device.core_mhz as f64 * 1e6;
         let measured_images = images - cfg.warmup_images;
-        let span = core_cycles - warmup_done_at.unwrap_or(0);
+        let span = self.core_cycles - warmup_done_at.unwrap_or(0);
         let throughput = measured_images as f64 * hz / span.max(1) as f64;
-        let latency = self.engines[sink]
-            .image_done_cycles
-            .first()
-            .map(|&c| c as f64 / hz)
-            .unwrap_or(f64::NAN);
+        let latency = self.first_image_done_cycle().map(|c| c as f64 / hz).unwrap_or(f64::NAN);
 
         // bottleneck: weight engine with the most active cycles
         let (bi, _) = self
@@ -265,7 +361,7 @@ impl PipelineSim {
             bottleneck: self.plan.layers[bi].stats.name.clone(),
             bottleneck_on_hbm: self.engines[bi].hbm_fed,
             hbm_efficiency: self.weights.mean_read_efficiency(),
-            core_cycles,
+            core_cycles: self.core_cycles,
             engine_stats,
         })
     }
@@ -339,6 +435,43 @@ mod tests {
             rh.throughput,
             ra.throughput
         );
+    }
+
+    #[test]
+    fn input_limit_gates_the_head_engine() {
+        let d = DeviceConfig::stratix10_nx2100();
+        let net = zoo::resnet18();
+        let plan = compile(&net, &d, &CompilerOptions::default()).unwrap();
+        let mut sim = PipelineSim::new(&net, &plan).unwrap();
+        sim.set_input_limit(0);
+        for _ in 0..40_000 {
+            sim.step_base_tick(3);
+        }
+        assert_eq!(sim.head_lines_consumed(), 0, "head must not run ahead of delivery");
+        assert_eq!(sim.sink_lines_produced(), 0);
+        // granting lines lets the head forward exactly that many
+        sim.set_input_limit(5);
+        for _ in 0..40_000 {
+            sim.step_base_tick(3);
+        }
+        assert_eq!(sim.head_lines_consumed(), 5);
+    }
+
+    #[test]
+    fn sink_limit_blocks_instead_of_dropping() {
+        let d = DeviceConfig::stratix10_nx2100();
+        let net = zoo::resnet18();
+        let plan = compile(&net, &d, &CompilerOptions::default()).unwrap();
+        let mut sim = PipelineSim::new(&net, &plan).unwrap();
+        sim.set_sink_limit(1);
+        for _ in 0..4_000_000 {
+            sim.step_base_tick(3);
+            if sim.sink_output_blocked() > 0 {
+                break;
+            }
+        }
+        assert!(sim.sink_lines_produced() <= 1, "sink overran its credit bound");
+        assert!(sim.sink_output_blocked() > 0, "sink must register the credit stall");
     }
 
     #[test]

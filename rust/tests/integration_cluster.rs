@@ -1,0 +1,153 @@
+//! Integration: the multi-FPGA cluster subsystem (ISSUE 2 acceptance).
+//!
+//! (a) a ResNet-50-class plan that exceeds one device's M20K budget
+//!     partitions into >= 2 shards that each fit;
+//! (b) fleet-sim aggregate throughput with 2 replicas is >= 1.8x a
+//!     single replica on the same workload;
+//! (c) shard-to-shard credit back-pressure stalls the upstream shard
+//!     instead of dropping data.
+
+use h2pipe::cluster::{
+    partition, partition_at, FleetConfig, FleetRouter, FleetSim, PartitionOptions,
+};
+use h2pipe::compiler::compile;
+use h2pipe::config::{CompilerOptions, DeviceConfig};
+use h2pipe::coordinator::ServerConfig;
+use h2pipe::nn::zoo;
+
+fn quick_fleet() -> FleetConfig {
+    FleetConfig { images: 3, warmup_images: 1, ..Default::default() }
+}
+
+#[test]
+fn oversized_resnet50_partitions_into_fitting_shards() {
+    // (a): shrink the device's M20K budget until even maximal HBM offload
+    // cannot fit ResNet-50 on one chip, then partition.
+    let o = CompilerOptions::default();
+    let net = zoo::resnet50();
+    let mut constrained = None;
+    for m20k in [3400u32, 3200, 3000, 2800, 2600, 2400, 2200, 2000] {
+        let mut d = DeviceConfig::stratix10_nx2100();
+        d.m20k_blocks = m20k;
+        d.name = format!("NX2100/{m20k}-M20K");
+        if compile(&net, &d, &o).is_err() {
+            constrained = Some(d);
+            break;
+        }
+    }
+    let d = constrained.expect("ResNet-50 must overflow a sufficiently small M20K budget");
+
+    let pp = partition(&net, &d, &o, &PartitionOptions::default()).unwrap();
+    assert!(pp.num_shards() >= 2, "one device cannot hold the plan: {}", pp.num_shards());
+    // every shard fits the constrained device on its own
+    for sh in &pp.shards {
+        assert!(
+            sh.plan.usage.m20k <= d.m20k_blocks as u64,
+            "shard {}..{}: {} M20K > budget {}",
+            sh.first_layer,
+            sh.last_layer,
+            sh.plan.usage.m20k,
+            d.m20k_blocks
+        );
+    }
+    // coverage: contiguous and complete over the original network
+    assert_eq!(pp.shards[0].first_layer, 1);
+    assert_eq!(pp.shards.last().unwrap().last_layer, net.len() - 1);
+    for w in pp.shards.windows(2) {
+        assert_eq!(w[1].first_layer, w[0].last_layer + 1);
+        assert_eq!(w[1].net.input_shape(), w[0].net.layers().last().unwrap().out);
+    }
+}
+
+#[test]
+fn two_replicas_scale_aggregate_throughput() {
+    // (b): replicas share no simulated hardware, so the fleet model
+    // scales one cycle-accurate replica run exactly N-fold — 2 replicas
+    // must report >= 1.8x one replica on the same sharded workload.
+    let d = DeviceConfig::stratix10_nx2100();
+    let o = CompilerOptions::default();
+    let pp = partition(
+        &zoo::resnet18(),
+        &d,
+        &o,
+        &PartitionOptions { shards: Some(2), max_shards: 2 },
+    )
+    .unwrap();
+    let fleet = FleetSim::new(&pp).unwrap();
+    let base = quick_fleet();
+    let one = fleet.run(&base).unwrap();
+    let two = fleet.run(&FleetConfig { replicas: 2, ..base }).unwrap();
+    assert!(one.aggregate_throughput > 0.0);
+    assert!(
+        two.aggregate_throughput >= 1.8 * one.aggregate_throughput,
+        "2 replicas {:.0} im/s vs 1 replica {:.0} im/s",
+        two.aggregate_throughput,
+        one.aggregate_throughput
+    );
+    assert_eq!(two.replicas, 2);
+    assert_eq!(two.shards, 2);
+}
+
+#[test]
+fn credit_backpressure_stalls_upstream_without_loss() {
+    // (c): a deliberately unbalanced cut — a tiny fast front shard (stem
+    // only) feeding the heavy rest of the network over a 2-line credit
+    // window. The upstream sink must block on credit, and every boundary
+    // line must still arrive downstream.
+    let d = DeviceConfig::stratix10_nx2100();
+    let o = CompilerOptions::default();
+    let net = zoo::resnet18();
+    // layers: 0 input, 1 conv1, 2 maxpool | 3.. residual stages
+    let pp = partition_at(&net, &d, &o, &[3]).unwrap();
+    assert_eq!(pp.num_shards(), 2);
+    let fleet = FleetSim::new(&pp).unwrap();
+    let cfg = FleetConfig { link_capacity_lines: 2, ..quick_fleet() };
+    let rep = fleet.run(&cfg).unwrap();
+
+    let link = &rep.links[0];
+    assert!(
+        link.upstream_blocked > 0,
+        "fast upstream shard must stall on the 2-line credit window"
+    );
+    assert!(
+        link.peak_occupancy <= cfg.link_capacity_lines as u64,
+        "link occupancy {} exceeded the credit window",
+        link.peak_occupancy
+    );
+    // conservation: every boundary line of every image crossed the link
+    let boundary_h = pp.shards[0].net.layers().last().unwrap().out.h as u64;
+    assert_eq!(link.lines, cfg.images * boundary_h, "lines dropped or duplicated");
+    assert!(rep.aggregate_throughput > 0.0, "pipeline must still complete");
+}
+
+#[test]
+fn fleet_router_serves_sharded_model_replicas() {
+    // End-to-end serving over the cluster path: the modelled rate comes
+    // from a sharded partition plan, requests flow through 2 replicas of
+    // the residual-free built-in model.
+    let d = DeviceConfig::stratix10_nx2100();
+    let o = CompilerOptions::default();
+    let pp = partition(
+        &zoo::resnet18(),
+        &d,
+        &o,
+        &PartitionOptions { shards: Some(2), max_shards: 2 },
+    )
+    .unwrap();
+    let dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    let mut cfg = ServerConfig::builtin("mobilenet_edge", &dir).unwrap();
+    cfg.modelled_image_s = 1.0 / pp.est_throughput();
+    let router = FleetRouter::start(cfg, 2).unwrap();
+    let img = vec![5i32; 32 * 32 * 3];
+    for _ in 0..8 {
+        let out = router.infer(img.clone()).unwrap();
+        assert_eq!(out.len(), 10);
+    }
+    let rep = router.shutdown();
+    assert_eq!(rep.completed, 8);
+    assert_eq!(rep.rejected, 0);
+    assert!(rep.per_replica.iter().all(|r| r.completed > 0), "both replicas must serve");
+    assert!(rep.modelled_throughput > 0.0, "sharded modelled rate must be wired through");
+    let json = rep.to_json().to_string();
+    assert!(json.contains("\"replicas\":2"), "{json}");
+}

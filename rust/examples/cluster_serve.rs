@@ -1,93 +1,88 @@
-//! Fleet serving driver (the cluster subsystem's E2E validation run).
+//! Fleet serving driver (the cluster subsystem's E2E validation run),
+//! routed end-to-end through `h2pipe::session`.
 //!
-//! 1. Partitions ResNet-18 into two pipeline-parallel shards, each
-//!    compiled as a standalone accelerator (offload decisions re-run per
-//!    shard).
-//! 2. Co-simulates the shards cycle-accurately — one pipeline sim per
-//!    device, inter-device links as credit-based FIFOs — and reports the
-//!    2-replica (shared-nothing) aggregate next to the per-replica rate.
-//! 3. Serves real inference requests through the fleet router: two
-//!    replica servers of the residual-free `mobilenet_edge` built-in,
-//!    least-outstanding-requests routing, merged metrics emitted as JSON.
+//! 1. Compiles ResNet-18 into a session artifact, then deploys it to the
+//!    fleet target: two pipeline-parallel shards, each recompiled as a
+//!    standalone accelerator, co-simulated cycle-accurately with
+//!    credit-based inter-device links, 2 shared-nothing replicas.
+//! 2. Deploys the same artifact to the serve target: two replica servers
+//!    of the residual-free `mobilenet_edge` built-in behind the
+//!    least-outstanding-requests router, with the modelled FPGA rate
+//!    taken from the 2-shard partition, merged metrics emitted as JSON.
 //!
 //! Run with:  cargo run --release --example cluster_serve [-- <num_requests>]
 
-use std::sync::Arc;
-
-use h2pipe::cluster::{partition, FleetConfig, FleetRouter, FleetSim, PartitionOptions};
-use h2pipe::config::{CompilerOptions, DeviceConfig};
-use h2pipe::coordinator::ServerConfig;
-use h2pipe::nn::zoo;
-use h2pipe::util::XorShift64;
+use h2pipe::cluster::{FleetConfig, PartitionOptions};
+use h2pipe::session::{DeploymentTarget, ServeOptions, Session};
 
 fn main() -> anyhow::Result<()> {
     let n_requests: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(256);
-    let device = DeviceConfig::stratix10_nx2100();
-    let opts = CompilerOptions::default();
 
-    // --- partition: two devices, offload re-planned per shard -----------
-    let net = zoo::resnet18();
-    let pp = partition(
-        &net,
-        &device,
-        &opts,
-        &PartitionOptions { shards: Some(2), max_shards: 2 },
-    )?;
-    print!("{}", pp.report());
+    // --- compile once ----------------------------------------------------
+    let compiled = Session::builder().model("resnet18").compile()?;
 
     // --- fleet sim: credit-linked shards, 2 shared-nothing replicas ------
-    let fleet = FleetSim::new(&pp)?;
-    let two = fleet
-        .run(&FleetConfig { images: 4, warmup_images: 1, replicas: 2, ..Default::default() })?;
+    let fleet = compiled
+        .deploy(DeploymentTarget::Fleet {
+            partition: PartitionOptions { shards: Some(2), max_shards: 2 },
+            fleet: FleetConfig { images: 4, warmup_images: 1, replicas: 2, ..Default::default() },
+        })
+        .run()?;
+    let per_replica = fleet
+        .detail
+        .get("per_replica_throughput")
+        .and_then(|v| v.as_f64())
+        .expect("fleet detail carries the per-replica rate");
     println!(
         "fleet sim: per replica {:.0} im/s, 2-replica aggregate {:.0} im/s (bottleneck shard {} / {})",
-        two.per_replica_throughput,
-        two.aggregate_throughput,
-        two.bottleneck_shard,
-        two.bottleneck_engine
+        per_replica,
+        fleet.throughput,
+        fleet.detail.get("bottleneck_shard").and_then(|v| v.as_u64()).unwrap_or(0),
+        fleet.detail.get("bottleneck_engine").and_then(|v| v.as_str()).unwrap_or("?"),
     );
     assert!(
-        two.aggregate_throughput >= 1.8 * two.per_replica_throughput,
+        fleet.throughput >= 1.8 * per_replica,
         "replication must scale: {:.0} vs {:.0}",
-        two.aggregate_throughput,
-        two.per_replica_throughput
+        fleet.throughput,
+        per_replica
     );
-    println!("{}", two.to_json().to_string());
+    println!("{}", fleet.to_json().to_string());
 
-    // --- fleet serving: 2 replicas behind the router ---------------------
-    let mut cfg = ServerConfig::builtin("mobilenet_edge", "artifacts")?;
-    cfg.batch_size = 8;
-    cfg.modelled_image_s = 1.0 / pp.est_throughput();
-    let router = Arc::new(FleetRouter::start(cfg, 2)?);
-    let mut handles = Vec::new();
-    for t in 0..4u64 {
-        let r = router.clone();
-        let per_client = n_requests / 4;
-        handles.push(std::thread::spawn(move || {
-            let mut rng = XorShift64::new(500 + t);
-            let mut ok = 0usize;
-            for _ in 0..per_client {
-                let img: Vec<i32> =
-                    (0..32 * 32 * 3).map(|_| rng.next_range(0, 255) as i32 - 128).collect();
-                if r.infer(img).is_ok() {
-                    ok += 1;
-                }
-            }
-            ok
-        }));
-    }
-    let mut total = 0usize;
-    for h in handles {
-        total += h.join().expect("client thread");
-    }
-    let rep = Arc::into_inner(router).expect("all clients done").shutdown();
+    // --- fleet serving: 2 replicas behind the router ----------------------
+    let rep = compiled
+        .deploy(DeploymentTarget::Serve(ServeOptions {
+            serve_model: "mobilenet_edge".to_string(),
+            requests: n_requests,
+            batch: 8,
+            replicas: 2,
+            shards: 2, // modelled FPGA rate from the 2-shard partition
+            clients: 4,
+            seed: 500,
+            ..ServeOptions::default()
+        }))
+        .run()?;
+    let detail = &rep.detail;
+    let ok = detail.get("ok").and_then(|v| v.as_u64()).unwrap_or(0);
+    let replicas = detail.get("replicas").and_then(|v| v.as_u64()).unwrap_or(0);
     println!(
-        "served {total} requests over {} replicas: wall {:.0} im/s, p99 {:.2} ms",
-        rep.replicas, rep.wall_throughput, rep.p99_ms
+        "served {ok} requests over {replicas} replicas: wall {:.0} im/s, mean {:.2} ms",
+        rep.throughput, rep.latency_ms
     );
     println!("{}", rep.to_json().to_string());
-    assert_eq!(rep.completed as usize, total);
-    assert!(rep.per_replica.iter().all(|r| r.completed > 0), "both replicas must serve");
+    let completed = detail
+        .get("metrics")
+        .and_then(|m| m.get("completed"))
+        .and_then(|v| v.as_u64())
+        .unwrap_or(0);
+    assert_eq!(completed, ok, "every accepted request accounted for");
+    let per_replica_served = detail.get("per_replica").and_then(|v| v.as_arr()).unwrap();
+    assert_eq!(per_replica_served.len(), 2);
+    assert!(
+        per_replica_served
+            .iter()
+            .all(|r| r.get("completed").and_then(|v| v.as_u64()).unwrap_or(0) > 0),
+        "both replicas must serve"
+    );
     println!("cluster serve OK");
     Ok(())
 }

@@ -1,31 +1,36 @@
 //! End-to-end serving driver (the repository's E2E validation run).
 //!
-//! Boots the accelerator — weight download through the §IV-C write path —
-//! then serves a stream of batched inference requests through the L3
-//! coordinator: numerics come from the AOT-compiled PJRT artifact
-//! (JAX + Pallas int8 CNN, Python not involved at runtime), timing comes
-//! from both wall clock and the modelled FPGA pipeline. Results are
-//! recorded in EXPERIMENTS.md §E2E.
+//! Exercises the whole `h2pipe::session` pipeline: builder → compiled
+//! artifact (with a JSON round-trip through a temp file, proving the
+//! persisted plan drives the same deployment) → boot → single-device
+//! cycle sim → live serving through the coordinator. Numerics come from
+//! the reference backend (or the AOT-compiled PJRT artifact with
+//! `--features pjrt`); timing comes from both wall clock and the modelled
+//! FPGA pipeline. Results are recorded in EXPERIMENTS.md §E2E.
 //!
 //! Run with:  cargo run --release --example serve [-- <num_requests>]
 
-use std::sync::Arc;
-
-use h2pipe::compiler::compile;
-use h2pipe::config::{CompilerOptions, DeviceConfig};
-use h2pipe::coordinator::{boot_weights, InferenceServer, ServerConfig};
-use h2pipe::nn::zoo;
-use h2pipe::sim::pipeline::{simulate, SimConfig};
-use h2pipe::util::XorShift64;
+use h2pipe::session::{CompiledModel, DeploymentTarget, ServeOptions, Session};
+use h2pipe::sim::pipeline::SimConfig;
 
 fn main() -> anyhow::Result<()> {
     let n_requests: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(512);
-    let device = DeviceConfig::stratix10_nx2100();
 
-    // --- boot: compile the plan + download weights ----------------------
-    let net = zoo::resnet18();
-    let plan = compile(&net, &device, &CompilerOptions::default())?;
-    let boot = boot_weights(&plan);
+    // --- compile stage: model -> persistable artifact --------------------
+    let compiled = Session::builder().model("resnet18").compile()?;
+    let plan_path = std::env::temp_dir().join(format!("h2pipe-serve-{}.json", std::process::id()));
+    compiled.save(&plan_path)?;
+    let compiled = CompiledModel::load(&plan_path)?; // the artifact drives everything below
+    println!(
+        "compiled {} for {} (options {:016x}), artifact at {}",
+        compiled.provenance().model,
+        compiled.provenance().device,
+        compiled.provenance().options_hash,
+        plan_path.display()
+    );
+
+    // --- boot: weight download through the §IV-C write path --------------
+    let boot = compiled.boot();
     println!(
         "boot: {} MiB of weights -> HBM over the {}-bit write path in {:.1} ms (write eff {:.2})",
         boot.bytes >> 20,
@@ -34,57 +39,56 @@ fn main() -> anyhow::Result<()> {
         boot.hbm_write_efficiency
     );
 
-    // --- modelled FPGA timing from the cycle simulator ------------------
-    let sim = simulate(&net, &plan, &SimConfig { images: 4, warmup_images: 1, ..Default::default() })?;
+    // --- modelled FPGA timing from the cycle simulator -------------------
+    let sim = compiled
+        .deploy(DeploymentTarget::SingleDevice(SimConfig {
+            images: 4,
+            warmup_images: 1,
+            ..Default::default()
+        }))
+        .run()?;
     println!(
         "modelled FPGA pipeline ({}): {:.0} im/s, {:.2} ms latency",
-        net.name,
-        sim.throughput,
-        sim.latency * 1e3
+        sim.model, sim.throughput, sim.latency_ms
     );
 
-    // --- serve real inference requests ----------------------------------
-    let mut cfg = ServerConfig::cifarnet("artifacts");
-    cfg.batch_size = 16;
-    // modelled service time: prefer the cycle sim's measured rate over
-    // the plan estimate (`with_modelled_plan` is the analytic shortcut)
-    cfg.modelled_image_s = 1.0 / sim.throughput;
-    let srv = Arc::new(InferenceServer::start(cfg)?);
+    // --- serve real inference requests -----------------------------------
+    // modelled service time: prefer the cycle sim's measured rate over the
+    // plan's analytic estimate
+    let rep = compiled
+        .deploy(DeploymentTarget::Serve(ServeOptions {
+            serve_model: "cifarnet".to_string(),
+            requests: n_requests,
+            batch: 16,
+            clients: 4,
+            seed: 100,
+            modelled_image_s: Some(1.0 / sim.throughput),
+            ..ServeOptions::default()
+        }))
+        .run()?;
 
-    // 4 closed-loop clients
-    let mut handles = Vec::new();
-    for t in 0..4u64 {
-        let s = srv.clone();
-        let per_client = n_requests / 4;
-        handles.push(std::thread::spawn(move || {
-            let mut rng = XorShift64::new(100 + t);
-            let mut ok = 0usize;
-            for _ in 0..per_client {
-                let img: Vec<i32> =
-                    (0..32 * 32 * 3).map(|_| rng.next_range(0, 255) as i32 - 128).collect();
-                if s.infer(img).is_ok() {
-                    ok += 1;
-                }
-            }
-            ok
-        }));
-    }
-    let mut total = 0usize;
-    for h in handles {
-        total += h.join().expect("client thread");
-    }
-    let rep = Arc::into_inner(srv).expect("all clients done").shutdown();
-
-    println!("served {total} requests from 4 concurrent clients");
-    println!(
-        "wall:     {:.0} im/s   mean {:.2} ms   p50 {:.2} ms   p99 {:.2} ms   mean batch {:.1}",
-        rep.wall_throughput, rep.mean_latency_ms, rep.p50_ms, rep.p99_ms, rep.mean_batch
+    let detail = &rep.detail;
+    let ok = detail.get("ok").and_then(|v| v.as_u64()).unwrap_or(0);
+    let submitted = detail.get("submitted").and_then(|v| v.as_u64()).unwrap_or(0);
+    println!("served {ok}/{submitted} requests from 4 concurrent clients");
+    println!("{}", rep.summary());
+    println!("{}", rep.to_json().to_string());
+    let completed = detail
+        .get("metrics")
+        .and_then(|m| m.get("completed"))
+        .and_then(|v| v.as_u64())
+        .unwrap_or(0);
+    assert_eq!(completed, ok, "router metrics must match client-side count");
+    let modelled = detail
+        .get("modelled_throughput_rps")
+        .and_then(|v| v.as_f64())
+        .unwrap_or(0.0);
+    assert!(
+        (modelled - sim.throughput).abs() < 1.0,
+        "modelled rate {modelled:.0} must come from the cycle sim ({:.0})",
+        sim.throughput
     );
-    println!(
-        "modelled: {:.0} im/s on the simulated Stratix 10 NX + HBM2 pipeline",
-        rep.modelled_throughput
-    );
-    assert_eq!(rep.completed as usize, total);
+    let _ = std::fs::remove_file(&plan_path);
     println!("serve OK");
     Ok(())
 }

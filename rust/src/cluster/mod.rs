@@ -18,7 +18,10 @@
 //!   merged metrics.
 //!
 //! Entry points: `h2pipe serve --replicas N --shards M` and the
-//! `cluster_serve` example.
+//! `cluster_serve` example — both routed through
+//! [`crate::session::DeploymentTarget::Fleet`] /
+//! [`crate::session::DeploymentTarget::Serve`]; the types here are the
+//! engines those deployments drive.
 
 pub mod fleet;
 pub mod partition;

@@ -22,18 +22,21 @@ use anyhow::{ensure, Context, Result};
 /// Measured HBM random-read efficiency by burst length (calibrated from
 /// the §III-A traffic experiment; regenerate with
 /// `cargo bench --bench fig3a_hbm_efficiency`).
+///
+/// **Deprecated:** this free function always answers from the default
+/// calibration. Prefer [`crate::config::EfficiencyTable`] — the compiler
+/// reads `CompilerOptions::efficiency`, so a recalibrated table travels
+/// with the options and with every saved plan artifact.
 pub fn hbm_read_efficiency(burst_len: u32) -> f64 {
-    match burst_len {
-        0..=1 => 0.22,
-        2 => 0.44,
-        4 => 0.74,
-        8 => 0.826,
-        16 => 0.875,
-        _ => 0.902,
-    }
+    crate::config::EfficiencyTable::calibrated().lookup(burst_len)
 }
 
 /// Compile a network for a device.
+///
+/// This is the compilation engine; most callers should go through the
+/// staged [`crate::session`] API (`Session::builder() -> CompiledModel`),
+/// which adds provenance and a persistable JSON artifact around the plan
+/// this function returns.
 pub fn compile(
     net: &Network,
     device: &DeviceConfig,
@@ -127,7 +130,7 @@ pub fn compile(
             }
         }
     };
-    let eff = hbm_read_efficiency(burst_len);
+    let eff = opts.efficiency.lookup(burst_len);
 
     // 5. Assemble the plan + analytic estimates.
     let layers: Vec<LayerPlan> = stats
@@ -323,6 +326,41 @@ mod tests {
                 (0.4..2.5).contains(&r),
                 "{name}: est {:.0} vs paper {t} (ratio {r:.2})",
                 plan.est_throughput
+            );
+        }
+    }
+
+    #[test]
+    fn recalibrated_efficiency_table_overrides_stall_model() {
+        let d = device();
+        let mut o = CompilerOptions::default();
+        o.burst_length = BurstLengthPolicy::Fixed(8);
+        let base = compile(&zoo::resnet50(), &d, &o).unwrap();
+        assert_eq!(base.hbm_read_efficiency, o.efficiency.lookup(8));
+        // a (hypothetical) recalibration halving BL8 efficiency must flow
+        // into the plan without any source edit
+        let mut recal = o.clone();
+        for e in recal.efficiency.entries.iter_mut() {
+            if e.0 == 8 {
+                e.1 = 0.413;
+            }
+        }
+        let slow = compile(&zoo::resnet50(), &d, &recal).unwrap();
+        assert_eq!(slow.hbm_read_efficiency, 0.413);
+        assert!(
+            slow.est_throughput <= base.est_throughput,
+            "halved HBM efficiency cannot raise throughput: {:.0} vs {:.0}",
+            slow.est_throughput,
+            base.est_throughput
+        );
+    }
+
+    #[test]
+    fn legacy_efficiency_wrapper_matches_table() {
+        for bl in crate::config::BurstLengthPolicy::LEGAL {
+            assert_eq!(
+                hbm_read_efficiency(bl),
+                crate::config::EfficiencyTable::calibrated().lookup(bl)
             );
         }
     }

@@ -9,4 +9,4 @@ mod device;
 mod options;
 
 pub use device::{DeviceConfig, HbmGeometry, HbmTiming};
-pub use options::{BurstLengthPolicy, CompilerOptions, WeightPlacement};
+pub use options::{BurstLengthPolicy, CompilerOptions, EfficiencyTable, WeightPlacement};

@@ -36,6 +36,76 @@ impl BurstLengthPolicy {
     }
 }
 
+/// Measured HBM random-read efficiency by burst length.
+///
+/// The compiler's steady-state stall model multiplies each offloaded
+/// layer's weight-stream bandwidth by the efficiency the §III-A traffic
+/// experiment measured at the chosen burst length. The default table is
+/// the Fig. 3a calibration; a recalibration run (`cargo bench --bench
+/// fig3a_hbm_efficiency`) can override it without editing source —
+/// the table travels inside [`CompilerOptions`] and is persisted with
+/// every compiled plan artifact (`h2pipe::session::CompiledModel`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct EfficiencyTable {
+    /// `(burst_len, read_efficiency)` breakpoints, sorted by burst
+    /// length. `lookup` uses the entry with the largest burst length not
+    /// exceeding the query (the curve saturates upward).
+    pub entries: Vec<(u32, f64)>,
+}
+
+impl Default for EfficiencyTable {
+    fn default() -> Self {
+        Self::calibrated()
+    }
+}
+
+impl EfficiencyTable {
+    /// The Fig. 3a calibration measured on the simulated HBM2 substrate.
+    pub fn calibrated() -> Self {
+        Self {
+            entries: vec![
+                (1, 0.22),
+                (2, 0.44),
+                (4, 0.74),
+                (8, 0.826),
+                (16, 0.875),
+                (32, 0.902),
+            ],
+        }
+    }
+
+    /// Read efficiency at `burst_len`: the entry with the largest burst
+    /// length `<= burst_len`, or the first entry for shorter bursts.
+    pub fn lookup(&self, burst_len: u32) -> f64 {
+        self.entries
+            .iter()
+            .rev()
+            .find(|&&(bl, _)| bl <= burst_len)
+            .or_else(|| self.entries.first())
+            .map(|&(_, eff)| eff)
+            .unwrap_or(1.0)
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.entries.is_empty(), "efficiency table has no entries");
+        for w in self.entries.windows(2) {
+            anyhow::ensure!(
+                w[0].0 < w[1].0,
+                "efficiency table burst lengths must be strictly increasing ({} then {})",
+                w[0].0,
+                w[1].0
+            );
+        }
+        for &(bl, eff) in &self.entries {
+            anyhow::ensure!(
+                eff > 0.0 && eff <= 1.0,
+                "efficiency {eff} at burst {bl} out of range (0, 1]"
+            );
+        }
+        Ok(())
+    }
+}
+
 /// Options controlling H2PIPE compilation.
 #[derive(Debug, Clone)]
 pub struct CompilerOptions {
@@ -68,6 +138,10 @@ pub struct CompilerOptions {
     /// engines ran fewer chains still; see EXPERIMENTS.md for the
     /// resulting calibration deltas.
     pub max_chains_per_layer: u32,
+    /// HBM read-efficiency calibration used by the stall model. Defaults
+    /// to the Fig. 3a measurement; recalibration overrides it here (and
+    /// the table is persisted inside every saved plan artifact).
+    pub efficiency: EfficiencyTable,
 }
 
 impl Default for CompilerOptions {
@@ -82,6 +156,7 @@ impl Default for CompilerOptions {
             weight_bits: 8,
             max_parallelism_steps: 64,
             max_chains_per_layer: 32,
+            efficiency: EfficiencyTable::calibrated(),
         }
     }
 }
@@ -101,6 +176,7 @@ impl CompilerOptions {
             "max_utilization must be in [0,1]"
         );
         anyhow::ensure!(self.weight_bits == 8 || self.weight_bits == 16, "8- or 16-bit weights");
+        self.efficiency.validate()?;
         Ok(())
     }
 }
@@ -132,6 +208,32 @@ mod tests {
     fn fifo_depth_must_be_power_of_two() {
         let mut o = CompilerOptions::default();
         o.last_stage_fifo_depth = 500;
+        assert!(o.validate().is_err());
+    }
+
+    #[test]
+    fn efficiency_table_matches_legacy_calibration() {
+        let t = EfficiencyTable::calibrated();
+        for (bl, want) in [(1, 0.22), (2, 0.44), (4, 0.74), (8, 0.826), (16, 0.875), (32, 0.902)] {
+            assert_eq!(t.lookup(bl), want, "BL{bl}");
+        }
+        // below the first breakpoint: clamp to the first entry
+        assert_eq!(t.lookup(0), 0.22);
+    }
+
+    #[test]
+    fn efficiency_table_validation() {
+        let mut t = EfficiencyTable::calibrated();
+        t.validate().unwrap();
+        t.entries[0].1 = 1.5;
+        assert!(t.validate().is_err(), "efficiency above 1");
+        let unordered = EfficiencyTable { entries: vec![(8, 0.8), (4, 0.7)] };
+        assert!(unordered.validate().is_err(), "unsorted bursts");
+        let empty = EfficiencyTable { entries: vec![] };
+        assert!(empty.validate().is_err());
+        // an invalid table makes the whole options invalid
+        let mut o = CompilerOptions::default();
+        o.efficiency = empty;
         assert!(o.validate().is_err());
     }
 

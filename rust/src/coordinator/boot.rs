@@ -29,11 +29,28 @@ pub struct BootReport {
     pub hbm_write_efficiency: f64,
 }
 
+impl BootReport {
+    /// Machine-scrapable form (embedded in session `RunReport`s).
+    pub fn to_json(&self) -> crate::util::Json {
+        let mut o = crate::util::Json::obj();
+        o.set("bytes", self.bytes)
+            .set("write_path_bits", self.write_path_bits)
+            .set("write_path_registers", self.write_path_registers)
+            .set("seconds", self.seconds)
+            .set("hbm_write_efficiency", self.hbm_write_efficiency);
+        o
+    }
+}
+
 /// Simulate the one-time weight download for a compiled plan.
 ///
 /// The narrow path delivers `write_path_bits` per core cycle; bursts are
 /// accumulated and issued to each PC's controller in layer order (the
 /// §V-B clockwise assignment). Returns the measured boot report.
+///
+/// **Deprecated** for application code: prefer
+/// [`crate::session::CompiledModel::boot`], which ties the download to
+/// the artifact's provenance; this free function remains the engine.
 pub fn boot_weights(plan: &AcceleratorPlan) -> BootReport {
     let geom = &plan.device.hbm;
     let timing = &plan.device.hbm_timing;

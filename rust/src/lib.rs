@@ -29,6 +29,10 @@
 //!   a network into pipeline-parallel shards, the fleet simulator that
 //!   composes one pipeline sim per device through credit-based
 //!   inter-device links, and the replica router for fleet serving.
+//! * [`session`] — the typed end-to-end pipeline API:
+//!   `Session::builder() -> CompiledModel -> Deployment -> RunReport`,
+//!   with `CompiledModel` persistable as a JSON plan artifact
+//!   (compile once, simulate/serve many).
 //! * [`runtime`] — pluggable execution backends behind one [`runtime::Backend`]
 //!   trait: a pure-Rust int8 reference interpreter (default, works in the
 //!   offline crate set with no artifacts) and, behind the non-default
@@ -53,6 +57,7 @@ pub mod fabric;
 pub mod hbm;
 pub mod nn;
 pub mod runtime;
+pub mod session;
 pub mod sim;
 pub mod testkit;
 pub mod util;

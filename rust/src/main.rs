@@ -1,32 +1,28 @@
 //! H2PIPE command-line launcher.
 //!
-//! Subcommands (arg parsing is hand-rolled — `clap` is not in the offline
-//! crate set):
+//! Every subcommand is routed through the typed [`h2pipe::session`]
+//! pipeline (`Session::builder() -> CompiledModel -> Deployment ->
+//! RunReport`); `compile --out` persists the plan artifact and
+//! `simulate`/`serve`/`boot` accept `--plan` to consume it, reproducing
+//! the in-memory path bit-for-bit.
 //!
-//! ```text
-//! h2pipe compile      --model resnet50 [--all-hbm] [--burst N] [--write-path-bits N]
-//! h2pipe simulate     --model resnet50 [--all-hbm] [--burst N] [--images N]
-//! h2pipe characterize [--bursts 1,2,4,8,16,32] [--pattern random|sequential|interleaved3]
-//! h2pipe table1
-//! h2pipe bounds
-//! h2pipe table3
-//! h2pipe boot         --model vgg16 [--write-path-bits N]
-//! h2pipe serve        [--requests N] [--batch N] [--replicas N] [--shards M]
-//! h2pipe infer
-//! ```
+//! Arg parsing is hand-rolled against per-subcommand specs (`clap` is not
+//! in the offline crate set): options that take a value consume the next
+//! token verbatim — even one starting with `--` — and a missing value or
+//! unknown option fails with that subcommand's usage instead of being
+//! silently reclassified as a flag. `h2pipe help <cmd>` prints the spec.
 
 use std::collections::HashMap;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 use h2pipe::analysis;
-use h2pipe::cluster::{partition, FleetRouter, PartitionOptions};
-use h2pipe::compiler::{compile, memory_breakdown};
-use h2pipe::config::{BurstLengthPolicy, CompilerOptions, DeviceConfig};
-use h2pipe::coordinator::{boot_weights, ServerConfig};
+use h2pipe::compiler::memory_breakdown;
+use h2pipe::config::{CompilerOptions, DeviceConfig};
 use h2pipe::hbm::{AddressPattern, TrafficConfig, TrafficGen};
 use h2pipe::nn::zoo;
-use h2pipe::sim::pipeline::{simulate, SimConfig};
-use h2pipe::util::{fmt_mbits, XorShift64};
+use h2pipe::session::{CompiledModel, DeploymentTarget, ServeOptions, Session, SessionBuilder};
+use h2pipe::sim::pipeline::SimConfig;
+use h2pipe::util::fmt_mbits;
 
 fn main() {
     if let Err(e) = run() {
@@ -35,35 +31,174 @@ fn main() {
     }
 }
 
-/// Parsed `--key value` / `--flag` arguments.
+/// Static description of one subcommand: which `--key value` options and
+/// which bare `--flag`s it accepts, plus its usage text.
+struct CmdSpec {
+    name: &'static str,
+    about: &'static str,
+    usage: &'static str,
+    /// Options that consume the next token as their value.
+    keys: &'static [&'static str],
+    /// Bare flags.
+    flags: &'static [&'static str],
+}
+
+const MODEL_LIST: &str =
+    "resnet18|resnet50|vgg16|mobilenetv1|mobilenetv2|mobilenetv3|mobilenet_edge";
+
+const SPECS: &[CmdSpec] = &[
+    CmdSpec {
+        name: "compile",
+        about: "compile a model into an accelerator plan (optionally persist it)",
+        usage: "h2pipe compile [--model NAME] [--all-hbm] [--burst N] \
+                [--write-path-bits N] [--out FILE.json]",
+        keys: &["model", "burst", "write-path-bits", "out"],
+        flags: &["all-hbm"],
+    },
+    CmdSpec {
+        name: "simulate",
+        about: "cycle-simulate a plan (freshly compiled or loaded from --plan)",
+        usage: "h2pipe simulate [--model NAME | --plan FILE.json] [--all-hbm] [--burst N] \
+                [--write-path-bits N] [--images N] [--warmup N]",
+        keys: &["model", "plan", "burst", "write-path-bits", "images", "warmup"],
+        flags: &["all-hbm"],
+    },
+    CmdSpec {
+        name: "characterize",
+        about: "run the §III-A HBM traffic characterization",
+        usage: "h2pipe characterize [--bursts 1,2,4,8,16,32] \
+                [--pattern random|sequential|interleaved3]",
+        keys: &["bursts", "pattern"],
+        flags: &[],
+    },
+    CmdSpec {
+        name: "table1",
+        about: "Table I memory accounting for the model zoo",
+        usage: "h2pipe table1",
+        keys: &[],
+        flags: &[],
+    },
+    CmdSpec {
+        name: "bounds",
+        about: "Eq. 2 traffic + Fig. 6 throughput bounds",
+        usage: "h2pipe bounds",
+        keys: &[],
+        flags: &[],
+    },
+    CmdSpec {
+        name: "table3",
+        about: "analytic Table III rows (benches run the full simulator)",
+        usage: "h2pipe table3",
+        keys: &[],
+        flags: &[],
+    },
+    CmdSpec {
+        name: "boot",
+        about: "simulate the §IV-C boot-time weight download",
+        usage: "h2pipe boot [--model NAME | --plan FILE.json] [--all-hbm] [--burst N] \
+                [--write-path-bits N]",
+        keys: &["model", "plan", "burst", "write-path-bits"],
+        flags: &["all-hbm"],
+    },
+    CmdSpec {
+        name: "serve",
+        about: "serve inference requests through the fleet router",
+        usage: "h2pipe serve [--model NAME | --plan FILE.json] [--requests N] [--batch N] \
+                [--replicas N] [--shards M] [--clients N] [--seed N] \
+                [--serve-model cifarnet|resnet_block|mobilenet_edge]",
+        keys: &[
+            "model",
+            "plan",
+            "requests",
+            "batch",
+            "replicas",
+            "shards",
+            "clients",
+            "seed",
+            "serve-model",
+        ],
+        flags: &[],
+    },
+    CmdSpec {
+        name: "infer",
+        about: "single inference through the runtime backend",
+        usage: "h2pipe infer",
+        keys: &[],
+        flags: &[],
+    },
+];
+
+fn spec(cmd: &str) -> Option<&'static CmdSpec> {
+    SPECS.iter().find(|s| s.name == cmd)
+}
+
+fn general_help() -> String {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    let _ = writeln!(s, "h2pipe — H2PIPE (FPL 2024) reproduction");
+    let _ = writeln!(s, "usage: h2pipe <command> [options]   (h2pipe help <command> for details)");
+    let _ = writeln!(s);
+    for sp in SPECS {
+        let _ = writeln!(s, "  {:<13} {}", sp.name, sp.about);
+    }
+    let _ = writeln!(s, "  {:<13} {}", "help", "show this list, or one command's options");
+    let _ = writeln!(s);
+    let _ = writeln!(s, "models: {MODEL_LIST}");
+    s
+}
+
+fn cmd_help(sp: &CmdSpec) -> String {
+    format!("{}\n\nusage: {}", sp.about, sp.usage)
+}
+
+/// Parsed `--key value` / `--flag` arguments for one subcommand.
 struct Args {
     cmd: String,
+    /// Positional arguments (only `help` takes one).
+    positional: Vec<String>,
     kv: HashMap<String, String>,
     flags: Vec<String>,
 }
 
-fn parse_args() -> Result<Args> {
-    let mut it = std::env::args().skip(1);
+fn parse_args(argv: Vec<String>) -> Result<Args> {
+    let mut it = argv.into_iter();
     let cmd = it.next().unwrap_or_else(|| "help".to_string());
+    let rest: Vec<String> = it.collect();
+    if cmd == "help" || cmd == "--help" || cmd == "-h" {
+        return Ok(Args {
+            cmd: "help".to_string(),
+            positional: rest,
+            kv: HashMap::new(),
+            flags: Vec::new(),
+        });
+    }
+    let sp = spec(&cmd)
+        .ok_or_else(|| anyhow!("unknown command {cmd:?}\n\n{}", general_help()))?;
     let mut kv = HashMap::new();
     let mut flags = Vec::new();
-    let rest: Vec<String> = it.collect();
     let mut i = 0;
     while i < rest.len() {
         let a = &rest[i];
-        if let Some(key) = a.strip_prefix("--") {
-            if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
-                kv.insert(key.to_string(), rest[i + 1].clone());
-                i += 2;
-            } else {
-                flags.push(key.to_string());
-                i += 1;
+        let Some(key) = a.strip_prefix("--") else {
+            bail!("unexpected argument {a:?}\n\nusage: {}", sp.usage);
+        };
+        if sp.flags.iter().any(|f| *f == key) {
+            flags.push(key.to_string());
+            i += 1;
+        } else if sp.keys.iter().any(|k| *k == key) {
+            // the value is taken verbatim, even when it starts with "--"
+            match rest.get(i + 1) {
+                Some(v) => {
+                    kv.insert(key.to_string(), v.clone());
+                    i += 2;
+                }
+                None => bail!("--{key} requires a value\n\nusage: {}", sp.usage),
             }
         } else {
-            bail!("unexpected argument {a:?}");
+            bail!("unknown option --{key} for {cmd}\n\nusage: {}", sp.usage);
         }
     }
-    Ok(Args { cmd, kv, flags })
+    Ok(Args { cmd, positional: Vec::new(), kv, flags })
 }
 
 impl Args {
@@ -77,57 +212,74 @@ impl Args {
     {
         match self.kv.get(name) {
             None => Ok(default),
-            Some(v) => v.parse().map_err(|e| anyhow::anyhow!("--{name} {v:?}: {e}")),
+            Some(v) => v.parse().map_err(|e| anyhow!("--{name} {v:?}: {e}")),
         }
     }
 
-    fn model(&self) -> Result<h2pipe::nn::Network> {
-        let name = self.kv.get("model").map(String::as_str).unwrap_or("resnet18");
-        zoo::by_name(name).with_context(|| format!("unknown model {name:?}"))
-    }
-
-    fn compiler_options(&self) -> Result<CompilerOptions> {
-        let mut o = CompilerOptions::default();
+    /// Session builder carrying this command's compile-stage knobs.
+    fn builder(&self) -> Result<SessionBuilder> {
+        let mut b = Session::builder()
+            .model(self.kv.get("model").map(String::as_str).unwrap_or("resnet18"))
+            .device(DeviceConfig::stratix10_nx2100());
         if self.flag("all-hbm") {
-            o.all_hbm = true;
+            b = b.all_hbm(true);
         }
-        if let Some(b) = self.kv.get("burst") {
-            o.burst_length = BurstLengthPolicy::Fixed(b.parse()?);
+        if let Some(burst) = self.kv.get("burst") {
+            b = b.fixed_burst(burst.parse().map_err(|e| anyhow!("--burst {burst:?}: {e}"))?);
         }
-        o.write_path_bits = self.get("write-path-bits", o.write_path_bits)?;
-        o.validate()?;
-        Ok(o)
+        if let Some(w) = self.kv.get("write-path-bits") {
+            b = b.write_path_bits(w.parse().map_err(|e| anyhow!("--write-path-bits {w:?}: {e}"))?);
+        }
+        Ok(b)
+    }
+
+    /// The artifact stage: load `--plan` or compile from the knobs.
+    fn compiled(&self) -> Result<CompiledModel> {
+        match self.kv.get("plan") {
+            Some(path) => {
+                for k in ["model", "burst", "write-path-bits"] {
+                    anyhow::ensure!(
+                        !self.kv.contains_key(k),
+                        "--{k} conflicts with --plan (the artifact pins compile options)"
+                    );
+                }
+                anyhow::ensure!(!self.flag("all-hbm"), "--all-hbm conflicts with --plan");
+                CompiledModel::load(path)
+            }
+            None => self.builder()?.compile(),
+        }
     }
 }
 
 fn run() -> Result<()> {
-    let args = parse_args()?;
+    let args = parse_args(std::env::args().skip(1).collect())?;
     let device = DeviceConfig::stratix10_nx2100();
     match args.cmd.as_str() {
+        "help" => match args.positional.first() {
+            None => print!("{}", general_help()),
+            Some(cmd) => match spec(cmd) {
+                Some(sp) => println!("{}", cmd_help(sp)),
+                None => bail!("unknown command {cmd:?}\n\n{}", general_help()),
+            },
+        },
         "compile" => {
-            let net = args.model()?;
-            let plan = compile(&net, &device, &args.compiler_options()?)?;
-            print!("{}", plan.report());
+            let cm = args.builder()?.compile()?;
+            print!("{}", cm.plan().report());
+            if let Some(path) = args.kv.get("out") {
+                cm.save(path)?;
+                println!("plan artifact written to {path}");
+            }
         }
         "simulate" => {
-            let net = args.model()?;
-            let plan = compile(&net, &device, &args.compiler_options()?)?;
+            let cm = args.compiled()?;
             let cfg = SimConfig {
                 images: args.get("images", 5u64)?,
                 warmup_images: args.get("warmup", 2u64)?,
                 ..SimConfig::default()
             };
-            let rep = simulate(&net, &plan, &cfg)?;
-            println!(
-                "{}: {:.0} im/s   latency {:.2} ms   freeze {:.3}   bottleneck {} ({})   hbm eff {:.3}",
-                rep.network,
-                rep.throughput,
-                rep.latency * 1e3,
-                rep.freeze_fraction,
-                rep.bottleneck,
-                if rep.bottleneck_on_hbm { "HBM" } else { "on-chip" },
-                rep.hbm_efficiency,
-            );
+            let rep = cm.deploy(DeploymentTarget::SingleDevice(cfg)).run()?;
+            println!("{}", rep.summary());
+            println!("{}", rep.to_json().to_string());
         }
         "characterize" => {
             let bursts: Vec<u32> = args
@@ -195,14 +347,14 @@ fn run() -> Result<()> {
         }
         "table3" => {
             // quick analytic H2PIPE rows (benches use the full simulator)
-            let o = CompilerOptions::default();
             let mut ours = Vec::new();
             let mut macs = Vec::new();
             for net in zoo::eval_models() {
-                let plan = compile(&net, &device, &o)?;
-                macs.push((net.name.clone(), net.total_macs()));
+                let cm = Session::builder().network(net).device(device.clone()).compile()?;
+                let plan = cm.plan();
+                macs.push((plan.network.clone(), cm.network().total_macs()));
                 ours.push(analysis::H2pipeResult {
-                    network: net.name.clone(),
+                    network: plan.network.clone(),
                     all_hbm_throughput: 0.0,
                     hybrid_throughput: plan.est_throughput,
                     latency_ms: plan.est_latency * 1e3,
@@ -215,64 +367,37 @@ fn run() -> Result<()> {
             print!("{}", analysis::table3_text(&ours, &macs));
         }
         "boot" => {
-            let net = args.model()?;
-            let plan = compile(&net, &device, &args.compiler_options()?)?;
-            let r = boot_weights(&plan);
+            let cm = args.compiled()?;
+            let r = cm.boot();
             println!(
                 "{}: {} MiB to HBM over a {}-bit write path: {:.1} ms boot, {} write-path regs, write eff {:.2}",
-                net.name,
+                cm.network().name,
                 r.bytes >> 20,
                 r.write_path_bits,
                 r.seconds * 1e3,
                 r.write_path_registers,
                 r.hbm_write_efficiency
             );
+            println!("{}", r.to_json().to_string());
         }
         "serve" => {
-            let n_req: usize = args.get("requests", 64usize)?;
-            let replicas: usize = args.get("replicas", 1usize)?;
-            let shards: usize = args.get("shards", 1usize)?;
-            let model = args.kv.get("serve-model").map(String::as_str).unwrap_or("cifarnet");
-            let mut cfg = ServerConfig::builtin(model, "artifacts")?;
-            cfg.batch_size = args.get("batch", 8usize)?;
-            // modelled FPGA rate: ResNet-18 hybrid plan, optionally cut
-            // into pipeline-parallel shards
-            let net = zoo::resnet18();
-            let modelled = if shards > 1 {
-                let pp = partition(
-                    &net,
-                    &device,
-                    &CompilerOptions::default(),
-                    &PartitionOptions { shards: Some(shards), max_shards: shards },
-                )?;
-                print!("{}", pp.report());
-                cfg.modelled_image_s = 1.0 / pp.est_throughput();
-                format!("{shards}-shard ResNet-18 plan")
-            } else {
-                let plan = compile(&net, &device, &CompilerOptions::default())?;
-                cfg = cfg.with_modelled_plan(&plan);
-                "ResNet-18 hybrid plan".to_string()
+            let cm = args.compiled()?;
+            let opts = ServeOptions {
+                serve_model: args
+                    .kv
+                    .get("serve-model")
+                    .cloned()
+                    .unwrap_or_else(|| "cifarnet".to_string()),
+                requests: args.get("requests", 64usize)?,
+                batch: args.get("batch", 8usize)?,
+                replicas: args.get("replicas", 1usize)?,
+                shards: args.get("shards", 1usize)?,
+                clients: args.get("clients", 1usize)?,
+                seed: args.get("seed", 7u64)?,
+                ..ServeOptions::default()
             };
-            let router = FleetRouter::start(cfg.clone(), replicas)?;
-            let pixels: usize = cfg.input_dims.iter().product();
-            let mut rng = XorShift64::new(7);
-            let mut ok = 0usize;
-            for _ in 0..n_req {
-                let img: Vec<i32> =
-                    (0..pixels).map(|_| rng.next_range(0, 255) as i32 - 128).collect();
-                if router.infer(img).is_ok() {
-                    ok += 1;
-                }
-            }
-            let rep = router.shutdown();
-            println!(
-                "served {ok} requests over {replicas} replica(s): wall {:.0} im/s, mean {:.2} ms, p50 {:.2} ms, p99 {:.2} ms",
-                rep.wall_throughput, rep.mean_latency_ms, rep.p50_ms, rep.p99_ms
-            );
-            println!(
-                "modelled FPGA rate ({modelled} x {replicas} replica(s)): {:.0} im/s",
-                rep.modelled_throughput
-            );
+            let rep = cm.deploy(DeploymentTarget::Serve(opts)).run()?;
+            println!("{}", rep.summary());
             println!("{}", rep.to_json().to_string());
         }
         "infer" => {
@@ -282,17 +407,77 @@ fn run() -> Result<()> {
             let out = exe.run_i32(&img, &[32, 32, 3])?;
             println!("cifarnet logits: {out:?}");
         }
-        _ => {
-            println!(
-                "h2pipe — H2PIPE (FPL 2024) reproduction\n\
-                 commands: compile | simulate | characterize | table1 | bounds | table3 | boot | serve | infer\n\
-                 common:   --model resnet18|resnet50|vgg16|mobilenetv1|mobilenetv2|mobilenetv3\n\
-                 compile:  --all-hbm --burst 8|16|32 --write-path-bits N\n\
-                 simulate: --images N --warmup N\n\
-                 serve:    --requests N --batch N --replicas N --shards M \
-                 --serve-model cifarnet|resnet_block|mobilenet_edge"
-            );
-        }
+        _ => unreachable!("parse_args only returns known commands"),
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|a| a.to_string()).collect()
+    }
+
+    #[test]
+    fn value_starting_with_dashes_is_taken_verbatim() {
+        let a = parse_args(argv(&["compile", "--out", "--weird-name.json"])).unwrap();
+        assert_eq!(a.kv.get("out").unwrap(), "--weird-name.json");
+    }
+
+    #[test]
+    fn missing_value_fails_with_usage() {
+        let e = parse_args(argv(&["compile", "--model"])).unwrap_err();
+        let msg = format!("{e:#}");
+        assert!(msg.contains("--model requires a value"), "{msg}");
+        assert!(msg.contains("usage: h2pipe compile"), "{msg}");
+    }
+
+    #[test]
+    fn unknown_option_fails_with_usage() {
+        let e = parse_args(argv(&["simulate", "--modle", "resnet18"])).unwrap_err();
+        let msg = format!("{e:#}");
+        assert!(msg.contains("unknown option --modle"), "{msg}");
+        assert!(msg.contains("usage: h2pipe simulate"), "{msg}");
+    }
+
+    #[test]
+    fn unknown_command_lists_commands() {
+        let e = parse_args(argv(&["frobnicate"])).unwrap_err();
+        assert!(format!("{e:#}").contains("unknown command"), "{e:#}");
+    }
+
+    #[test]
+    fn flags_and_values_parse_together() {
+        let a = parse_args(argv(&[
+            "simulate", "--all-hbm", "--model", "vgg16", "--images", "3",
+        ]))
+        .unwrap();
+        assert!(a.flag("all-hbm"));
+        assert_eq!(a.kv.get("model").unwrap(), "vgg16");
+        assert_eq!(a.get("images", 5u64).unwrap(), 3);
+    }
+
+    #[test]
+    fn help_takes_a_positional_command() {
+        let a = parse_args(argv(&["help", "serve"])).unwrap();
+        assert_eq!(a.cmd, "help");
+        assert_eq!(a.positional, vec!["serve".to_string()]);
+        assert!(cmd_help(spec("serve").unwrap()).contains("--replicas"));
+    }
+
+    #[test]
+    fn no_args_means_help() {
+        let a = parse_args(Vec::new()).unwrap();
+        assert_eq!(a.cmd, "help");
+        assert!(general_help().contains("compile"));
+    }
+
+    #[test]
+    fn plan_conflicts_with_compile_knobs() {
+        let a = parse_args(argv(&["simulate", "--plan", "p.json", "--model", "vgg16"])).unwrap();
+        let e = a.compiled().unwrap_err();
+        assert!(format!("{e:#}").contains("conflicts with --plan"), "{e:#}");
+    }
 }

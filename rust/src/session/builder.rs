@@ -1,0 +1,122 @@
+//! The entry stage: gather model + device + compiler knobs, then compile
+//! into a [`CompiledModel`].
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{BurstLengthPolicy, CompilerOptions, DeviceConfig, EfficiencyTable};
+use crate::nn::{zoo, Network};
+use crate::session::codec;
+use crate::session::compiled::{CompiledModel, Provenance};
+
+/// Entry point of the typed pipeline:
+/// `Session::builder() -> CompiledModel -> Deployment -> RunReport`.
+pub struct Session;
+
+impl Session {
+    /// Start a new pipeline: pick a model, a device and compiler options,
+    /// then [`SessionBuilder::compile`].
+    pub fn builder() -> SessionBuilder {
+        SessionBuilder {
+            source: ModelSource::Unset,
+            device: DeviceConfig::stratix10_nx2100(),
+            options: CompilerOptions::default(),
+        }
+    }
+}
+
+enum ModelSource {
+    Unset,
+    Zoo(String),
+    Custom(Network),
+}
+
+/// Accumulates the compile-stage inputs. Defaults: the paper's Stratix 10
+/// NX2100 testbed and default [`CompilerOptions`]; the model must be set.
+pub struct SessionBuilder {
+    source: ModelSource,
+    device: DeviceConfig,
+    options: CompilerOptions,
+}
+
+impl SessionBuilder {
+    /// Use a model-zoo network by name (resolved at compile time, so an
+    /// unknown name fails with the list of valid ones).
+    pub fn model(mut self, name: &str) -> Self {
+        self.source = ModelSource::Zoo(name.to_string());
+        self
+    }
+
+    /// Use a custom network IR.
+    pub fn network(mut self, net: Network) -> Self {
+        self.source = ModelSource::Custom(net);
+        self
+    }
+
+    pub fn device(mut self, device: DeviceConfig) -> Self {
+        self.device = device;
+        self
+    }
+
+    /// Replace the whole option set (individual knobs below tweak it).
+    pub fn options(mut self, options: CompilerOptions) -> Self {
+        self.options = options;
+        self
+    }
+
+    /// The paper's all-HBM configuration (offload everything bandwidth
+    /// allows) instead of the hybrid Algorithm 1 memory system.
+    pub fn all_hbm(mut self, yes: bool) -> Self {
+        self.options.all_hbm = yes;
+        self
+    }
+
+    /// Force a fixed HBM burst length (legal values: 1,2,4,8,16,32;
+    /// validated at compile time).
+    pub fn fixed_burst(mut self, burst_len: u32) -> Self {
+        self.options.burst_length = BurstLengthPolicy::Fixed(burst_len);
+        self
+    }
+
+    pub fn burst_policy(mut self, policy: BurstLengthPolicy) -> Self {
+        self.options.burst_length = policy;
+        self
+    }
+
+    /// §IV-C boot write-path width in bits.
+    pub fn write_path_bits(mut self, bits: u32) -> Self {
+        self.options.write_path_bits = bits;
+        self
+    }
+
+    /// Override the HBM read-efficiency calibration (fig3a recalibration).
+    pub fn efficiency_table(mut self, table: EfficiencyTable) -> Self {
+        self.options.efficiency = table;
+        self
+    }
+
+    /// Run the H2PIPE compiler, producing the persistable artifact stage.
+    pub fn compile(self) -> Result<CompiledModel> {
+        let net = match self.source {
+            ModelSource::Unset => bail!(
+                "no model set: call SessionBuilder::model(\"resnet50\" | ...) or \
+                 SessionBuilder::network(net)"
+            ),
+            ModelSource::Zoo(name) => zoo::by_name(&name).with_context(|| {
+                format!(
+                    "unknown zoo model {name:?} (try resnet18, resnet50, vgg16, \
+                     mobilenetv1, mobilenetv2, mobilenetv3, mobilenet_edge)"
+                )
+            })?,
+            ModelSource::Custom(net) => net,
+        };
+        self.options.validate()?;
+        let plan = crate::compiler::compile(&net, &self.device, &self.options)
+            .with_context(|| format!("compiling {}", net.name))?;
+        let provenance = Provenance {
+            model: net.name.clone(),
+            device: self.device.name.clone(),
+            options_hash: codec::options_hash(&self.options),
+        };
+        Ok(CompiledModel { network: net, plan, provenance })
+    }
+}

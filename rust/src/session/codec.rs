@@ -1,0 +1,582 @@
+//! JSON wire format for plan artifacts.
+//!
+//! Every type a [`crate::session::CompiledModel`] persists round-trips
+//! through [`crate::util::Json`] losslessly: integers are emitted exactly,
+//! f64s in Rust's shortest round-trip form, and the few legitimately
+//! non-finite values (Eq. 1 scores of weightless layers) are tagged
+//! strings. `plan_from_json(plan_to_json(p))` reconstructs a plan that is
+//! bit-identical for every field the simulator and serving runtime read —
+//! that is what makes `compile --out` / `simulate --plan` reproduce the
+//! in-memory pipeline exactly.
+//!
+//! Schema versioning: the artifact envelope (see
+//! [`crate::session::CompiledModel::to_json`]) carries a `format` tag;
+//! loaders reject unknown versions instead of misreading them.
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::compiler::{AcceleratorPlan, LayerPlan, LayerStats, Parallelism, ResourceUsage};
+use crate::config::{
+    BurstLengthPolicy, CompilerOptions, DeviceConfig, EfficiencyTable, HbmGeometry, HbmTiming,
+    WeightPlacement,
+};
+use crate::nn::{ConvKind, Network, OpKind, Shape};
+use crate::util::Json;
+
+// ---------------------------------------------------------------- helpers
+
+fn field<'a>(j: &'a Json, key: &str) -> Result<&'a Json> {
+    j.get(key).ok_or_else(|| anyhow!("missing field {key:?}"))
+}
+
+fn f64_field(j: &Json, key: &str) -> Result<f64> {
+    field(j, key)?.as_f64().ok_or_else(|| anyhow!("field {key:?} is not a number"))
+}
+
+fn u64_field(j: &Json, key: &str) -> Result<u64> {
+    field(j, key)?.as_u64().ok_or_else(|| anyhow!("field {key:?} is not a non-negative integer"))
+}
+
+fn u32_field(j: &Json, key: &str) -> Result<u32> {
+    field(j, key)?.as_u32().ok_or_else(|| anyhow!("field {key:?} is not a u32"))
+}
+
+fn usize_field(j: &Json, key: &str) -> Result<usize> {
+    field(j, key)?.as_usize().ok_or_else(|| anyhow!("field {key:?} is not an index"))
+}
+
+fn bool_field(j: &Json, key: &str) -> Result<bool> {
+    field(j, key)?.as_bool().ok_or_else(|| anyhow!("field {key:?} is not a bool"))
+}
+
+fn str_field<'a>(j: &'a Json, key: &str) -> Result<&'a str> {
+    field(j, key)?.as_str().ok_or_else(|| anyhow!("field {key:?} is not a string"))
+}
+
+fn arr_field<'a>(j: &'a Json, key: &str) -> Result<&'a [Json]> {
+    field(j, key)?.as_arr().ok_or_else(|| anyhow!("field {key:?} is not an array"))
+}
+
+/// Eq. 1 scores are `-inf` for weightless layers; JSON has no non-finite
+/// numbers, so those are tagged strings.
+fn score_to_json(s: f64) -> Json {
+    if s.is_finite() {
+        Json::Num(s)
+    } else if s == f64::NEG_INFINITY {
+        Json::Str("-inf".to_string())
+    } else if s == f64::INFINITY {
+        Json::Str("inf".to_string())
+    } else {
+        Json::Str("nan".to_string())
+    }
+}
+
+fn score_from_json(j: &Json) -> Result<f64> {
+    match j {
+        Json::Num(n) => Ok(*n),
+        Json::Str(s) if s == "-inf" => Ok(f64::NEG_INFINITY),
+        Json::Str(s) if s == "inf" => Ok(f64::INFINITY),
+        Json::Str(s) if s == "nan" => Ok(f64::NAN),
+        other => bail!("score is neither a number nor a non-finite tag: {other:?}"),
+    }
+}
+
+/// FNV-1a 64-bit, used for the provenance options hash (serialized as a
+/// hex string — raw u64s above 2^53 would lose precision as JSON numbers).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Stable hash of a whole `CompilerOptions` (including the efficiency
+/// table): two plans with the same hash were compiled with identical
+/// knobs.
+pub fn options_hash(o: &CompilerOptions) -> u64 {
+    fnv1a64(options_to_json(o).to_string().as_bytes())
+}
+
+// ---------------------------------------------------------------- network
+
+pub fn network_to_json(net: &Network) -> Json {
+    let input = net.input_shape();
+    let mut in_shape = Json::obj();
+    in_shape.set("h", input.h).set("w", input.w).set("c", input.c);
+
+    let mut layers = Json::Arr(Vec::new());
+    for l in &net.layers()[1..] {
+        let mut o = Json::obj();
+        o.set("name", l.name.as_str());
+        o.set("inputs", Json::Arr(l.inputs.iter().map(|&i| Json::from(i)).collect()));
+        match &l.op {
+            OpKind::Input { .. } => unreachable!("layer 0 is the only Input"),
+            OpKind::Conv { kind, kh, kw, stride, pad, out_c } => {
+                let kind = match kind {
+                    ConvKind::Standard => "standard",
+                    ConvKind::Depthwise => "depthwise",
+                    ConvKind::Pointwise => "pointwise",
+                };
+                o.set("op", "conv")
+                    .set("conv", kind)
+                    .set("kh", *kh)
+                    .set("kw", *kw)
+                    .set("stride", *stride)
+                    .set("pad", *pad)
+                    .set("out_c", *out_c);
+            }
+            OpKind::MaxPool { k, stride, pad } => {
+                o.set("op", "maxpool").set("k", *k).set("stride", *stride).set("pad", *pad);
+            }
+            OpKind::GlobalAvgPool => {
+                o.set("op", "global_avg_pool");
+            }
+            OpKind::Add => {
+                o.set("op", "add");
+            }
+            OpKind::Fc { out_features } => {
+                o.set("op", "fc").set("out_features", *out_features);
+            }
+            OpKind::SqueezeExcite { squeeze_c } => {
+                o.set("op", "squeeze_excite").set("squeeze_c", *squeeze_c);
+            }
+        }
+        layers.push(o);
+    }
+
+    let mut o = Json::obj();
+    o.set("name", net.name.as_str()).set("input", in_shape).set("layers", layers);
+    o
+}
+
+pub fn network_from_json(j: &Json) -> Result<Network> {
+    let name = str_field(j, "name")?;
+    let input = field(j, "input")?;
+    let shape =
+        Shape::new(u32_field(input, "h")?, u32_field(input, "w")?, u32_field(input, "c")?);
+    let mut net = Network::new(name, shape);
+    for (pos, l) in arr_field(j, "layers")?.iter().enumerate() {
+        let lname = str_field(l, "name")?;
+        let inputs: Vec<usize> = arr_field(l, "inputs")?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| anyhow!("layer {lname:?}: bad input id")))
+            .collect::<Result<_>>()?;
+        let op = match str_field(l, "op")? {
+            "conv" => {
+                let kind = match str_field(l, "conv")? {
+                    "standard" => ConvKind::Standard,
+                    "depthwise" => ConvKind::Depthwise,
+                    "pointwise" => ConvKind::Pointwise,
+                    k => bail!("layer {lname:?}: unknown conv kind {k:?}"),
+                };
+                OpKind::Conv {
+                    kind,
+                    kh: u32_field(l, "kh")?,
+                    kw: u32_field(l, "kw")?,
+                    stride: u32_field(l, "stride")?,
+                    pad: u32_field(l, "pad")?,
+                    out_c: u32_field(l, "out_c")?,
+                }
+            }
+            "maxpool" => OpKind::MaxPool {
+                k: u32_field(l, "k")?,
+                stride: u32_field(l, "stride")?,
+                pad: u32_field(l, "pad")?,
+            },
+            "global_avg_pool" => OpKind::GlobalAvgPool,
+            "add" => OpKind::Add,
+            "fc" => OpKind::Fc { out_features: u32_field(l, "out_features")? },
+            "squeeze_excite" => {
+                OpKind::SqueezeExcite { squeeze_c: u32_field(l, "squeeze_c")? }
+            }
+            op => bail!("layer {lname:?}: unknown op {op:?}"),
+        };
+        let id = net
+            .add(lname, op, &inputs)
+            .with_context(|| format!("rebuilding layer {pos} ({lname:?})"))?;
+        anyhow::ensure!(id == pos + 1, "layer id drift while rebuilding {lname:?}");
+    }
+    net.validate().context("rebuilt network fails validation")?;
+    Ok(net)
+}
+
+// ----------------------------------------------------------------- device
+
+pub fn device_to_json(d: &DeviceConfig) -> Json {
+    let g = &d.hbm;
+    let mut hbm = Json::obj();
+    hbm.set("stacks", g.stacks)
+        .set("pcs_per_stack", g.pcs_per_stack)
+        .set("banks_per_pc", g.banks_per_pc)
+        .set("bank_groups", g.bank_groups)
+        .set("row_bytes", g.row_bytes)
+        .set("interface_bits", g.interface_bits)
+        .set("controller_mhz", g.controller_mhz)
+        .set("pc_capacity_bytes", g.pc_capacity_bytes);
+
+    let t = &d.hbm_timing;
+    let mut timing = Json::obj();
+    timing
+        .set("t_rcd", t.t_rcd)
+        .set("t_rp", t.t_rp)
+        .set("t_ras", t.t_ras)
+        .set("t_cl", t.t_cl)
+        .set("t_cwl", t.t_cwl)
+        .set("t_ccd_s", t.t_ccd_s)
+        .set("t_ccd_l", t.t_ccd_l)
+        .set("t_rrd", t.t_rrd)
+        .set("t_faw", t.t_faw)
+        .set("t_wr", t.t_wr)
+        .set("t_wtr", t.t_wtr)
+        .set("t_rtw", t.t_rtw)
+        .set("t_refi", t.t_refi)
+        .set("t_rfc", t.t_rfc)
+        .set("t_rd_gap", t.t_rd_gap)
+        .set("t_wr_gap", t.t_wr_gap);
+
+    let mut o = Json::obj();
+    o.set("name", d.name.as_str())
+        .set("m20k_blocks", d.m20k_blocks)
+        .set("m20k_bits", d.m20k_bits)
+        .set("tensor_blocks", d.tensor_blocks)
+        .set("alms", d.alms)
+        .set("core_mhz", d.core_mhz)
+        .set("hbm", hbm)
+        .set("hbm_timing", timing)
+        .set(
+            "excluded_pcs",
+            Json::Arr(d.excluded_pcs.iter().map(|&p| Json::from(p)).collect()),
+        );
+    o
+}
+
+pub fn device_from_json(j: &Json) -> Result<DeviceConfig> {
+    let h = field(j, "hbm")?;
+    let hbm = HbmGeometry {
+        stacks: u32_field(h, "stacks")?,
+        pcs_per_stack: u32_field(h, "pcs_per_stack")?,
+        banks_per_pc: u32_field(h, "banks_per_pc")?,
+        bank_groups: u32_field(h, "bank_groups")?,
+        row_bytes: u32_field(h, "row_bytes")?,
+        interface_bits: u32_field(h, "interface_bits")?,
+        controller_mhz: u32_field(h, "controller_mhz")?,
+        pc_capacity_bytes: u64_field(h, "pc_capacity_bytes")?,
+    };
+    let t = field(j, "hbm_timing")?;
+    let hbm_timing = HbmTiming {
+        t_rcd: u32_field(t, "t_rcd")?,
+        t_rp: u32_field(t, "t_rp")?,
+        t_ras: u32_field(t, "t_ras")?,
+        t_cl: u32_field(t, "t_cl")?,
+        t_cwl: u32_field(t, "t_cwl")?,
+        t_ccd_s: u32_field(t, "t_ccd_s")?,
+        t_ccd_l: u32_field(t, "t_ccd_l")?,
+        t_rrd: u32_field(t, "t_rrd")?,
+        t_faw: u32_field(t, "t_faw")?,
+        t_wr: u32_field(t, "t_wr")?,
+        t_wtr: u32_field(t, "t_wtr")?,
+        t_rtw: u32_field(t, "t_rtw")?,
+        t_refi: u32_field(t, "t_refi")?,
+        t_rfc: u32_field(t, "t_rfc")?,
+        t_rd_gap: u32_field(t, "t_rd_gap")?,
+        t_wr_gap: u32_field(t, "t_wr_gap")?,
+    };
+    let excluded_pcs = arr_field(j, "excluded_pcs")?
+        .iter()
+        .map(|v| v.as_u32().ok_or_else(|| anyhow!("bad excluded PC id")))
+        .collect::<Result<_>>()?;
+    Ok(DeviceConfig {
+        name: str_field(j, "name")?.to_string(),
+        m20k_blocks: u32_field(j, "m20k_blocks")?,
+        m20k_bits: u32_field(j, "m20k_bits")?,
+        tensor_blocks: u32_field(j, "tensor_blocks")?,
+        alms: u32_field(j, "alms")?,
+        core_mhz: u32_field(j, "core_mhz")?,
+        hbm,
+        hbm_timing,
+        excluded_pcs,
+    })
+}
+
+// ---------------------------------------------------------------- options
+
+pub fn options_to_json(o: &CompilerOptions) -> Json {
+    let mut eff = Json::Arr(Vec::new());
+    for &(bl, e) in &o.efficiency.entries {
+        eff.push(Json::Arr(vec![Json::from(bl), Json::from(e)]));
+    }
+    let mut j = Json::obj();
+    match o.burst_length {
+        BurstLengthPolicy::Auto => {
+            j.set("burst_policy", "auto");
+        }
+        BurstLengthPolicy::Fixed(bl) => {
+            j.set("burst_policy", "fixed").set("burst_fixed", bl);
+        }
+    }
+    j.set("all_hbm", o.all_hbm)
+        .set("write_path_bits", o.write_path_bits)
+        .set("last_stage_fifo_depth", o.last_stage_fifo_depth)
+        .set("fifo_group_size", o.fifo_group_size)
+        .set("max_utilization", o.max_utilization)
+        .set("weight_bits", o.weight_bits)
+        .set("max_parallelism_steps", o.max_parallelism_steps)
+        .set("max_chains_per_layer", o.max_chains_per_layer)
+        .set("efficiency", eff);
+    j
+}
+
+pub fn options_from_json(j: &Json) -> Result<CompilerOptions> {
+    let burst_length = match str_field(j, "burst_policy")? {
+        "auto" => BurstLengthPolicy::Auto,
+        "fixed" => BurstLengthPolicy::Fixed(u32_field(j, "burst_fixed")?),
+        p => bail!("unknown burst policy {p:?}"),
+    };
+    let entries = arr_field(j, "efficiency")?
+        .iter()
+        .map(|pair| -> Result<(u32, f64)> {
+            let p = pair.as_arr().ok_or_else(|| anyhow!("efficiency entry is not a pair"))?;
+            anyhow::ensure!(p.len() == 2, "efficiency entry is not a pair");
+            Ok((
+                p[0].as_u32().ok_or_else(|| anyhow!("bad efficiency burst length"))?,
+                p[1].as_f64().ok_or_else(|| anyhow!("bad efficiency value"))?,
+            ))
+        })
+        .collect::<Result<_>>()?;
+    let o = CompilerOptions {
+        burst_length,
+        all_hbm: bool_field(j, "all_hbm")?,
+        write_path_bits: u32_field(j, "write_path_bits")?,
+        last_stage_fifo_depth: u32_field(j, "last_stage_fifo_depth")?,
+        fifo_group_size: u32_field(j, "fifo_group_size")?,
+        max_utilization: f64_field(j, "max_utilization")?,
+        weight_bits: u32_field(j, "weight_bits")?,
+        max_parallelism_steps: u32_field(j, "max_parallelism_steps")?,
+        max_chains_per_layer: u32_field(j, "max_chains_per_layer")?,
+        efficiency: EfficiencyTable { entries },
+    };
+    o.validate().context("loaded compiler options fail validation")?;
+    Ok(o)
+}
+
+// ------------------------------------------------------------------- plan
+
+fn stats_to_json(s: &LayerStats) -> Json {
+    let mut o = Json::obj();
+    o.set("layer", s.layer)
+        .set("name", s.name.as_str())
+        .set("weight_bits", s.weight_bits)
+        .set("weight_m20k", s.weight_m20k)
+        .set("dup", s.dup)
+        .set("act_bits", s.act_bits)
+        .set("weight_traffic_per_image", s.weight_traffic_per_image)
+        .set("macs", s.macs)
+        .set("out_h", s.out_h)
+        .set("out_w", s.out_w)
+        .set("kh", s.kh)
+        .set("kw", s.kw)
+        .set("ci", s.ci)
+        .set("co", s.co)
+        .set("has_weights", s.has_weights)
+        .set("depthwise", s.depthwise);
+    o
+}
+
+fn stats_from_json(j: &Json) -> Result<LayerStats> {
+    Ok(LayerStats {
+        layer: usize_field(j, "layer")?,
+        name: str_field(j, "name")?.to_string(),
+        weight_bits: u64_field(j, "weight_bits")?,
+        weight_m20k: u64_field(j, "weight_m20k")?,
+        dup: u64_field(j, "dup")?,
+        act_bits: u64_field(j, "act_bits")?,
+        weight_traffic_per_image: u64_field(j, "weight_traffic_per_image")?,
+        macs: u64_field(j, "macs")?,
+        out_h: u32_field(j, "out_h")?,
+        out_w: u32_field(j, "out_w")?,
+        kh: u32_field(j, "kh")?,
+        kw: u32_field(j, "kw")?,
+        ci: u32_field(j, "ci")?,
+        co: u32_field(j, "co")?,
+        has_weights: bool_field(j, "has_weights")?,
+        depthwise: bool_field(j, "depthwise")?,
+    })
+}
+
+fn layer_plan_to_json(l: &LayerPlan) -> Json {
+    let mut pcs = Json::Arr(Vec::new());
+    for &(pc, slots) in &l.pcs {
+        pcs.push(Json::Arr(vec![Json::from(pc), Json::from(slots)]));
+    }
+    let mut o = Json::obj();
+    o.set("stats", stats_to_json(&l.stats))
+        .set("p_i", l.par.p_i)
+        .set("p_o", l.par.p_o)
+        .set(
+            "placement",
+            match l.placement {
+                WeightPlacement::OnChip => "onchip",
+                WeightPlacement::Hbm => "hbm",
+            },
+        )
+        .set("pcs", pcs)
+        .set("score", score_to_json(l.score));
+    o
+}
+
+fn layer_plan_from_json(j: &Json) -> Result<LayerPlan> {
+    let placement = match str_field(j, "placement")? {
+        "onchip" => WeightPlacement::OnChip,
+        "hbm" => WeightPlacement::Hbm,
+        p => bail!("unknown weight placement {p:?}"),
+    };
+    let pcs = arr_field(j, "pcs")?
+        .iter()
+        .map(|pair| -> Result<(u32, u32)> {
+            let p = pair.as_arr().ok_or_else(|| anyhow!("PC entry is not a pair"))?;
+            anyhow::ensure!(p.len() == 2, "PC entry is not a pair");
+            Ok((
+                p[0].as_u32().ok_or_else(|| anyhow!("bad PC id"))?,
+                p[1].as_u32().ok_or_else(|| anyhow!("bad PC slot count"))?,
+            ))
+        })
+        .collect::<Result<_>>()?;
+    Ok(LayerPlan {
+        stats: stats_from_json(field(j, "stats")?)?,
+        par: Parallelism { p_i: u32_field(j, "p_i")?, p_o: u32_field(j, "p_o")? },
+        placement,
+        pcs,
+        score: score_from_json(field(j, "score")?)?,
+    })
+}
+
+pub fn plan_to_json(p: &AcceleratorPlan) -> Json {
+    let mut layers = Json::Arr(Vec::new());
+    for l in &p.layers {
+        layers.push(layer_plan_to_json(l));
+    }
+    let mut usage = Json::obj();
+    usage
+        .set("m20k", p.usage.m20k)
+        .set("tensor_blocks", p.usage.tensor_blocks)
+        .set("alms", p.usage.alms);
+    let mut o = Json::obj();
+    o.set("network", p.network.as_str())
+        .set("device", device_to_json(&p.device))
+        .set("options", options_to_json(&p.options))
+        .set("layers", layers)
+        .set("burst_len", p.burst_len)
+        .set("usage", usage)
+        .set("bottleneck_cycles", p.bottleneck_cycles)
+        .set("est_throughput", p.est_throughput)
+        .set("est_latency", p.est_latency)
+        .set("hbm_read_efficiency", p.hbm_read_efficiency)
+        .set("free_bw_slots", p.free_bw_slots);
+    o
+}
+
+pub fn plan_from_json(j: &Json) -> Result<AcceleratorPlan> {
+    let layers = arr_field(j, "layers")?
+        .iter()
+        .enumerate()
+        .map(|(i, l)| layer_plan_from_json(l).with_context(|| format!("plan layer {i}")))
+        .collect::<Result<_>>()?;
+    let u = field(j, "usage")?;
+    Ok(AcceleratorPlan {
+        network: str_field(j, "network")?.to_string(),
+        device: device_from_json(field(j, "device")?).context("plan device")?,
+        options: options_from_json(field(j, "options")?).context("plan options")?,
+        layers,
+        burst_len: u32_field(j, "burst_len")?,
+        usage: ResourceUsage {
+            m20k: u64_field(u, "m20k")?,
+            tensor_blocks: u64_field(u, "tensor_blocks")?,
+            alms: u64_field(u, "alms")?,
+        },
+        bottleneck_cycles: u64_field(j, "bottleneck_cycles")?,
+        est_throughput: f64_field(j, "est_throughput")?,
+        est_latency: f64_field(j, "est_latency")?,
+        hbm_read_efficiency: f64_field(j, "hbm_read_efficiency")?,
+        free_bw_slots: u64_field(j, "free_bw_slots")?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::zoo;
+
+    #[test]
+    fn network_round_trips_all_zoo_models() {
+        for net in zoo::table1_models().into_iter().chain([zoo::mobilenet_edge()]) {
+            let j = network_to_json(&net);
+            let back = network_from_json(&j).unwrap_or_else(|e| panic!("{}: {e:#}", net.name));
+            assert_eq!(back.name, net.name);
+            assert_eq!(back.len(), net.len());
+            for (a, b) in net.layers().iter().zip(back.layers().iter()) {
+                assert_eq!(a.name, b.name, "{}", net.name);
+                assert_eq!(a.op, b.op);
+                assert_eq!(a.inputs, b.inputs);
+                assert_eq!(a.out, b.out);
+                assert_eq!(a.in_shape(), b.in_shape());
+            }
+            // serialized form is stable
+            assert_eq!(network_to_json(&back).to_string(), j.to_string());
+        }
+    }
+
+    #[test]
+    fn device_round_trips() {
+        let d = DeviceConfig::stratix10_nx2100();
+        let back = device_from_json(&device_to_json(&d)).unwrap();
+        assert_eq!(back, d);
+        let unlimited = d.with_unlimited_hbm();
+        assert_eq!(device_from_json(&device_to_json(&unlimited)).unwrap(), unlimited);
+    }
+
+    #[test]
+    fn options_round_trip_both_burst_policies() {
+        let mut o = CompilerOptions::default();
+        o.all_hbm = true;
+        o.write_path_bits = 64;
+        let back = options_from_json(&options_to_json(&o)).unwrap();
+        assert_eq!(back.all_hbm, o.all_hbm);
+        assert_eq!(back.burst_length, o.burst_length);
+        assert_eq!(back.efficiency, o.efficiency);
+        assert_eq!(options_hash(&back), options_hash(&o));
+
+        o.burst_length = BurstLengthPolicy::Fixed(16);
+        let back = options_from_json(&options_to_json(&o)).unwrap();
+        assert_eq!(back.burst_length, BurstLengthPolicy::Fixed(16));
+    }
+
+    #[test]
+    fn options_hash_sensitive_to_every_knob() {
+        let base = options_hash(&CompilerOptions::default());
+        let mut o = CompilerOptions::default();
+        o.all_hbm = true;
+        assert_ne!(options_hash(&o), base);
+        let mut o = CompilerOptions::default();
+        o.efficiency.entries[3].1 = 0.5;
+        assert_ne!(options_hash(&o), base, "efficiency table must be hashed");
+    }
+
+    #[test]
+    fn scores_round_trip_including_neg_inf() {
+        for s in [1.25, 0.0, -3.5, f64::NEG_INFINITY, f64::INFINITY] {
+            let back = score_from_json(&score_to_json(s)).unwrap();
+            assert_eq!(back, s);
+        }
+        assert!(score_from_json(&score_to_json(f64::NAN)).unwrap().is_nan());
+        assert!(score_from_json(&Json::Null).is_err());
+    }
+
+    #[test]
+    fn malformed_plan_fields_are_rejected() {
+        let mut j = Json::obj();
+        j.set("network", "x");
+        assert!(plan_from_json(&j).is_err(), "missing fields must not decode");
+    }
+}

@@ -1,0 +1,211 @@
+//! The compiled artifact stage: a plan plus the network it was compiled
+//! from plus provenance, persistable as a JSON document.
+
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::compiler::AcceleratorPlan;
+use crate::config::{EfficiencyTable, WeightPlacement};
+use crate::coordinator::{boot_weights, BootReport};
+use crate::nn::Network;
+use crate::session::codec;
+use crate::session::deploy::{Deployment, DeploymentTarget};
+use crate::sim::pipeline::{SimConfig, SimReport};
+use crate::util::Json;
+
+/// Artifact format tag; bump on incompatible schema changes.
+pub const PLAN_FORMAT: &str = "h2pipe.plan/v1";
+
+/// Where a compiled model came from: enough to reproduce (or refuse to
+/// trust) an artifact.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Provenance {
+    /// Model name (a zoo name for built-ins, the network name otherwise).
+    pub model: String,
+    /// Device the plan targets.
+    pub device: String,
+    /// FNV-1a hash over the serialized `CompilerOptions` (including the
+    /// HBM efficiency calibration table).
+    pub options_hash: u64,
+}
+
+/// A compiled H2PIPE instance: the [`AcceleratorPlan`], the network IR it
+/// was compiled from, and provenance. This is the pipeline's central
+/// artifact — everything downstream ([`Deployment`] simulation, fleet
+/// sharding, serving) consumes it, and it round-trips through JSON
+/// bit-for-bit so `h2pipe compile --out plan.json` followed by
+/// `h2pipe simulate --plan plan.json` reproduces the in-memory path.
+#[derive(Debug, Clone)]
+pub struct CompiledModel {
+    pub(crate) network: Network,
+    pub(crate) plan: AcceleratorPlan,
+    pub(crate) provenance: Provenance,
+}
+
+impl CompiledModel {
+    /// The network IR this plan was compiled from.
+    pub fn network(&self) -> &Network {
+        &self.network
+    }
+
+    /// The compiled accelerator plan.
+    pub fn plan(&self) -> &AcceleratorPlan {
+        &self.plan
+    }
+
+    pub fn provenance(&self) -> &Provenance {
+        &self.provenance
+    }
+
+    /// The HBM read-efficiency calibration the plan was compiled with.
+    pub fn efficiency_table(&self) -> &EfficiencyTable {
+        &self.plan.options.efficiency
+    }
+
+    /// Stage transition: pick a deployment target for this artifact.
+    pub fn deploy(&self, target: DeploymentTarget) -> Deployment<'_> {
+        Deployment::new(self, target)
+    }
+
+    /// Typed single-device cycle simulation (the [`Deployment`] route
+    /// wraps this into a unified [`crate::session::RunReport`]).
+    pub fn simulate(&self, cfg: &SimConfig) -> Result<SimReport> {
+        crate::sim::pipeline::PipelineSim::new(&self.network, &self.plan)?.run(cfg)
+    }
+
+    /// §IV-C boot-time weight download for this plan.
+    pub fn boot(&self) -> BootReport {
+        boot_weights(&self.plan)
+    }
+
+    /// One line per weight layer: placement, parallelism and PC slots —
+    /// the compiler's offload decisions in a diffable, golden-snapshot
+    /// friendly form.
+    pub fn offload_fingerprint(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        let _ = writeln!(s, "# {} burst_len={}", self.plan.network, self.plan.burst_len);
+        for l in &self.plan.layers {
+            if !l.stats.has_weights {
+                continue;
+            }
+            let place = match l.placement {
+                WeightPlacement::Hbm => "hbm ",
+                WeightPlacement::OnChip => "chip",
+            };
+            let _ = writeln!(
+                s,
+                "{:<28} {place} p_i={} p_o={} pcs={:?}",
+                l.stats.name, l.par.p_i, l.par.p_o, l.pcs
+            );
+        }
+        s
+    }
+
+    /// Serialize the whole artifact (envelope + network + plan).
+    pub fn to_json(&self) -> Json {
+        let mut prov = Json::obj();
+        prov.set("model", self.provenance.model.as_str())
+            .set("device", self.provenance.device.as_str())
+            .set("options_hash", format!("{:016x}", self.provenance.options_hash));
+        let mut o = Json::obj();
+        o.set("format", PLAN_FORMAT)
+            .set("provenance", prov)
+            .set("network", codec::network_to_json(&self.network))
+            .set("plan", codec::plan_to_json(&self.plan));
+        o
+    }
+
+    /// Decode and integrity-check an artifact.
+    pub fn from_json(j: &Json) -> Result<Self> {
+        match j.get("format").and_then(Json::as_str) {
+            Some(PLAN_FORMAT) => {}
+            Some(other) => bail!("unsupported plan format {other:?} (expected {PLAN_FORMAT:?})"),
+            None => bail!("not a plan artifact (missing \"format\" tag)"),
+        }
+        let prov = j.get("provenance").context("missing provenance")?;
+        let hash_hex = prov
+            .get("options_hash")
+            .and_then(Json::as_str)
+            .context("missing provenance.options_hash")?;
+        let options_hash = u64::from_str_radix(hash_hex, 16)
+            .with_context(|| format!("bad options hash {hash_hex:?}"))?;
+        let provenance = Provenance {
+            model: prov
+                .get("model")
+                .and_then(Json::as_str)
+                .context("missing provenance.model")?
+                .to_string(),
+            device: prov
+                .get("device")
+                .and_then(Json::as_str)
+                .context("missing provenance.device")?
+                .to_string(),
+            options_hash,
+        };
+        let network =
+            codec::network_from_json(j.get("network").context("missing network")?)
+                .context("decoding artifact network")?;
+        let plan = codec::plan_from_json(j.get("plan").context("missing plan")?)
+            .context("decoding artifact plan")?;
+
+        // Integrity checks: the artifact must be self-consistent before
+        // anything downstream trusts it.
+        ensure!(
+            plan.network == network.name,
+            "plan is for {:?} but the artifact carries network {:?}",
+            plan.network,
+            network.name
+        );
+        ensure!(
+            plan.layers.len() == network.len(),
+            "plan has {} layers but the network has {}",
+            plan.layers.len(),
+            network.len()
+        );
+        let recomputed = plan.recompute_usage();
+        ensure!(
+            recomputed.m20k == plan.usage.m20k
+                && recomputed.tensor_blocks == plan.usage.tensor_blocks
+                && recomputed.alms == plan.usage.alms,
+            "artifact resource usage does not recompute (corrupt or hand-edited plan)"
+        );
+        let rehash = codec::options_hash(&plan.options);
+        ensure!(
+            rehash == options_hash,
+            "provenance options hash {options_hash:016x} does not match the \
+             embedded options ({rehash:016x})"
+        );
+        ensure!(
+            provenance.device == plan.device.name,
+            "provenance device {:?} does not match plan device {:?}",
+            provenance.device,
+            plan.device.name
+        );
+        ensure!(
+            provenance.model == network.name,
+            "provenance model {:?} does not match the artifact's network {:?}",
+            provenance.model,
+            network.name
+        );
+        Ok(Self { network, plan, provenance })
+    }
+
+    /// Write the artifact as pretty-printed JSON.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        std::fs::write(path, self.to_json().to_pretty())
+            .with_context(|| format!("writing plan artifact {}", path.display()))
+    }
+
+    /// Load and integrity-check an artifact written by [`Self::save`].
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading plan artifact {}", path.display()))?;
+        let j = Json::parse(&text)
+            .with_context(|| format!("parsing plan artifact {}", path.display()))?;
+        Self::from_json(&j).with_context(|| format!("loading plan artifact {}", path.display()))
+    }
+}

@@ -1,0 +1,211 @@
+//! The deployment stage: run a [`CompiledModel`] on a chosen target.
+//!
+//! One enum picks between the three execution paths that used to be wired
+//! by hand per CLI subcommand:
+//!
+//! * [`DeploymentTarget::SingleDevice`] — the cycle-level pipeline
+//!   simulator on one FPGA;
+//! * [`DeploymentTarget::Fleet`] — shard via [`crate::cluster::partition`]
+//!   and co-simulate the shards with credit-based inter-device links;
+//! * [`DeploymentTarget::Serve`] — live serving through replica
+//!   [`crate::coordinator::InferenceServer`]s behind the
+//!   [`crate::cluster::FleetRouter`], with the modelled FPGA rate derived
+//!   from the compiled plan (or a sharded partition of it).
+//!
+//! Every path terminates in the same [`RunReport`].
+
+use std::sync::Arc;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::cluster::{partition, FleetConfig, FleetRouter, FleetSim, PartitionOptions};
+use crate::coordinator::ServerConfig;
+use crate::session::compiled::CompiledModel;
+use crate::session::report::RunReport;
+use crate::sim::pipeline::SimConfig;
+use crate::util::XorShift64;
+
+/// Serving parameters for [`DeploymentTarget::Serve`].
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Built-in reference-backend model executed for numerics (the
+    /// compiled plan supplies the modelled FPGA timing).
+    pub serve_model: String,
+    /// Artifact directory for the runtime backend.
+    pub artifact_dir: String,
+    /// Total requests to drive through the fleet.
+    pub requests: usize,
+    /// Dynamic batch size per replica.
+    pub batch: usize,
+    /// Replica servers behind the router.
+    pub replicas: usize,
+    /// When > 1, the modelled FPGA rate comes from a pipeline-parallel
+    /// partition of the compiled network into this many shards.
+    pub shards: usize,
+    /// Closed-loop client threads generating the request stream.
+    pub clients: usize,
+    /// RNG seed for the synthetic request images.
+    pub seed: u64,
+    /// Explicit modelled per-image service time override (e.g. a cycle
+    /// sim's measured rate); `None` derives it from the plan/partition.
+    pub modelled_image_s: Option<f64>,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        Self {
+            serve_model: "cifarnet".to_string(),
+            artifact_dir: "artifacts".to_string(),
+            requests: 64,
+            batch: 8,
+            replicas: 1,
+            shards: 1,
+            clients: 1,
+            seed: 7,
+            modelled_image_s: None,
+        }
+    }
+}
+
+/// Where (and how) to run a compiled model.
+#[derive(Debug, Clone)]
+pub enum DeploymentTarget {
+    /// Single-device cycle simulation.
+    SingleDevice(SimConfig),
+    /// Multi-FPGA sharded co-simulation.
+    Fleet { partition: PartitionOptions, fleet: FleetConfig },
+    /// Live serving through the fleet router.
+    Serve(ServeOptions),
+}
+
+/// A compiled model bound to a deployment target; [`Deployment::run`]
+/// executes it and produces the unified [`RunReport`].
+pub struct Deployment<'a> {
+    compiled: &'a CompiledModel,
+    target: DeploymentTarget,
+}
+
+impl<'a> Deployment<'a> {
+    pub(crate) fn new(compiled: &'a CompiledModel, target: DeploymentTarget) -> Self {
+        Self { compiled, target }
+    }
+
+    pub fn target(&self) -> &DeploymentTarget {
+        &self.target
+    }
+
+    /// Execute the deployment.
+    pub fn run(&self) -> Result<RunReport> {
+        match &self.target {
+            DeploymentTarget::SingleDevice(cfg) => self.run_single(cfg),
+            DeploymentTarget::Fleet { partition, fleet } => self.run_fleet(partition, fleet),
+            DeploymentTarget::Serve(opts) => self.run_serve(opts),
+        }
+    }
+
+    fn report(
+        &self,
+        target: &str,
+        throughput: f64,
+        latency_ms: f64,
+        detail: crate::util::Json,
+    ) -> RunReport {
+        let prov = self.compiled.provenance();
+        RunReport {
+            model: prov.model.clone(),
+            device: prov.device.clone(),
+            target: target.to_string(),
+            options_hash: prov.options_hash,
+            throughput,
+            latency_ms,
+            detail,
+        }
+    }
+
+    fn run_single(&self, cfg: &SimConfig) -> Result<RunReport> {
+        let rep = self.compiled.simulate(cfg)?;
+        Ok(self.report("simulate", rep.throughput, rep.latency * 1e3, rep.to_json()))
+    }
+
+    fn run_fleet(&self, popts: &PartitionOptions, fcfg: &FleetConfig) -> Result<RunReport> {
+        let plan = self.compiled.plan();
+        let pp = partition(self.compiled.network(), &plan.device, &plan.options, popts)
+            .context("partitioning for fleet deployment")?;
+        let rep = FleetSim::new(&pp)?.run(fcfg)?;
+        let mut detail = rep.to_json();
+        detail.set("est_throughput", pp.est_throughput());
+        Ok(self.report("fleet", rep.aggregate_throughput, rep.latency * 1e3, detail))
+    }
+
+    fn run_serve(&self, opts: &ServeOptions) -> Result<RunReport> {
+        ensure!(opts.replicas >= 1, "need at least one replica");
+        ensure!(opts.clients >= 1, "need at least one client");
+        let plan = self.compiled.plan();
+
+        let mut cfg = ServerConfig::builtin(&opts.serve_model, &opts.artifact_dir)?;
+        cfg.batch_size = opts.batch;
+        // Modelled FPGA service time: explicit override, a sharded
+        // partition's bound, or the compiled plan's estimate.
+        let modelled_src = match opts.modelled_image_s {
+            Some(v) => {
+                cfg.modelled_image_s = v;
+                "override".to_string()
+            }
+            None if opts.shards > 1 => {
+                let pp = partition(
+                    self.compiled.network(),
+                    &plan.device,
+                    &plan.options,
+                    &PartitionOptions { shards: Some(opts.shards), max_shards: opts.shards },
+                )
+                .context("partitioning for the modelled serving rate")?;
+                let est = pp.est_throughput();
+                cfg.modelled_image_s = if est > 0.0 { 1.0 / est } else { 0.0 };
+                format!("{}-shard partition", opts.shards)
+            }
+            None => {
+                cfg = cfg.with_modelled_plan(plan);
+                "compiled plan".to_string()
+            }
+        };
+        let pixels: usize = cfg.input_dims.iter().product();
+
+        let router = Arc::new(FleetRouter::start(cfg, opts.replicas)?);
+        // Spread requests over the clients without dropping the remainder:
+        // the first `requests % clients` threads take one extra.
+        let base = opts.requests / opts.clients;
+        let rem = opts.requests % opts.clients;
+        let mut handles = Vec::new();
+        for t in 0..opts.clients {
+            let r = router.clone();
+            let seed = opts.seed.wrapping_add(t as u64);
+            let per_client = base + usize::from(t < rem);
+            handles.push(std::thread::spawn(move || {
+                let mut rng = XorShift64::new(seed);
+                let mut ok = 0usize;
+                for _ in 0..per_client {
+                    let img: Vec<i32> =
+                        (0..pixels).map(|_| rng.next_range(0, 255) as i32 - 128).collect();
+                    if r.infer(img).is_ok() {
+                        ok += 1;
+                    }
+                }
+                ok
+            }));
+        }
+        let mut ok = 0usize;
+        for h in handles {
+            ok += h.join().expect("serve client thread panicked");
+        }
+        let rep = Arc::into_inner(router).expect("all clients joined").shutdown();
+
+        let mut detail = rep.to_json();
+        detail
+            .set("serve_model", opts.serve_model.as_str())
+            .set("submitted", opts.requests)
+            .set("ok", ok)
+            .set("shards", opts.shards)
+            .set("modelled_source", modelled_src);
+        Ok(self.report("serve", rep.wall_throughput, rep.mean_latency_ms, detail))
+    }
+}

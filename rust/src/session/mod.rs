@@ -1,0 +1,135 @@
+//! The typed end-to-end pipeline API.
+//!
+//! H2PIPE's value is one flow — network IR → Algorithm 1 weight placement
+//! → FIFO sizing → pipelined execution — but the crate historically
+//! exposed it as disconnected free functions that every caller re-wired
+//! by hand. This module redesigns the public surface around staged types,
+//! in the spirit of HPIPE's domain-specific compiler (whose output
+//! artifact drives everything downstream) and FINN-style flows (staged
+//! transformations over one serializable design artifact):
+//!
+//! ```text
+//! Session::builder()            model + DeviceConfig + CompilerOptions
+//!        |                      + burst/offload/efficiency knobs
+//!        v  .compile()
+//! CompiledModel                 AcceleratorPlan + network IR + provenance
+//!        |                      (save()/load(): persistable JSON artifact,
+//!        |                       bit-for-bit round trip)
+//!        v  .deploy(target)
+//! Deployment                    SingleDevice sim | Fleet shard co-sim
+//!        |                      | live Serve behind the FleetRouter
+//!        v  .run()
+//! RunReport                     unified headline scalars + per-target
+//!                               detail JSON
+//! ```
+//!
+//! A saved `CompiledModel` is a reproducible, diffable experiment
+//! artifact: `h2pipe compile --model resnet50 --out plan.json` followed
+//! by `h2pipe simulate --plan plan.json` produces a report identical to
+//! the in-memory `h2pipe simulate --model resnet50` path. See DESIGN.md
+//! §"Session API" for the artifact schema.
+//!
+//! The pre-session free functions ([`crate::compiler::compile`],
+//! [`crate::sim::pipeline::simulate`], [`crate::coordinator::boot_weights`],
+//! ...) remain as the underlying engines for benches and low-level
+//! callers, but new code should enter through [`Session::builder`].
+
+mod builder;
+pub mod codec;
+mod compiled;
+mod deploy;
+mod report;
+
+pub use builder::{Session, SessionBuilder};
+pub use compiled::{CompiledModel, Provenance, PLAN_FORMAT};
+pub use deploy::{Deployment, DeploymentTarget, ServeOptions};
+pub use report::RunReport;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{BurstLengthPolicy, EfficiencyTable};
+    use crate::sim::pipeline::SimConfig;
+
+    #[test]
+    fn builder_requires_a_model() {
+        let err = Session::builder().compile().unwrap_err();
+        assert!(format!("{err:#}").contains("no model set"), "{err:#}");
+    }
+
+    #[test]
+    fn builder_rejects_unknown_zoo_name() {
+        let err = Session::builder().model("alexnet").compile().unwrap_err();
+        assert!(format!("{err:#}").contains("alexnet"), "{err:#}");
+    }
+
+    #[test]
+    fn builder_validates_knobs() {
+        let err = Session::builder().model("resnet18").fixed_burst(3).compile().unwrap_err();
+        assert!(format!("{err:#}").contains("burst"), "{err:#}");
+    }
+
+    #[test]
+    fn compile_carries_provenance_and_efficiency_table() {
+        let cm = Session::builder().model("resnet18").compile().unwrap();
+        assert_eq!(cm.provenance().model, "ResNet-18");
+        assert_eq!(cm.provenance().device, "Stratix 10 NX2100");
+        assert_eq!(cm.efficiency_table(), &EfficiencyTable::calibrated());
+        assert_eq!(
+            cm.provenance().options_hash,
+            codec::options_hash(&cm.plan().options),
+            "hash must cover the exact options embedded in the plan"
+        );
+    }
+
+    #[test]
+    fn artifact_json_round_trips_in_memory() {
+        let cm = Session::builder()
+            .model("resnet18")
+            .burst_policy(BurstLengthPolicy::Fixed(8))
+            .compile()
+            .unwrap();
+        let j = cm.to_json();
+        let back = CompiledModel::from_json(&j).unwrap();
+        assert_eq!(back.to_json().to_string(), j.to_string(), "stable re-serialization");
+        assert_eq!(back.offload_fingerprint(), cm.offload_fingerprint());
+        assert_eq!(back.plan().est_throughput, cm.plan().est_throughput);
+    }
+
+    #[test]
+    fn from_json_rejects_wrong_format_and_tampering() {
+        let cm = Session::builder().model("resnet18").compile().unwrap();
+        let mut j = cm.to_json();
+        j.set("format", "h2pipe.plan/v999");
+        assert!(CompiledModel::from_json(&j).is_err(), "unknown format version");
+
+        // tamper with the resource usage: integrity check must trip
+        let mut j = cm.to_json();
+        let mut plan = j.get("plan").unwrap().clone();
+        let mut usage = plan.get("usage").unwrap().clone();
+        usage.set("m20k", 1u64);
+        plan.set("usage", usage);
+        j.set("plan", plan);
+        let err = CompiledModel::from_json(&j).unwrap_err();
+        assert!(format!("{err:#}").contains("recompute"), "{err:#}");
+    }
+
+    #[test]
+    fn deployment_single_device_report() {
+        let cm = Session::builder().model("resnet18").compile().unwrap();
+        let rep = cm
+            .deploy(DeploymentTarget::SingleDevice(SimConfig {
+                images: 3,
+                warmup_images: 1,
+                ..SimConfig::default()
+            }))
+            .run()
+            .unwrap();
+        assert_eq!(rep.target, "simulate");
+        assert_eq!(rep.model, "ResNet-18");
+        assert!(rep.throughput > 500.0, "{}", rep.throughput);
+        let j = rep.to_json().to_string();
+        assert!(j.contains("\"target\":\"simulate\""), "{j}");
+        assert!(j.contains("\"engines\""), "detail must embed the sim payload: {j}");
+    }
+}

@@ -1,0 +1,80 @@
+//! The terminal stage: one report type for every deployment target.
+//!
+//! `RunReport` subsumes the previous ad-hoc outputs (`SimReport` printed
+//! by `simulate`, `FleetReport`/`FleetServeReport` JSON printed by
+//! `serve`): the headline scalars live at the top level with identical
+//! keys across targets, and the target-specific payload is embedded
+//! verbatim under `detail`, so downstream tooling can diff/plot any run
+//! of any kind with one scraper.
+
+use crate::util::Json;
+
+/// Unified result of running a [`crate::session::Deployment`].
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    /// Model name (from the artifact's provenance).
+    pub model: String,
+    /// Device name (from the artifact's provenance).
+    pub device: String,
+    /// Deployment target kind: `"simulate"`, `"fleet"` or `"serve"`.
+    pub target: String,
+    /// Provenance options hash — ties every report back to the exact
+    /// compiler configuration that produced its plan.
+    pub options_hash: u64,
+    /// Headline throughput in images/s (steady-state sim rate, fleet
+    /// aggregate, or wall-clock serving rate, per target).
+    pub throughput: f64,
+    /// Headline latency in milliseconds (first-image pipeline latency for
+    /// simulations, mean client latency for serving).
+    pub latency_ms: f64,
+    /// Target-specific payload (`SimReport`/`FleetReport`/
+    /// `FleetServeReport` JSON).
+    pub detail: Json,
+}
+
+impl RunReport {
+    /// Machine-scrapable form: headline scalars + embedded detail.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("model", self.model.as_str())
+            .set("device", self.device.as_str())
+            .set("target", self.target.as_str())
+            .set("options_hash", format!("{:016x}", self.options_hash))
+            .set("throughput", self.throughput)
+            .set("latency_ms", self.latency_ms)
+            .set("detail", self.detail.clone());
+        o
+    }
+
+    /// One human-readable headline line.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} [{}] on {}: {:.0} im/s, {:.2} ms (options {:016x})",
+            self.model, self.target, self.device, self.throughput, self.latency_ms,
+            self.options_hash
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_and_summary_carry_headlines() {
+        let r = RunReport {
+            model: "ResNet-18".into(),
+            device: "Stratix 10 NX2100".into(),
+            target: "simulate".into(),
+            options_hash: 0xdead_beef,
+            throughput: 4174.0,
+            latency_ms: 1.25,
+            detail: Json::obj(),
+        };
+        let j = r.to_json().to_string();
+        assert!(j.contains("\"target\":\"simulate\""), "{j}");
+        assert!(j.contains("\"throughput\":4174"), "{j}");
+        assert!(j.contains("\"options_hash\":\"00000000deadbeef\""), "{j}");
+        assert!(r.summary().contains("4174 im/s"));
+    }
+}

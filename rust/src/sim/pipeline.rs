@@ -32,6 +32,9 @@ impl Default for SimConfig {
 }
 
 /// Simulation results.
+///
+/// [`SimReport::to_json`] is the machine-scrapable form embedded in the
+/// session layer's unified [`crate::session::RunReport`].
 #[derive(Debug, Clone)]
 pub struct SimReport {
     pub network: String,
@@ -51,6 +54,35 @@ pub struct SimReport {
     pub core_cycles: u64,
     /// Per-engine (name, active, input_starved, output_blocked, frozen).
     pub engine_stats: Vec<(String, u64, u64, u64, u64)>,
+}
+
+impl SimReport {
+    /// Machine-scrapable form (embedded in session `RunReport`s and the
+    /// `h2pipe simulate` JSON output).
+    pub fn to_json(&self) -> crate::util::Json {
+        use crate::util::Json;
+        let mut engines = Json::Arr(Vec::new());
+        for (name, active, starved, blocked, frozen) in &self.engine_stats {
+            let mut e = Json::obj();
+            e.set("name", name.as_str())
+                .set("active", *active)
+                .set("input_starved", *starved)
+                .set("output_blocked", *blocked)
+                .set("weight_frozen", *frozen);
+            engines.push(e);
+        }
+        let mut o = Json::obj();
+        o.set("network", self.network.as_str())
+            .set("throughput", self.throughput)
+            .set("latency_s", self.latency)
+            .set("freeze_fraction", self.freeze_fraction)
+            .set("bottleneck", self.bottleneck.as_str())
+            .set("bottleneck_on_hbm", self.bottleneck_on_hbm)
+            .set("hbm_efficiency", self.hbm_efficiency)
+            .set("core_cycles", self.core_cycles)
+            .set("engines", engines);
+        o
+    }
 }
 
 /// One full-accelerator simulation instance.
@@ -367,7 +399,13 @@ impl PipelineSim {
     }
 }
 
-/// Compile + simulate in one call (the main entry used by benches).
+/// Simulate a compiled plan in one call (the main entry used by benches).
+///
+/// **Deprecated:** prefer the staged [`crate::session`] API —
+/// `CompiledModel::simulate` (typed report) or
+/// `deploy(DeploymentTarget::SingleDevice)` (unified `RunReport`) — which
+/// guarantees the plan and network belong together. This free function
+/// remains for benches and low-level callers.
 pub fn simulate(
     net: &Network,
     plan: &AcceleratorPlan,

@@ -5,8 +5,52 @@
 //! failing *case seed* for one-line reproduction, and size-bounded value
 //! generation. No shrinking — failing seeds regenerate the exact case,
 //! which has proven sufficient for the invariants tested here.
+//!
+//! It also carries [`golden`], a tiny snapshot-test helper (no `insta`
+//! offline) used to pin the compiler's offload decisions per model.
+
+use std::path::Path;
 
 use crate::util::XorShift64;
+
+/// Compare `content` against the golden file at `path`.
+///
+/// * Missing golden file: it is created (bootstrap) and the check passes
+///   with a note on stderr — commit the generated file to pin the
+///   behaviour.
+/// * Existing file: exact string comparison; set `H2PIPE_BLESS=1` to
+///   rewrite goldens after an intentional behaviour change.
+///
+/// Returns `Err` with a readable first-difference report on mismatch.
+pub fn golden(path: &Path, content: &str) -> Result<(), String> {
+    if std::env::var_os("H2PIPE_BLESS").is_some() || !path.exists() {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)
+                .map_err(|e| format!("creating {}: {e}", dir.display()))?;
+        }
+        std::fs::write(path, content).map_err(|e| format!("writing {}: {e}", path.display()))?;
+        eprintln!("golden: wrote {}", path.display());
+        return Ok(());
+    }
+    let want =
+        std::fs::read_to_string(path).map_err(|e| format!("reading {}: {e}", path.display()))?;
+    if want == content {
+        return Ok(());
+    }
+    let diff_line = want
+        .lines()
+        .zip(content.lines())
+        .position(|(a, b)| a != b)
+        .unwrap_or_else(|| want.lines().count().min(content.lines().count()));
+    Err(format!(
+        "golden mismatch vs {} at line {}:\n  golden: {:?}\n  actual: {:?}\n\
+         (re-bless with H2PIPE_BLESS=1 if the change is intentional)",
+        path.display(),
+        diff_line + 1,
+        want.lines().nth(diff_line).unwrap_or("<eof>"),
+        content.lines().nth(diff_line).unwrap_or("<eof>"),
+    ))
+}
 
 /// Random-value source handed to properties.
 pub struct Gen {
@@ -118,6 +162,21 @@ mod tests {
             Ok(())
         });
         assert_eq!(first, second);
+    }
+
+    #[test]
+    fn golden_bootstraps_then_compares() {
+        let dir = std::env::temp_dir().join(format!("h2pipe-golden-{}", std::process::id()));
+        let path = dir.join("snap.txt");
+        let _ = std::fs::remove_file(&path);
+        // first call bootstraps the file
+        golden(&path, "a\nb\n").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "a\nb\n");
+        // same content passes, different content reports the first diff line
+        golden(&path, "a\nb\n").unwrap();
+        let err = golden(&path, "a\nc\n").unwrap_err();
+        assert!(err.contains("line 2"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -1,11 +1,17 @@
-//! Minimal JSON value + emitter.
+//! Minimal JSON value + emitter + parser.
 //!
 //! Bench and report outputs are machine-readable JSON so that experiment
 //! results can be diffed / plotted; `serde` is not in the offline crate
-//! set, so we carry a tiny value model with a correct string escaper.
+//! set, so we carry a tiny value model with a correct string escaper and,
+//! since plan artifacts became persistable (`h2pipe::session`), a strict
+//! recursive-descent parser. The emitter writes f64s in Rust's shortest
+//! round-trip form, so `parse(v.to_string()) == v` for every value this
+//! module can emit (NaN/Inf excepted — they serialize as `null`).
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
+
+use anyhow::{bail, Result};
 
 /// A JSON value. Object keys are ordered (BTreeMap) so output is stable.
 #[derive(Debug, Clone, PartialEq)]
@@ -118,6 +124,292 @@ impl Json {
                 let _ = write!(out, "\n{close_pad}}}");
             }
             _ => self.write(out),
+        }
+    }
+
+    /// Parse a JSON document. Strict: exactly one value, nothing but
+    /// whitespace after it, no trailing commas, no comments.
+    pub fn parse(text: &str) -> Result<Json> {
+        let chars: Vec<char> = text.chars().collect();
+        let mut p = Parser { chars, pos: 0 };
+        p.skip_ws();
+        let v = p.value(0)?;
+        p.skip_ws();
+        if p.pos != p.chars.len() {
+            bail!("trailing characters at offset {} of JSON document", p.pos);
+        }
+        Ok(v)
+    }
+
+    /// Object field lookup; `None` for non-objects and missing keys.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    /// Numeric value as u64 if it is a non-negative integer exactly
+    /// representable in f64 (all counts this crate serializes are).
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 && *n <= 9.007_199_254_740_992e15 => {
+                Some(*n as u64)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn as_u32(&self) -> Option<u32> {
+        self.as_u64().and_then(|n| u32::try_from(n).ok())
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_u64().and_then(|n| usize::try_from(n).ok())
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s.as_str()),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v.as_slice()),
+            _ => None,
+        }
+    }
+
+    pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(m) => Some(m),
+            _ => None,
+        }
+    }
+}
+
+/// Nesting bound for the parser — far above any plan artifact, but keeps
+/// adversarial input from overflowing the stack.
+const MAX_DEPTH: usize = 128;
+
+struct Parser {
+    chars: Vec<char>,
+    pos: usize,
+}
+
+impl Parser {
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(' ' | '\t' | '\n' | '\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<char> {
+        self.chars.get(self.pos).copied()
+    }
+
+    fn expect(&mut self, c: char) -> Result<()> {
+        match self.peek() {
+            Some(x) if x == c => {
+                self.pos += 1;
+                Ok(())
+            }
+            Some(x) => bail!("expected {c:?} at offset {}, found {x:?}", self.pos),
+            None => bail!("expected {c:?} at offset {}, found end of input", self.pos),
+        }
+    }
+
+    fn literal(&mut self, word: &str, value: Json) -> Result<Json> {
+        for c in word.chars() {
+            self.expect(c)?;
+        }
+        Ok(value)
+    }
+
+    fn value(&mut self, depth: usize) -> Result<Json> {
+        if depth > MAX_DEPTH {
+            bail!("JSON nesting deeper than {MAX_DEPTH}");
+        }
+        match self.peek() {
+            Some('{') => self.object(depth),
+            Some('[') => self.array(depth),
+            Some('"') => Ok(Json::Str(self.string()?)),
+            Some('t') => self.literal("true", Json::Bool(true)),
+            Some('f') => self.literal("false", Json::Bool(false)),
+            Some('n') => self.literal("null", Json::Null),
+            Some(c) if c == '-' || c.is_ascii_digit() => self.number(),
+            Some(c) => bail!("unexpected {c:?} at offset {}", self.pos),
+            None => bail!("unexpected end of input at offset {}", self.pos),
+        }
+    }
+
+    fn object(&mut self, depth: usize) -> Result<Json> {
+        self.expect('{')?;
+        let mut m = BTreeMap::new();
+        self.skip_ws();
+        if self.peek() == Some('}') {
+            self.pos += 1;
+            return Ok(Json::Obj(m));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(':')?;
+            self.skip_ws();
+            let val = self.value(depth + 1)?;
+            m.insert(key, val);
+            self.skip_ws();
+            match self.peek() {
+                Some(',') => self.pos += 1,
+                Some('}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(m));
+                }
+                _ => bail!("expected ',' or '}}' at offset {}", self.pos),
+            }
+        }
+    }
+
+    fn array(&mut self, depth: usize) -> Result<Json> {
+        self.expect('[')?;
+        let mut v = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(']') {
+            self.pos += 1;
+            return Ok(Json::Arr(v));
+        }
+        loop {
+            self.skip_ws();
+            v.push(self.value(depth + 1)?);
+            self.skip_ws();
+            match self.peek() {
+                Some(',') => self.pos += 1,
+                Some(']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(v));
+                }
+                _ => bail!("expected ',' or ']' at offset {}", self.pos),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect('"')?;
+        let mut s = String::new();
+        loop {
+            match self.peek() {
+                None => bail!("unterminated string at offset {}", self.pos),
+                Some('"') => {
+                    self.pos += 1;
+                    return Ok(s);
+                }
+                Some('\\') => {
+                    self.pos += 1;
+                    let esc = self
+                        .peek()
+                        .ok_or_else(|| anyhow::anyhow!("dangling escape at offset {}", self.pos))?;
+                    self.pos += 1;
+                    match esc {
+                        '"' => s.push('"'),
+                        '\\' => s.push('\\'),
+                        '/' => s.push('/'),
+                        'b' => s.push('\u{8}'),
+                        'f' => s.push('\u{c}'),
+                        'n' => s.push('\n'),
+                        'r' => s.push('\r'),
+                        't' => s.push('\t'),
+                        'u' => {
+                            let hi = self.hex4()?;
+                            // surrogate pair handling for completeness
+                            let code = if (0xD800..0xDC00).contains(&hi) {
+                                self.expect('\\')?;
+                                self.expect('u')?;
+                                let lo = self.hex4()?;
+                                if !(0xDC00..0xE000).contains(&lo) {
+                                    bail!("invalid low surrogate at offset {}", self.pos);
+                                }
+                                0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00)
+                            } else {
+                                hi
+                            };
+                            match char::from_u32(code) {
+                                Some(c) => s.push(c),
+                                None => bail!("invalid \\u escape at offset {}", self.pos),
+                            }
+                        }
+                        c => bail!("unknown escape \\{c} at offset {}", self.pos),
+                    }
+                }
+                Some(c) if (c as u32) < 0x20 => {
+                    bail!("unescaped control character at offset {}", self.pos)
+                }
+                Some(c) => {
+                    s.push(c);
+                    self.pos += 1;
+                }
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32> {
+        let mut v = 0u32;
+        for _ in 0..4 {
+            let c = self
+                .peek()
+                .ok_or_else(|| anyhow::anyhow!("truncated \\u escape at offset {}", self.pos))?;
+            let d = c
+                .to_digit(16)
+                .ok_or_else(|| anyhow::anyhow!("bad hex digit {c:?} at offset {}", self.pos))?;
+            v = v * 16 + d;
+            self.pos += 1;
+        }
+        Ok(v)
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.pos;
+        if self.peek() == Some('-') {
+            self.pos += 1;
+        }
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            self.pos += 1;
+        }
+        if self.peek() == Some('.') {
+            self.pos += 1;
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        if matches!(self.peek(), Some('e' | 'E')) {
+            self.pos += 1;
+            if matches!(self.peek(), Some('+' | '-')) {
+                self.pos += 1;
+            }
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        let tok: String = self.chars[start..self.pos].iter().collect();
+        match tok.parse::<f64>() {
+            Ok(n) if n.is_finite() => Ok(Json::Num(n)),
+            _ => bail!("invalid number {tok:?} at offset {start}"),
         }
     }
 }
@@ -238,5 +530,70 @@ mod tests {
         let p = o.to_pretty();
         assert!(p.contains("\"k\": 1"));
         assert!(p.ends_with("}\n"));
+    }
+
+    #[test]
+    fn parse_scalars() {
+        assert_eq!(Json::parse("null").unwrap(), Json::Null);
+        assert_eq!(Json::parse(" true ").unwrap(), Json::from(true));
+        assert_eq!(Json::parse("false").unwrap(), Json::from(false));
+        assert_eq!(Json::parse("42").unwrap(), Json::from(42u64));
+        assert_eq!(Json::parse("-3.5e2").unwrap(), Json::from(-350.0));
+        assert_eq!(Json::parse("\"hi\"").unwrap(), Json::from("hi"));
+    }
+
+    #[test]
+    fn parse_nested() {
+        let j = Json::parse(r#"{"a": [1, 2, {"b": "x"}], "c": null}"#).unwrap();
+        assert_eq!(j.get("c"), Some(&Json::Null));
+        let arr = j.get("a").unwrap().as_arr().unwrap();
+        assert_eq!(arr[0].as_u64(), Some(1));
+        assert_eq!(arr[2].get("b").unwrap().as_str(), Some("x"));
+    }
+
+    #[test]
+    fn parse_string_escapes() {
+        assert_eq!(Json::parse(r#""a\"b\\c\nd""#).unwrap().as_str(), Some("a\"b\\c\nd"));
+        assert_eq!(Json::parse(r#""A""#).unwrap().as_str(), Some("A"));
+        // surrogate pair: U+1F600
+        assert_eq!(Json::parse(r#""😀""#).unwrap().as_str(), Some("\u{1F600}"));
+        // raw non-ASCII passes through (the emitter writes it raw)
+        assert_eq!(Json::parse("\"héllo\"").unwrap().as_str(), Some("héllo"));
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        for bad in [
+            "", "{", "[1,", "{\"a\":}", "tru", "1 2", "[1] x", "\"unterminated",
+            "{\"a\":1,}", "nan", "--1",
+        ] {
+            assert!(Json::parse(bad).is_err(), "{bad:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn emit_parse_round_trip() {
+        let mut o = Json::obj();
+        o.set("z", 1u64).set("a", "x\ny").set("f", 0.1 + 0.2).set("neg", -7i64);
+        let mut inner = Json::Arr(vec![]);
+        inner.push(Json::Null).push(true).push(3.25);
+        o.set("arr", inner);
+        for text in [o.to_string(), o.to_pretty()] {
+            assert_eq!(Json::parse(&text).unwrap(), o, "{text}");
+        }
+    }
+
+    #[test]
+    fn accessors() {
+        let j = Json::parse(r#"{"n": 5, "s": "t", "b": false, "x": 1.5}"#).unwrap();
+        assert_eq!(j.get("n").unwrap().as_u64(), Some(5));
+        assert_eq!(j.get("n").unwrap().as_u32(), Some(5));
+        assert_eq!(j.get("x").unwrap().as_u64(), None, "non-integer");
+        assert_eq!(j.get("x").unwrap().as_f64(), Some(1.5));
+        assert_eq!(j.get("b").unwrap().as_bool(), Some(false));
+        assert_eq!(j.get("s").unwrap().as_str(), Some("t"));
+        assert_eq!(j.get("missing"), None);
+        assert_eq!(Json::Null.get("n"), None);
+        assert_eq!(Json::parse("-1").unwrap().as_u64(), None, "negative");
     }
 }

@@ -1,10 +1,11 @@
 //! Integration: compiler -> cycle simulator across the model zoo, and the
-//! paper's qualitative claims end to end.
+//! paper's qualitative claims end to end — routed through the
+//! `h2pipe::session` pipeline API (builder -> CompiledModel -> simulate).
 
-use h2pipe::compiler::compile;
 use h2pipe::config::{BurstLengthPolicy, CompilerOptions, DeviceConfig, WeightPlacement};
-use h2pipe::nn::zoo;
-use h2pipe::sim::pipeline::{simulate, SimConfig};
+use h2pipe::nn::{zoo, Network};
+use h2pipe::session::{CompiledModel, Session};
+use h2pipe::sim::pipeline::{SimConfig, SimReport};
 
 fn device() -> DeviceConfig {
     DeviceConfig::stratix10_nx2100()
@@ -14,15 +15,29 @@ fn quick() -> SimConfig {
     SimConfig { images: 3, warmup_images: 1, ..SimConfig::default() }
 }
 
+/// Compile one network through the session pipeline.
+fn compiled(net: Network, o: CompilerOptions) -> CompiledModel {
+    let name = net.name.clone();
+    Session::builder()
+        .network(net)
+        .device(device())
+        .options(o)
+        .compile()
+        .unwrap_or_else(|e| panic!("{name}: {e:#}"))
+}
+
+fn simulated(cm: &CompiledModel) -> SimReport {
+    cm.simulate(&quick()).unwrap_or_else(|e| panic!("{}: {e:#}", cm.network().name))
+}
+
 #[test]
 fn every_zoo_model_compiles_and_simulates() {
-    let d = device();
-    let o = CompilerOptions::default();
     for net in zoo::table1_models() {
-        let plan = compile(&net, &d, &o).unwrap_or_else(|e| panic!("{}: {e}", net.name));
-        let rep = simulate(&net, &plan, &quick()).unwrap_or_else(|e| panic!("{}: {e}", net.name));
-        assert!(rep.throughput > 50.0, "{}: {:.0} im/s", net.name, rep.throughput);
-        assert!(rep.latency > 0.0 && rep.latency < 1.0, "{}: {}s", net.name, rep.latency);
+        let cm = compiled(net, CompilerOptions::default());
+        let rep = simulated(&cm);
+        let name = &cm.network().name;
+        assert!(rep.throughput > 50.0, "{name}: {:.0} im/s", rep.throughput);
+        assert!(rep.latency > 0.0 && rep.latency < 1.0, "{name}: {}s", rep.latency);
     }
 }
 
@@ -30,23 +45,22 @@ fn every_zoo_model_compiles_and_simulates() {
 fn paper_headline_shape_hybrid_vs_all_hbm() {
     // Fig. 6 shape: hybrid > all-HBM for all three evaluation networks,
     // with ResNet-18 gaining the most (its weights mostly fit on chip).
-    let d = device();
     let mut gains = Vec::new();
     for net in zoo::eval_models() {
-        let hybrid = compile(&net, &d, &CompilerOptions::default()).unwrap();
+        let name = net.name.clone();
+        let hybrid = compiled(net.clone(), CompilerOptions::default());
         let mut o = CompilerOptions::default();
         o.all_hbm = true;
-        let all = compile(&net, &d, &o).unwrap();
-        let rh = simulate(&net, &hybrid, &quick()).unwrap();
-        let ra = simulate(&net, &all, &quick()).unwrap();
+        let all = compiled(net, o);
+        let rh = simulated(&hybrid);
+        let ra = simulated(&all);
         assert!(
             rh.throughput > ra.throughput,
-            "{}: hybrid {:.0} <= all-HBM {:.0}",
-            net.name,
+            "{name}: hybrid {:.0} <= all-HBM {:.0}",
             rh.throughput,
             ra.throughput
         );
-        gains.push((net.name.clone(), rh.throughput / ra.throughput));
+        gains.push((name, rh.throughput / ra.throughput));
     }
     let r18 = gains.iter().find(|(n, _)| n == "ResNet-18").unwrap().1;
     let vgg = gains.iter().find(|(n, _)| n == "VGG-16").unwrap().1;
@@ -55,12 +69,9 @@ fn paper_headline_shape_hybrid_vs_all_hbm() {
 
 #[test]
 fn paper_throughput_ordering_r18_r50_vgg() {
-    let d = device();
-    let o = CompilerOptions::default();
     let mut t = Vec::new();
     for net in zoo::eval_models() {
-        let plan = compile(&net, &d, &o).unwrap();
-        t.push(simulate(&net, &plan, &quick()).unwrap().throughput);
+        t.push(simulated(&compiled(net, CompilerOptions::default())).throughput);
     }
     assert!(t[0] > t[1], "R18 {:.0} > R50 {:.0}", t[0], t[1]);
     assert!(t[1] > t[2], "R50 {:.0} > VGG {:.0}", t[1], t[2]);
@@ -70,13 +81,10 @@ fn paper_throughput_ordering_r18_r50_vgg() {
 fn table2_shape_burst_length_sensitivity() {
     // R18's bottleneck is on-chip: BL8 == BL16 throughput. R50's is on
     // HBM: throughput must not decrease as BL grows.
-    let d = device();
     let run = |name: &str, bl: u32| {
-        let net = zoo::by_name(name).unwrap();
         let mut o = CompilerOptions::default();
         o.burst_length = BurstLengthPolicy::Fixed(bl);
-        let plan = compile(&net, &d, &o).unwrap();
-        simulate(&net, &plan, &quick()).unwrap().throughput
+        simulated(&compiled(zoo::by_name(name).unwrap(), o)).throughput
     };
     let r18_8 = run("resnet18", 8);
     let r18_16 = run("resnet18", 16);
@@ -95,24 +103,20 @@ fn table2_shape_burst_length_sensitivity() {
 #[test]
 fn mobilenets_identical_to_hpipe_baseline() {
     // Networks that fit on chip never touch HBM: H2PIPE == HPIPE.
-    let d = device();
-    let o = CompilerOptions::default();
     for name in ["mobilenetv1", "mobilenetv2", "mobilenetv3"] {
-        let net = zoo::by_name(name).unwrap();
-        let plan = compile(&net, &d, &o).unwrap();
-        assert_eq!(plan.hbm_layers().count(), 0, "{name}");
-        let rep = simulate(&net, &plan, &quick()).unwrap();
+        let cm = compiled(zoo::by_name(name).unwrap(), CompilerOptions::default());
+        assert_eq!(cm.plan().hbm_layers().count(), 0, "{name}");
+        let rep = simulated(&cm);
         assert_eq!(rep.freeze_fraction, 0.0, "{name}");
     }
 }
 
 #[test]
 fn all_hbm_vgg_offloads_every_weight_layer_it_can() {
-    let d = device();
     let mut o = CompilerOptions::default();
     o.all_hbm = true;
-    let net = zoo::vgg16();
-    let plan = compile(&net, &d, &o).unwrap();
+    let cm = compiled(zoo::vgg16(), o);
+    let plan = cm.plan();
     // every weight layer either offloaded or blocked by chain bandwidth
     let onchip: Vec<_> = plan.onchip_layers().map(|l| l.stats.name.clone()).collect();
     for l in plan.onchip_layers() {
@@ -129,29 +133,16 @@ fn all_hbm_vgg_offloads_every_weight_layer_it_can() {
 
 #[test]
 fn latency_scales_with_pipeline_depth() {
-    let d = device();
-    let o = CompilerOptions::default();
-    let r18 = {
-        let net = zoo::resnet18();
-        let plan = compile(&net, &d, &o).unwrap();
-        simulate(&net, &plan, &quick()).unwrap().latency
-    };
-    let r50 = {
-        let net = zoo::resnet50();
-        let plan = compile(&net, &d, &o).unwrap();
-        simulate(&net, &plan, &quick()).unwrap().latency
-    };
+    let r18 = simulated(&compiled(zoo::resnet18(), CompilerOptions::default())).latency;
+    let r50 = simulated(&compiled(zoo::resnet50(), CompilerOptions::default())).latency;
     assert!(r50 > r18, "deeper net, longer latency: {r50} vs {r18}");
 }
 
 #[test]
 fn simulation_is_deterministic() {
-    let d = device();
-    let o = CompilerOptions::default();
-    let net = zoo::resnet50();
-    let plan = compile(&net, &d, &o).unwrap();
-    let a = simulate(&net, &plan, &quick()).unwrap();
-    let b = simulate(&net, &plan, &quick()).unwrap();
+    let cm = compiled(zoo::resnet50(), CompilerOptions::default());
+    let a = simulated(&cm);
+    let b = simulated(&cm);
     assert_eq!(a.throughput, b.throughput);
     assert_eq!(a.latency, b.latency);
     assert_eq!(a.core_cycles, b.core_cycles);
@@ -159,12 +150,12 @@ fn simulation_is_deterministic() {
 
 #[test]
 fn plan_resource_usage_is_consistent() {
-    let d = device();
-    let o = CompilerOptions::default();
     for net in zoo::eval_models() {
-        let plan = compile(&net, &d, &o).unwrap();
+        let name = net.name.clone();
+        let cm = compiled(net, CompilerOptions::default());
+        let plan = cm.plan();
         let u = plan.recompute_usage();
-        assert_eq!(u.m20k, plan.usage.m20k, "{}", net.name);
+        assert_eq!(u.m20k, plan.usage.m20k, "{name}");
         assert_eq!(u.tensor_blocks, plan.usage.tensor_blocks);
         assert_eq!(u.alms, plan.usage.alms);
         // offloaded layers must carry PC assignments and vice versa

@@ -1,0 +1,177 @@
+//! Integration: the `h2pipe::session` pipeline and its persistable plan
+//! artifacts.
+//!
+//! The central claim: a `CompiledModel` saved to JSON and loaded back is
+//! indistinguishable from the in-memory one — same serialized bytes, same
+//! offload decisions, and an *identical* `RunReport` from the cycle
+//! simulator — for all three zoo models the issue names. That is what
+//! makes `h2pipe compile --out plan.json && h2pipe simulate --plan
+//! plan.json` a faithful replay of `h2pipe simulate --model ...`.
+
+use std::path::PathBuf;
+
+use h2pipe::session::{CompiledModel, DeploymentTarget, ServeOptions, Session};
+use h2pipe::sim::pipeline::SimConfig;
+use h2pipe::testkit;
+
+const ROUND_TRIP_MODELS: [&str; 3] = ["resnet50", "vgg16", "mobilenet_edge"];
+
+fn quick() -> SimConfig {
+    SimConfig { images: 3, warmup_images: 1, ..SimConfig::default() }
+}
+
+fn tmp_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("h2pipe-{tag}-{}.json", std::process::id()))
+}
+
+#[test]
+fn artifact_round_trip_produces_identical_run_report() {
+    for model in ROUND_TRIP_MODELS {
+        let cm = Session::builder().model(model).compile().unwrap();
+        let path = tmp_path(&format!("rt-{model}"));
+        cm.save(&path).unwrap();
+        let loaded = CompiledModel::load(&path).unwrap();
+
+        // the artifact decodes to the same plan, bit for bit
+        assert_eq!(
+            loaded.to_json().to_string(),
+            cm.to_json().to_string(),
+            "{model}: save/load/save must be byte-stable"
+        );
+        assert_eq!(loaded.offload_fingerprint(), cm.offload_fingerprint(), "{model}");
+        assert_eq!(loaded.provenance(), cm.provenance(), "{model}");
+
+        // ...and the loaded plan drives an identical simulation report
+        let direct =
+            cm.deploy(DeploymentTarget::SingleDevice(quick())).run().unwrap();
+        let replayed =
+            loaded.deploy(DeploymentTarget::SingleDevice(quick())).run().unwrap();
+        assert_eq!(
+            replayed.to_json().to_string(),
+            direct.to_json().to_string(),
+            "{model}: plan-file replay must reproduce the in-memory report exactly"
+        );
+        std::fs::remove_file(&path).unwrap();
+    }
+}
+
+#[test]
+fn artifact_file_is_byte_stable_across_saves() {
+    let cm = Session::builder().model("resnet50").compile().unwrap();
+    let a = tmp_path("stable-a");
+    let b = tmp_path("stable-b");
+    cm.save(&a).unwrap();
+    CompiledModel::load(&a).unwrap().save(&b).unwrap();
+    assert_eq!(
+        std::fs::read_to_string(&a).unwrap(),
+        std::fs::read_to_string(&b).unwrap(),
+        "artifacts are diffable: identical plans serialize identically"
+    );
+    std::fs::remove_file(&a).unwrap();
+    std::fs::remove_file(&b).unwrap();
+}
+
+#[test]
+fn golden_offload_decisions_per_model() {
+    // Pin Algorithm 1's per-layer placement for the three artifact models.
+    // The golden files live under tests/golden/; a behaviour change shows
+    // up as a readable diff (re-bless with H2PIPE_BLESS=1 when intended).
+    for model in ROUND_TRIP_MODELS {
+        let cm = Session::builder().model(model).compile().unwrap();
+        let path = PathBuf::from(format!(
+            "{}/tests/golden/offload_{model}.txt",
+            env!("CARGO_MANIFEST_DIR")
+        ));
+        testkit::golden(&path, &cm.offload_fingerprint())
+            .unwrap_or_else(|e| panic!("{model}: {e}"));
+    }
+}
+
+#[test]
+fn offload_shape_matches_table1_expectations() {
+    // Independent of the golden files: R50 and VGG-16 exceed on-chip BRAM
+    // and must offload; mobilenet_edge fits and must not.
+    let hbm_count = |model: &str| {
+        Session::builder().model(model).compile().unwrap().plan().hbm_layers().count()
+    };
+    assert!(hbm_count("resnet50") > 0, "ResNet-50 must offload");
+    assert!(hbm_count("vgg16") > 0, "VGG-16 must offload");
+    assert_eq!(hbm_count("mobilenet_edge"), 0, "mobilenet_edge fits on chip");
+}
+
+#[test]
+fn loaded_plan_drives_serving() {
+    // The artifact also feeds the serve target: modelled rate comes from
+    // the persisted plan, requests flow through the replica router.
+    let cm = Session::builder().model("resnet50").compile().unwrap();
+    let path = tmp_path("serve");
+    cm.save(&path).unwrap();
+    let loaded = CompiledModel::load(&path).unwrap();
+    let rep = loaded
+        .deploy(DeploymentTarget::Serve(ServeOptions {
+            serve_model: "mobilenet_edge".to_string(),
+            requests: 8,
+            batch: 4,
+            ..ServeOptions::default()
+        }))
+        .run()
+        .unwrap();
+    assert_eq!(rep.target, "serve");
+    let ok = rep.detail.get("ok").and_then(|v| v.as_u64()).unwrap();
+    assert_eq!(ok, 8, "all requests must complete");
+    let modelled = rep
+        .detail
+        .get("modelled_throughput_rps")
+        .and_then(|v| v.as_f64())
+        .unwrap();
+    assert!(
+        (modelled - cm.plan().est_throughput).abs() < 1.0,
+        "modelled rate {modelled:.0} must come from the persisted plan ({:.0})",
+        cm.plan().est_throughput
+    );
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn corrupt_artifacts_are_rejected_not_misread() {
+    let cm = Session::builder().model("mobilenet_edge").compile().unwrap();
+    let path = tmp_path("corrupt");
+    cm.save(&path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+
+    // truncated file
+    std::fs::write(&path, &text[..text.len() / 2]).unwrap();
+    assert!(CompiledModel::load(&path).is_err(), "truncated artifact must not load");
+
+    // plausible-looking edit that breaks integrity (resource usage)
+    let tampered = text.replacen("\"m20k\":", "\"m20k_x\":", 1);
+    assert_ne!(tampered, text, "fixture must actually change the document");
+    std::fs::write(&path, tampered).unwrap();
+    assert!(CompiledModel::load(&path).is_err(), "tampered artifact must not load");
+
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn fleet_deployment_from_artifact() {
+    // Shard the persisted ResNet-18 plan across two devices and co-sim.
+    let cm = Session::builder().model("resnet18").compile().unwrap();
+    let path = tmp_path("fleet");
+    cm.save(&path).unwrap();
+    let loaded = CompiledModel::load(&path).unwrap();
+    let rep = loaded
+        .deploy(DeploymentTarget::Fleet {
+            partition: h2pipe::cluster::PartitionOptions { shards: Some(2), max_shards: 2 },
+            fleet: h2pipe::cluster::FleetConfig {
+                images: 3,
+                warmup_images: 1,
+                ..Default::default()
+            },
+        })
+        .run()
+        .unwrap();
+    assert_eq!(rep.target, "fleet");
+    assert!(rep.throughput > 0.0);
+    assert_eq!(rep.detail.get("shards").and_then(|v| v.as_u64()), Some(2));
+    std::fs::remove_file(&path).unwrap();
+}

@@ -229,7 +229,7 @@ pub fn best_prior(network: &str) -> Option<Accelerator> {
         .into_iter()
         .filter(|a| a.network == network && a.precision != "1-bit")
         .collect();
-    comparable.into_iter().max_by(|a, b| a.throughput.partial_cmp(&b.throughput).unwrap())
+    comparable.into_iter().max_by(|a, b| a.throughput.total_cmp(&b.throughput))
 }
 
 /// Speedup of a measured H2PIPE throughput vs the best comparable prior

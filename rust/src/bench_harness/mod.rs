@@ -46,6 +46,7 @@ impl Measurement {
 }
 
 /// A named bench run collecting measurements and result rows.
+#[derive(Debug)]
 pub struct Bench {
     name: String,
     measurements: Vec<Measurement>,

@@ -137,6 +137,7 @@ struct ReplicaRun {
 }
 
 /// The fleet: N replicas of an M-shard pipeline.
+#[derive(Debug)]
 pub struct FleetSim {
     pp: PartitionPlan,
 }

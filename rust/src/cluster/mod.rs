@@ -28,5 +28,7 @@ pub mod partition;
 pub mod router;
 
 pub use fleet::{FleetConfig, FleetReport, FleetSim, LinkStats, ShardStats};
-pub use partition::{partition, partition_at, PartitionOptions, PartitionPlan, ShardPlan};
+pub use partition::{
+    partition, partition_at, valid_cuts, PartitionOptions, PartitionPlan, ShardPlan,
+};
 pub use router::{FleetRouter, FleetServeReport};

@@ -81,7 +81,9 @@ impl PartitionPlan {
             .iter()
             .enumerate()
             .min_by(|(_, a), (_, b)| {
-                a.plan.est_throughput.partial_cmp(&b.plan.est_throughput).unwrap()
+                // total_cmp: never panics, even on a NaN estimate from a
+                // corrupt plan
+                a.plan.est_throughput.total_cmp(&b.plan.est_throughput)
             })
             .map(|(i, _)| i)
             .unwrap_or(0)
@@ -122,8 +124,9 @@ impl PartitionPlan {
 /// boundary activation stream out of layer `p - 1`. Any other crossing
 /// edge (a residual skip spanning the cut) would need a second
 /// inter-device stream, which the single-link fleet fabric does not
-/// provide.
-fn valid_cuts(net: &Network) -> Vec<bool> {
+/// provide. Public so the static verifier (`h2pipe check`, rule H2P060)
+/// re-derives cut legality from the same definition the planner uses.
+pub fn valid_cuts(net: &Network) -> Vec<bool> {
     let n = net.len();
     let mut ok = vec![true; n + 1];
     for l in net.layers() {

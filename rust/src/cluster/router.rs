@@ -12,7 +12,7 @@
 //! including failover time — next to the per-replica breakdowns.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard, PoisonError};
 use std::time::Instant;
 
 use anyhow::{Context, Result};
@@ -20,12 +20,14 @@ use anyhow::{Context, Result};
 use crate::coordinator::{InferenceServer, Metrics, ServerConfig, ServerReport};
 use crate::util::Json;
 
+#[derive(Debug)]
 struct Replica {
     server: InferenceServer,
     outstanding: AtomicUsize,
 }
 
 /// Router over N identical replicas.
+#[derive(Debug)]
 pub struct FleetRouter {
     replicas: Vec<Replica>,
     /// Round-robin tie-break cursor.
@@ -91,6 +93,13 @@ impl FleetRouter {
         self.replicas.len()
     }
 
+    /// Router metrics guard, tolerating lock poisoning: the metrics are
+    /// plain counters with no cross-field invariant, so a panic in
+    /// another client thread must not cascade into every later request.
+    fn metrics(&self) -> MutexGuard<'_, Metrics> {
+        self.metrics.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
     /// Route one request to the replica with the fewest outstanding
     /// requests; on rejection, fail over through the remaining replicas
     /// in load order before giving up.
@@ -109,14 +118,15 @@ impl FleetRouter {
             r.outstanding.fetch_sub(1, Ordering::SeqCst);
             match res {
                 Ok(out) => {
-                    self.metrics.lock().unwrap().record(start.elapsed().as_secs_f64());
+                    self.metrics().record(start.elapsed().as_secs_f64());
                     return Ok(out);
                 }
                 Err(e) => last_err = Some(e),
             }
         }
-        self.metrics.lock().unwrap().rejected += 1;
-        Err(last_err.expect("at least one replica attempted"))
+        self.metrics().rejected += 1;
+        // `start` guarantees replicas >= 1, so the loop ran at least once.
+        Err(last_err.expect("FleetRouter::start enforces replicas >= 1"))
             .context("all replicas rejected the request")
     }
 
@@ -124,7 +134,7 @@ impl FleetRouter {
     pub fn shutdown(self) -> FleetServeReport {
         let per_replica: Vec<ServerReport> =
             self.replicas.into_iter().map(|r| r.server.shutdown()).collect();
-        let mut m = self.metrics.into_inner().unwrap();
+        let mut m = self.metrics.into_inner().unwrap_or_else(PoisonError::into_inner);
         FleetServeReport {
             replicas: per_replica.len(),
             completed: m.completed,

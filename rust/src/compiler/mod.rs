@@ -164,36 +164,13 @@ pub fn compile(
     };
     plan.usage = plan.recompute_usage();
 
-    // Effective bottleneck includes the steady-state HBM stall factor.
-    let stall = plan.hbm_stall_factor(eff);
-    let eff_bottleneck = plan
-        .layers
-        .iter()
-        .filter(|l| l.stats.has_weights)
-        .map(|l| {
-            let c = l.compute_cycles() as f64;
-            if l.placement == WeightPlacement::Hbm {
-                c * stall
-            } else {
-                c
-            }
-        })
-        .fold(0.0f64, f64::max)
-        .max(1.0);
-    let hz = plan.device.core_mhz as f64 * 1e6;
-    plan.est_throughput = hz / eff_bottleneck;
-    // Latency: pipeline fill (each layer's receptive window) + one image
-    // at the bottleneck rate.
-    let fill: f64 = plan
-        .layers
-        .iter()
-        .filter(|l| l.stats.has_weights)
-        .map(|l| {
-            let per_line = l.compute_cycles() as f64 / l.stats.out_h.max(1) as f64;
-            per_line * (l.stats.kh as f64 + 1.0)
-        })
-        .sum();
-    plan.est_latency = (fill + eff_bottleneck) / hz;
+    // Analytic estimates: shared with the static verifier so a fresh
+    // compile always recomputes clean under `h2pipe check`.
+    let (est_throughput, est_latency) = plan.analytic_estimates();
+    plan.est_throughput = est_throughput;
+    plan.est_latency = est_latency;
+    debug_assert_eq!(plan.bottleneck_cycles, plan.recompute_bottleneck_cycles());
+    debug_assert_eq!(plan.free_bw_slots, plan.recompute_free_bw_slots());
     Ok(plan)
 }
 

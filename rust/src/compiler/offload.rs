@@ -59,7 +59,7 @@ pub fn algorithm1(
     // order: layer indices sorted by score, best first
     let mut order: Vec<usize> =
         (0..l_count).filter(|&i| stats[i].has_weights).collect();
-    order.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+    order.sort_by(|&a, &b| scores[b].total_cmp(&scores[a]));
 
     let mut free_bw = n_pc * chains_per_pc;
     let mut idx = 0;
@@ -222,7 +222,7 @@ mod tests {
         // the two offloaded layers must be the two best-scoring ones
         let mut ranked: Vec<usize> =
             (0..stats.len()).filter(|&i| stats[i].has_weights).collect();
-        ranked.sort_by(|&a, &b| plan.scores[b].partial_cmp(&plan.scores[a]).unwrap());
+        ranked.sort_by(|&a, &b| plan.scores[b].total_cmp(&plan.scores[a]));
         assert!(plan.offload[ranked[0]]);
         assert!(plan.offload[ranked[1]]);
     }

@@ -140,7 +140,7 @@ pub fn allocate(stats: &[LayerStats], budget: &Budget) -> Allocation {
                 let dt = s.tensor_blocks(c.p_i, c.p_o).saturating_sub(cur_tb).max(1);
                 (dc > 0).then(|| (c, dc as f64 / dt as f64))
             })
-            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+            .max_by(|a, b| a.1.total_cmp(&b.1));
         let Some((cand, _)) = best else {
             break; // bottleneck is at max parallelism
         };

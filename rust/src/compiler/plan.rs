@@ -170,6 +170,69 @@ impl AcceleratorPlan {
         s
     }
 
+    /// Total chain slots the device exposes (usable PCs x slots per PC).
+    pub fn bw_slot_capacity(&self) -> u64 {
+        self.device.usable_pcs() as u64 * self.device.chains_per_pc() as u64
+    }
+
+    /// Recompute the compute-only bottleneck from the layer plans. The
+    /// compiler stores this value and `h2pipe check` (rule H2P051)
+    /// re-derives it through this same function, so the two can only
+    /// disagree when the stored scalar was tampered with.
+    pub fn recompute_bottleneck_cycles(&self) -> u64 {
+        self.layers
+            .iter()
+            .filter(|l| l.stats.has_weights)
+            .map(LayerPlan::compute_cycles)
+            .max()
+            .unwrap_or(1)
+    }
+
+    /// Recompute the free chain slots from the layer plans (H2P052).
+    pub fn recompute_free_bw_slots(&self) -> u64 {
+        let used: u64 = self.hbm_layers().map(|l| l.par.chains() as u64).sum();
+        self.bw_slot_capacity().saturating_sub(used)
+    }
+
+    /// Analytic `(est_throughput, est_latency)` recomputed from the layer
+    /// plans: the effective bottleneck applies the steady-state HBM stall
+    /// factor to offloaded layers, and latency adds the pipeline fill
+    /// (each layer's receptive window). [`crate::compiler::compile`]
+    /// stores exactly these values, and the verifier (H2P050) recomputes
+    /// them through this same function. The efficiency is looked up from
+    /// the embedded table — not taken from the stored
+    /// `hbm_read_efficiency` scalar — so a tampered scalar trips only its
+    /// own rule (H2P053).
+    pub fn analytic_estimates(&self) -> (f64, f64) {
+        let eff = self.options.efficiency.lookup(self.burst_len);
+        let stall = self.hbm_stall_factor(eff);
+        let eff_bottleneck = self
+            .layers
+            .iter()
+            .filter(|l| l.stats.has_weights)
+            .map(|l| {
+                let c = l.compute_cycles() as f64;
+                if l.placement == WeightPlacement::Hbm {
+                    c * stall
+                } else {
+                    c
+                }
+            })
+            .fold(0.0f64, f64::max)
+            .max(1.0);
+        let hz = self.device.core_mhz as f64 * 1e6;
+        let fill: f64 = self
+            .layers
+            .iter()
+            .filter(|l| l.stats.has_weights)
+            .map(|l| {
+                let per_line = l.compute_cycles() as f64 / l.stats.out_h.max(1) as f64;
+                per_line * (l.stats.kh as f64 + 1.0)
+            })
+            .sum();
+        (hz / eff_bottleneck, (fill + eff_bottleneck) / hz)
+    }
+
     /// Total resource usage recomputation (sanity checks / tests).
     pub fn recompute_usage(&self) -> ResourceUsage {
         let mut m20k = 0u64;

@@ -9,4 +9,6 @@ mod device;
 mod options;
 
 pub use device::{DeviceConfig, HbmGeometry, HbmTiming};
-pub use options::{BurstLengthPolicy, CompilerOptions, EfficiencyTable, WeightPlacement};
+pub use options::{
+    BurstLengthPolicy, CompilerOptions, EfficiencyTable, FlowControl, WeightPlacement,
+};

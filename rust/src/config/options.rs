@@ -1,5 +1,7 @@
 //! User-facing compiler options (the knobs §IV–§V expose).
 
+pub use crate::fabric::FlowControl;
+
 /// Where a layer's weights live.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum WeightPlacement {
@@ -142,6 +144,13 @@ pub struct CompilerOptions {
     /// to the Fig. 3a measurement; recalibration overrides it here (and
     /// the table is persisted inside every saved plan artifact).
     pub efficiency: EfficiencyTable,
+    /// Flow-control protocol of the weight distribution network (§V-A).
+    /// `Credit` is the paper's fix for the Fig. 5 head-of-line deadlock
+    /// and the only protocol `h2pipe check` can prove cycle-free;
+    /// `ReadyValid` reproduces the broken baseline and is flagged by the
+    /// static deadlock rule (H2P030) whenever layers share a
+    /// pseudo-channel.
+    pub flow_control: FlowControl,
 }
 
 impl Default for CompilerOptions {
@@ -157,6 +166,7 @@ impl Default for CompilerOptions {
             max_parallelism_steps: 64,
             max_chains_per_layer: 32,
             efficiency: EfficiencyTable::calibrated(),
+            flow_control: FlowControl::Credit,
         }
     }
 }
@@ -193,6 +203,8 @@ mod tests {
         assert_eq!(o.last_stage_fifo_depth, 512);
         assert_eq!(o.fifo_group_size, 6);
         assert_eq!(o.weight_bits, 8);
+        // the paper's production protocol is credit-based (§V-A)
+        assert_eq!(o.flow_control, FlowControl::Credit);
     }
 
     #[test]

@@ -117,6 +117,7 @@ impl ServerReport {
 }
 
 /// The inference server.
+#[derive(Debug)]
 pub struct InferenceServer {
     tx: Option<SyncSender<Request>>,
     worker: Option<JoinHandle<()>>,

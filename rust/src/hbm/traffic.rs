@@ -83,6 +83,7 @@ pub struct TrafficReport {
 }
 
 /// The traffic generator.
+#[derive(Debug)]
 pub struct TrafficGen {
     geom: HbmGeometry,
     timing: HbmTiming,

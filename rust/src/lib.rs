@@ -44,8 +44,17 @@
 //!   criterion / proptest / serde, which are unavailable in the offline
 //!   crate set this build runs against.
 //!
+//! * [`verify`] — `h2pipe check`: the static plan verifier. Re-derives
+//!   every invariant the compiler assumes (resource budgets, per-PC HBM
+//!   bandwidth, Fig. 5 deadlock freedom, Fig. 6 FIFO depth bounds,
+//!   estimate/provenance consistency, fleet cut legality) over any plan
+//!   artifact and reports structured `H2P0xx` diagnostics.
+//!
 //! See `DESIGN.md` for the experiment index mapping every paper table and
 //! figure to a bench target, and `EXPERIMENTS.md` for measured results.
+
+#![forbid(unsafe_code)]
+#![warn(rust_2018_idioms, missing_debug_implementations)]
 
 pub mod analysis;
 pub mod bench_harness;
@@ -61,6 +70,7 @@ pub mod session;
 pub mod sim;
 pub mod testkit;
 pub mod util;
+pub mod verify;
 
 /// Crate-wide result alias.
 pub type Result<T> = anyhow::Result<T>;

@@ -23,6 +23,7 @@ use h2pipe::nn::zoo;
 use h2pipe::session::{CompiledModel, DeploymentTarget, ServeOptions, Session, SessionBuilder};
 use h2pipe::sim::pipeline::SimConfig;
 use h2pipe::util::fmt_mbits;
+use h2pipe::verify::{check_partition, Severity};
 
 fn main() {
     if let Err(e) = run() {
@@ -54,6 +55,14 @@ const SPECS: &[CmdSpec] = &[
                 [--write-path-bits N] [--out FILE.json]",
         keys: &["model", "burst", "write-path-bits", "out"],
         flags: &["all-hbm"],
+    },
+    CmdSpec {
+        name: "check",
+        about: "statically verify a plan (H2P0xx diagnostics, no simulation)",
+        usage: "h2pipe check [--model NAME | --plan FILE.json] [--all-hbm] [--burst N] \
+                [--write-path-bits N] [--shards M] [--deny warn] [--json]",
+        keys: &["model", "plan", "burst", "write-path-bits", "shards", "deny"],
+        flags: &["all-hbm", "json"],
     },
     CmdSpec {
         name: "simulate",
@@ -270,6 +279,62 @@ fn run() -> Result<()> {
                 println!("plan artifact written to {path}");
             }
         }
+        "check" => {
+            // Broken artifacts must load for diagnosis, so `--plan` takes
+            // the unchecked path; the verifier reports what `load` would
+            // have refused.
+            let cm = match args.kv.get("plan") {
+                Some(path) => {
+                    for k in ["model", "burst", "write-path-bits"] {
+                        anyhow::ensure!(
+                            !args.kv.contains_key(k),
+                            "--{k} conflicts with --plan (the artifact pins compile options)"
+                        );
+                    }
+                    anyhow::ensure!(!args.flag("all-hbm"), "--all-hbm conflicts with --plan");
+                    CompiledModel::load_unchecked(path)?
+                }
+                None => args.builder()?.compile()?,
+            };
+            let mut report = cm.verify();
+            let shards = args.get("shards", 1usize)?;
+            if shards > 1 {
+                let plan = cm.plan();
+                let pp = h2pipe::cluster::partition(
+                    cm.network(),
+                    &plan.device,
+                    &plan.options,
+                    &h2pipe::cluster::PartitionOptions {
+                        shards: Some(shards),
+                        max_shards: shards,
+                    },
+                )
+                .context("partitioning for fleet check")?;
+                report
+                    .diagnostics
+                    .extend(check_partition(cm.network(), &pp).diagnostics);
+            }
+            let deny = match args.kv.get("deny").map(String::as_str) {
+                None => Severity::Error,
+                Some("warn") => Severity::Warn,
+                Some("note") => Severity::Note,
+                Some(other) => {
+                    bail!("--deny {other:?}: expected \"warn\" or \"note\" (errors always deny)")
+                }
+            };
+            if args.flag("json") {
+                println!("{}", report.to_json());
+            } else {
+                print!("{}", report.render());
+            }
+            if report.denies(deny) {
+                bail!(
+                    "{}: {} finding(s) at or above the deny threshold",
+                    cm.network().name,
+                    report.diagnostics.iter().filter(|d| d.severity >= deny).count()
+                );
+            }
+        }
         "simulate" => {
             let cm = args.compiled()?;
             let cfg = SimConfig {
@@ -279,7 +344,7 @@ fn run() -> Result<()> {
             };
             let rep = cm.deploy(DeploymentTarget::SingleDevice(cfg)).run()?;
             println!("{}", rep.summary());
-            println!("{}", rep.to_json().to_string());
+            println!("{}", rep.to_json());
         }
         "characterize" => {
             let bursts: Vec<u32> = args
@@ -378,7 +443,7 @@ fn run() -> Result<()> {
                 r.write_path_registers,
                 r.hbm_write_efficiency
             );
-            println!("{}", r.to_json().to_string());
+            println!("{}", r.to_json());
         }
         "serve" => {
             let cm = args.compiled()?;
@@ -398,7 +463,7 @@ fn run() -> Result<()> {
             };
             let rep = cm.deploy(DeploymentTarget::Serve(opts)).run()?;
             println!("{}", rep.summary());
-            println!("{}", rep.to_json().to_string());
+            println!("{}", rep.to_json());
         }
         "infer" => {
             let rt = h2pipe::runtime::Runtime::cpu("artifacts")?;

@@ -13,7 +13,7 @@
 //!   and runs the `artifacts/*.hlo.txt` lowered by
 //!   `python/compile/aot.py` (L2 JAX graphs calling the L1 Pallas
 //!   kernels with `interpret=True`). Requires the `xla` crate; see
-//!   DESIGN.md §9 for the HLO-text interchange rationale. Python is
+//!   DESIGN.md §10 for the HLO-text interchange rationale. Python is
 //!   never on the request path in either backend.
 
 use std::path::{Path, PathBuf};
@@ -65,6 +65,15 @@ pub struct Runtime {
     artifact_dir: PathBuf,
 }
 
+impl std::fmt::Debug for Runtime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Runtime")
+            .field("backend", &self.backend.name())
+            .field("artifact_dir", &self.artifact_dir)
+            .finish()
+    }
+}
+
 impl Runtime {
     /// CPU runtime rooted at an artifact directory: the PJRT client when
     /// the `pjrt` feature is enabled, the reference interpreter
@@ -113,6 +122,12 @@ impl Runtime {
 /// A loaded model, ready to execute requests.
 pub struct Executable {
     model: Box<dyn Model>,
+}
+
+impl std::fmt::Debug for Executable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Executable").field("model", &self.model.name()).finish()
+    }
 }
 
 impl Executable {

@@ -18,6 +18,12 @@ pub struct PjrtBackend {
     client: xla::PjRtClient,
 }
 
+impl std::fmt::Debug for PjrtBackend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PjrtBackend").field("platform", &self.client.platform_name()).finish()
+    }
+}
+
 impl PjrtBackend {
     /// Create a CPU PJRT client.
     pub fn cpu() -> Result<Self> {
@@ -38,7 +44,7 @@ impl Backend for PjrtBackend {
     ///
     /// HLO *text* is the interchange format: jax >= 0.5 serialized protos
     /// carry 64-bit instruction ids that xla_extension 0.5.1 rejects; the
-    /// text parser reassigns ids (see DESIGN.md §9 / aot.py docstring).
+    /// text parser reassigns ids (see DESIGN.md §10 / aot.py docstring).
     fn load_model(&self, artifact_dir: &Path, name: &str) -> Result<Box<dyn Model>> {
         let path = artifact_dir.join(format!("{name}.hlo.txt"));
         ensure!(

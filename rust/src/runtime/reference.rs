@@ -95,6 +95,16 @@ pub struct ReferenceModel {
     input_dims: Vec<usize>,
 }
 
+impl std::fmt::Debug for ReferenceModel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ReferenceModel")
+            .field("net", &self.net.name)
+            .field("layers", &self.execs.len())
+            .field("input_dims", &self.input_dims)
+            .finish()
+    }
+}
+
 impl ReferenceModel {
     /// The cifarnet artifact's stand-in: 32x32x3 image -> 10 logits.
     pub fn cifarnet() -> Self {

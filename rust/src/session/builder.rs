@@ -3,13 +3,16 @@
 
 use anyhow::{bail, Context, Result};
 
-use crate::config::{BurstLengthPolicy, CompilerOptions, DeviceConfig, EfficiencyTable};
+use crate::config::{
+    BurstLengthPolicy, CompilerOptions, DeviceConfig, EfficiencyTable, FlowControl,
+};
 use crate::nn::{zoo, Network};
 use crate::session::codec;
 use crate::session::compiled::{CompiledModel, Provenance};
 
 /// Entry point of the typed pipeline:
 /// `Session::builder() -> CompiledModel -> Deployment -> RunReport`.
+#[derive(Debug)]
 pub struct Session;
 
 impl Session {
@@ -24,6 +27,7 @@ impl Session {
     }
 }
 
+#[derive(Debug)]
 enum ModelSource {
     Unset,
     Zoo(String),
@@ -32,6 +36,7 @@ enum ModelSource {
 
 /// Accumulates the compile-stage inputs. Defaults: the paper's Stratix 10
 /// NX2100 testbed and default [`CompilerOptions`]; the model must be set.
+#[derive(Debug)]
 pub struct SessionBuilder {
     source: ModelSource,
     device: DeviceConfig,
@@ -91,6 +96,14 @@ impl SessionBuilder {
     /// Override the HBM read-efficiency calibration (fig3a recalibration).
     pub fn efficiency_table(mut self, table: EfficiencyTable) -> Self {
         self.options.efficiency = table;
+        self
+    }
+
+    /// Weight-network flow control. [`FlowControl::Credit`] (default) is
+    /// the §V-A deadlock fix; [`FlowControl::ReadyValid`] reproduces the
+    /// Fig. 5 hazard and is flagged by the verifier (H2P030).
+    pub fn flow_control(mut self, flow: FlowControl) -> Self {
+        self.options.flow_control = flow;
         self
     }
 

@@ -17,8 +17,8 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::compiler::{AcceleratorPlan, LayerPlan, LayerStats, Parallelism, ResourceUsage};
 use crate::config::{
-    BurstLengthPolicy, CompilerOptions, DeviceConfig, EfficiencyTable, HbmGeometry, HbmTiming,
-    WeightPlacement,
+    BurstLengthPolicy, CompilerOptions, DeviceConfig, EfficiencyTable, FlowControl, HbmGeometry,
+    HbmTiming, WeightPlacement,
 };
 use crate::nn::{ConvKind, Network, OpKind, Shape};
 use crate::util::Json;
@@ -324,7 +324,14 @@ pub fn options_to_json(o: &CompilerOptions) -> Json {
         .set("weight_bits", o.weight_bits)
         .set("max_parallelism_steps", o.max_parallelism_steps)
         .set("max_chains_per_layer", o.max_chains_per_layer)
-        .set("efficiency", eff);
+        .set("efficiency", eff)
+        .set(
+            "flow_control",
+            match o.flow_control {
+                FlowControl::Credit => "credit",
+                FlowControl::ReadyValid => "ready_valid",
+            },
+        );
     j
 }
 
@@ -345,6 +352,11 @@ pub fn options_from_json(j: &Json) -> Result<CompilerOptions> {
             ))
         })
         .collect::<Result<_>>()?;
+    let flow_control = match str_field(j, "flow_control")? {
+        "credit" => FlowControl::Credit,
+        "ready_valid" => FlowControl::ReadyValid,
+        p => bail!("unknown flow control {p:?}"),
+    };
     let o = CompilerOptions {
         burst_length,
         all_hbm: bool_field(j, "all_hbm")?,
@@ -356,6 +368,7 @@ pub fn options_from_json(j: &Json) -> Result<CompilerOptions> {
         max_parallelism_steps: u32_field(j, "max_parallelism_steps")?,
         max_chains_per_layer: u32_field(j, "max_chains_per_layer")?,
         efficiency: EfficiencyTable { entries },
+        flow_control,
     };
     o.validate().context("loaded compiler options fail validation")?;
     Ok(o)
@@ -561,6 +574,9 @@ mod tests {
         let mut o = CompilerOptions::default();
         o.efficiency.entries[3].1 = 0.5;
         assert_ne!(options_hash(&o), base, "efficiency table must be hashed");
+        let mut o = CompilerOptions::default();
+        o.flow_control = FlowControl::ReadyValid;
+        assert_ne!(options_hash(&o), base, "flow control must be hashed");
     }
 
     #[test]

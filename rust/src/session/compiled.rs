@@ -3,7 +3,7 @@
 
 use std::path::Path;
 
-use anyhow::{bail, ensure, Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::compiler::AcceleratorPlan;
 use crate::config::{EfficiencyTable, WeightPlacement};
@@ -117,8 +117,12 @@ impl CompiledModel {
         o
     }
 
-    /// Decode and integrity-check an artifact.
-    pub fn from_json(j: &Json) -> Result<Self> {
+    /// Decode an artifact without running the verifier. Schema errors
+    /// (wrong format tag, missing fields) still fail hard; everything
+    /// that *decodes* is returned, however inconsistent. This is the
+    /// entry point for `h2pipe check --plan`, which must be able to load
+    /// a broken artifact in order to diagnose it.
+    pub fn from_json_unchecked(j: &Json) -> Result<Self> {
         match j.get("format").and_then(Json::as_str) {
             Some(PLAN_FORMAT) => {}
             Some(other) => bail!("unsupported plan format {other:?} (expected {PLAN_FORMAT:?})"),
@@ -149,47 +153,52 @@ impl CompiledModel {
                 .context("decoding artifact network")?;
         let plan = codec::plan_from_json(j.get("plan").context("missing plan")?)
             .context("decoding artifact plan")?;
-
-        // Integrity checks: the artifact must be self-consistent before
-        // anything downstream trusts it.
-        ensure!(
-            plan.network == network.name,
-            "plan is for {:?} but the artifact carries network {:?}",
-            plan.network,
-            network.name
-        );
-        ensure!(
-            plan.layers.len() == network.len(),
-            "plan has {} layers but the network has {}",
-            plan.layers.len(),
-            network.len()
-        );
-        let recomputed = plan.recompute_usage();
-        ensure!(
-            recomputed.m20k == plan.usage.m20k
-                && recomputed.tensor_blocks == plan.usage.tensor_blocks
-                && recomputed.alms == plan.usage.alms,
-            "artifact resource usage does not recompute (corrupt or hand-edited plan)"
-        );
-        let rehash = codec::options_hash(&plan.options);
-        ensure!(
-            rehash == options_hash,
-            "provenance options hash {options_hash:016x} does not match the \
-             embedded options ({rehash:016x})"
-        );
-        ensure!(
-            provenance.device == plan.device.name,
-            "provenance device {:?} does not match plan device {:?}",
-            provenance.device,
-            plan.device.name
-        );
-        ensure!(
-            provenance.model == network.name,
-            "provenance model {:?} does not match the artifact's network {:?}",
-            provenance.model,
-            network.name
-        );
         Ok(Self { network, plan, provenance })
+    }
+
+    /// Decode and integrity-check an artifact.
+    ///
+    /// The integrity gate is the verifier's tamper subset
+    /// ([`crate::verify::Code::is_integrity`]): stored usage that does
+    /// not recompute, an options hash that does not match the embedded
+    /// options, or provenance/network identity mismatches refuse to
+    /// load. Feasibility findings (overcommit, bandwidth, deadlock, …)
+    /// do NOT block loading — they describe a well-formed but bad plan,
+    /// and are reported by [`Self::verify`] / `h2pipe check` instead.
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let cm = Self::from_json_unchecked(j)?;
+        let integrity: Vec<_> = crate::verify::check_artifact(&cm)
+            .diagnostics
+            .into_iter()
+            .filter(|d| d.code.is_integrity())
+            .collect();
+        if !integrity.is_empty() {
+            let mut msg = String::from("artifact failed integrity verification:");
+            for d in &integrity {
+                msg.push('\n');
+                msg.push_str(&d.render());
+            }
+            bail!(msg);
+        }
+        Ok(cm)
+    }
+
+    /// Run the full static verifier over this artifact (all rule
+    /// families, not just the integrity subset).
+    pub fn verify(&self) -> crate::verify::Report {
+        crate::verify::check_artifact(self)
+    }
+
+    /// Assemble from parts without verification — the entry point for
+    /// plan generators (autotuners, test fixtures) that mutate a decoded
+    /// plan and re-serialize it. Pair with [`Self::verify`].
+    pub fn from_parts(network: Network, plan: AcceleratorPlan, provenance: Provenance) -> Self {
+        Self { network, plan, provenance }
+    }
+
+    /// Decompose into parts for mutation; inverse of [`Self::from_parts`].
+    pub fn into_parts(self) -> (Network, AcceleratorPlan, Provenance) {
+        (self.network, self.plan, self.provenance)
     }
 
     /// Write the artifact as pretty-printed JSON.
@@ -207,5 +216,17 @@ impl CompiledModel {
         let j = Json::parse(&text)
             .with_context(|| format!("parsing plan artifact {}", path.display()))?;
         Self::from_json(&j).with_context(|| format!("loading plan artifact {}", path.display()))
+    }
+
+    /// Load without the integrity gate — for `h2pipe check --plan`,
+    /// which diagnoses broken artifacts instead of refusing them.
+    pub fn load_unchecked(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading plan artifact {}", path.display()))?;
+        let j = Json::parse(&text)
+            .with_context(|| format!("parsing plan artifact {}", path.display()))?;
+        Self::from_json_unchecked(&j)
+            .with_context(|| format!("loading plan artifact {}", path.display()))
     }
 }

@@ -80,6 +80,7 @@ pub enum DeploymentTarget {
 
 /// A compiled model bound to a deployment target; [`Deployment::run`]
 /// executes it and produces the unified [`RunReport`].
+#[derive(Debug)]
 pub struct Deployment<'a> {
     compiled: &'a CompiledModel,
     target: DeploymentTarget,
@@ -111,6 +112,10 @@ impl<'a> Deployment<'a> {
         detail: crate::util::Json,
     ) -> RunReport {
         let prov = self.compiled.provenance();
+        // Automatic post-compile verification: every deployment report
+        // carries the static checker's findings so analytically suspect
+        // plans surface even when the run itself succeeds.
+        let diagnostics = crate::verify::check_artifact(self.compiled).diagnostics;
         RunReport {
             model: prov.model.clone(),
             device: prov.device.clone(),
@@ -119,6 +124,7 @@ impl<'a> Deployment<'a> {
             throughput,
             latency_ms,
             detail,
+            diagnostics,
         }
     }
 

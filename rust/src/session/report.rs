@@ -8,6 +8,7 @@
 //! of any kind with one scraper.
 
 use crate::util::Json;
+use crate::verify::{Diagnostic, Severity};
 
 /// Unified result of running a [`crate::session::Deployment`].
 #[derive(Debug, Clone)]
@@ -30,6 +31,10 @@ pub struct RunReport {
     /// Target-specific payload (`SimReport`/`FleetReport`/
     /// `FleetServeReport` JSON).
     pub detail: Json,
+    /// Findings from the automatic post-compile verifier pass
+    /// (`h2pipe check` run over the artifact before execution). Empty
+    /// for a clean plan.
+    pub diagnostics: Vec<Diagnostic>,
 }
 
 impl RunReport {
@@ -43,16 +48,30 @@ impl RunReport {
             .set("throughput", self.throughput)
             .set("latency_ms", self.latency_ms)
             .set("detail", self.detail.clone());
+        let mut diags = Json::Arr(Vec::new());
+        for d in &self.diagnostics {
+            diags.push(d.to_json());
+        }
+        o.set("diagnostics", diags);
         o
     }
 
-    /// One human-readable headline line.
+    /// One human-readable headline line; appends the verifier finding
+    /// count when the post-compile check was not clean.
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "{} [{}] on {}: {:.0} im/s, {:.2} ms (options {:016x})",
             self.model, self.target, self.device, self.throughput, self.latency_ms,
             self.options_hash
-        )
+        );
+        if !self.diagnostics.is_empty() {
+            let errors =
+                self.diagnostics.iter().filter(|d| d.severity == Severity::Error).count();
+            let warns =
+                self.diagnostics.iter().filter(|d| d.severity == Severity::Warn).count();
+            s.push_str(&format!(" — check: {errors} error(s), {warns} warning(s)"));
+        }
+        s
     }
 }
 
@@ -70,6 +89,7 @@ mod tests {
             throughput: 4174.0,
             latency_ms: 1.25,
             detail: Json::obj(),
+            diagnostics: Vec::new(),
         };
         let j = r.to_json().to_string();
         assert!(j.contains("\"target\":\"simulate\""), "{j}");

@@ -91,6 +91,7 @@ impl SimReport {
 /// flat per-engine vectors carrying the values the inner loop needs
 /// (producer out_h, edge capacity), so the per-cycle dependency checks are
 /// pure indexed reads — no hash lookups on the hot path.
+#[derive(Debug)]
 pub struct PipelineSim {
     plan: AcceleratorPlan,
     engines: Vec<LayerEngineSim>,

@@ -54,6 +54,7 @@ struct PcGroup {
 }
 
 /// The whole weight subsystem: HBM stacks + streams + per-PC prefetchers.
+#[derive(Debug)]
 pub struct WeightSubsystem {
     stacks: Vec<HbmStack>,
     streams: Vec<Stream>,

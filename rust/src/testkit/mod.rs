@@ -53,6 +53,7 @@ pub fn golden(path: &Path, content: &str) -> Result<(), String> {
 }
 
 /// Random-value source handed to properties.
+#[derive(Debug)]
 pub struct Gen {
     rng: XorShift64,
     /// Seed that reproduces this case exactly.

@@ -49,13 +49,6 @@ impl Json {
         self
     }
 
-    /// Serialize compactly.
-    pub fn to_string(&self) -> String {
-        let mut s = String::new();
-        self.write(&mut s);
-        s
-    }
-
     /// Serialize with two-space indentation.
     pub fn to_pretty(&self) -> String {
         let mut s = String::new();
@@ -201,6 +194,15 @@ impl Json {
             Json::Obj(m) => Some(m),
             _ => None,
         }
+    }
+}
+
+/// Compact serialization; `json.to_string()` comes with it for free.
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut s = String::new();
+        self.write(&mut s);
+        f.write_str(&s)
     }
 }
 

@@ -1,0 +1,166 @@
+//! Rule family 3: static structural deadlock analysis (Fig. 5).
+//!
+//! The weight distribution network forms a dependency graph per
+//! pseudo-channel: the HBM prefetcher interleaves bursts for every chain
+//! slot into one dual-clock FIFO, whose *head* word belongs to exactly
+//! one layer's burst-matching FIFO. Under plain ready/valid flow control
+//! the prefetcher issues reads without knowing whether that burst FIFO
+//! has room, so the §V-A cycle can close: layer A starves for weights →
+//! A's activations back-pressure downstream layer B → B stops draining
+//! its burst FIFO → the DCFIFO head (a B word) cannot advance → A's
+//! words behind it never arrive. Credit-based flow control breaks the
+//! cycle by construction — a burst is only fetched after the target FIFO
+//! reserved space, so the DCFIFO head is always drainable and the wait
+//! graph stays acyclic.
+//!
+//! The static rule is *conservative*: a ready/valid plan is flagged
+//! whenever two layers share a pseudo-channel and some sharing layer's
+//! burst FIFO cannot absorb its entire per-image weight stream (the only
+//! regime in which head-of-line blocking provably cannot occur is a FIFO
+//! deep enough to never refuse the DCFIFO head). The
+//! `fabric::deadlock` Fig. 5 repro is the executable ground truth this
+//! rule is cross-validated against in `tests/integration_verify.rs`.
+
+use std::collections::BTreeMap;
+
+use crate::compiler::AcceleratorPlan;
+use crate::config::{FlowControl, WeightPlacement};
+use crate::fabric::deadlock::ScenarioConfig;
+
+use super::{Code, Diagnostic, Report};
+
+/// Outcome of the static analysis, exposed so callers (and the
+/// cross-validation test) can distinguish *why* a plan is safe.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DeadlockVerdict {
+    /// Credit flow control: cycle-free by construction (§V-A).
+    CreditCycleFree,
+    /// Ready/valid, but no pseudo-channel carries more than one layer, so
+    /// every DCFIFO head word targets its only consumer — no cross-layer
+    /// head-of-line dependency exists.
+    NoSharedChannel,
+    /// Ready/valid with shared channels, but every sharing layer's burst
+    /// FIFO holds its whole stream — the Fig. 5 cycle cannot close.
+    FifosSufficient,
+    /// The Fig. 5 cycle is admissible on `pc`.
+    Hazard {
+        pc: u32,
+        /// Names of the layers sharing the hazardous channel.
+        layers: Vec<String>,
+        /// Burst-matching FIFO capacity, in 80-bit weight words.
+        capacity_words: u64,
+        /// Largest per-image weight stream among the sharing layers.
+        required_words: u64,
+    },
+}
+
+/// Core predicate, shared between the plan rule and the Fig. 5 scenario
+/// mapping: given layers that share one channel, each streaming
+/// `stream_words` through a burst FIFO of `capacity_words`, is the
+/// head-of-line cycle admissible?
+pub fn shared_channel_hazard(
+    flow: FlowControl,
+    capacity_words: u64,
+    stream_words: &[u64],
+) -> bool {
+    match flow {
+        FlowControl::Credit => false,
+        FlowControl::ReadyValid => {
+            stream_words.len() >= 2 && stream_words.iter().any(|&w| w > capacity_words)
+        }
+    }
+}
+
+/// Statically analyze one plan's weight network.
+pub fn analyze_plan(plan: &AcceleratorPlan) -> DeadlockVerdict {
+    if plan.options.flow_control == FlowControl::Credit {
+        return DeadlockVerdict::CreditCycleFree;
+    }
+    // Group offloaded layers by the pseudo-channels they draw from.
+    let mut by_pc: BTreeMap<u32, Vec<usize>> = BTreeMap::new();
+    for (i, l) in plan.layers.iter().enumerate() {
+        if l.placement == WeightPlacement::Hbm && l.stats.has_weights {
+            for &(pc, _) in &l.pcs {
+                by_pc.entry(pc).or_default().push(i);
+            }
+        }
+    }
+    let shared: Vec<(&u32, &Vec<usize>)> =
+        by_pc.iter().filter(|(_, idxs)| idxs.len() >= 2).collect();
+    if shared.is_empty() {
+        return DeadlockVerdict::NoSharedChannel;
+    }
+    // Burst-matching FIFO capacity in 80-bit words (its M20K sizing in
+    // LayerStats::hbm_weight_m20k is 4 x burst_len x 256 bits per stream).
+    let capacity_words = 4 * plan.burst_len as u64 * 256 / 80;
+    for (&pc, idxs) in &shared {
+        // Per-image stream of a layer: its chains each pull one 80-bit
+        // word per compute cycle.
+        let streams: Vec<u64> = idxs
+            .iter()
+            .map(|&i| {
+                let l = &plan.layers[i];
+                l.par.chains() as u64 * l.compute_cycles()
+            })
+            .collect();
+        if shared_channel_hazard(FlowControl::ReadyValid, capacity_words, &streams) {
+            return DeadlockVerdict::Hazard {
+                pc,
+                layers: idxs.iter().map(|&i| plan.layers[i].stats.name.clone()).collect(),
+                capacity_words,
+                required_words: streams.iter().copied().max().unwrap_or(0),
+            };
+        }
+    }
+    DeadlockVerdict::FifosSufficient
+}
+
+/// Map the executable Fig. 5 scenario (`fabric::deadlock`) onto the
+/// static rule: three layers share one pseudo-channel, layer `l`
+/// streaming `weights_per_item[l] x items` words through a burst FIFO
+/// holding `burst_fifo_capacity` words. Used by the cross-validation
+/// test to prove the static verdict matches the simulated outcome.
+pub fn scenario_has_hazard(flow: FlowControl, cfg: &ScenarioConfig) -> bool {
+    let streams: Vec<u64> =
+        cfg.weights_per_item.iter().map(|&w| w as u64 * cfg.items).collect();
+    shared_channel_hazard(flow, cfg.burst_fifo_capacity as u64, &streams)
+}
+
+pub(super) fn check(plan: &AcceleratorPlan, r: &mut Report) {
+    if let DeadlockVerdict::Hazard { pc, layers, capacity_words, required_words } =
+        analyze_plan(plan)
+    {
+        r.push(
+            Diagnostic::new(
+                Code::ReadyValidDeadlock,
+                format!("PC{pc}"),
+                format!(
+                    "ready/valid flow control with layers {layers:?} sharing the channel: a \
+                     burst FIFO of {capacity_words} words cannot absorb a {required_words}-word \
+                     stream, so the Fig. 5 head-of-line cycle is admissible"
+                ),
+            )
+            .hint("set flow_control to Credit (§V-A) — credits keep the wait graph acyclic"),
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn credit_never_hazards() {
+        assert!(!shared_channel_hazard(FlowControl::Credit, 1, &[1000, 1000]));
+    }
+
+    #[test]
+    fn ready_valid_needs_sharing_and_shallow_fifos() {
+        // a lone stream has no cross-layer head-of-line dependency
+        assert!(!shared_channel_hazard(FlowControl::ReadyValid, 4, &[1000]));
+        // sharing + any stream overflowing its FIFO admits the cycle
+        assert!(shared_channel_hazard(FlowControl::ReadyValid, 4, &[1000, 10]));
+        // FIFOs holding the whole stream can never refuse the DCFIFO head
+        assert!(!shared_channel_hazard(FlowControl::ReadyValid, 1000, &[1000, 10]));
+    }
+}

@@ -1,0 +1,103 @@
+//! Rule family 6: fleet legality of a [`PartitionPlan`].
+//!
+//! Shards must tile the original network contiguously (layer 0, the
+//! input placeholder, belongs to no shard), every cut must fall on a
+//! single-stream boundary — re-derived through the same
+//! [`valid_cuts`] definition the planner uses, so a residual-spanning
+//! cut cannot pass here and fail there — every shard must hold at least
+//! one weight layer, and every shard plan must satisfy the full
+//! single-device rule set against its own per-device budget.
+
+use crate::cluster::partition::{valid_cuts, PartitionPlan};
+use crate::nn::Network;
+
+use super::{check_plan, Code, Diagnostic, Report};
+
+/// Check a partition of `net` for fleet legality plus per-shard budgets.
+pub fn check_partition(net: &Network, pp: &PartitionPlan) -> Report {
+    let mut r = Report::default();
+    if pp.network != net.name {
+        r.push(Diagnostic::new(
+            Code::ShardCoverage,
+            "partition",
+            format!("partition is for {:?} but checked against {:?}", pp.network, net.name),
+        ));
+    }
+    if pp.shards.is_empty() {
+        r.push(Diagnostic::new(Code::ShardCoverage, "partition", "partition has no shards"));
+        return r;
+    }
+
+    let cuts = valid_cuts(net);
+    let n = net.len();
+    let mut expect = 1usize; // first real layer; 0 is the input placeholder
+    for (i, s) in pp.shards.iter().enumerate() {
+        let anchor = format!("shard{i}");
+        if s.first_layer != expect || s.last_layer < s.first_layer || s.last_layer >= n {
+            r.push(
+                Diagnostic::new(
+                    Code::ShardCoverage,
+                    &anchor,
+                    format!(
+                        "shards must tile layers 1..={} contiguously: shard {i} claims \
+                         {}..={} but layer {expect} is the next uncovered",
+                        n - 1,
+                        s.first_layer,
+                        s.last_layer
+                    ),
+                )
+                .hint("regenerate the partition with partition()/partition_at()"),
+            );
+        }
+        expect = s.last_layer.saturating_add(1);
+        if i > 0 {
+            let c = s.first_layer;
+            if c >= cuts.len() || !cuts[c] {
+                r.push(
+                    Diagnostic::new(
+                        Code::IllegalCut,
+                        &anchor,
+                        format!(
+                            "cut before layer {c} is crossed by a residual edge — more than \
+                             one activation stream would span the inter-device link"
+                        ),
+                    )
+                    .hint("cut only where valid_cuts() allows (single-stream boundaries)"),
+                );
+            }
+        }
+        if s.net.weight_layers().next().is_none() {
+            r.push(
+                Diagnostic::new(
+                    Code::WeightlessShard,
+                    &anchor,
+                    format!(
+                        "shard {i} (layers {}..={}) holds no weight layer; it would idle a \
+                         whole device",
+                        s.first_layer, s.last_layer
+                    ),
+                )
+                .hint("merge the shard into a neighbour"),
+            );
+        }
+        // Per-shard budgets: the full single-device rule set against the
+        // shard's own device.
+        let shard_report = check_plan(&s.plan);
+        for mut d in shard_report.diagnostics {
+            d.anchor = format!("{anchor}/{}", d.anchor);
+            r.push(d);
+        }
+    }
+    if expect != n {
+        r.push(Diagnostic::new(
+            Code::ShardCoverage,
+            "partition",
+            format!(
+                "shards cover layers up to {} but the network has layers 1..={}",
+                expect - 1,
+                n - 1
+            ),
+        ));
+    }
+    r
+}

@@ -1,0 +1,397 @@
+//! `h2pipe check`: static verification of accelerator plans.
+//!
+//! A simulation-free analysis pass over any [`AcceleratorPlan`] —
+//! in-memory or loaded from a `h2pipe.plan/v1` artifact — plus optional
+//! fleet shard sets. It re-derives every invariant the paper states and
+//! the compiler assumes, and reports violations as structured
+//! diagnostics: a stable code (`H2P0xx`), a severity, a layer/field
+//! anchor, a message, and a fix hint, renderable as human text or JSON.
+//!
+//! Rule families (see the registry table in DESIGN.md):
+//!
+//! 1. **Resource overcommit** (H2P001–H2P004) — M20K / AI tensor block /
+//!    ALM totals vs [`crate::config::DeviceConfig`], cross-checked
+//!    against the stored [`crate::compiler::ResourceUsage`].
+//! 2. **HBM bandwidth feasibility** (H2P010–H2P021) — pseudo-channel
+//!    structure (legal ids, chain-slot budgets, slot/chain coverage) and
+//!    per-PC aggregate read demand at the plan's burst length vs the
+//!    [`crate::config::EfficiencyTable`]-derated channel bandwidth.
+//! 3. **Structural deadlock** (H2P030) — the Fig. 5 head-of-line cycle
+//!    through the DCFIFO → burst-matching FIFO → layer-engine dependency
+//!    graph; see [`deadlock`].
+//! 4. **FIFO depth sufficiency** (H2P040) — the Fig. 6 analytic
+//!    last-stage depth bound vs the planned depth.
+//! 5. **Internal consistency** (H2P050–H2P055) — stored scalars
+//!    (`est_throughput`, `bottleneck_cycles`, `free_bw_slots`,
+//!    `hbm_read_efficiency`) recomputed from the `LayerPlan`s, and
+//!    artifact provenance (options hash, model/device identity) vs the
+//!    embedded options.
+//! 6. **Fleet legality** (H2P060–H2P062) — shard cuts at single-stream
+//!    boundaries, contiguous coverage, per-shard budgets; see [`fleet`].
+//!
+//! The checker never mutates a plan and spends no simulator cycles; it
+//! is the trust layer that lets plan generators (the autotuner, the
+//! multi-tenant placer) reject broken candidates cheaply, in the spirit
+//! of the analytic buffer-sufficiency proofs of Petrica et al.
+
+pub mod deadlock;
+pub mod fleet;
+mod rules;
+
+pub use deadlock::{analyze_plan, shared_channel_hazard, DeadlockVerdict};
+pub use fleet::check_partition;
+pub use rules::last_stage_depth_bound;
+
+use crate::compiler::AcceleratorPlan;
+use crate::session::CompiledModel;
+use crate::util::Json;
+
+/// How bad a finding is. Ordered: `Note < Warn < Error`, so a deny
+/// threshold is a simple `>=` comparison.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Severity {
+    /// Informational; never fails a check.
+    Note,
+    /// The plan is loadable and simulable but analytically suspect;
+    /// fails `h2pipe check --deny warn`.
+    Warn,
+    /// The plan violates a hard invariant; always fails `h2pipe check`.
+    Error,
+}
+
+impl Severity {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Severity::Note => "note",
+            Severity::Warn => "warn",
+            Severity::Error => "error",
+        }
+    }
+}
+
+/// Stable diagnostic codes. The numeric ranges group the rule families;
+/// codes are append-only — a released code never changes meaning.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Code {
+    /// H2P001: M20K blocks overcommitted vs the device.
+    M20kOvercommit,
+    /// H2P002: AI tensor blocks overcommitted vs the device.
+    TensorBlockOvercommit,
+    /// H2P003: ALMs overcommitted vs the device.
+    AlmOvercommit,
+    /// H2P004: stored `ResourceUsage` does not recompute from the layers.
+    UsageMismatch,
+    /// H2P010: a layer references an illegal pseudo-channel id.
+    IllegalPc,
+    /// H2P011: a pseudo-channel's chain slots are oversubscribed.
+    PcOversubscribed,
+    /// H2P012: a layer's PC slot total does not cover its chain demand.
+    PcSlotMismatch,
+    /// H2P020: per-PC read demand exceeds derated HBM bandwidth.
+    BandwidthInfeasible,
+    /// H2P021: burst length contradicts the burst policy, or is illegal.
+    BurstPolicyMismatch,
+    /// H2P030: ready/valid flow control admits the Fig. 5 deadlock cycle.
+    ReadyValidDeadlock,
+    /// H2P040: last-stage FIFO depth below the Fig. 6 analytic bound.
+    FifoDepthShortfall,
+    /// H2P050: stored analytic estimates do not recompute.
+    EstimateMismatch,
+    /// H2P051: stored `bottleneck_cycles` does not recompute.
+    BottleneckMismatch,
+    /// H2P052: stored `free_bw_slots` does not recompute.
+    FreeBwMismatch,
+    /// H2P053: stored `hbm_read_efficiency` contradicts the table.
+    EfficiencyMismatch,
+    /// H2P054: provenance options hash does not match embedded options.
+    OptionsHashMismatch,
+    /// H2P055: provenance / network / plan identity mismatch.
+    ProvenanceMismatch,
+    /// H2P060: a shard cut is crossed by a residual edge.
+    IllegalCut,
+    /// H2P061: shards do not tile the network contiguously.
+    ShardCoverage,
+    /// H2P062: a shard holds no weight layer.
+    WeightlessShard,
+}
+
+impl Code {
+    /// Every registered code, in registry order.
+    pub const ALL: [Code; 20] = [
+        Code::M20kOvercommit,
+        Code::TensorBlockOvercommit,
+        Code::AlmOvercommit,
+        Code::UsageMismatch,
+        Code::IllegalPc,
+        Code::PcOversubscribed,
+        Code::PcSlotMismatch,
+        Code::BandwidthInfeasible,
+        Code::BurstPolicyMismatch,
+        Code::ReadyValidDeadlock,
+        Code::FifoDepthShortfall,
+        Code::EstimateMismatch,
+        Code::BottleneckMismatch,
+        Code::FreeBwMismatch,
+        Code::EfficiencyMismatch,
+        Code::OptionsHashMismatch,
+        Code::ProvenanceMismatch,
+        Code::IllegalCut,
+        Code::ShardCoverage,
+        Code::WeightlessShard,
+    ];
+
+    /// The stable wire identifier.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Code::M20kOvercommit => "H2P001",
+            Code::TensorBlockOvercommit => "H2P002",
+            Code::AlmOvercommit => "H2P003",
+            Code::UsageMismatch => "H2P004",
+            Code::IllegalPc => "H2P010",
+            Code::PcOversubscribed => "H2P011",
+            Code::PcSlotMismatch => "H2P012",
+            Code::BandwidthInfeasible => "H2P020",
+            Code::BurstPolicyMismatch => "H2P021",
+            Code::ReadyValidDeadlock => "H2P030",
+            Code::FifoDepthShortfall => "H2P040",
+            Code::EstimateMismatch => "H2P050",
+            Code::BottleneckMismatch => "H2P051",
+            Code::FreeBwMismatch => "H2P052",
+            Code::EfficiencyMismatch => "H2P053",
+            Code::OptionsHashMismatch => "H2P054",
+            Code::ProvenanceMismatch => "H2P055",
+            Code::IllegalCut => "H2P060",
+            Code::ShardCoverage => "H2P061",
+            Code::WeightlessShard => "H2P062",
+        }
+    }
+
+    /// Severity a rule assigns when it emits this code.
+    pub fn default_severity(self) -> Severity {
+        match self {
+            Code::BandwidthInfeasible | Code::FifoDepthShortfall => Severity::Warn,
+            _ => Severity::Error,
+        }
+    }
+
+    /// One-line registry meaning (mirrored in DESIGN.md).
+    pub fn meaning(self) -> &'static str {
+        match self {
+            Code::M20kOvercommit => "M20K blocks exceed the device budget",
+            Code::TensorBlockOvercommit => "AI tensor blocks exceed the device budget",
+            Code::AlmOvercommit => "ALMs exceed the device budget",
+            Code::UsageMismatch => "stored resource usage does not recompute from the layers",
+            Code::IllegalPc => "layer references an out-of-range or excluded pseudo-channel",
+            Code::PcOversubscribed => "pseudo-channel chain slots oversubscribed",
+            Code::PcSlotMismatch => "layer PC slots do not cover its chain demand",
+            Code::BandwidthInfeasible => "per-PC read demand exceeds derated HBM bandwidth",
+            Code::BurstPolicyMismatch => "burst length contradicts the burst policy",
+            Code::ReadyValidDeadlock => "ready/valid flow control admits the Fig. 5 deadlock",
+            Code::FifoDepthShortfall => "last-stage FIFO depth below the analytic bound",
+            Code::EstimateMismatch => "stored throughput/latency estimates do not recompute",
+            Code::BottleneckMismatch => "stored bottleneck cycles do not recompute",
+            Code::FreeBwMismatch => "stored free chain slots do not recompute",
+            Code::EfficiencyMismatch => "stored read efficiency contradicts the table",
+            Code::OptionsHashMismatch => "provenance options hash does not match the options",
+            Code::ProvenanceMismatch => "provenance / network / plan identity mismatch",
+            Code::IllegalCut => "shard cut crossed by a residual edge",
+            Code::ShardCoverage => "shards do not tile the network contiguously",
+            Code::WeightlessShard => "shard holds no weight layer",
+        }
+    }
+
+    /// True for codes whose presence means the artifact itself is corrupt
+    /// or tampered with (as opposed to describing an infeasible but
+    /// well-formed plan). [`CompiledModel::from_json`] refuses to load on
+    /// these; everything else loads and is reported by `h2pipe check`.
+    pub fn is_integrity(self) -> bool {
+        matches!(
+            self,
+            Code::UsageMismatch | Code::OptionsHashMismatch | Code::ProvenanceMismatch
+        )
+    }
+}
+
+/// One finding.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    pub code: Code,
+    pub severity: Severity,
+    /// What the finding anchors to: a layer name, `PC<n>`, a plan field
+    /// path, or `shard<i>/...` for fleet findings.
+    pub anchor: String,
+    pub message: String,
+    /// Suggested fix, when the rule knows one.
+    pub hint: Option<String>,
+}
+
+impl Diagnostic {
+    pub(crate) fn new(code: Code, anchor: impl Into<String>, message: impl Into<String>) -> Self {
+        Self {
+            code,
+            severity: code.default_severity(),
+            anchor: anchor.into(),
+            message: message.into(),
+            hint: None,
+        }
+    }
+
+    pub(crate) fn hint(mut self, hint: impl Into<String>) -> Self {
+        self.hint = Some(hint.into());
+        self
+    }
+
+    /// `error[H2P001] usage.m20k: message` (+ indented hint line).
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "{}[{}] {}: {}",
+            self.severity.as_str(),
+            self.code.as_str(),
+            self.anchor,
+            self.message
+        );
+        if let Some(h) = &self.hint {
+            s.push_str("\n  hint: ");
+            s.push_str(h);
+        }
+        s
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("code", self.code.as_str())
+            .set("severity", self.severity.as_str())
+            .set("anchor", self.anchor.as_str())
+            .set("message", self.message.as_str());
+        if let Some(h) = &self.hint {
+            o.set("hint", h.as_str());
+        }
+        o
+    }
+}
+
+/// The outcome of a check run: all findings, in rule order.
+#[derive(Debug, Clone, Default)]
+pub struct Report {
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl Report {
+    pub(crate) fn push(&mut self, d: Diagnostic) {
+        self.diagnostics.push(d);
+    }
+
+    /// No findings at all (any severity).
+    pub fn is_clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+
+    pub fn count(&self, sev: Severity) -> usize {
+        self.diagnostics.iter().filter(|d| d.severity == sev).count()
+    }
+
+    pub fn errors(&self) -> impl Iterator<Item = &Diagnostic> {
+        self.diagnostics.iter().filter(|d| d.severity == Severity::Error)
+    }
+
+    /// Would a run with this deny threshold fail?
+    pub fn denies(&self, deny: Severity) -> bool {
+        self.diagnostics.iter().any(|d| d.severity >= deny)
+    }
+
+    /// Human rendering: one block per diagnostic plus a summary line.
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        for d in &self.diagnostics {
+            let _ = writeln!(s, "{}", d.render());
+        }
+        let _ = writeln!(
+            s,
+            "check: {} error(s), {} warning(s), {} note(s)",
+            self.count(Severity::Error),
+            self.count(Severity::Warn),
+            self.count(Severity::Note)
+        );
+        s
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut arr = Json::Arr(Vec::new());
+        for d in &self.diagnostics {
+            arr.push(d.to_json());
+        }
+        let mut o = Json::obj();
+        o.set("diagnostics", arr)
+            .set("errors", self.count(Severity::Error) as u64)
+            .set("warnings", self.count(Severity::Warn) as u64)
+            .set("notes", self.count(Severity::Note) as u64);
+        o
+    }
+}
+
+/// Run every plan-level rule family (1–5) over one accelerator plan.
+pub fn check_plan(plan: &AcceleratorPlan) -> Report {
+    let mut r = Report::default();
+    rules::check_resources(plan, &mut r);
+    rules::check_pcs(plan, &mut r);
+    rules::check_burst_policy(plan, &mut r);
+    deadlock::check(plan, &mut r);
+    rules::check_fifo_depth(plan, &mut r);
+    rules::check_consistency(plan, &mut r);
+    r
+}
+
+/// Run the plan rules plus the artifact-level provenance rules (family 5)
+/// over a compiled model.
+pub fn check_artifact(cm: &CompiledModel) -> Report {
+    let mut r = check_plan(cm.plan());
+    rules::check_provenance(cm, &mut r);
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codes_are_unique_and_stable() {
+        let mut seen = std::collections::HashSet::new();
+        for c in Code::ALL {
+            assert!(seen.insert(c.as_str()), "duplicate code {}", c.as_str());
+            assert!(c.as_str().starts_with("H2P"), "{}", c.as_str());
+            assert!(!c.meaning().is_empty());
+        }
+        assert_eq!(seen.len(), Code::ALL.len());
+    }
+
+    #[test]
+    fn severity_orders_for_deny_thresholds() {
+        assert!(Severity::Error > Severity::Warn);
+        assert!(Severity::Warn > Severity::Note);
+        let mut r = Report::default();
+        assert!(!r.denies(Severity::Note));
+        r.push(Diagnostic::new(Code::BandwidthInfeasible, "PC0", "demand over supply"));
+        assert!(r.denies(Severity::Warn), "warn-severity finding trips --deny warn");
+        assert!(!r.denies(Severity::Error), "but not the default error threshold");
+    }
+
+    #[test]
+    fn render_carries_code_anchor_and_hint() {
+        let d = Diagnostic::new(Code::M20kOvercommit, "usage.m20k", "7000 > 6847")
+            .hint("offload more layers");
+        let s = d.render();
+        assert!(s.contains("error[H2P001]"), "{s}");
+        assert!(s.contains("usage.m20k"), "{s}");
+        assert!(s.contains("hint: offload"), "{s}");
+        let j = d.to_json().to_string();
+        assert!(j.contains("\"H2P001\""), "{j}");
+    }
+
+    #[test]
+    fn integrity_codes_are_the_tamper_set() {
+        let integrity: Vec<&str> =
+            Code::ALL.iter().filter(|c| c.is_integrity()).map(|c| c.as_str()).collect();
+        assert_eq!(integrity, ["H2P004", "H2P054", "H2P055"]);
+    }
+}

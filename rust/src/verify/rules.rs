@@ -1,0 +1,394 @@
+//! Plan-level rule families 1 (resources), 2 (PC structure + HBM
+//! bandwidth), 4 (FIFO depth) and 5 (internal consistency / provenance).
+//!
+//! Every rule re-derives its expected value from first principles (layer
+//! plans, device description, options) through the *same* functions the
+//! compiler uses — `recompute_usage`, `recompute_bottleneck_cycles`,
+//! `analytic_estimates` — so a fresh `compile()` is clean by
+//! construction and any disagreement localises to the stored scalar.
+
+use crate::compiler::AcceleratorPlan;
+use crate::config::{BurstLengthPolicy, DeviceConfig, WeightPlacement};
+use crate::session::{codec, CompiledModel};
+use crate::util::ceil_div;
+
+use super::{Code, Diagnostic, Report};
+
+/// Weight-stream demand of one chain slot, in bits per core cycle
+/// (§IV-A: each tensor chain consumes one 80-bit word per cycle).
+const CHAIN_DEMAND_BITS: u64 = 80;
+
+/// Relative f64 comparison for recomputed scalars. The recomputation path
+/// is bit-identical to the compiler's, so equality normally holds
+/// exactly; the epsilon only guards against platform-level FP drift.
+fn close(a: f64, b: f64) -> bool {
+    a == b || (a - b).abs() <= 1e-9 * a.abs().max(b.abs())
+}
+
+// ------------------------------------------------- family 1: resources
+
+pub(super) fn check_resources(plan: &AcceleratorPlan, r: &mut Report) {
+    let d = &plan.device;
+    let u = &plan.usage;
+    if u.m20k > d.m20k_blocks as u64 {
+        r.push(
+            Diagnostic::new(
+                Code::M20kOvercommit,
+                "usage.m20k",
+                format!("plan uses {} M20K blocks but {} has {}", u.m20k, d.name, d.m20k_blocks),
+            )
+            .hint("offload more weight layers to HBM (all_hbm) or lower max_chains_per_layer"),
+        );
+    }
+    if u.tensor_blocks > d.tensor_blocks as u64 {
+        r.push(
+            Diagnostic::new(
+                Code::TensorBlockOvercommit,
+                "usage.tensor_blocks",
+                format!(
+                    "plan uses {} AI tensor blocks but {} has {}",
+                    u.tensor_blocks, d.name, d.tensor_blocks
+                ),
+            )
+            .hint("lower max_utilization or max_chains_per_layer"),
+        );
+    }
+    if u.alms > d.alms as u64 {
+        r.push(
+            Diagnostic::new(
+                Code::AlmOvercommit,
+                "usage.alms",
+                format!("plan uses {} ALMs but {} has {}", u.alms, d.name, d.alms),
+            )
+            .hint("lower max_utilization or narrow write_path_bits"),
+        );
+    }
+    let rec = plan.recompute_usage();
+    if rec.m20k != u.m20k || rec.tensor_blocks != u.tensor_blocks || rec.alms != u.alms {
+        r.push(
+            Diagnostic::new(
+                Code::UsageMismatch,
+                "usage",
+                format!(
+                    "stored resource usage (m20k {}, tensor_blocks {}, alms {}) does not \
+                     recompute from the layer plans (recomputed: m20k {}, tensor_blocks {}, \
+                     alms {})",
+                    u.m20k, u.tensor_blocks, u.alms, rec.m20k, rec.tensor_blocks, rec.alms
+                ),
+            )
+            .hint("the artifact was tampered with or hand-edited; recompile the model"),
+        );
+    }
+}
+
+// --------------------------- family 2: PC structure + HBM bandwidth
+
+pub(super) fn check_pcs(plan: &AcceleratorPlan, r: &mut Report) {
+    let d = &plan.device;
+    let total = d.hbm.total_pcs();
+    let cap = d.chains_per_pc() as u64;
+
+    // Per-layer structural checks, accumulating per-PC slot totals.
+    let mut slots = vec![0u64; total as usize];
+    for l in &plan.layers {
+        let is_hbm = l.placement == WeightPlacement::Hbm;
+        if is_hbm && l.stats.has_weights {
+            let covered: u32 = l.pcs.iter().map(|&(_, s)| s).sum();
+            if covered != l.par.chains() {
+                r.push(
+                    Diagnostic::new(
+                        Code::PcSlotMismatch,
+                        &l.stats.name,
+                        format!(
+                            "HBM layer needs {} chain slots but its PC list {:?} covers {}",
+                            l.par.chains(),
+                            l.pcs,
+                            covered
+                        ),
+                    )
+                    .hint("re-run the §V-B clockwise PC assignment"),
+                );
+            }
+            for &(pc, s) in &l.pcs {
+                if pc >= total || d.excluded_pcs.contains(&pc) {
+                    r.push(
+                        Diagnostic::new(
+                            Code::IllegalPc,
+                            format!("{}:PC{pc}", l.stats.name),
+                            format!(
+                                "pseudo-channel {pc} is {} on {}",
+                                if pc >= total { "out of range" } else { "excluded" },
+                                d.name
+                            ),
+                        )
+                        .hint(format!(
+                            "usable PCs: 0..{} minus excluded {:?}",
+                            total, d.excluded_pcs
+                        )),
+                    );
+                } else {
+                    slots[pc as usize] += s as u64;
+                }
+            }
+        } else if !l.pcs.is_empty() {
+            r.push(
+                Diagnostic::new(
+                    Code::PcSlotMismatch,
+                    &l.stats.name,
+                    format!(
+                        "layer is {} yet carries PC slots {:?}",
+                        if l.stats.has_weights { "on-chip" } else { "weightless" },
+                        l.pcs
+                    ),
+                )
+                .hint("clear the PC list or mark the layer as HBM-placed"),
+            );
+        }
+    }
+
+    // Per-PC chain-slot budget.
+    for (pc, &used) in slots.iter().enumerate() {
+        if used > cap {
+            r.push(
+                Diagnostic::new(
+                    Code::PcOversubscribed,
+                    format!("PC{pc}"),
+                    format!("{used} chain slots assigned but each pseudo-channel has {cap}"),
+                )
+                .hint("each 256-bit PC feeds floor(256/80) = 3 chains at full rate (§V-B)"),
+            );
+        }
+    }
+
+    // Aggregate bandwidth feasibility at the plan's burst length. PCs
+    // already flagged above are skipped so a structurally broken channel
+    // produces exactly one diagnostic.
+    let eff = plan.options.efficiency.lookup(plan.burst_len);
+    let supply = d.hbm.interface_bits as f64 * (d.hbm.controller_mhz as f64 / d.core_mhz as f64)
+        * eff;
+    let mut short = 0usize;
+    let mut worst: Option<(usize, f64)> = None;
+    for (pc, &used) in slots.iter().enumerate() {
+        if used == 0 || used > cap {
+            continue;
+        }
+        let demand = (used * CHAIN_DEMAND_BITS) as f64;
+        if demand > supply {
+            short += 1;
+            match worst {
+                Some((_, w)) if demand <= w => {}
+                _ => worst = Some((pc, demand)),
+            }
+        }
+    }
+    if let Some((pc, demand)) = worst {
+        r.push(
+            Diagnostic::new(
+                Code::BandwidthInfeasible,
+                format!("PC{pc}"),
+                format!(
+                    "at BL{} (read efficiency {eff:.3}) {short} pseudo-channel(s) demand more \
+                     weight bandwidth than HBM supplies; worst is PC{pc}: {demand:.0} vs \
+                     {supply:.1} bits/core-cycle",
+                    plan.burst_len
+                ),
+            )
+            .hint("raise the burst length — read efficiency saturates upward (§VI-A)"),
+        );
+    }
+}
+
+pub(super) fn check_burst_policy(plan: &AcceleratorPlan, r: &mut Report) {
+    let bl = plan.burst_len;
+    if !BurstLengthPolicy::LEGAL.contains(&bl) {
+        r.push(
+            Diagnostic::new(
+                Code::BurstPolicyMismatch,
+                "burst_len",
+                format!("burst length {bl} is not supported by the hardened controller"),
+            )
+            .hint(format!("legal burst lengths: {:?}", BurstLengthPolicy::LEGAL)),
+        );
+        return;
+    }
+    match plan.options.burst_length {
+        BurstLengthPolicy::Fixed(want) if want != bl => {
+            r.push(
+                Diagnostic::new(
+                    Code::BurstPolicyMismatch,
+                    "burst_len",
+                    format!("plan burst length {bl} contradicts the Fixed({want}) policy"),
+                )
+                .hint("the burst length is a compile output of the policy; recompile"),
+            );
+        }
+        BurstLengthPolicy::Auto if bl != 8 && bl != 32 => {
+            r.push(
+                Diagnostic::new(
+                    Code::BurstPolicyMismatch,
+                    "burst_len",
+                    format!(
+                        "the Auto policy only selects BL8 (on-chip bottleneck) or BL32 \
+                         (HBM bottleneck), never BL{bl} (§VI-A)"
+                    ),
+                )
+                .hint("recompile, or pin the burst with Fixed(n)"),
+            );
+        }
+        _ => {}
+    }
+}
+
+// ------------------------------------------------ family 4: FIFO depth
+
+/// Fig. 6 analytic lower bound on the last-stage FIFO depth, in 80-bit
+/// words. A chain drains one word per core cycle, so the FIFO must cover
+/// the worst-case HBM read service time: a refresh blackout (`t_rfc`)
+/// plus queueing behind the channel's other chain slots, each paying a
+/// full row cycle (`t_rc + t_rcd + t_cl + t_rd_gap`) and its burst
+/// transfer — the same ~1214 ns worst case that sized the paper's
+/// 512-word FIFOs (§IV-A).
+pub fn last_stage_depth_bound(device: &DeviceConfig, burst_len: u32) -> u64 {
+    let t = &device.hbm_timing;
+    let per_burst = (t.t_rc() + t.t_rcd + t.t_cl + t.t_rd_gap + burst_len) as u64;
+    let ctrl_cycles = t.t_rfc as u64 + 4 * per_burst;
+    // controller cycles -> core cycles (words drained during the wait)
+    ceil_div(ctrl_cycles * device.core_mhz as u64, device.hbm.controller_mhz as u64)
+}
+
+pub(super) fn check_fifo_depth(plan: &AcceleratorPlan, r: &mut Report) {
+    if plan.hbm_layers().next().is_none() {
+        return; // no HBM streams, last-stage depth is irrelevant
+    }
+    let bound = last_stage_depth_bound(&plan.device, plan.burst_len);
+    let depth = plan.options.last_stage_fifo_depth as u64;
+    if depth < bound {
+        r.push(
+            Diagnostic::new(
+                Code::FifoDepthShortfall,
+                "options.last_stage_fifo_depth",
+                format!(
+                    "depth {depth} words is below the analytic lower bound {bound} at BL{}: a \
+                     worst-case HBM read (refresh + same-channel queueing) would underrun the \
+                     tensor chains",
+                    plan.burst_len
+                ),
+            )
+            .hint(format!(
+                "set last_stage_fifo_depth to at least {} (next power of two covering the bound)",
+                bound.next_power_of_two()
+            )),
+        );
+    }
+}
+
+// ------------------------------------- family 5: internal consistency
+
+pub(super) fn check_consistency(plan: &AcceleratorPlan, r: &mut Report) {
+    let bc = plan.recompute_bottleneck_cycles();
+    if bc != plan.bottleneck_cycles {
+        r.push(
+            Diagnostic::new(
+                Code::BottleneckMismatch,
+                "bottleneck_cycles",
+                format!("stored {} but the layer plans recompute {bc}", plan.bottleneck_cycles),
+            )
+            .hint("the artifact was tampered with; recompile the model"),
+        );
+    }
+    let fb = plan.recompute_free_bw_slots();
+    if fb != plan.free_bw_slots {
+        r.push(
+            Diagnostic::new(
+                Code::FreeBwMismatch,
+                "free_bw_slots",
+                format!(
+                    "stored {} but capacity minus offloaded chains recomputes {fb}",
+                    plan.free_bw_slots
+                ),
+            )
+            .hint("the artifact was tampered with; recompile the model"),
+        );
+    }
+    let eff = plan.options.efficiency.lookup(plan.burst_len);
+    if !close(eff, plan.hbm_read_efficiency) {
+        r.push(
+            Diagnostic::new(
+                Code::EfficiencyMismatch,
+                "hbm_read_efficiency",
+                format!(
+                    "stored {} but the embedded efficiency table gives {eff} at BL{}",
+                    plan.hbm_read_efficiency, plan.burst_len
+                ),
+            )
+            .hint("the estimate scalars derive from the table; recompile the model"),
+        );
+    }
+    let (tp, lat) = plan.analytic_estimates();
+    let mut bad = Vec::new();
+    if !close(tp, plan.est_throughput) {
+        bad.push(format!("est_throughput stored {} vs recomputed {tp}", plan.est_throughput));
+    }
+    if !close(lat, plan.est_latency) {
+        bad.push(format!("est_latency stored {} vs recomputed {lat}", plan.est_latency));
+    }
+    if !bad.is_empty() {
+        r.push(
+            Diagnostic::new(Code::EstimateMismatch, "estimates", bad.join("; "))
+                .hint("analytic estimates must recompute from the layer plans; recompile"),
+        );
+    }
+}
+
+pub(super) fn check_provenance(cm: &CompiledModel, r: &mut Report) {
+    let plan = cm.plan();
+    let net = cm.network();
+    let prov = cm.provenance();
+    let mut idents = Vec::new();
+    if plan.network != net.name {
+        idents.push(format!(
+            "plan targets network {:?} but the artifact carries {:?}",
+            plan.network, net.name
+        ));
+    }
+    if plan.layers.len() != net.len() {
+        idents.push(format!(
+            "plan has {} layers but the network has {}",
+            plan.layers.len(),
+            net.len()
+        ));
+    }
+    if prov.model != net.name {
+        idents.push(format!(
+            "provenance model {:?} does not match the network {:?}",
+            prov.model, net.name
+        ));
+    }
+    if prov.device != plan.device.name {
+        idents.push(format!(
+            "provenance device {:?} does not match the plan device {:?}",
+            prov.device, plan.device.name
+        ));
+    }
+    if !idents.is_empty() {
+        r.push(
+            Diagnostic::new(Code::ProvenanceMismatch, "provenance", idents.join("; "))
+                .hint("the artifact envelope was edited; regenerate it with save()"),
+        );
+    }
+    let rehash = codec::options_hash(&plan.options);
+    if rehash != prov.options_hash {
+        r.push(
+            Diagnostic::new(
+                Code::OptionsHashMismatch,
+                "provenance.options_hash",
+                format!(
+                    "provenance options hash {:016x} does not match the embedded options \
+                     ({rehash:016x})",
+                    prov.options_hash
+                ),
+            )
+            .hint("either the options or the hash were edited after compile"),
+        );
+    }
+}

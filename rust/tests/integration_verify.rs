@@ -1,0 +1,423 @@
+//! Integration: the `h2pipe check` static plan verifier.
+//!
+//! Three claims, end to end:
+//!
+//! 1. **Clean by construction** — every default-compiled zoo plan the
+//!    issue names produces zero diagnostics of any severity.
+//! 2. **Each defect is caught, precisely** — the golden bad-plan fixtures
+//!    under `tests/fixtures/bad_plans/` each trip exactly the one
+//!    diagnostic code they were seeded with, and nothing else.
+//! 3. **The static deadlock rule agrees with the simulator** — the
+//!    H2P030 predicate matches the executable Fig. 5 reproduction
+//!    (`fabric::deadlock`) in both flow-control modes.
+
+use std::path::PathBuf;
+
+use h2pipe::cluster::{partition, partition_at, PartitionOptions};
+use h2pipe::config::{BurstLengthPolicy, CompilerOptions, FlowControl};
+use h2pipe::fabric::deadlock::ScenarioConfig;
+use h2pipe::fabric::{run_shared_pc_pipeline, PipelineOutcome};
+use h2pipe::nn::{zoo, ConvKind, Network, OpKind, Shape};
+use h2pipe::session::{codec, CompiledModel, DeploymentTarget, Session};
+use h2pipe::sim::pipeline::SimConfig;
+use h2pipe::testkit;
+use h2pipe::util::Json;
+use h2pipe::verify::deadlock::scenario_has_hazard;
+use h2pipe::verify::{
+    analyze_plan, check_artifact, check_partition, Code, DeadlockVerdict, Report, Severity,
+};
+
+const CLEAN_MODELS: [&str; 3] = ["resnet50", "vgg16", "mobilenet_edge"];
+
+fn compile(model: &str) -> CompiledModel {
+    Session::builder().model(model).compile().unwrap()
+}
+
+fn fixture_path(slug: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures/bad_plans")
+        .join(format!("{slug}.json"))
+}
+
+/// Persist `cm` as the golden fixture `slug`, reload it from disk through
+/// the unchecked path, and assert the verifier reports exactly the seeded
+/// code and nothing else.
+fn assert_fixture(slug: &str, cm: &CompiledModel, expect: Code) {
+    let path = fixture_path(slug);
+    testkit::golden(&path, &cm.to_json().to_pretty()).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let loaded = CompiledModel::from_json_unchecked(&Json::parse(&text).unwrap()).unwrap();
+    let report = check_artifact(&loaded);
+    assert_codes(&report, &[expect], slug);
+}
+
+fn assert_codes(report: &Report, expect: &[Code], ctx: &str) {
+    let got: Vec<&str> = report.diagnostics.iter().map(|d| d.code.as_str()).collect();
+    let want: Vec<&str> = expect.iter().map(|c| c.as_str()).collect();
+    assert_eq!(got, want, "{ctx}: {}", report.render());
+}
+
+/// Re-derive every stored scalar after a structural mutation, exactly the
+/// way `compile()` produces them — so the *only* inconsistency left is
+/// the one the fixture seeds.
+fn recanonicalize(cm: CompiledModel) -> CompiledModel {
+    let (net, mut plan, mut prov) = cm.into_parts();
+    plan.usage = plan.recompute_usage();
+    plan.bottleneck_cycles = plan.recompute_bottleneck_cycles();
+    plan.free_bw_slots = plan.recompute_free_bw_slots();
+    plan.hbm_read_efficiency = plan.options.efficiency.lookup(plan.burst_len);
+    let (tp, lat) = plan.analytic_estimates();
+    plan.est_throughput = tp;
+    plan.est_latency = lat;
+    prov.options_hash = codec::options_hash(&plan.options);
+    CompiledModel::from_parts(net, plan, prov)
+}
+
+/// Mutate a freshly compiled model's parts.
+fn mutated(
+    model: &str,
+    f: impl FnOnce(&mut h2pipe::compiler::AcceleratorPlan, &mut h2pipe::session::Provenance),
+) -> CompiledModel {
+    let (net, mut plan, mut prov) = compile(model).into_parts();
+    f(&mut plan, &mut prov);
+    CompiledModel::from_parts(net, plan, prov)
+}
+
+// ---------------------------------------------------------- clean plans
+
+#[test]
+fn default_compiled_zoo_plans_are_clean() {
+    for model in CLEAN_MODELS {
+        let cm = compile(model);
+        let report = check_artifact(&cm);
+        assert!(
+            report.is_clean(),
+            "{model} must verify clean (zero diagnostics of any severity):\n{}",
+            report.render()
+        );
+    }
+}
+
+#[test]
+fn run_report_carries_empty_diagnostics_for_clean_plans() {
+    let cm = compile("resnet50");
+    let cfg = SimConfig { images: 2, warmup_images: 1, ..SimConfig::default() };
+    let rep = cm.deploy(DeploymentTarget::SingleDevice(cfg)).run().unwrap();
+    assert!(rep.diagnostics.is_empty(), "post-compile check must be clean");
+    assert!(rep.to_json().to_string().contains("\"diagnostics\":[]"));
+    assert!(!rep.summary().contains("check:"), "clean summary stays unchanged");
+}
+
+// ---------------------------------------- family 1: resource overcommit
+
+#[test]
+fn fixture_h2p001_m20k_overcommit() {
+    let cm = mutated("resnet50", |plan, _| {
+        plan.device.m20k_blocks = plan.usage.m20k as u32 - 1;
+    });
+    assert_fixture("h2p001_m20k_overcommit", &cm, Code::M20kOvercommit);
+    // feasibility findings do NOT block loading: `load` must accept this
+    let loaded = CompiledModel::from_json(&cm.to_json()).unwrap();
+    assert_eq!(loaded.network().name, cm.network().name);
+}
+
+#[test]
+fn fixture_h2p002_tensor_block_overcommit() {
+    let cm = mutated("resnet50", |plan, _| {
+        plan.device.tensor_blocks = plan.usage.tensor_blocks as u32 - 1;
+    });
+    assert_fixture("h2p002_tensor_block_overcommit", &cm, Code::TensorBlockOvercommit);
+}
+
+#[test]
+fn fixture_h2p003_alm_overcommit() {
+    let cm = mutated("resnet50", |plan, _| {
+        plan.device.alms = plan.usage.alms as u32 - 1;
+    });
+    assert_fixture("h2p003_alm_overcommit", &cm, Code::AlmOvercommit);
+}
+
+#[test]
+fn fixture_h2p004_usage_tamper() {
+    // decrease (not increase) so no overcommit rides along
+    let cm = mutated("resnet50", |plan, _| {
+        plan.usage.m20k -= 100;
+    });
+    assert_fixture("h2p004_usage_tamper", &cm, Code::UsageMismatch);
+    // integrity findings DO block loading
+    let err = CompiledModel::from_json(&cm.to_json()).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("integrity"), "{msg}");
+    assert!(msg.contains("H2P004"), "{msg}");
+}
+
+// ------------------------------------ family 2: PC structure + bandwidth
+
+#[test]
+fn fixture_h2p010_illegal_pc() {
+    let cm = mutated("resnet50", |plan, _| {
+        let l = plan
+            .layers
+            .iter_mut()
+            .find(|l| !l.pcs.is_empty())
+            .expect("resnet50 offloads layers");
+        // PC16 is the §V-B excluded channel; slot count stays the same so
+        // only the legality rule fires
+        l.pcs[0].0 = 16;
+    });
+    assert_fixture("h2p010_illegal_pc", &cm, Code::IllegalPc);
+}
+
+#[test]
+fn fixture_h2p011_pc_oversubscribed() {
+    let cm = mutated("resnet50", |plan, _| {
+        // find a fully-used PC and move another layer's slots onto it
+        let cap = plan.device.chains_per_pc() as u64;
+        let mut slots = vec![0u64; plan.device.hbm.total_pcs() as usize];
+        for l in &plan.layers {
+            for &(pc, s) in &l.pcs {
+                slots[pc as usize] += s as u64;
+            }
+        }
+        let full = slots
+            .iter()
+            .position(|&s| s == cap)
+            .expect("resnet50 fills at least one pseudo-channel") as u32;
+        let entry = plan
+            .layers
+            .iter_mut()
+            .flat_map(|l| l.pcs.iter_mut())
+            .find(|e| e.0 != full)
+            .expect("a slot on another channel exists");
+        entry.0 = full;
+    });
+    assert_fixture("h2p011_pc_oversubscribed", &cm, Code::PcOversubscribed);
+}
+
+#[test]
+fn fixture_h2p012_pc_slot_mismatch() {
+    let cm = mutated("resnet50", |plan, _| {
+        let l = plan
+            .layers
+            .iter_mut()
+            .find(|l| !l.pcs.is_empty())
+            .expect("resnet50 offloads layers");
+        l.pcs[0].1 -= 1;
+    });
+    assert_fixture("h2p012_pc_slot_mismatch", &cm, Code::PcSlotMismatch);
+}
+
+#[test]
+fn fixture_h2p020_bandwidth_infeasible() {
+    // BL2 derates reads to 0.44: a full pseudo-channel demands 240
+    // bits/core-cycle against ~150 supplied. A fresh compile is otherwise
+    // self-consistent, so the bandwidth warning is the only finding.
+    let cm = Session::builder().model("resnet50").fixed_burst(2).compile().unwrap();
+    assert_fixture("h2p020_bandwidth_infeasible", &cm, Code::BandwidthInfeasible);
+    let report = check_artifact(&cm);
+    assert_eq!(report.diagnostics[0].severity, Severity::Warn);
+    assert!(report.denies(Severity::Warn) && !report.denies(Severity::Error));
+}
+
+#[test]
+fn fixture_h2p021_burst_policy_mismatch() {
+    // options pin Fixed(8) but the plan claims BL16; every derived scalar
+    // is re-canonicalized at BL16 so only the policy contradiction fires
+    let cm = recanonicalize(mutated("resnet50", |plan, _| {
+        plan.options.burst_length = BurstLengthPolicy::Fixed(8);
+        plan.burst_len = 16;
+    }));
+    assert_fixture("h2p021_burst_policy_mismatch", &cm, Code::BurstPolicyMismatch);
+}
+
+// --------------------------------------- family 3: structural deadlock
+
+/// Three convolutions whose single chains share one pseudo-channel: the
+/// minimal Fig. 5 topology.
+fn rv_triple(flow: FlowControl) -> CompiledModel {
+    let mut n = Network::new("rv-triple", Shape::new(16, 16, 16));
+    let conv = OpKind::Conv { kind: ConvKind::Standard, kh: 3, kw: 3, stride: 1, pad: 1, out_c: 16 };
+    let a = n.add("c1", conv.clone(), &[0]).unwrap();
+    let b = n.add("c2", conv.clone(), &[a]).unwrap();
+    n.add("c3", conv, &[b]).unwrap();
+    Session::builder()
+        .network(n)
+        .options(CompilerOptions {
+            all_hbm: true,
+            burst_length: BurstLengthPolicy::Fixed(8),
+            flow_control: flow,
+            max_chains_per_layer: 1,
+            ..CompilerOptions::default()
+        })
+        .compile()
+        .unwrap()
+}
+
+#[test]
+fn fixture_h2p030_ready_valid_deadlock() {
+    let cm = rv_triple(FlowControl::ReadyValid);
+    match analyze_plan(cm.plan()) {
+        DeadlockVerdict::Hazard { layers, capacity_words, required_words, .. } => {
+            assert_eq!(layers.len(), 3, "all three convs share the channel");
+            assert!(required_words > capacity_words);
+        }
+        v => panic!("expected a hazard, got {v:?}"),
+    }
+    assert_fixture("h2p030_ready_valid_deadlock", &cm, Code::ReadyValidDeadlock);
+    // the same plan under credit flow control is cycle-free
+    let fixed = rv_triple(FlowControl::Credit);
+    assert_eq!(analyze_plan(fixed.plan()), DeadlockVerdict::CreditCycleFree);
+    assert!(check_artifact(&fixed).is_clean());
+}
+
+#[test]
+fn static_deadlock_rule_agrees_with_fig5_simulation() {
+    // ready/valid: the static rule flags the scenario AND the cycle-level
+    // Fig. 5 reproduction actually deadlocks
+    let cfg = ScenarioConfig::default();
+    assert!(scenario_has_hazard(FlowControl::ReadyValid, &cfg));
+    assert!(matches!(
+        run_shared_pc_pipeline(FlowControl::ReadyValid, &cfg),
+        PipelineOutcome::Deadlocked { .. }
+    ));
+
+    // credit: the static rule proves it cycle-free AND the sim completes
+    assert!(!scenario_has_hazard(FlowControl::Credit, &cfg));
+    assert!(matches!(
+        run_shared_pc_pipeline(FlowControl::Credit, &cfg),
+        PipelineOutcome::Completed { .. }
+    ));
+
+    // ready/valid with burst FIFOs deep enough for whole streams: the
+    // conservative rule stands down, and the sim indeed completes
+    let deep = ScenarioConfig { burst_fifo_capacity: 4096, ..ScenarioConfig::default() };
+    assert!(!scenario_has_hazard(FlowControl::ReadyValid, &deep));
+    assert!(matches!(
+        run_shared_pc_pipeline(FlowControl::ReadyValid, &deep),
+        PipelineOutcome::Completed { .. }
+    ));
+}
+
+// ------------------------------------------------ family 4: FIFO depth
+
+#[test]
+fn fixture_h2p040_fifo_depth_shortfall() {
+    // 128 words < the 201-word BL8 bound (§IV-A sized 512 for this)
+    let cm = recanonicalize(mutated("resnet50", |plan, _| {
+        plan.options.last_stage_fifo_depth = 128;
+    }));
+    assert_fixture("h2p040_fifo_depth_shortfall", &cm, Code::FifoDepthShortfall);
+    let d = &check_artifact(&cm).diagnostics[0];
+    assert_eq!(d.severity, Severity::Warn);
+    assert!(d.hint.as_deref().unwrap_or("").contains("256"), "next pow2 over the bound");
+}
+
+// -------------------------------------- family 5: internal consistency
+
+#[test]
+fn fixture_h2p050_estimate_tamper() {
+    let cm = mutated("resnet50", |plan, _| {
+        plan.est_throughput *= 2.0;
+    });
+    assert_fixture("h2p050_estimate_tamper", &cm, Code::EstimateMismatch);
+}
+
+#[test]
+fn fixture_h2p051_bottleneck_tamper() {
+    let cm = mutated("resnet50", |plan, _| {
+        plan.bottleneck_cycles += 1;
+    });
+    assert_fixture("h2p051_bottleneck_tamper", &cm, Code::BottleneckMismatch);
+}
+
+#[test]
+fn fixture_h2p052_free_bw_tamper() {
+    let cm = mutated("resnet50", |plan, _| {
+        plan.free_bw_slots += 1;
+    });
+    assert_fixture("h2p052_free_bw_tamper", &cm, Code::FreeBwMismatch);
+}
+
+#[test]
+fn fixture_h2p053_efficiency_tamper() {
+    let cm = mutated("resnet50", |plan, _| {
+        plan.hbm_read_efficiency = 0.5;
+    });
+    assert_fixture("h2p053_efficiency_tamper", &cm, Code::EfficiencyMismatch);
+}
+
+#[test]
+fn fixture_h2p054_options_hash_tamper() {
+    let cm = mutated("resnet50", |_, prov| {
+        prov.options_hash ^= 1;
+    });
+    assert_fixture("h2p054_options_hash_tamper", &cm, Code::OptionsHashMismatch);
+    assert!(CompiledModel::from_json(&cm.to_json()).is_err(), "integrity gate");
+}
+
+// ------------------------------------------------ family 6: fleet rules
+
+#[test]
+fn clean_partition_verifies_clean() {
+    let net = zoo::vgg16();
+    let o = CompilerOptions::default();
+    let d = h2pipe::config::DeviceConfig::stratix10_nx2100();
+    let pp = partition(&net, &d, &o, &PartitionOptions { shards: Some(2), max_shards: 2 })
+        .unwrap();
+    let report = check_partition(&net, &pp);
+    assert!(report.is_clean(), "{}", report.render());
+}
+
+#[test]
+fn tampered_cut_trips_h2p060() {
+    let net = zoo::resnet18();
+    let o = CompilerOptions::default();
+    let d = h2pipe::config::DeviceConfig::stratix10_nx2100();
+    let mut pp = partition_at(&net, &d, &o, &[6]).unwrap();
+    // shift the boundary inside the residual block, keeping coverage
+    // contiguous so only cut legality fires
+    pp.shards[0].last_layer = 3;
+    pp.shards[1].first_layer = 4;
+    let report = check_partition(&net, &pp);
+    assert_codes(&report, &[Code::IllegalCut], "tampered cut");
+}
+
+#[test]
+fn shard_gap_trips_h2p061() {
+    let net = zoo::resnet18();
+    let o = CompilerOptions::default();
+    let d = h2pipe::config::DeviceConfig::stratix10_nx2100();
+    let mut pp = partition_at(&net, &d, &o, &[6]).unwrap();
+    pp.network = "someone-elses-network".to_string();
+    let report = check_partition(&net, &pp);
+    assert_codes(&report, &[Code::ShardCoverage], "partition identity");
+}
+
+#[test]
+fn weightless_shard_trips_h2p062() {
+    let net = zoo::resnet18();
+    let o = CompilerOptions::default();
+    let d = h2pipe::config::DeviceConfig::stratix10_nx2100();
+    let mut pp = partition_at(&net, &d, &o, &[6]).unwrap();
+    // swap in a shard net holding only a pooling layer
+    let mut hollow = Network::new(&pp.shards[1].net.name, pp.shards[1].net.input_shape());
+    hollow.add("pool", OpKind::MaxPool { k: 2, stride: 2, pad: 0 }, &[0]).unwrap();
+    pp.shards[1].net = hollow;
+    let report = check_partition(&net, &pp);
+    assert_codes(&report, &[Code::WeightlessShard], "hollow shard");
+}
+
+// ------------------------------------------------- registry cross-check
+
+#[test]
+fn design_md_registry_lists_every_code() {
+    let doc = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../DESIGN.md");
+    let text = std::fs::read_to_string(&doc).expect("DESIGN.md at the repo root");
+    for code in Code::ALL {
+        assert!(
+            text.contains(code.as_str()),
+            "DESIGN.md diagnostics registry is missing {}",
+            code.as_str()
+        );
+    }
+}

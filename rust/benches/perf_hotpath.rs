@@ -55,6 +55,25 @@ fn main() {
     println!("  -> {:.1} M model-cycles/s ({core_cycles} cycles)", sim_rate / 1e6);
     b.record("sim_model_cycles_per_s", sim_rate);
 
+    // 2b. Probe plumbing overhead: the same run with a NullProbe attached
+    // (every hook a no-op) isolates the cost of the observability wiring
+    // itself. The acceptance bar is <5% vs the unprobed rate above.
+    let m = b.time("pipeline_sim_resnet50_nullprobe", scaled(1, 0) as u32, scaled(3, 1) as u32, || {
+        let mut probe = h2pipe::obs::NullProbe::new(4096);
+        let mut sim = PipelineSim::new(&net, &plan).unwrap();
+        let rep = sim.run_probed(&cfg, &mut probe).unwrap();
+        core_cycles = rep.core_cycles;
+    });
+    let probed_rate = core_cycles as f64 / m.mean_s;
+    let overhead = if probed_rate > 0.0 { sim_rate / probed_rate - 1.0 } else { f64::NAN };
+    println!(
+        "  -> {:.1} M model-cycles/s with NullProbe ({:+.1}% overhead)",
+        probed_rate / 1e6,
+        overhead * 100.0
+    );
+    b.record("sim_nullprobe_cycles_per_s", probed_rate);
+    b.record("sim_probe_overhead_frac", overhead);
+
     // 3. Compiler end-to-end.
     b.time("compile_resnet50", 1, scaled(10, 2) as u32, || {
         std::hint::black_box(compile(&net, &device, &CompilerOptions::default()).unwrap());

@@ -16,6 +16,9 @@ use anyhow::{ensure, Result};
 
 use crate::cluster::partition::PartitionPlan;
 use crate::fabric::CreditCounter;
+use crate::hbm::controller::PcStats;
+use crate::obs::Probe;
+use crate::sim::engine::EngineStats;
 use crate::sim::pipeline::PipelineSim;
 use crate::util::Json;
 
@@ -125,6 +128,45 @@ impl FleetReport {
     }
 }
 
+/// Re-bases one shard's sample stream into fleet-global track ids so a
+/// single [`Probe`] can record the whole replica: engine/FIFO indices are
+/// offset by the layers of the preceding shards, PC ids by their device's
+/// pseudo-channel count, and names gain an `s{shard}/` prefix.
+struct ShardProbe<'a> {
+    inner: &'a mut dyn Probe,
+    shard: usize,
+    engine_base: usize,
+    pc_base: u32,
+}
+
+impl Probe for ShardProbe<'_> {
+    fn window(&self) -> u64 {
+        self.inner.window()
+    }
+
+    fn engine_sample(&mut self, now: u64, idx: usize, name: &str, cum: &EngineStats) {
+        let name = format!("s{}/{name}", self.shard);
+        self.inner.engine_sample(now, self.engine_base + idx, &name, cum);
+    }
+
+    fn pc_sample(&mut self, now: u64, pc: u32, cum: &PcStats) {
+        self.inner.pc_sample(now, self.pc_base + pc, cum);
+    }
+
+    fn fifo_sample(&mut self, now: u64, layer: usize, name: &str, occ: u64, cap: u64, peak: u64) {
+        let name = format!("s{}/{name}", self.shard);
+        self.inner.fifo_sample(now, self.engine_base + layer, &name, occ, cap, peak);
+    }
+
+    fn link_sample(&mut self, now: u64, link: usize, occupancy: u64, lines: u64, blocked: u64) {
+        self.inner.link_sample(now, link, occupancy, lines, blocked);
+    }
+
+    fn hbm_burst(&mut self, pc: u32, accept_cycle: u64, done_cycle: u64, beats: u32) {
+        self.inner.hbm_burst(self.pc_base + pc, accept_cycle, done_cycle, beats);
+    }
+}
+
 /// Result of one replica run.
 struct ReplicaRun {
     throughput: f64,
@@ -160,9 +202,20 @@ impl FleetSim {
     /// exact N-fold scale-out of that run rather than N redundant
     /// simulations.
     pub fn run(&self, cfg: &FleetConfig) -> Result<FleetReport> {
+        self.run_with(cfg, None)
+    }
+
+    /// [`Self::run`] with a flight-recorder probe attached. Track ids are
+    /// fleet-global (see [`ShardProbe`]); inter-device links are sampled
+    /// on the sink shard's window boundary.
+    pub fn run_probed(&self, cfg: &FleetConfig, probe: &mut dyn Probe) -> Result<FleetReport> {
+        self.run_with(cfg, Some(probe))
+    }
+
+    fn run_with(&self, cfg: &FleetConfig, probe: Option<&mut dyn Probe>) -> Result<FleetReport> {
         ensure!(cfg.replicas >= 1, "need at least one replica");
         ensure!(cfg.link_capacity_lines >= 1, "link capacity must be >= 1 line");
-        let run = self.run_replica(cfg)?;
+        let run = self.run_replica(cfg, probe)?;
         Ok(FleetReport {
             network: self.pp.network.clone(),
             shards: self.pp.shards.len(),
@@ -179,7 +232,11 @@ impl FleetSim {
     }
 
     /// Cycle-accurate co-simulation of one replica's shard pipeline.
-    fn run_replica(&self, cfg: &FleetConfig) -> Result<ReplicaRun> {
+    fn run_replica(
+        &self,
+        cfg: &FleetConfig,
+        mut probe: Option<&mut dyn Probe>,
+    ) -> Result<ReplicaRun> {
         let images = cfg.images.max(cfg.warmup_images + 1);
         let shards = &self.pp.shards;
         let mut sims = shards
@@ -188,6 +245,20 @@ impl FleetSim {
             .collect::<Result<Vec<_>>>()?;
         let n = sims.len();
         let cap = cfg.link_capacity_lines as u64;
+
+        // Fleet-global track-id bases for the probe (engines/FIFOs by
+        // preceding layer counts, PCs by preceding devices' PC counts).
+        let mut engine_bases = Vec::with_capacity(n);
+        let mut pc_bases = Vec::with_capacity(n);
+        let (mut eb, mut pb) = (0usize, 0u32);
+        for s in shards {
+            engine_bases.push(eb);
+            pc_bases.push(pb);
+            eb += s.plan.layers.len();
+            pb += s.plan.device.hbm.total_pcs();
+        }
+        let window = probe.as_deref().map_or(0, |p| p.window().max(1));
+        let mut next_link_sample = window;
         let mut credits: Vec<CreditCounter> =
             (1..n).map(|_| CreditCounter::new(cfg.link_capacity_lines)).collect();
         let mut peak = vec![0u64; n.saturating_sub(1)];
@@ -205,8 +276,19 @@ impl FleetSim {
                 sims[n - 1].base_ticks() < cfg.max_base_ticks,
                 "fleet simulation exceeded max_base_ticks — pipeline wedged?"
             );
-            for s in sims.iter_mut() {
-                s.step_base_tick(images);
+            for (i, s) in sims.iter_mut().enumerate() {
+                match probe.as_deref_mut() {
+                    None => s.step_base_tick(images),
+                    Some(p) => {
+                        let mut sp = ShardProbe {
+                            inner: p,
+                            shard: i,
+                            engine_base: engine_bases[i],
+                            pc_base: pc_bases[i],
+                        };
+                        s.step_base_tick_probed(images, Some(&mut sp));
+                    }
+                }
             }
             // Exchange link state: occupancy is lines offered upstream
             // minus lines retired downstream; the hardware-style counter
@@ -228,11 +310,53 @@ impl FleetSim {
                 sims[i].set_sink_limit(consumed + cap);
                 sims[i + 1].set_input_limit(produced);
             }
+            // Link windows sample on the sink shard's core-cycle window
+            // boundary: cumulative lines/blocked plus the instantaneous
+            // in-flight occupancy.
+            if let Some(p) = probe.as_deref_mut() {
+                let now = sims[n - 1].core_cycles();
+                if now >= next_link_sample {
+                    for i in 0..n - 1 {
+                        let produced = sims[i].sink_lines_produced();
+                        let consumed = sims[i + 1].head_lines_consumed();
+                        p.link_sample(
+                            now,
+                            i,
+                            produced - consumed,
+                            produced,
+                            sims[i].sink_output_blocked(),
+                        );
+                    }
+                    next_link_sample = now + window;
+                }
+            }
             if warmup_done_at.is_none() && sims[n - 1].sink_images_done() >= cfg.warmup_images {
                 warmup_done_at = Some(sims[n - 1].core_cycles());
             }
             if sims.iter().all(|s| s.all_done(images)) {
                 break;
+            }
+        }
+
+        // Final flush: record the trailing partial window of every shard
+        // and link so window sums equal end-of-run aggregates.
+        if probe.is_some() {
+            for i in 0..n {
+                let p = probe.as_deref_mut().expect("probe present");
+                let mut sp = ShardProbe {
+                    inner: p,
+                    shard: i,
+                    engine_base: engine_bases[i],
+                    pc_base: pc_bases[i],
+                };
+                sims[i].sample_probe(&mut sp);
+            }
+            let p = probe.as_deref_mut().expect("probe present");
+            let now = sims[n - 1].core_cycles();
+            for i in 0..n.saturating_sub(1) {
+                let produced = sims[i].sink_lines_produced();
+                let consumed = sims[i + 1].head_lines_consumed();
+                p.link_sample(now, i, produced - consumed, produced, sims[i].sink_output_blocked());
             }
         }
 

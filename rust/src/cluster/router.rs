@@ -17,7 +17,8 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::{InferenceServer, Metrics, ServerConfig, ServerReport};
+use crate::coordinator::{InferenceServer, Metrics, MetricsSnapshot, ServerConfig, ServerReport};
+use crate::obs::RequestSpan;
 use crate::util::Json;
 
 #[derive(Debug)]
@@ -33,6 +34,11 @@ pub struct FleetRouter {
     /// Round-robin tie-break cursor.
     rr: AtomicUsize,
     metrics: Mutex<Metrics>,
+    /// Router boot time — the origin for request-span timestamps.
+    started: Instant,
+    /// Per-request spans for `serve --trace`; `None` = tracing off (the
+    /// default: no per-request allocation on the serving path).
+    spans: Option<Mutex<Vec<RequestSpan>>>,
 }
 
 /// Fleet serving summary: merged client-side metrics plus the per-replica
@@ -53,6 +59,9 @@ pub struct FleetServeReport {
     /// source for the scalar metric keys in the JSON form.
     pub metrics: Json,
     pub per_replica: Vec<ServerReport>,
+    /// Wall-clock request spans (empty unless the router was started with
+    /// tracing enabled) — the input to `obs::trace::chrome_serve_trace`.
+    pub request_spans: Vec<RequestSpan>,
 }
 
 impl FleetServeReport {
@@ -76,6 +85,12 @@ impl FleetServeReport {
 impl FleetRouter {
     /// Boot `replicas` identical servers from one config.
     pub fn start(cfg: ServerConfig, replicas: usize) -> Result<Self> {
+        Self::start_with_tracing(cfg, replicas, false)
+    }
+
+    /// [`Self::start`], optionally recording one [`RequestSpan`] per
+    /// completed request for `serve --trace`.
+    pub fn start_with_tracing(cfg: ServerConfig, replicas: usize, trace: bool) -> Result<Self> {
         anyhow::ensure!(replicas >= 1, "need at least one replica");
         let replicas = (0..replicas)
             .map(|i| {
@@ -86,7 +101,13 @@ impl FleetRouter {
                 })
             })
             .collect::<Result<Vec<_>>>()?;
-        Ok(Self { replicas, rr: AtomicUsize::new(0), metrics: Mutex::new(Metrics::new()) })
+        Ok(Self {
+            replicas,
+            rr: AtomicUsize::new(0),
+            metrics: Mutex::new(Metrics::new()),
+            started: Instant::now(),
+            spans: trace.then(|| Mutex::new(Vec::new())),
+        })
     }
 
     pub fn num_replicas(&self) -> usize {
@@ -119,6 +140,14 @@ impl FleetRouter {
             match res {
                 Ok(out) => {
                     self.metrics().record(start.elapsed().as_secs_f64());
+                    if let Some(spans) = &self.spans {
+                        let span = RequestSpan {
+                            start_us: (start - self.started).as_secs_f64() * 1e6,
+                            dur_us: start.elapsed().as_secs_f64() * 1e6,
+                            replica: i,
+                        };
+                        spans.lock().unwrap_or_else(PoisonError::into_inner).push(span);
+                    }
                     return Ok(out);
                 }
                 Err(e) => last_err = Some(e),
@@ -130,11 +159,32 @@ impl FleetRouter {
             .context("all replicas rejected the request")
     }
 
+    /// Labelled live snapshots — the router's merged client-side view
+    /// first, then one per replica — in the shape
+    /// [`crate::obs::prometheus_text`] renders.
+    pub fn metrics_snapshots(&self) -> Vec<(String, MetricsSnapshot)> {
+        let mut out = vec![("router".to_string(), self.metrics().snapshot())];
+        for (i, r) in self.replicas.iter().enumerate() {
+            out.push((format!("replica{i}"), r.server.metrics_snapshot()));
+        }
+        out
+    }
+
+    /// Current Prometheus text exposition (what `serve --metrics-port`
+    /// serves per scrape).
+    pub fn prometheus(&self) -> String {
+        crate::obs::prometheus_text(&self.metrics_snapshots())
+    }
+
     /// Stop every replica and produce the merged fleet report.
     pub fn shutdown(self) -> FleetServeReport {
         let per_replica: Vec<ServerReport> =
             self.replicas.into_iter().map(|r| r.server.shutdown()).collect();
-        let mut m = self.metrics.into_inner().unwrap_or_else(PoisonError::into_inner);
+        let m = self.metrics.into_inner().unwrap_or_else(PoisonError::into_inner);
+        let request_spans = self
+            .spans
+            .map(|s| s.into_inner().unwrap_or_else(PoisonError::into_inner))
+            .unwrap_or_default();
         FleetServeReport {
             replicas: per_replica.len(),
             completed: m.completed,
@@ -146,6 +196,7 @@ impl FleetRouter {
             modelled_throughput: per_replica.iter().map(|r| r.modelled_throughput).sum(),
             metrics: m.to_json(),
             per_replica,
+            request_spans,
         }
     }
 }
@@ -203,6 +254,25 @@ mod tests {
         let rep = std::sync::Arc::into_inner(router).unwrap().shutdown();
         assert_eq!(rep.completed, total);
         assert_eq!(rep.completed + rep.rejected, 48, "every request accounted for");
+    }
+
+    #[test]
+    fn tracing_records_spans_and_prometheus_renders() {
+        let cfg = ServerConfig::cifarnet(&artifact_dir());
+        let router = FleetRouter::start_with_tracing(cfg, 2, true).unwrap();
+        let img = vec![1i32; 32 * 32 * 3];
+        for _ in 0..4 {
+            router.infer(img.clone()).unwrap();
+        }
+        let text = router.prometheus();
+        assert!(
+            text.contains("h2pipe_requests_completed_total{scope=\"router\"} 4"),
+            "{text}"
+        );
+        assert!(text.contains("scope=\"replica1\""), "{text}");
+        let rep = router.shutdown();
+        assert_eq!(rep.request_spans.len(), 4, "one span per completed request");
+        assert!(rep.request_spans.iter().all(|s| s.dur_us >= 0.0 && s.replica < 2));
     }
 
     #[test]

@@ -16,6 +16,32 @@ pub struct Metrics {
     pub rejected: u64,
     /// Batches dispatched.
     pub batches: u64,
+    /// Requests carried by those batches (batch-fill numerator).
+    pub batched_requests: u64,
+    /// Configured batch capacity (batch-fill denominator); 0 = unknown.
+    pub batch_capacity: usize,
+}
+
+/// One point-in-time copy of a [`Metrics`] window — the exchange type
+/// between the serving stack and [`crate::obs::expo`]'s Prometheus
+/// rendering. Plain data so it can cross the router/replica boundary
+/// without holding any lock.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    pub completed: u64,
+    pub rejected: u64,
+    pub batches: u64,
+    pub batched_requests: u64,
+    /// Seconds since the metrics window opened.
+    pub uptime_s: f64,
+    pub throughput_rps: f64,
+    pub mean_latency_ms: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    /// rejected / (completed + rejected); 0 with no traffic.
+    pub drop_rate: f64,
+    /// mean batch size / configured capacity; 0 when capacity is unknown.
+    pub batch_fill: f64,
 }
 
 impl Default for Metrics {
@@ -32,6 +58,8 @@ impl Metrics {
             completed: 0,
             rejected: 0,
             batches: 0,
+            batched_requests: 0,
+            batch_capacity: 0,
         }
     }
 
@@ -42,14 +70,18 @@ impl Metrics {
 
     pub fn record_batch(&mut self, n: usize) {
         self.batches += 1;
-        let _ = n;
+        self.batched_requests += n as u64;
     }
 
     pub fn throughput(&self) -> f64 {
         self.completed as f64 / self.started.elapsed().as_secs_f64().max(1e-9)
     }
 
-    pub fn latency_ms(&mut self, pct: f64) -> f64 {
+    pub fn uptime_s(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    pub fn latency_ms(&self, pct: f64) -> f64 {
         self.latency.percentile(pct) * 1e3
     }
 
@@ -61,7 +93,45 @@ impl Metrics {
         if self.batches == 0 {
             0.0
         } else {
-            self.completed as f64 / self.batches as f64
+            self.batched_requests as f64 / self.batches as f64
+        }
+    }
+
+    /// Fraction of offered requests rejected (0 with no traffic).
+    pub fn drop_rate(&self) -> f64 {
+        let offered = self.completed + self.rejected;
+        if offered == 0 {
+            0.0
+        } else {
+            self.rejected as f64 / offered as f64
+        }
+    }
+
+    /// Mean batch size over the configured capacity (0 when the capacity
+    /// was never set — e.g. router-level metrics, which don't batch).
+    pub fn batch_fill(&self) -> f64 {
+        if self.batch_capacity == 0 {
+            0.0
+        } else {
+            self.mean_batch_size() / self.batch_capacity as f64
+        }
+    }
+
+    /// Lock-free-transportable copy of the current window (see
+    /// [`MetricsSnapshot`]).
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            completed: self.completed,
+            rejected: self.rejected,
+            batches: self.batches,
+            batched_requests: self.batched_requests,
+            uptime_s: self.uptime_s(),
+            throughput_rps: self.throughput(),
+            mean_latency_ms: self.mean_latency_ms(),
+            p50_ms: self.latency_ms(50.0),
+            p99_ms: self.latency_ms(99.0),
+            drop_rate: self.drop_rate(),
+            batch_fill: self.batch_fill(),
         }
     }
 
@@ -69,7 +139,7 @@ impl Metrics {
     /// empty window serialize as `null`). Server and fleet reports embed
     /// this so serving metrics can be diffed and plotted like the bench
     /// outputs.
-    pub fn to_json(&mut self) -> Json {
+    pub fn to_json(&self) -> Json {
         let mut o = Json::obj();
         o.set("completed", self.completed)
             .set("rejected", self.rejected)
@@ -77,7 +147,10 @@ impl Metrics {
             .set("throughput_rps", self.throughput())
             .set("mean_latency_ms", self.mean_latency_ms())
             .set("p50_ms", self.latency_ms(50.0))
-            .set("p99_ms", self.latency_ms(99.0));
+            .set("p99_ms", self.latency_ms(99.0))
+            .set("drop_rate", self.drop_rate())
+            .set("uptime_s", self.uptime_s())
+            .set("batch_fill", self.batch_fill());
         o
     }
 }
@@ -94,10 +167,32 @@ mod tests {
         }
         m.record_batch(100);
         assert_eq!(m.completed, 100);
-        assert!((m.mean_latency_ms() - 50.5).abs() < 1e-9);
-        assert!((m.latency_ms(50.0) - 50.5).abs() < 1e-9);
+        assert!((m.mean_latency_ms() - 50.5).abs() < 1e-9, "mean is tracked exactly");
+        // percentiles come from the log-bucketed histogram: ~1% rel error
+        assert!((m.latency_ms(50.0) - 50.5).abs() / 50.5 < 0.02, "{}", m.latency_ms(50.0));
         assert_eq!(m.mean_batch_size(), 100.0);
         assert!(m.throughput() > 0.0);
+        assert_eq!(m.drop_rate(), 0.0);
+    }
+
+    #[test]
+    fn drop_rate_and_batch_fill() {
+        let mut m = Metrics::new();
+        m.batch_capacity = 8;
+        for _ in 0..6 {
+            m.record(0.001);
+        }
+        m.rejected = 2;
+        m.record_batch(4);
+        m.record_batch(2);
+        assert!((m.drop_rate() - 0.25).abs() < 1e-12);
+        assert!((m.mean_batch_size() - 3.0).abs() < 1e-12);
+        assert!((m.batch_fill() - 3.0 / 8.0).abs() < 1e-12);
+        let s = m.snapshot();
+        assert_eq!(s.completed, 6);
+        assert_eq!(s.batched_requests, 6);
+        assert!((s.batch_fill - 3.0 / 8.0).abs() < 1e-12);
+        assert!(s.uptime_s >= 0.0);
     }
 
     #[test]
@@ -106,11 +201,15 @@ mod tests {
         m.record(0.010);
         m.record(0.030);
         m.record_batch(2);
-        let j = m.to_json().to_string();
-        assert!(j.contains("\"completed\":2"), "{j}");
-        assert!(j.contains("\"p50_ms\":20"), "{j}");
+        let j = m.to_json();
+        let p50 = j.get("p50_ms").and_then(crate::util::Json::as_f64).unwrap();
+        assert!((9.0..=31.0).contains(&p50), "histogram p50 within sample range: {p50}");
+        let s = j.to_string();
+        assert!(s.contains("\"completed\":2"), "{s}");
+        assert!(s.contains("\"drop_rate\":0"), "{s}");
+        assert!(s.contains("\"batch_fill\":0"), "{s}");
         // an empty window must serialize NaN percentiles as null
-        let j = Metrics::new().to_json().to_string();
-        assert!(j.contains("\"mean_latency_ms\":null"), "{j}");
+        let s = Metrics::new().to_json().to_string();
+        assert!(s.contains("\"mean_latency_ms\":null"), "{s}");
     }
 }

@@ -20,5 +20,5 @@ pub mod metrics;
 pub mod server;
 
 pub use boot::{boot_weights, BootReport};
-pub use metrics::Metrics;
+pub use metrics::{Metrics, MetricsSnapshot};
 pub use server::{InferenceServer, ServerConfig, ServerReport};

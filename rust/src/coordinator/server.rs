@@ -95,6 +95,8 @@ pub struct ServerReport {
     pub p50_ms: f64,
     pub p99_ms: f64,
     pub mean_batch: f64,
+    /// Fraction of offered requests rejected.
+    pub drop_rate: f64,
     /// What the modelled FPGA would have sustained on this stream.
     pub modelled_throughput: f64,
 }
@@ -111,6 +113,7 @@ impl ServerReport {
             .set("p50_ms", self.p50_ms)
             .set("p99_ms", self.p99_ms)
             .set("mean_batch", self.mean_batch)
+            .set("drop_rate", self.drop_rate)
             .set("modelled_throughput_rps", self.modelled_throughput);
         o
     }
@@ -131,7 +134,9 @@ impl InferenceServer {
     /// not `Send`, so the executable must live on the thread using it).
     pub fn start(cfg: ServerConfig) -> Result<Self> {
         let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
-        let metrics = Arc::new(Mutex::new(Metrics::new()));
+        let mut m = Metrics::new();
+        m.batch_capacity = cfg.batch_size;
+        let metrics = Arc::new(Mutex::new(m));
         let m2 = metrics.clone();
         let wcfg = cfg.clone();
         let (boot_tx, boot_rx) = sync_channel::<Result<(), String>>(1);
@@ -187,13 +192,19 @@ impl InferenceServer {
         Ok(n)
     }
 
+    /// A point-in-time copy of the live metrics window (the Prometheus
+    /// exposition path scrapes this without stopping the server).
+    pub fn metrics_snapshot(&self) -> crate::coordinator::MetricsSnapshot {
+        self.metrics.lock().unwrap().snapshot()
+    }
+
     /// Stop the worker and produce the final report.
     pub fn shutdown(mut self) -> ServerReport {
         drop(self.tx.take());
         if let Some(w) = self.worker.take() {
             let _ = w.join();
         }
-        let mut m = self.metrics.lock().unwrap();
+        let m = self.metrics.lock().unwrap();
         let modelled = if self.cfg.modelled_image_s > 0.0 {
             1.0 / self.cfg.modelled_image_s
         } else {
@@ -207,6 +218,7 @@ impl InferenceServer {
             p50_ms: m.latency_ms(50.0),
             p99_ms: m.latency_ms(99.0),
             mean_batch: m.mean_batch_size(),
+            drop_rate: m.drop_rate(),
             modelled_throughput: modelled,
         }
     }

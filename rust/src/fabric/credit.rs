@@ -33,6 +33,15 @@ impl CreditCounter {
         self.max - self.credits
     }
 
+    /// Fraction of capacity currently outstanding, in [0, 1] — the
+    /// downstream FIFO's fill level as the credit protocol sees it.
+    pub fn occupancy_frac(&self) -> f64 {
+        if self.max == 0 {
+            return 0.0;
+        }
+        self.outstanding() as f64 / self.max as f64
+    }
+
     /// Can `n` credits be acquired?
     pub fn can_acquire(&self, n: u32) -> bool {
         self.credits >= n

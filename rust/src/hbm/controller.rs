@@ -92,6 +92,15 @@ impl PcStats {
         }
         self.data_cycles as f64 / self.busy_cycles as f64
     }
+
+    /// Open-row hit rate over all row events (0 when no row was touched).
+    pub fn row_hit_rate(&self) -> f64 {
+        let events = self.row_hits + self.row_misses;
+        if events == 0 {
+            return 0.0;
+        }
+        self.row_hits as f64 / events as f64
+    }
 }
 
 /// Internal per-request bookkeeping.

@@ -40,6 +40,10 @@
 //!   produced by `python/compile/aot.py`.
 //! * [`analysis`] — Eq. 2 memory-traffic bounds, the Fig. 6 theoretical
 //!   upper bounds, the Table III prior-work dataset and report generation.
+//! * [`obs`] — observability: the `Probe` hook wired through the cycle
+//!   simulators, the windowed flight recorder, Chrome/Perfetto trace
+//!   export (`simulate --trace`), and Prometheus metrics exposition for
+//!   serving (`serve --metrics-port`).
 //! * [`bench_harness`], [`testkit`], [`util`] — in-repo replacements for
 //!   criterion / proptest / serde, which are unavailable in the offline
 //!   crate set this build runs against.
@@ -65,6 +69,7 @@ pub mod coordinator;
 pub mod fabric;
 pub mod hbm;
 pub mod nn;
+pub mod obs;
 pub mod runtime;
 pub mod session;
 pub mod sim;

@@ -20,7 +20,9 @@ use h2pipe::compiler::memory_breakdown;
 use h2pipe::config::{CompilerOptions, DeviceConfig};
 use h2pipe::hbm::{AddressPattern, TrafficConfig, TrafficGen};
 use h2pipe::nn::zoo;
-use h2pipe::session::{CompiledModel, DeploymentTarget, ServeOptions, Session, SessionBuilder};
+use h2pipe::session::{
+    CompiledModel, DeploymentTarget, ServeOptions, Session, SessionBuilder, TraceOptions,
+};
 use h2pipe::sim::pipeline::SimConfig;
 use h2pipe::util::fmt_mbits;
 use h2pipe::verify::{check_partition, Severity};
@@ -68,8 +70,19 @@ const SPECS: &[CmdSpec] = &[
         name: "simulate",
         about: "cycle-simulate a plan (freshly compiled or loaded from --plan)",
         usage: "h2pipe simulate [--model NAME | --plan FILE.json] [--all-hbm] [--burst N] \
-                [--write-path-bits N] [--images N] [--warmup N]",
-        keys: &["model", "plan", "burst", "write-path-bits", "images", "warmup"],
+                [--write-path-bits N] [--images N] [--warmup N] \
+                [--trace OUT.json] [--trace-csv OUT.csv] [--trace-window N]",
+        keys: &[
+            "model",
+            "plan",
+            "burst",
+            "write-path-bits",
+            "images",
+            "warmup",
+            "trace",
+            "trace-csv",
+            "trace-window",
+        ],
         flags: &["all-hbm"],
     },
     CmdSpec {
@@ -114,7 +127,8 @@ const SPECS: &[CmdSpec] = &[
         about: "serve inference requests through the fleet router",
         usage: "h2pipe serve [--model NAME | --plan FILE.json] [--requests N] [--batch N] \
                 [--replicas N] [--shards M] [--clients N] [--seed N] \
-                [--serve-model cifarnet|resnet_block|mobilenet_edge]",
+                [--serve-model cifarnet|resnet_block|mobilenet_edge] \
+                [--trace OUT.json] [--metrics-port P]",
         keys: &[
             "model",
             "plan",
@@ -125,6 +139,8 @@ const SPECS: &[CmdSpec] = &[
             "clients",
             "seed",
             "serve-model",
+            "trace",
+            "metrics-port",
         ],
         flags: &[],
     },
@@ -242,6 +258,26 @@ impl Args {
         Ok(b)
     }
 
+    /// Flight-recorder options from `--trace`/`--trace-csv`/
+    /// `--trace-window`; `None` when tracing was not requested.
+    fn trace_options(&self) -> Result<Option<TraceOptions>> {
+        let json_path = self.kv.get("trace").cloned();
+        let csv_path = self.kv.get("trace-csv").cloned();
+        if json_path.is_none() && csv_path.is_none() {
+            anyhow::ensure!(
+                !self.kv.contains_key("trace-window"),
+                "--trace-window requires --trace or --trace-csv"
+            );
+            return Ok(None);
+        }
+        let defaults = TraceOptions::default();
+        Ok(Some(TraceOptions {
+            json_path,
+            csv_path,
+            window: self.get("trace-window", defaults.window)?,
+        }))
+    }
+
     /// The artifact stage: load `--plan` or compile from the knobs.
     fn compiled(&self) -> Result<CompiledModel> {
         match self.kv.get("plan") {
@@ -342,7 +378,11 @@ fn run() -> Result<()> {
                 warmup_images: args.get("warmup", 2u64)?,
                 ..SimConfig::default()
             };
-            let rep = cm.deploy(DeploymentTarget::SingleDevice(cfg)).run()?;
+            let mut dep = cm.deploy(DeploymentTarget::SingleDevice(cfg));
+            if let Some(t) = args.trace_options()? {
+                dep = dep.with_trace(t);
+            }
+            let rep = dep.run()?;
             println!("{}", rep.summary());
             println!("{}", rep.to_json());
         }
@@ -459,9 +499,19 @@ fn run() -> Result<()> {
                 shards: args.get("shards", 1usize)?,
                 clients: args.get("clients", 1usize)?,
                 seed: args.get("seed", 7u64)?,
+                metrics_port: match args.kv.get("metrics-port") {
+                    None => None,
+                    Some(p) => {
+                        Some(p.parse().map_err(|e| anyhow!("--metrics-port {p:?}: {e}"))?)
+                    }
+                },
                 ..ServeOptions::default()
             };
-            let rep = cm.deploy(DeploymentTarget::Serve(opts)).run()?;
+            let mut dep = cm.deploy(DeploymentTarget::Serve(opts));
+            if let Some(t) = args.trace_options()? {
+                dep = dep.with_trace(t);
+            }
+            let rep = dep.run()?;
             println!("{}", rep.summary());
             println!("{}", rep.to_json());
         }

@@ -1,0 +1,235 @@
+//! Serving metrics exposition: Prometheus text format over HTTP.
+//!
+//! [`prometheus_text`] renders [`crate::coordinator::MetricsSnapshot`]s
+//! (the router's merged view plus one per replica) in the Prometheus
+//! text exposition format 0.0.4, and [`MetricsServer`] serves it from a
+//! plain-`std` TCP listener so the workload harness (ROADMAP item 3) can
+//! scrape live p50/p99, queue pressure, and reject rate instead of
+//! waiting for the end-of-run report. Zero dependencies: the protocol
+//! needs one request line and one response, which `std::net` covers.
+
+use std::fmt::Write as _;
+use std::io::{Read as _, Write as _};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::MetricsSnapshot;
+
+/// Render labelled metrics snapshots as Prometheus exposition text.
+///
+/// The first entry is conventionally the merged/router view labelled
+/// `"router"`; per-replica entries are labelled `"replica0"`, … .
+/// Ordering is the caller's slice order, so output is deterministic.
+pub fn prometheus_text(snaps: &[(String, MetricsSnapshot)]) -> String {
+    let mut s = String::new();
+    let gauge = |s: &mut String, name: &str, help: &str| {
+        let _ = writeln!(s, "# HELP h2pipe_{name} {help}");
+        let _ = writeln!(s, "# TYPE h2pipe_{name} gauge");
+    };
+    let counter = |s: &mut String, name: &str, help: &str| {
+        let _ = writeln!(s, "# HELP h2pipe_{name} {help}");
+        let _ = writeln!(s, "# TYPE h2pipe_{name} counter");
+    };
+
+    counter(&mut s, "requests_completed_total", "Requests completed.");
+    for (label, m) in snaps {
+        let _ = writeln!(s, "h2pipe_requests_completed_total{{scope=\"{label}\"}} {}", m.completed);
+    }
+    counter(&mut s, "requests_rejected_total", "Requests rejected by back-pressure.");
+    for (label, m) in snaps {
+        let _ = writeln!(s, "h2pipe_requests_rejected_total{{scope=\"{label}\"}} {}", m.rejected);
+    }
+    counter(&mut s, "batches_total", "Batches dispatched.");
+    for (label, m) in snaps {
+        let _ = writeln!(s, "h2pipe_batches_total{{scope=\"{label}\"}} {}", m.batches);
+    }
+    gauge(&mut s, "drop_rate", "rejected / (completed + rejected).");
+    for (label, m) in snaps {
+        let _ = writeln!(s, "h2pipe_drop_rate{{scope=\"{label}\"}} {}", m.drop_rate);
+    }
+    gauge(&mut s, "uptime_seconds", "Seconds since the metrics window opened.");
+    for (label, m) in snaps {
+        let _ = writeln!(s, "h2pipe_uptime_seconds{{scope=\"{label}\"}} {:.3}", m.uptime_s);
+    }
+    gauge(&mut s, "throughput_rps", "Completed requests per second.");
+    for (label, m) in snaps {
+        let _ = writeln!(s, "h2pipe_throughput_rps{{scope=\"{label}\"}} {:.3}", m.throughput_rps);
+    }
+    gauge(&mut s, "batch_fill", "Mean batch size over the configured capacity.");
+    for (label, m) in snaps {
+        let _ = writeln!(s, "h2pipe_batch_fill{{scope=\"{label}\"}} {:.4}", m.batch_fill);
+    }
+    gauge(&mut s, "request_latency_ms", "Request latency quantiles (ms).");
+    for (label, m) in snaps {
+        for (q, v) in
+            [("0.5", m.p50_ms), ("0.99", m.p99_ms)]
+        {
+            if v.is_finite() {
+                let _ = writeln!(
+                    s,
+                    "h2pipe_request_latency_ms{{scope=\"{label}\",quantile=\"{q}\"}} {v:.4}"
+                );
+            }
+        }
+        if m.mean_latency_ms.is_finite() {
+            let _ = writeln!(
+                s,
+                "h2pipe_request_latency_ms{{scope=\"{label}\",quantile=\"mean\"}} {:.4}",
+                m.mean_latency_ms
+            );
+        }
+    }
+    s
+}
+
+/// A minimal HTTP exposition endpoint: every GET on any path returns the
+/// current rendering of `source` as `text/plain; version=0.0.4`.
+pub struct MetricsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl std::fmt::Debug for MetricsServer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MetricsServer").field("addr", &self.addr).finish()
+    }
+}
+
+impl MetricsServer {
+    /// Bind `127.0.0.1:port` (port 0 picks a free port — use
+    /// [`Self::addr`] to discover it) and serve `source()` per request.
+    pub fn start(port: u16, source: Arc<dyn Fn() -> String + Send + Sync>) -> Result<Self> {
+        let listener = TcpListener::bind(("127.0.0.1", port))
+            .with_context(|| format!("binding metrics endpoint on 127.0.0.1:{port}"))?;
+        let addr = listener.local_addr().context("metrics endpoint local addr")?;
+        listener.set_nonblocking(true).context("metrics endpoint nonblocking")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let s2 = stop.clone();
+        let handle = std::thread::spawn(move || {
+            while !s2.load(Ordering::SeqCst) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        // One request per connection; errors only affect
+                        // that scrape.
+                        let _ = respond(stream, &source());
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                    Err(_) => std::thread::sleep(Duration::from_millis(5)),
+                }
+            }
+        });
+        Ok(Self { addr, stop, handle: Some(handle) })
+    }
+
+    /// The bound address (resolves the port when started with port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop the listener thread and release the closure (and anything it
+    /// captures, e.g. an `Arc` over the router).
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn respond(mut stream: TcpStream, body: &str) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_millis(200)))?;
+    // Drain the request line + headers (best effort — the response does
+    // not depend on them).
+    let mut buf = [0u8; 1024];
+    let _ = stream.read(&mut buf);
+    let header = format!(
+        "HTTP/1.1 200 OK\r\nContent-Type: text/plain; version=0.0.4; charset=utf-8\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(header.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(completed: u64, rejected: u64) -> MetricsSnapshot {
+        MetricsSnapshot {
+            completed,
+            rejected,
+            batches: 2,
+            batched_requests: completed,
+            uptime_s: 1.5,
+            throughput_rps: completed as f64 / 1.5,
+            mean_latency_ms: 2.0,
+            p50_ms: 1.8,
+            p99_ms: 4.2,
+            drop_rate: rejected as f64 / (completed + rejected).max(1) as f64,
+            batch_fill: 0.5,
+        }
+    }
+
+    #[test]
+    fn exposition_text_carries_scoped_series() {
+        let text = prometheus_text(&[
+            ("router".to_string(), snap(10, 2)),
+            ("replica0".to_string(), snap(10, 2)),
+        ]);
+        assert!(text.contains("# TYPE h2pipe_requests_completed_total counter"), "{text}");
+        assert!(text.contains("h2pipe_requests_completed_total{scope=\"router\"} 10"), "{text}");
+        assert!(
+            text.contains("h2pipe_request_latency_ms{scope=\"replica0\",quantile=\"0.99\"}"),
+            "{text}"
+        );
+        assert!(text.contains("h2pipe_drop_rate{scope=\"router\"} 0.16666666666666666"), "{text}");
+    }
+
+    #[test]
+    fn nan_latency_series_are_omitted() {
+        let mut m = snap(0, 0);
+        m.p50_ms = f64::NAN;
+        m.p99_ms = f64::NAN;
+        m.mean_latency_ms = f64::NAN;
+        let text = prometheus_text(&[("router".to_string(), m)]);
+        assert!(!text.contains("quantile"), "NaN series must be omitted: {text}");
+    }
+
+    #[test]
+    fn http_endpoint_serves_the_rendering() {
+        let srv = MetricsServer::start(
+            0,
+            Arc::new(|| prometheus_text(&[("router".to_string(), snap(3, 1))])),
+        )
+        .unwrap();
+        let addr = srv.addr();
+        let mut conn = TcpStream::connect(addr).unwrap();
+        conn.write_all(b"GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut out = String::new();
+        conn.read_to_string(&mut out).unwrap();
+        assert!(out.starts_with("HTTP/1.1 200 OK"), "{out}");
+        assert!(out.contains("text/plain; version=0.0.4"), "{out}");
+        assert!(out.contains("h2pipe_requests_completed_total{scope=\"router\"} 3"), "{out}");
+        srv.stop();
+    }
+}

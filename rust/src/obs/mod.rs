@@ -1,0 +1,31 @@
+//! Observability: cycle-domain flight recorder, trace export, and
+//! serving metrics exposition.
+//!
+//! H2PIPE's design decisions rest on *profiles* — the authors measured
+//! HBM latency/bandwidth against expected address patterns (§III-A,
+//! Fig. 3) and sized FIFOs from worst-case behavior (§IV-A). This module
+//! is the reproduction's instrument for producing the same kind of
+//! time-resolved evidence:
+//!
+//! * [`probe`] — the `&mut dyn Probe` hook the simulators publish
+//!   samples through. Disabled (`None`) it costs one branch per tick;
+//!   the hooks stay wired in permanently.
+//! * [`recorder`] — the windowed flight recorder: per-window engine
+//!   stall breakdowns, per-PC bandwidth/row-hit windows, weight-FIFO
+//!   occupancy, inter-device link occupancy, HBM burst events. Window
+//!   deltas of cumulative counters, so window sums equal end-of-run
+//!   aggregates exactly.
+//! * [`trace`] — Chrome/Perfetto `trace_event` JSON + compact CSV
+//!   rendering of a recording (`h2pipe simulate --trace out.json`).
+//! * [`expo`] — Prometheus text exposition of serving metrics over a
+//!   plain-`std` HTTP endpoint (`h2pipe serve --metrics-port P`).
+
+pub mod expo;
+pub mod probe;
+pub mod recorder;
+pub mod trace;
+
+pub use expo::{prometheus_text, MetricsServer};
+pub use probe::{NullProbe, Probe};
+pub use recorder::Recorder;
+pub use trace::RequestSpan;

@@ -1,0 +1,73 @@
+//! The probe hook: how the cycle-domain simulators publish samples.
+//!
+//! Every instrumented component ([`crate::sim::pipeline::PipelineSim`],
+//! [`crate::sim::weights::WeightSubsystem`], [`crate::cluster::FleetSim`])
+//! takes an `Option<&mut dyn Probe>`. The `None` path is the production
+//! path — one branch per base tick, nothing else — so the hooks stay
+//! wired in permanently (the disabled-mode overhead test and the
+//! `perf_hotpath` bench enforce that the regression stays under 5%).
+//!
+//! All counter arguments are **cumulative**: a probe implementation that
+//! wants per-window rates (the [`crate::obs::Recorder`]) subtracts its
+//! previous sample, which makes the conservation property — window sums
+//! equal end-of-run aggregates — hold by construction rather than by
+//! sampling luck.
+
+use crate::hbm::controller::PcStats;
+use crate::sim::engine::EngineStats;
+
+/// Receiver for cycle-domain observability samples.
+///
+/// `now` is the core-domain (300 MHz) cycle count of the emitting
+/// simulator; HBM burst events carry controller-domain (400 MHz) cycles
+/// instead, because that is the clock their latency is defined in.
+pub trait Probe {
+    /// Sampling window in core cycles. The simulator calls the sample
+    /// hooks once every `window()` core cycles (and once more at the end
+    /// of the run, so the last partial window is never lost).
+    fn window(&self) -> u64;
+
+    /// One engine's cumulative stall breakdown at core cycle `now`.
+    fn engine_sample(&mut self, _now: u64, _idx: usize, _name: &str, _cum: &EngineStats) {}
+
+    /// One HBM pseudo-channel's cumulative controller stats at core cycle
+    /// `now`. `pc` is the global pseudo-channel id.
+    fn pc_sample(&mut self, _now: u64, _pc: u32, _cum: &PcStats) {}
+
+    /// One weight layer's last-stage FIFO at core cycle `now`:
+    /// current occupancy, compiled capacity, and the cumulative
+    /// high-water mark, all in 80-bit words.
+    fn fifo_sample(&mut self, _now: u64, _layer: usize, _name: &str, _occ: u64, _cap: u64, _peak: u64) {
+    }
+
+    /// One inter-device credit link at core cycle `now`: lines currently
+    /// in flight, cumulative lines transferred, and cumulative core
+    /// cycles the upstream sink spent blocked on link credit.
+    fn link_sample(&mut self, _now: u64, _link: usize, _occupancy: u64, _lines: u64, _blocked: u64) {
+    }
+
+    /// One completed HBM weight burst: global pseudo-channel id, accept
+    /// and completion cycles in the controller (400 MHz) domain, and the
+    /// burst length in 256-bit beats.
+    fn hbm_burst(&mut self, _pc: u32, _accept_cycle: u64, _done_cycle: u64, _beats: u32) {}
+}
+
+/// A probe that records nothing — for overhead measurements of the
+/// probed code path itself (every hook is a no-op, so any cost measured
+/// against the unprobed path is pure plumbing).
+#[derive(Debug, Clone, Default)]
+pub struct NullProbe {
+    window: u64,
+}
+
+impl NullProbe {
+    pub fn new(window: u64) -> Self {
+        Self { window: window.max(1) }
+    }
+}
+
+impl Probe for NullProbe {
+    fn window(&self) -> u64 {
+        self.window.max(1)
+    }
+}

@@ -1,0 +1,428 @@
+//! The flight recorder: a windowed time-series [`Probe`] implementation.
+//!
+//! The recorder receives cumulative counters from the simulators and
+//! stores per-window *deltas*, keyed by track (engine / pseudo-channel /
+//! FIFO / link). Because every window is the difference of two cumulative
+//! samples and the simulators emit one final sample at the end of the
+//! run, the sum of a track's windows is exactly the end-of-run aggregate
+//! — the conservation property `integration_obs` asserts against
+//! [`crate::sim::pipeline::SimReport`].
+
+use std::collections::BTreeMap;
+
+use crate::hbm::controller::PcStats;
+use crate::obs::probe::Probe;
+use crate::sim::engine::EngineStats;
+use crate::util::Json;
+
+/// Cap on stored HBM burst events: bursts are per-request (not
+/// per-window), so an uncapped recording of a long run would dominate
+/// memory and trace size. Overflow is counted, never silent.
+pub const MAX_BURSTS: usize = 20_000;
+
+/// One engine stall-breakdown window (core-cycle deltas over
+/// `[start, end)`).
+#[derive(Debug, Clone, Default)]
+pub struct EngineWindow {
+    pub start: u64,
+    pub end: u64,
+    pub active: u64,
+    pub input_starved: u64,
+    pub output_blocked: u64,
+    pub weight_frozen: u64,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct EngineTrack {
+    pub name: String,
+    last_now: u64,
+    last: EngineStats,
+    pub windows: Vec<EngineWindow>,
+}
+
+/// One pseudo-channel window: controller-cycle deltas sampled at core
+/// cycle boundaries `[start, end)`.
+#[derive(Debug, Clone, Default)]
+pub struct PcWindow {
+    pub start: u64,
+    pub end: u64,
+    /// Data beats transferred this window.
+    pub data_cycles: u64,
+    /// Controller cycles with work queued or in flight this window.
+    pub busy_cycles: u64,
+    /// Controller cycles elapsed this window.
+    pub total_cycles: u64,
+    pub row_hits: u64,
+    pub row_misses: u64,
+}
+
+impl PcWindow {
+    /// Issued-vs-ideal bandwidth: data beats over elapsed controller
+    /// cycles (an idle PC scores 0, matching [`PcStats::efficiency`]).
+    pub fn efficiency(&self) -> f64 {
+        if self.total_cycles == 0 {
+            return 0.0;
+        }
+        self.data_cycles as f64 / self.total_cycles as f64
+    }
+
+    /// Open-row hit rate over the window's CAS commands.
+    pub fn row_hit_rate(&self) -> f64 {
+        let n = self.row_hits + self.row_misses;
+        if n == 0 { 0.0 } else { self.row_hits as f64 / n as f64 }
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct PcTrack {
+    last_now: u64,
+    last: PcStats,
+    pub windows: Vec<PcWindow>,
+}
+
+/// One FIFO occupancy sample (instantaneous, not a delta).
+#[derive(Debug, Clone, Default)]
+pub struct FifoSample {
+    pub now: u64,
+    pub occupancy: u64,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct FifoTrack {
+    pub name: String,
+    /// Compiled capacity in 80-bit words (credit counter max).
+    pub capacity: u64,
+    /// Cumulative high-water mark at the last sample.
+    pub peak: u64,
+    pub samples: Vec<FifoSample>,
+}
+
+/// One inter-device link window.
+#[derive(Debug, Clone, Default)]
+pub struct LinkWindow {
+    pub start: u64,
+    pub end: u64,
+    /// Lines in flight at the sample point (instantaneous).
+    pub occupancy: u64,
+    /// Lines transferred this window.
+    pub lines: u64,
+    /// Upstream credit-blocked core cycles this window.
+    pub blocked: u64,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct LinkTrack {
+    last_now: u64,
+    last_lines: u64,
+    last_blocked: u64,
+    pub windows: Vec<LinkWindow>,
+}
+
+/// One completed HBM weight burst (controller-domain cycles).
+#[derive(Debug, Clone, Copy)]
+pub struct BurstEvent {
+    pub pc: u32,
+    pub accept_cycle: u64,
+    pub done_cycle: u64,
+    pub beats: u32,
+}
+
+/// The windowed time-series collector.
+#[derive(Debug, Clone)]
+pub struct Recorder {
+    window: u64,
+    pub engines: BTreeMap<usize, EngineTrack>,
+    pub pcs: BTreeMap<u32, PcTrack>,
+    pub fifos: BTreeMap<usize, FifoTrack>,
+    pub links: BTreeMap<usize, LinkTrack>,
+    pub bursts: Vec<BurstEvent>,
+    pub bursts_dropped: u64,
+}
+
+impl Recorder {
+    /// Recorder sampling every `window` core cycles (clamped to >= 1).
+    pub fn new(window: u64) -> Self {
+        Self {
+            window: window.max(1),
+            engines: BTreeMap::new(),
+            pcs: BTreeMap::new(),
+            fifos: BTreeMap::new(),
+            links: BTreeMap::new(),
+            bursts: Vec::new(),
+            bursts_dropped: 0,
+        }
+    }
+
+    /// Sum of an engine track's window deltas — by construction equal to
+    /// the engine's cumulative counters at the last sample, which is what
+    /// the conservation test checks against `SimReport`.
+    pub fn engine_totals(&self, idx: usize) -> Option<EngineStats> {
+        let t = self.engines.get(&idx)?;
+        let mut s = EngineStats::default();
+        for w in &t.windows {
+            s.active += w.active;
+            s.input_starved += w.input_starved;
+            s.output_blocked += w.output_blocked;
+            s.weight_frozen += w.weight_frozen;
+        }
+        Some(s)
+    }
+
+    /// Total data beats across every PC track's windows.
+    pub fn pc_data_cycles_total(&self) -> u64 {
+        self.pcs.values().flat_map(|t| t.windows.iter()).map(|w| w.data_cycles).sum()
+    }
+
+    /// The `profile` summary block embedded in
+    /// [`crate::session::RunReport`]: top stall causes of the busiest
+    /// engines, the worst HBM window, and peak FIFO occupancy against the
+    /// compiled depth.
+    pub fn profile(&self) -> Json {
+        // Busiest engines by total stalled cycles, top 3, each with its
+        // stall causes ranked.
+        let mut ranked: Vec<(u64, usize)> = self
+            .engines
+            .iter()
+            .map(|(&i, _)| {
+                let s = self.engine_totals(i).unwrap_or_default();
+                (s.input_starved + s.output_blocked + s.weight_frozen, i)
+            })
+            .collect();
+        ranked.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+        let mut bottlenecks = Json::Arr(Vec::new());
+        for &(stalled, i) in ranked.iter().take(3) {
+            let t = &self.engines[&i];
+            let s = self.engine_totals(i).unwrap_or_default();
+            let mut causes = vec![
+                ("input_starved", s.input_starved),
+                ("output_blocked", s.output_blocked),
+                ("weight_frozen", s.weight_frozen),
+            ];
+            causes.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(b.0)));
+            let mut top = Json::Arr(Vec::new());
+            for (cause, cycles) in causes {
+                let mut c = Json::obj();
+                c.set("cause", cause).set("cycles", cycles);
+                top.push(c);
+            }
+            let mut e = Json::obj();
+            e.set("engine", i)
+                .set("name", t.name.as_str())
+                .set("active", s.active)
+                .set("stalled", stalled)
+                .set("top_causes", top);
+            bottlenecks.push(e);
+        }
+
+        // Worst-window HBM efficiency over windows where the PC was busy.
+        let mut worst: Option<(f64, u32, &PcWindow)> = None;
+        for (&pc, t) in &self.pcs {
+            for w in &t.windows {
+                if w.busy_cycles == 0 {
+                    continue;
+                }
+                let eff = w.efficiency();
+                if worst.as_ref().map_or(true, |(e, _, _)| eff < *e) {
+                    worst = Some((eff, pc, w));
+                }
+            }
+        }
+        let worst_hbm = match worst {
+            None => Json::Null,
+            Some((eff, pc, w)) => {
+                let mut o = Json::obj();
+                o.set("pc", pc)
+                    .set("start", w.start)
+                    .set("end", w.end)
+                    .set("efficiency", eff)
+                    .set("row_hit_rate", w.row_hit_rate());
+                o
+            }
+        };
+
+        // FIFO peaks vs compiled depth — the §IV-A depth bounds checked
+        // dynamically rather than statically.
+        let mut fifos = Json::Arr(Vec::new());
+        let mut max_fill = 0.0f64;
+        for (&layer, t) in &self.fifos {
+            let fill = if t.capacity == 0 { 0.0 } else { t.peak as f64 / t.capacity as f64 };
+            max_fill = max_fill.max(fill);
+            let mut o = Json::obj();
+            o.set("layer", layer)
+                .set("name", t.name.as_str())
+                .set("peak_words", t.peak)
+                .set("capacity_words", t.capacity)
+                .set("fill", fill);
+            fifos.push(o);
+        }
+
+        let mut o = Json::obj();
+        o.set("window", self.window)
+            .set("bottlenecks", bottlenecks)
+            .set("worst_hbm_window", worst_hbm)
+            .set("fifo_peaks", fifos)
+            .set("max_fifo_fill", max_fill)
+            .set("bursts_recorded", self.bursts.len())
+            .set("bursts_dropped", self.bursts_dropped);
+        o
+    }
+}
+
+impl Probe for Recorder {
+    fn window(&self) -> u64 {
+        self.window
+    }
+
+    fn engine_sample(&mut self, now: u64, idx: usize, name: &str, cum: &EngineStats) {
+        let t = self.engines.entry(idx).or_default();
+        if t.name.is_empty() {
+            t.name = name.to_string();
+        }
+        if now == t.last_now && !t.windows.is_empty() {
+            return; // duplicate flush at an exact window boundary
+        }
+        let w = EngineWindow {
+            start: t.last_now,
+            end: now,
+            active: cum.active - t.last.active,
+            input_starved: cum.input_starved - t.last.input_starved,
+            output_blocked: cum.output_blocked - t.last.output_blocked,
+            weight_frozen: cum.weight_frozen - t.last.weight_frozen,
+        };
+        t.last_now = now;
+        t.last = cum.clone();
+        // zero-delta windows still advance `last_now` above but need not
+        // be stored — dropping them keeps idle tails out of the trace
+        // without breaking conservation (their contribution is zero).
+        if w.active + w.input_starved + w.output_blocked + w.weight_frozen > 0 {
+            t.windows.push(w);
+        }
+    }
+
+    fn pc_sample(&mut self, now: u64, pc: u32, cum: &PcStats) {
+        let t = self.pcs.entry(pc).or_default();
+        if now == t.last_now && !t.windows.is_empty() {
+            return;
+        }
+        let w = PcWindow {
+            start: t.last_now,
+            end: now,
+            data_cycles: cum.data_cycles - t.last.data_cycles,
+            busy_cycles: cum.busy_cycles - t.last.busy_cycles,
+            total_cycles: cum.total_cycles - t.last.total_cycles,
+            row_hits: cum.row_hits - t.last.row_hits,
+            row_misses: cum.row_misses - t.last.row_misses,
+        };
+        t.last_now = now;
+        t.last = cum.clone();
+        if w.total_cycles > 0 {
+            t.windows.push(w);
+        }
+    }
+
+    fn fifo_sample(&mut self, now: u64, layer: usize, name: &str, occ: u64, cap: u64, peak: u64) {
+        let t = self.fifos.entry(layer).or_default();
+        if t.name.is_empty() {
+            t.name = name.to_string();
+        }
+        t.capacity = cap;
+        t.peak = t.peak.max(peak);
+        if t.samples.last().map_or(true, |s| s.now != now) {
+            t.samples.push(FifoSample { now, occupancy: occ });
+        }
+    }
+
+    fn link_sample(&mut self, now: u64, link: usize, occupancy: u64, lines: u64, blocked: u64) {
+        let t = self.links.entry(link).or_default();
+        if now == t.last_now && !t.windows.is_empty() {
+            return;
+        }
+        let w = LinkWindow {
+            start: t.last_now,
+            end: now,
+            occupancy,
+            lines: lines - t.last_lines,
+            blocked: blocked - t.last_blocked,
+        };
+        t.last_now = now;
+        t.last_lines = lines;
+        t.last_blocked = blocked;
+        t.windows.push(w);
+    }
+
+    fn hbm_burst(&mut self, pc: u32, accept_cycle: u64, done_cycle: u64, beats: u32) {
+        if self.bursts.len() >= MAX_BURSTS {
+            self.bursts_dropped += 1;
+            return;
+        }
+        self.bursts.push(BurstEvent { pc, accept_cycle, done_cycle, beats });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cum(a: u64, s: u64, b: u64, f: u64) -> EngineStats {
+        EngineStats { active: a, input_starved: s, output_blocked: b, weight_frozen: f }
+    }
+
+    #[test]
+    fn engine_windows_are_deltas_and_conserve() {
+        let mut r = Recorder::new(100);
+        r.engine_sample(100, 0, "conv1", &cum(60, 30, 10, 0));
+        r.engine_sample(200, 0, "conv1", &cum(100, 70, 20, 10));
+        r.engine_sample(200, 0, "conv1", &cum(100, 70, 20, 10)); // duplicate flush
+        let t = &r.engines[&0];
+        assert_eq!(t.windows.len(), 2);
+        assert_eq!(t.windows[1].active, 40);
+        assert_eq!(t.windows[1].weight_frozen, 10);
+        let total = r.engine_totals(0).unwrap();
+        assert_eq!(
+            (total.active, total.input_starved, total.output_blocked, total.weight_frozen),
+            (100, 70, 20, 10)
+        );
+    }
+
+    #[test]
+    fn pc_windows_compute_efficiency_and_hit_rate() {
+        let mut r = Recorder::new(100);
+        let mut s = PcStats::default();
+        s.data_cycles = 80;
+        s.busy_cycles = 100;
+        s.total_cycles = 160;
+        s.row_hits = 9;
+        s.row_misses = 1;
+        r.pc_sample(100, 3, &s);
+        let w = &r.pcs[&3].windows[0];
+        assert!((w.efficiency() - 0.5).abs() < 1e-12);
+        assert!((w.row_hit_rate() - 0.9).abs() < 1e-12);
+        assert_eq!(r.pc_data_cycles_total(), 80);
+    }
+
+    #[test]
+    fn burst_cap_counts_overflow() {
+        let mut r = Recorder::new(1);
+        for i in 0..(MAX_BURSTS as u64 + 5) {
+            r.hbm_burst(0, i, i + 10, 8);
+        }
+        assert_eq!(r.bursts.len(), MAX_BURSTS);
+        assert_eq!(r.bursts_dropped, 5);
+    }
+
+    #[test]
+    fn profile_ranks_stall_causes() {
+        let mut r = Recorder::new(100);
+        r.engine_sample(100, 0, "conv1", &cum(50, 5, 40, 0));
+        r.engine_sample(100, 1, "conv2", &cum(20, 80, 0, 0));
+        r.fifo_sample(100, 1, "conv2", 128, 512, 300);
+        let p = r.profile();
+        let bn = p.get("bottlenecks").and_then(Json::as_arr).unwrap();
+        // conv2 has more stalled cycles -> ranked first
+        assert_eq!(bn[0].get("name").and_then(Json::as_str), Some("conv2"));
+        let causes = bn[0].get("top_causes").and_then(Json::as_arr).unwrap();
+        assert_eq!(causes[0].get("cause").and_then(Json::as_str), Some("input_starved"));
+        assert!((p.get("max_fifo_fill").and_then(Json::as_f64).unwrap() - 300.0 / 512.0).abs()
+            < 1e-12);
+    }
+}

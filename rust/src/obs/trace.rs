@@ -1,0 +1,306 @@
+//! Trace export: Chrome/Perfetto `trace_event` JSON and a compact CSV.
+//!
+//! The Chrome trace uses one process per track family (engines, HBM,
+//! FIFOs, links) and one thread per track, so `chrome://tracing` /
+//! Perfetto render each engine as its own row with stall reasons as
+//! colored spans. Per-window stall deltas are laid out as consecutive
+//! spans inside each window — a windowed approximation of the true
+//! interleaving whose *durations* are exact (they are the recorder's
+//! conservation-checked deltas).
+//!
+//! Everything is built through [`crate::util::Json`] (BTreeMap-ordered
+//! objects, shortest-round-trip floats), so the output is byte-stable
+//! across runs of the same plan and always parses with the strict
+//! parser — both properties are asserted by `integration_obs`.
+
+use std::fmt::Write as _;
+
+use crate::obs::recorder::Recorder;
+use crate::util::Json;
+
+/// Process ids of the trace's track families.
+const PID_ENGINES: u64 = 1;
+const PID_HBM: u64 = 2;
+const PID_FIFOS: u64 = 3;
+const PID_LINKS: u64 = 4;
+
+fn meta(pid: u64, tid: u64, what: &str, name: &str) -> Json {
+    let mut args = Json::obj();
+    args.set("name", name);
+    let mut o = Json::obj();
+    o.set("ph", "M").set("pid", pid).set("tid", tid).set("name", what).set("args", args);
+    o
+}
+
+fn span(pid: u64, tid: u64, name: &str, cname: &str, ts_us: f64, dur_us: f64, cycles: u64) -> Json {
+    let mut args = Json::obj();
+    args.set("cycles", cycles);
+    let mut o = Json::obj();
+    o.set("ph", "X")
+        .set("cat", "stall")
+        .set("pid", pid)
+        .set("tid", tid)
+        .set("name", name)
+        .set("cname", cname)
+        .set("ts", ts_us)
+        .set("dur", dur_us)
+        .set("args", args);
+    o
+}
+
+fn counter(pid: u64, name: &str, ts_us: f64, args: Json) -> Json {
+    let mut o = Json::obj();
+    o.set("ph", "C").set("pid", pid).set("tid", 0u64).set("name", name).set("ts", ts_us).set(
+        "args", args,
+    );
+    o
+}
+
+/// Render a [`Recorder`] as a Chrome `trace_event` document.
+///
+/// `core_mhz` converts core-domain cycles to microseconds,
+/// `controller_mhz` converts HBM burst timestamps.
+pub fn chrome_trace(rec: &Recorder, core_mhz: u32, controller_mhz: u32) -> Json {
+    let core_us = |c: u64| c as f64 / core_mhz.max(1) as f64;
+    let hbm_us = |c: u64| c as f64 / controller_mhz.max(1) as f64;
+    let mut ev = Json::Arr(Vec::new());
+
+    ev.push(meta(PID_ENGINES, 0, "process_name", "engines"));
+    ev.push(meta(PID_HBM, 0, "process_name", "hbm"));
+    ev.push(meta(PID_FIFOS, 0, "process_name", "weight_fifos"));
+    ev.push(meta(PID_LINKS, 0, "process_name", "links"));
+
+    // Engine stall spans: each window's deltas partition [start, end) in
+    // a fixed category order (active first).
+    for (&idx, t) in &rec.engines {
+        let tid = idx as u64 + 1;
+        ev.push(meta(PID_ENGINES, tid, "thread_name", &t.name));
+        for w in &t.windows {
+            let mut at = w.start;
+            for (name, cname, cycles) in [
+                ("active", "good", w.active),
+                ("input_starved", "yellow", w.input_starved),
+                ("output_blocked", "bad", w.output_blocked),
+                ("weight_frozen", "terrible", w.weight_frozen),
+            ] {
+                if cycles == 0 {
+                    continue;
+                }
+                ev.push(span(
+                    PID_ENGINES,
+                    tid,
+                    name,
+                    cname,
+                    core_us(at),
+                    core_us(at + cycles) - core_us(at),
+                    cycles,
+                ));
+                at += cycles;
+            }
+        }
+    }
+
+    // Per-PC bandwidth / row-hit counters, one counter track per PC.
+    for (&pc, t) in &rec.pcs {
+        for w in &t.windows {
+            let mut args = Json::obj();
+            args.set("efficiency_pct", (w.efficiency() * 100.0 * 10.0).round() / 10.0)
+                .set("row_hit_pct", (w.row_hit_rate() * 100.0 * 10.0).round() / 10.0)
+                .set("data_beats", w.data_cycles);
+            ev.push(counter(PID_HBM, &format!("pc{pc}"), core_us(w.end), args));
+        }
+    }
+
+    // HBM bursts as async begin/end pairs on the PC's thread.
+    for (i, b) in rec.bursts.iter().enumerate() {
+        let tid = b.pc as u64 + 1;
+        for (ph, ts) in [("b", b.accept_cycle), ("e", b.done_cycle)] {
+            let mut o = Json::obj();
+            o.set("ph", ph)
+                .set("cat", "hbm_burst")
+                .set("pid", PID_HBM)
+                .set("tid", tid)
+                .set("id", i as u64)
+                .set("name", format!("burst_bl{}", b.beats))
+                .set("ts", hbm_us(ts));
+            ev.push(o);
+        }
+    }
+
+    // FIFO occupancy counters, one per weight layer.
+    for (&layer, t) in &rec.fifos {
+        for s in &t.samples {
+            let mut args = Json::obj();
+            args.set("words", s.occupancy);
+            ev.push(counter(PID_FIFOS, &format!("fifo{layer} {}", t.name), core_us(s.now), args));
+        }
+    }
+
+    // Inter-device link occupancy counters.
+    for (&link, t) in &rec.links {
+        for w in &t.windows {
+            let mut args = Json::obj();
+            args.set("lines_in_flight", w.occupancy).set("blocked_cycles", w.blocked);
+            ev.push(counter(PID_LINKS, &format!("link{link}"), core_us(w.end), args));
+        }
+    }
+
+    let mut o = Json::obj();
+    o.set("traceEvents", ev)
+        .set("displayTimeUnit", "ms")
+        .set("otherData", {
+            let mut d = Json::obj();
+            d.set("generator", "h2pipe obs")
+                .set("core_mhz", core_mhz)
+                .set("controller_mhz", controller_mhz)
+                .set("bursts_dropped", rec.bursts_dropped);
+            d
+        });
+    o
+}
+
+/// Render a [`Recorder`] as a flat CSV (one row per window/sample) for
+/// quick plotting without a trace viewer.
+pub fn csv(rec: &Recorder) -> String {
+    let mut s = String::from("kind,track,name,start,end,metric,value\n");
+    for (&idx, t) in &rec.engines {
+        for w in &t.windows {
+            for (metric, v) in [
+                ("active", w.active),
+                ("input_starved", w.input_starved),
+                ("output_blocked", w.output_blocked),
+                ("weight_frozen", w.weight_frozen),
+            ] {
+                let _ = writeln!(s, "engine,{idx},{},{},{},{metric},{v}", t.name, w.start, w.end);
+            }
+        }
+    }
+    for (&pc, t) in &rec.pcs {
+        for w in &t.windows {
+            let _ = writeln!(
+                s,
+                "pc,{pc},pc{pc},{},{},efficiency,{:.6}",
+                w.start,
+                w.end,
+                w.efficiency()
+            );
+            let _ = writeln!(
+                s,
+                "pc,{pc},pc{pc},{},{},row_hit_rate,{:.6}",
+                w.start,
+                w.end,
+                w.row_hit_rate()
+            );
+        }
+    }
+    for (&layer, t) in &rec.fifos {
+        for smp in &t.samples {
+            let _ = writeln!(
+                s,
+                "fifo,{layer},{},{},{},words,{}",
+                t.name, smp.now, smp.now, smp.occupancy
+            );
+        }
+    }
+    for (&link, t) in &rec.links {
+        for w in &t.windows {
+            let _ = writeln!(s, "link,{link},link{link},{},{},lines,{}", w.start, w.end, w.lines);
+            let _ = writeln!(
+                s,
+                "link,{link},link{link},{},{},blocked,{}",
+                w.start, w.end, w.blocked
+            );
+        }
+    }
+    s
+}
+
+/// Wall-clock request span recorded by the serving router.
+#[derive(Debug, Clone, Copy)]
+pub struct RequestSpan {
+    /// Microseconds since the router started.
+    pub start_us: f64,
+    pub dur_us: f64,
+    /// Replica index that served the request.
+    pub replica: usize,
+}
+
+/// Render serving request spans as a Chrome trace (one thread per
+/// replica). Wall-clock timestamps are inherently run-dependent — the
+/// byte-stability guarantee applies to the cycle-domain trace only.
+pub fn chrome_serve_trace(spans: &[RequestSpan], replicas: usize) -> Json {
+    let mut ev = Json::Arr(Vec::new());
+    ev.push(meta(1, 0, "process_name", "serve"));
+    for r in 0..replicas {
+        ev.push(meta(1, r as u64 + 1, "thread_name", &format!("replica{r}")));
+    }
+    for s in spans {
+        let mut o = Json::obj();
+        o.set("ph", "X")
+            .set("cat", "request")
+            .set("pid", 1u64)
+            .set("tid", s.replica as u64 + 1)
+            .set("name", "infer")
+            .set("ts", s.start_us)
+            .set("dur", s.dur_us);
+        ev.push(o);
+    }
+    let mut o = Json::obj();
+    o.set("traceEvents", ev).set("displayTimeUnit", "ms");
+    o
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::probe::Probe;
+    use crate::sim::engine::EngineStats;
+
+    fn recorded() -> Recorder {
+        let mut r = Recorder::new(100);
+        let cum = EngineStats { active: 60, input_starved: 30, output_blocked: 10, weight_frozen: 0 };
+        r.engine_sample(100, 0, "conv1", &cum);
+        r.hbm_burst(2, 5, 45, 8);
+        r.fifo_sample(100, 0, "conv1", 64, 512, 200);
+        r.link_sample(100, 0, 2, 50, 7);
+        r
+    }
+
+    #[test]
+    fn chrome_trace_is_strict_parseable_and_partitions_windows() {
+        let j = chrome_trace(&recorded(), 300, 400);
+        let text = j.to_string();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back, j, "round trip through the strict parser");
+        let ev = j.get("traceEvents").and_then(Json::as_arr).unwrap();
+        let spans: Vec<&Json> =
+            ev.iter().filter(|e| e.get("ph").and_then(Json::as_str) == Some("X")).collect();
+        assert_eq!(spans.len(), 3, "one span per nonzero stall category");
+        let total: f64 =
+            spans.iter().map(|s| s.get("dur").and_then(Json::as_f64).unwrap()).sum();
+        assert!((total - 100.0 / 300.0).abs() < 1e-9, "spans cover the window: {total}");
+    }
+
+    #[test]
+    fn trace_is_deterministic() {
+        let a = chrome_trace(&recorded(), 300, 400).to_string();
+        let b = chrome_trace(&recorded(), 300, 400).to_string();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn csv_has_unified_header_and_rows() {
+        let text = csv(&recorded());
+        assert!(text.starts_with("kind,track,name,start,end,metric,value\n"));
+        assert!(text.contains("engine,0,conv1,0,100,active,60"), "{text}");
+        assert!(text.contains("link,0,link0,0,100,lines,50"), "{text}");
+    }
+
+    #[test]
+    fn serve_trace_parses() {
+        let spans =
+            [RequestSpan { start_us: 1.0, dur_us: 2.5, replica: 0 }];
+        let j = chrome_serve_trace(&spans, 2);
+        assert!(Json::parse(&j.to_string()).is_ok());
+    }
+}

@@ -74,6 +74,16 @@ impl CompiledModel {
         crate::sim::pipeline::PipelineSim::new(&self.network, &self.plan)?.run(cfg)
     }
 
+    /// [`Self::simulate`] with an observability probe attached (the
+    /// flight-recorder path behind `simulate --trace`).
+    pub fn simulate_probed(
+        &self,
+        cfg: &SimConfig,
+        probe: &mut dyn crate::obs::Probe,
+    ) -> Result<SimReport> {
+        crate::sim::pipeline::PipelineSim::new(&self.network, &self.plan)?.run_probed(cfg, probe)
+    }
+
     /// §IV-C boot-time weight download for this plan.
     pub fn boot(&self) -> BootReport {
         boot_weights(&self.plan)

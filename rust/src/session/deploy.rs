@@ -20,10 +20,33 @@ use anyhow::{ensure, Context, Result};
 
 use crate::cluster::{partition, FleetConfig, FleetRouter, FleetSim, PartitionOptions};
 use crate::coordinator::ServerConfig;
+use crate::obs::{MetricsServer, Recorder};
 use crate::session::compiled::CompiledModel;
 use crate::session::report::RunReport;
 use crate::sim::pipeline::SimConfig;
 use crate::util::XorShift64;
+
+/// Flight-recorder / trace-export options (`--trace`, `--trace-window`).
+///
+/// Attached to a [`Deployment`] with [`Deployment::with_trace`]: the run
+/// executes with an `obs::Recorder` probe, the Chrome/Perfetto JSON and/or
+/// CSV renderings are written to the given paths, and the [`RunReport`]
+/// gains the recorder's `profile` summary.
+#[derive(Debug, Clone)]
+pub struct TraceOptions {
+    /// Chrome/Perfetto `trace_event` JSON output path.
+    pub json_path: Option<String>,
+    /// Compact CSV output path (cycle-domain targets only).
+    pub csv_path: Option<String>,
+    /// Sampling window in core cycles.
+    pub window: u64,
+}
+
+impl Default for TraceOptions {
+    fn default() -> Self {
+        Self { json_path: None, csv_path: None, window: 4096 }
+    }
+}
 
 /// Serving parameters for [`DeploymentTarget::Serve`].
 #[derive(Debug, Clone)]
@@ -49,6 +72,10 @@ pub struct ServeOptions {
     /// Explicit modelled per-image service time override (e.g. a cycle
     /// sim's measured rate); `None` derives it from the plan/partition.
     pub modelled_image_s: Option<f64>,
+    /// When set, expose live Prometheus metrics on `127.0.0.1:port` for
+    /// the duration of the run (`serve --metrics-port`; 0 = any free
+    /// port).
+    pub metrics_port: Option<u16>,
 }
 
 impl Default for ServeOptions {
@@ -63,6 +90,7 @@ impl Default for ServeOptions {
             clients: 1,
             seed: 7,
             modelled_image_s: None,
+            metrics_port: None,
         }
     }
 }
@@ -84,11 +112,19 @@ pub enum DeploymentTarget {
 pub struct Deployment<'a> {
     compiled: &'a CompiledModel,
     target: DeploymentTarget,
+    trace: Option<TraceOptions>,
 }
 
 impl<'a> Deployment<'a> {
     pub(crate) fn new(compiled: &'a CompiledModel, target: DeploymentTarget) -> Self {
-        Self { compiled, target }
+        Self { compiled, target, trace: None }
+    }
+
+    /// Attach flight-recorder tracing to this deployment (see
+    /// [`TraceOptions`]).
+    pub fn with_trace(mut self, trace: TraceOptions) -> Self {
+        self.trace = Some(trace);
+        self
     }
 
     pub fn target(&self) -> &DeploymentTarget {
@@ -124,23 +160,62 @@ impl<'a> Deployment<'a> {
             throughput,
             latency_ms,
             detail,
+            profile: crate::util::Json::Null,
             diagnostics,
         }
     }
 
+    /// Write the recorder's trace renderings to the paths in `t`.
+    fn write_trace(&self, t: &TraceOptions, rec: &Recorder) -> Result<()> {
+        let d = &self.compiled.plan().device;
+        if let Some(path) = &t.json_path {
+            let j = crate::obs::trace::chrome_trace(rec, d.core_mhz, d.hbm.controller_mhz);
+            std::fs::write(path, j.to_string())
+                .with_context(|| format!("writing trace JSON to {path}"))?;
+        }
+        if let Some(path) = &t.csv_path {
+            std::fs::write(path, crate::obs::trace::csv(rec))
+                .with_context(|| format!("writing trace CSV to {path}"))?;
+        }
+        Ok(())
+    }
+
     fn run_single(&self, cfg: &SimConfig) -> Result<RunReport> {
-        let rep = self.compiled.simulate(cfg)?;
-        Ok(self.report("simulate", rep.throughput, rep.latency * 1e3, rep.to_json()))
+        match &self.trace {
+            None => {
+                let rep = self.compiled.simulate(cfg)?;
+                Ok(self.report("simulate", rep.throughput, rep.latency * 1e3, rep.to_json()))
+            }
+            Some(t) => {
+                let mut rec = Recorder::new(t.window);
+                let rep = self.compiled.simulate_probed(cfg, &mut rec)?;
+                let mut run =
+                    self.report("simulate", rep.throughput, rep.latency * 1e3, rep.to_json());
+                run.profile = rec.profile();
+                self.write_trace(t, &rec)?;
+                Ok(run)
+            }
+        }
     }
 
     fn run_fleet(&self, popts: &PartitionOptions, fcfg: &FleetConfig) -> Result<RunReport> {
         let plan = self.compiled.plan();
         let pp = partition(self.compiled.network(), &plan.device, &plan.options, popts)
             .context("partitioning for fleet deployment")?;
-        let rep = FleetSim::new(&pp)?.run(fcfg)?;
+        let fleet = FleetSim::new(&pp)?;
+        let mut rec = self.trace.as_ref().map(|t| Recorder::new(t.window));
+        let rep = match rec.as_mut() {
+            None => fleet.run(fcfg)?,
+            Some(r) => fleet.run_probed(fcfg, r)?,
+        };
         let mut detail = rep.to_json();
         detail.set("est_throughput", pp.est_throughput());
-        Ok(self.report("fleet", rep.aggregate_throughput, rep.latency * 1e3, detail))
+        let mut run = self.report("fleet", rep.aggregate_throughput, rep.latency * 1e3, detail);
+        if let (Some(t), Some(r)) = (&self.trace, &rec) {
+            run.profile = r.profile();
+            self.write_trace(t, r)?;
+        }
+        Ok(run)
     }
 
     fn run_serve(&self, opts: &ServeOptions) -> Result<RunReport> {
@@ -176,7 +251,21 @@ impl<'a> Deployment<'a> {
         };
         let pixels: usize = cfg.input_dims.iter().product();
 
-        let router = Arc::new(FleetRouter::start(cfg, opts.replicas)?);
+        let router =
+            Arc::new(FleetRouter::start_with_tracing(cfg, opts.replicas, self.trace.is_some())?);
+        // Live Prometheus exposition for the duration of the run. The
+        // server's closure holds its own Arc over the router, so it must
+        // be stopped before the router can be unwrapped for shutdown.
+        let metrics_srv = match opts.metrics_port {
+            None => None,
+            Some(port) => {
+                let r = router.clone();
+                let srv = MetricsServer::start(port, Arc::new(move || r.prometheus()))
+                    .context("starting the metrics endpoint")?;
+                eprintln!("metrics: http://{}/metrics", srv.addr());
+                Some(srv)
+            }
+        };
         // Spread requests over the clients without dropping the remainder:
         // the first `requests % clients` threads take one extra.
         let base = opts.requests / opts.clients;
@@ -203,7 +292,22 @@ impl<'a> Deployment<'a> {
         for h in handles {
             ok += h.join().expect("serve client thread panicked");
         }
-        let rep = Arc::into_inner(router).expect("all clients joined").shutdown();
+        if let Some(srv) = metrics_srv {
+            srv.stop();
+        }
+        let rep = Arc::into_inner(router)
+            .expect("all clients joined and the metrics endpoint stopped")
+            .shutdown();
+
+        // Serving traces are wall-clock request spans (the cycle-domain
+        // CSV form does not apply here).
+        if let Some(t) = &self.trace {
+            if let Some(path) = &t.json_path {
+                let j = crate::obs::trace::chrome_serve_trace(&rep.request_spans, opts.replicas);
+                std::fs::write(path, j.to_string())
+                    .with_context(|| format!("writing serve trace JSON to {path}"))?;
+            }
+        }
 
         let mut detail = rep.to_json();
         detail

@@ -42,7 +42,7 @@ mod report;
 
 pub use builder::{Session, SessionBuilder};
 pub use compiled::{CompiledModel, Provenance, PLAN_FORMAT};
-pub use deploy::{Deployment, DeploymentTarget, ServeOptions};
+pub use deploy::{Deployment, DeploymentTarget, ServeOptions, TraceOptions};
 pub use report::RunReport;
 
 #[cfg(test)]
@@ -131,5 +131,32 @@ mod tests {
         let j = rep.to_json().to_string();
         assert!(j.contains("\"target\":\"simulate\""), "{j}");
         assert!(j.contains("\"engines\""), "detail must embed the sim payload: {j}");
+    }
+
+    #[test]
+    fn traced_deployment_embeds_profile_and_writes_trace() {
+        let cm = Session::builder().model("resnet18").compile().unwrap();
+        let path = std::env::temp_dir().join("h2pipe_session_trace_test.json");
+        let rep = cm
+            .deploy(DeploymentTarget::SingleDevice(SimConfig {
+                images: 3,
+                warmup_images: 1,
+                ..SimConfig::default()
+            }))
+            .with_trace(TraceOptions {
+                json_path: Some(path.display().to_string()),
+                csv_path: None,
+                window: 2048,
+            })
+            .run()
+            .unwrap();
+        assert!(!matches!(rep.profile, crate::util::Json::Null), "traced run carries a profile");
+        let j = rep.to_json().to_string();
+        assert!(j.contains("\"profile\""), "{j}");
+        assert!(j.contains("\"bottlenecks\""), "{j}");
+        let text = std::fs::read_to_string(&path).unwrap();
+        let parsed = crate::util::Json::parse(&text).unwrap();
+        assert!(parsed.get("traceEvents").is_some(), "trace file must be valid trace JSON");
+        let _ = std::fs::remove_file(&path);
     }
 }

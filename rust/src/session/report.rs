@@ -31,6 +31,10 @@ pub struct RunReport {
     /// Target-specific payload (`SimReport`/`FleetReport`/
     /// `FleetServeReport` JSON).
     pub detail: Json,
+    /// Flight-recorder profile summary (`obs::Recorder::profile`) when the
+    /// run was traced; `Json::Null` (and omitted from the JSON form)
+    /// otherwise, so untraced reports are byte-identical to before.
+    pub profile: Json,
     /// Findings from the automatic post-compile verifier pass
     /// (`h2pipe check` run over the artifact before execution). Empty
     /// for a clean plan.
@@ -48,6 +52,9 @@ impl RunReport {
             .set("throughput", self.throughput)
             .set("latency_ms", self.latency_ms)
             .set("detail", self.detail.clone());
+        if !matches!(self.profile, Json::Null) {
+            o.set("profile", self.profile.clone());
+        }
         let mut diags = Json::Arr(Vec::new());
         for d in &self.diagnostics {
             diags.push(d.to_json());
@@ -89,9 +96,11 @@ mod tests {
             throughput: 4174.0,
             latency_ms: 1.25,
             detail: Json::obj(),
+            profile: Json::Null,
             diagnostics: Vec::new(),
         };
         let j = r.to_json().to_string();
+        assert!(!j.contains("\"profile\""), "null profile must be omitted: {j}");
         assert!(j.contains("\"target\":\"simulate\""), "{j}");
         assert!(j.contains("\"throughput\":4174"), "{j}");
         assert!(j.contains("\"options_hash\":\"00000000deadbeef\""), "{j}");

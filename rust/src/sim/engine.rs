@@ -38,6 +38,14 @@ pub struct EngineStats {
     pub weight_frozen: u64,
 }
 
+impl EngineStats {
+    /// Total accounted cycles (active + every stall class) — the
+    /// denominator for stall-fraction and flight-recorder window checks.
+    pub fn total(&self) -> u64 {
+        self.active + self.input_starved + self.output_blocked + self.weight_frozen
+    }
+}
+
 /// Cycle-level state of one layer engine.
 #[derive(Debug, Clone)]
 pub struct LayerEngineSim {

@@ -17,5 +17,5 @@ pub mod pipeline;
 pub mod weights;
 
 pub use engine::{EngineState, LayerEngineSim};
-pub use pipeline::{PipelineSim, SimConfig, SimReport};
+pub use pipeline::{EngineStat, PipelineSim, SimConfig, SimReport};
 pub use weights::WeightSubsystem;

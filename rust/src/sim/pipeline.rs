@@ -11,6 +11,7 @@ use anyhow::{bail, Result};
 
 use crate::compiler::AcceleratorPlan;
 use crate::nn::{Network, OpKind};
+use crate::obs::Probe;
 use crate::sim::engine::{EngineState, LayerEngineSim};
 use crate::sim::weights::WeightSubsystem;
 
@@ -29,6 +30,20 @@ impl Default for SimConfig {
     fn default() -> Self {
         Self { images: 6, warmup_images: 2, max_base_ticks: 40_000_000_000 }
     }
+}
+
+/// One engine's end-of-run stall accounting, by name.
+///
+/// Replaces the positional `(String, u64, u64, u64, u64)` tuple the
+/// report used to carry — the JSON form was already keyed, so the
+/// serialized artifact/report schema is unchanged.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EngineStat {
+    pub name: String,
+    pub active: u64,
+    pub input_starved: u64,
+    pub output_blocked: u64,
+    pub weight_frozen: u64,
 }
 
 /// Simulation results.
@@ -52,8 +67,8 @@ pub struct SimReport {
     pub hbm_efficiency: f64,
     /// Total core cycles simulated.
     pub core_cycles: u64,
-    /// Per-engine (name, active, input_starved, output_blocked, frozen).
-    pub engine_stats: Vec<(String, u64, u64, u64, u64)>,
+    /// Per-engine stall accounting.
+    pub engine_stats: Vec<EngineStat>,
 }
 
 impl SimReport {
@@ -62,13 +77,13 @@ impl SimReport {
     pub fn to_json(&self) -> crate::util::Json {
         use crate::util::Json;
         let mut engines = Json::Arr(Vec::new());
-        for (name, active, starved, blocked, frozen) in &self.engine_stats {
+        for s in &self.engine_stats {
             let mut e = Json::obj();
-            e.set("name", name.as_str())
-                .set("active", *active)
-                .set("input_starved", *starved)
-                .set("output_blocked", *blocked)
-                .set("weight_frozen", *frozen);
+            e.set("name", s.name.as_str())
+                .set("active", s.active)
+                .set("input_starved", s.input_starved)
+                .set("output_blocked", s.output_blocked)
+                .set("weight_frozen", s.weight_frozen);
             engines.push(e);
         }
         let mut o = Json::obj();
@@ -278,14 +293,58 @@ impl PipelineSim {
     /// of its shards' sims in lockstep and exchanges line/credit state
     /// between ticks.
     pub fn step_base_tick(&mut self, images: u64) {
+        self.step_base_tick_probed(images, None);
+    }
+
+    /// [`Self::step_base_tick`] with an optional observability probe.
+    ///
+    /// With `None` this is the exact plain tick (the `Option` check is the
+    /// only added work, which the disabled-overhead bench bounds). With a
+    /// probe, the HBM domain reports burst completions as they drain and
+    /// the core domain publishes a cumulative sample of every engine / PC /
+    /// FIFO every `probe.window()` core cycles.
+    pub fn step_base_tick_probed(&mut self, images: u64, mut probe: Option<&mut dyn Probe>) {
         if self.t % 3 == 0 {
-            self.weights.hbm_tick();
+            self.weights.hbm_tick_probed(probe.as_deref_mut());
         }
         if self.t % 4 == 0 {
             self.core_cycles += 1;
             self.step_core(images);
+            if let Some(p) = probe {
+                if self.core_cycles % p.window().max(1) == 0 {
+                    self.sample_probe(p);
+                }
+            }
         }
         self.t += 1;
+    }
+
+    /// Publish one cumulative sample of every observable counter to `p`.
+    /// Samples are cumulative; the recorder turns consecutive samples into
+    /// window deltas, so window sums equal end-of-run aggregates exactly.
+    pub fn sample_probe(&mut self, p: &mut dyn Probe) {
+        let now = self.core_cycles;
+        for (i, e) in self.engines.iter().enumerate() {
+            p.engine_sample(now, i, &self.plan.layers[e.layer_idx].stats.name, &e.stats);
+        }
+        for i in 0..self.engines.len() {
+            if self.weights.layer_has_streams(i) {
+                p.fifo_sample(
+                    now,
+                    i,
+                    &self.plan.layers[i].stats.name,
+                    self.weights.fifo_words(i),
+                    self.weights.fifo_capacity(i),
+                    self.weights.fifo_peak(i),
+                );
+            }
+        }
+        self.weights.for_each_pc_stats(|pc, stats| p.pc_sample(now, pc, stats));
+    }
+
+    /// The attached weight subsystem (read-only; for observability tests).
+    pub fn weight_subsystem(&self) -> &WeightSubsystem {
+        &self.weights
     }
 
     /// One core-domain cycle across all engines.
@@ -338,19 +397,38 @@ impl PipelineSim {
 
     /// Run the simulation.
     pub fn run(&mut self, cfg: &SimConfig) -> Result<SimReport> {
+        self.run_inner(cfg, None)
+    }
+
+    /// [`Self::run`] with a flight-recorder probe attached.
+    ///
+    /// A trailing flush sample is published after the loop so the final
+    /// (partial) window is recorded and window sums stay conservative.
+    pub fn run_probed(&mut self, cfg: &SimConfig, probe: &mut dyn Probe) -> Result<SimReport> {
+        self.run_inner(cfg, Some(probe))
+    }
+
+    fn run_inner(
+        &mut self,
+        cfg: &SimConfig,
+        mut probe: Option<&mut dyn Probe>,
+    ) -> Result<SimReport> {
         let images = cfg.images.max(cfg.warmup_images + 1);
         let mut warmup_done_at: Option<u64> = None;
         loop {
             if self.t >= cfg.max_base_ticks {
                 bail!("simulation exceeded max_base_ticks — pipeline wedged?");
             }
-            self.step_base_tick(images);
+            self.step_base_tick_probed(images, probe.as_deref_mut());
             if warmup_done_at.is_none() && self.sink_images_done() >= cfg.warmup_images {
                 warmup_done_at = Some(self.core_cycles);
             }
             if self.all_done(images) {
                 break;
             }
+        }
+        if let Some(p) = probe {
+            self.sample_probe(p);
         }
 
         let hz = self.plan.device.core_mhz as f64 * 1e6;
@@ -376,13 +454,13 @@ impl PipelineSim {
             .iter()
             .map(|e| {
                 let s = &e.stats;
-                (
-                    self.plan.layers[e.layer_idx].stats.name.clone(),
-                    s.active,
-                    s.input_starved,
-                    s.output_blocked,
-                    s.weight_frozen,
-                )
+                EngineStat {
+                    name: self.plan.layers[e.layer_idx].stats.name.clone(),
+                    active: s.active,
+                    input_starved: s.input_starved,
+                    output_blocked: s.output_blocked,
+                    weight_frozen: s.weight_frozen,
+                }
             })
             .collect();
 

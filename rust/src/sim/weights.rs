@@ -17,8 +17,9 @@ use std::collections::HashMap;
 
 use crate::compiler::AcceleratorPlan;
 use crate::fabric::CreditCounter;
-use crate::hbm::controller::{Dir, PcTuning, Request};
+use crate::hbm::controller::{Dir, PcStats, PcTuning, Request};
 use crate::hbm::HbmStack;
+use crate::obs::Probe;
 
 /// Words of 80 bits delivered per 256-bit beat (240 of 256 bits used).
 pub const WORDS_PER_BEAT: u64 = 3;
@@ -70,6 +71,8 @@ pub struct WeightSubsystem {
     next_id: u64,
     burst: u32,
     words_per_burst: u64,
+    /// PCs per stack (global pseudo-channel id derivation for probes).
+    pcs_per_stack: u32,
     /// Total weight-read beats completed (bandwidth accounting).
     pub beats_read: u64,
 }
@@ -149,6 +152,7 @@ impl WeightSubsystem {
             next_id: 0,
             burst: plan.burst_len,
             words_per_burst: plan.burst_len as u64 * WORDS_PER_BEAT,
+            pcs_per_stack: geom.pcs_per_stack,
             beats_read: 0,
         }
     }
@@ -161,6 +165,13 @@ impl WeightSubsystem {
     /// Advance the HBM clock domain one controller cycle: issue prefetch
     /// reads (credit-gated) and collect completions.
     pub fn hbm_tick(&mut self) {
+        self.hbm_tick_probed(None);
+    }
+
+    /// [`Self::hbm_tick`] with an optional probe receiving one
+    /// [`Probe::hbm_burst`] event per completed weight burst. `None`
+    /// costs one branch in the completion drain.
+    pub fn hbm_tick_probed(&mut self, mut probe: Option<&mut dyn Probe>) {
         let words_per_burst = self.words_per_burst;
         // one issue attempt per PC per cycle, round-robin over its streams
         for g in &mut self.pc_groups {
@@ -193,13 +204,17 @@ impl WeightSubsystem {
         for &(st, ch) in &self.active_channels {
             let channel = &mut self.stacks[st].channels[ch];
             channel.tick();
-            for pcc in channel.pcs.iter_mut() {
+            for (k, pcc) in channel.pcs.iter_mut().enumerate() {
                 for c in pcc.drain_completions() {
                     if let Some((si, words)) = self.pending.remove(&c.id) {
                         let s = &mut self.streams[si];
                         s.fifo_words += words;
                         s.max_words = s.max_words.max(s.fifo_words);
                         self.beats_read += self.burst as u64;
+                        if let Some(p) = probe.as_deref_mut() {
+                            let pc = st as u32 * self.pcs_per_stack + (ch * 2 + k) as u32;
+                            p.hbm_burst(pc, c.accept_cycle, c.done_cycle, self.burst);
+                        }
                     }
                 }
             }
@@ -229,6 +244,35 @@ impl WeightSubsystem {
     /// Aggregate FIFO occupancy for a layer (diagnostics).
     pub fn fifo_words(&self, layer_idx: usize) -> u64 {
         self.by_layer[layer_idx].iter().map(|&si| self.streams[si].fifo_words).sum()
+    }
+
+    /// Aggregate compiled FIFO capacity for a layer in words (the credit
+    /// window each stream advertises, summed over the layer's streams).
+    pub fn fifo_capacity(&self, layer_idx: usize) -> u64 {
+        self.by_layer[layer_idx].iter().map(|&si| self.streams[si].credits.max() as u64).sum()
+    }
+
+    /// High-water mark of a layer's FIFO occupancy (sum of per-stream
+    /// peaks — an upper bound on the simultaneous peak, which is the
+    /// conservative direction for checking the compiled depth).
+    pub fn fifo_peak(&self, layer_idx: usize) -> u64 {
+        self.by_layer[layer_idx].iter().map(|&si| self.streams[si].max_words).sum()
+    }
+
+    /// True when the layer streams weights from HBM (has streams).
+    pub fn layer_has_streams(&self, layer_idx: usize) -> bool {
+        !self.by_layer[layer_idx].is_empty()
+    }
+
+    /// Visit the cumulative controller stats of every weight-carrying
+    /// pseudo-channel as `(global_pc, stats)`, in PC order.
+    pub fn for_each_pc_stats(&self, mut f: impl FnMut(u32, &PcStats)) {
+        for g in &self.pc_groups {
+            let pc = g.stack_idx as u32 * self.pcs_per_stack + g.local_pc as u32;
+            let stats =
+                &self.stacks[g.stack_idx].channels[g.local_pc / 2].pcs[g.local_pc % 2].stats;
+            f(pc, stats);
+        }
     }
 
     /// Mean HBM read efficiency across active PCs (busy-cycle basis).

@@ -74,72 +74,152 @@ impl OnlineStats {
     }
 }
 
-/// Batch percentile computation over collected samples.
+/// Batch percentile estimation over a log-bucketed histogram.
 ///
-/// The Fig. 3b latency experiment reports min/avg/max; the serving example
-/// additionally reports p50/p90/p99, so we keep the raw samples.
-#[derive(Debug, Clone, Default)]
+/// The Fig. 3b latency experiment reports min/avg/max; the serving stack
+/// reports p50/p99 on every scrape. Keeping raw samples made each
+/// percentile query O(n log n) and memory O(n) for the lifetime of a
+/// server; instead this stores HdrHistogram-style buckets — one power-of-2
+/// octave split into [`Percentiles::SUBBUCKETS`] linear sub-buckets —
+/// covering `[1e-9, 1e12]`. Bucket midpoints bound the relative error by
+/// `1 / (2 * SUBBUCKETS)` (< 1%); min, max, and mean are tracked exactly,
+/// so p0/p100/mean keep their old exact values and an empty histogram
+/// still reports NaN everywhere.
+#[derive(Debug, Clone)]
 pub struct Percentiles {
-    samples: Vec<f64>,
-    sorted: bool,
+    /// Bucket counts, grown on demand up to `OCTAVES * SUBBUCKETS`.
+    buckets: Vec<u64>,
+    /// Samples below `MIN_TRACKED` (or non-finite) — reported as `min`.
+    underflow: u64,
+    n: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Percentiles {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl Percentiles {
+    /// Linear sub-buckets per power-of-2 octave (relative error <= 0.4%).
+    pub const SUBBUCKETS: usize = 128;
+    /// Smallest trackable magnitude (1 ns when samples are seconds).
+    const MIN_TRACKED: f64 = 1e-9;
+    /// Largest trackable magnitude; beyond it samples clamp to the top
+    /// bucket (min/max stay exact regardless).
+    const MAX_TRACKED: f64 = 1e12;
+
     pub fn new() -> Self {
-        Self::default()
+        Self {
+            buckets: Vec::new(),
+            underflow: 0,
+            n: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
     }
 
     pub fn push(&mut self, x: f64) {
-        self.samples.push(x);
-        self.sorted = false;
+        self.n += 1;
+        self.sum += x;
+        if x < self.min {
+            self.min = x;
+        }
+        if x > self.max {
+            self.max = x;
+        }
+        match Self::bucket_index(x) {
+            None => self.underflow += 1,
+            Some(i) => {
+                if i >= self.buckets.len() {
+                    self.buckets.resize(i + 1, 0);
+                }
+                self.buckets[i] += 1;
+            }
+        }
     }
 
     pub fn len(&self) -> usize {
-        self.samples.len()
+        self.n as usize
     }
 
     pub fn is_empty(&self) -> bool {
-        self.samples.is_empty()
+        self.n == 0
     }
 
-    fn ensure_sorted(&mut self) {
-        if !self.sorted {
-            self.samples.sort_by(|a, b| a.total_cmp(b));
-            self.sorted = true;
+    /// Histogram slot for `x`: octave `floor(log2(x / MIN_TRACKED))`,
+    /// linear sub-bucket within the octave. `None` = underflow.
+    fn bucket_index(x: f64) -> Option<usize> {
+        if !(x >= Self::MIN_TRACKED) {
+            return None; // below range, zero, negative, or NaN
         }
+        let r = x.min(Self::MAX_TRACKED) / Self::MIN_TRACKED;
+        let octave = r.log2().floor() as usize;
+        let sub = (((r / (octave as f64).exp2()) - 1.0) * Self::SUBBUCKETS as f64).floor()
+            as usize;
+        Some(octave * Self::SUBBUCKETS + sub.min(Self::SUBBUCKETS - 1))
     }
 
-    /// Percentile in `[0, 100]` by nearest-rank interpolation.
-    pub fn percentile(&mut self, p: f64) -> f64 {
+    /// `[lo, hi)` value bounds of bucket `i` (inverse of `bucket_index`).
+    fn bucket_bounds(i: usize) -> (f64, f64) {
+        let octave = (i / Self::SUBBUCKETS) as f64;
+        let sub = (i % Self::SUBBUCKETS) as f64;
+        let base = Self::MIN_TRACKED * octave.exp2();
+        let width = base / Self::SUBBUCKETS as f64;
+        (base + sub * width, base + (sub + 1.0) * width)
+    }
+
+    /// Percentile in `[0, 100]`; midpoint of the covering bucket, clamped
+    /// to the exact observed `[min, max]`.
+    pub fn percentile(&self, p: f64) -> f64 {
         assert!((0.0..=100.0).contains(&p));
-        self.ensure_sorted();
-        if self.samples.is_empty() {
+        if self.n == 0 {
             return f64::NAN;
         }
-        let rank = p / 100.0 * (self.samples.len() - 1) as f64;
-        let lo = rank.floor() as usize;
-        let hi = rank.ceil() as usize;
-        let frac = rank - lo as f64;
-        self.samples[lo] * (1.0 - frac) + self.samples[hi] * frac
+        // The endpoints are tracked exactly; only interior quantiles go
+        // through the histogram.
+        if p == 0.0 {
+            return self.min;
+        }
+        if p == 100.0 {
+            return self.max;
+        }
+        let rank = p / 100.0 * (self.n - 1) as f64;
+        let mut cum = self.underflow as f64;
+        if cum > rank {
+            return self.min;
+        }
+        for (i, &c) in self.buckets.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            cum += c as f64;
+            if cum > rank {
+                let (lo, hi) = Self::bucket_bounds(i);
+                return ((lo + hi) * 0.5).clamp(self.min, self.max);
+            }
+        }
+        self.max
     }
 
-    pub fn min(&mut self) -> f64 {
-        self.percentile(0.0)
+    pub fn min(&self) -> f64 {
+        if self.n == 0 { f64::NAN } else { self.min }
     }
 
-    pub fn max(&mut self) -> f64 {
-        self.percentile(100.0)
+    pub fn max(&self) -> f64 {
+        if self.n == 0 { f64::NAN } else { self.max }
     }
 
-    pub fn median(&mut self) -> f64 {
+    pub fn median(&self) -> f64 {
         self.percentile(50.0)
     }
 
     pub fn mean(&self) -> f64 {
-        if self.samples.is_empty() {
-            return f64::NAN;
-        }
-        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+        if self.n == 0 { f64::NAN } else { self.sum / self.n as f64 }
     }
 }
 
@@ -187,17 +267,62 @@ mod tests {
         for i in 1..=100 {
             p.push(i as f64);
         }
+        // min / max / mean are tracked exactly; quantiles are histogram
+        // estimates within the documented ~1% relative error.
         assert_eq!(p.min(), 1.0);
         assert_eq!(p.max(), 100.0);
-        assert!((p.median() - 50.5).abs() < 1e-9);
-        assert!((p.percentile(90.0) - 90.1).abs() < 1e-9);
         assert!((p.mean() - 50.5).abs() < 1e-9);
+        assert!((p.median() - 50.5).abs() / 50.5 < 0.02, "median {}", p.median());
+        assert!((p.percentile(90.0) - 90.1).abs() / 90.1 < 0.02, "{}", p.percentile(90.0));
+        assert_eq!(p.percentile(0.0), 1.0);
+        assert_eq!(p.percentile(100.0), 100.0);
     }
 
     #[test]
     fn empty_percentiles_are_nan() {
-        let mut p = Percentiles::new();
+        let p = Percentiles::new();
         assert!(p.median().is_nan());
         assert!(p.mean().is_nan());
+        assert!(p.min().is_nan());
+    }
+
+    #[test]
+    fn histogram_tracks_exact_quantiles_on_100k_samples() {
+        // Log-uniform samples over 6 decades — the shape of serving
+        // latencies — checked against exact sorted-sample quantiles.
+        let mut rng = crate::util::XorShift64::new(0x0b5ef);
+        let mut p = Percentiles::new();
+        let mut exact: Vec<f64> = Vec::with_capacity(100_000);
+        for _ in 0..100_000 {
+            let x = 10f64.powf(rng.next_f64() * 6.0 - 4.0); // 1e-4 .. 1e2
+            p.push(x);
+            exact.push(x);
+        }
+        exact.sort_by(|a, b| a.total_cmp(b));
+        for q in [1.0, 10.0, 25.0, 50.0, 75.0, 90.0, 99.0, 99.9] {
+            let rank = q / 100.0 * (exact.len() - 1) as f64;
+            let lo = exact[rank.floor() as usize];
+            let hi = exact[rank.ceil() as usize];
+            let truth = lo + (hi - lo) * (rank - rank.floor());
+            let est = p.percentile(q);
+            let rel = (est - truth).abs() / truth;
+            assert!(rel < 0.01, "p{q}: est {est} vs exact {truth} (rel {rel:.4})");
+        }
+        assert_eq!(p.min(), exact[0]);
+        assert_eq!(p.max(), *exact.last().unwrap());
+        assert_eq!(p.len(), 100_000);
+    }
+
+    #[test]
+    fn histogram_handles_out_of_range_samples() {
+        let mut p = Percentiles::new();
+        p.push(-3.0); // below range -> underflow, still exact min
+        p.push(0.0);
+        p.push(5.0);
+        assert_eq!(p.min(), -3.0);
+        assert_eq!(p.max(), 5.0);
+        assert_eq!(p.percentile(0.0), -3.0);
+        assert_eq!(p.percentile(100.0), 5.0);
+        assert_eq!(p.len(), 3);
     }
 }

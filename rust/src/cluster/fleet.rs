@@ -16,6 +16,7 @@ use anyhow::{ensure, Result};
 
 use crate::cluster::partition::PartitionPlan;
 use crate::fabric::CreditCounter;
+use crate::faults::{site_seed, FaultPlan, FaultTotals, LinkFaultKind};
 use crate::hbm::controller::PcStats;
 use crate::obs::Probe;
 use crate::sim::engine::EngineStats;
@@ -59,6 +60,8 @@ pub struct LinkStats {
     pub peak_occupancy: u64,
     /// Core cycles the upstream sink spent blocked on link credit.
     pub upstream_blocked: u64,
+    /// Base ticks a fault plan held this link stalled (0 without faults).
+    pub stalled_ticks: u64,
 }
 
 /// Per-shard measurement within one replica.
@@ -90,6 +93,10 @@ pub struct FleetReport {
     pub links: Vec<LinkStats>,
     /// Core cycles one replica ran for.
     pub core_cycles: u64,
+    /// Fault-injection ledger summed over all replicas — `Some` only
+    /// when a fault plan was armed, so healthy-run reports keep their
+    /// pre-fault shape.
+    pub faults: Option<FaultTotals>,
 }
 
 impl FleetReport {
@@ -102,6 +109,9 @@ impl FleetReport {
             o.set("lines", l.lines)
                 .set("peak_occupancy", l.peak_occupancy)
                 .set("upstream_blocked", l.upstream_blocked);
+            if self.faults.is_some() {
+                o.set("stalled_ticks", l.stalled_ticks);
+            }
             links.push(o);
         }
         let mut shards = Json::Arr(Vec::new());
@@ -124,6 +134,9 @@ impl FleetReport {
             .set("shard_stats", shards)
             .set("links", links)
             .set("core_cycles", self.core_cycles);
+        if let Some(f) = &self.faults {
+            o.set("faults", f.to_json());
+        }
         o
     }
 }
@@ -165,6 +178,13 @@ impl Probe for ShardProbe<'_> {
     fn hbm_burst(&mut self, pc: u32, accept_cycle: u64, done_cycle: u64, beats: u32) {
         self.inner.hbm_burst(self.pc_base + pc, accept_cycle, done_cycle, beats);
     }
+
+    fn fault_event(&mut self, site: u32, now: u64, kind: &str, detail: u64) {
+        // Only HBM sites live in a per-shard namespace; link and replica
+        // sites are already fleet-global.
+        let site = if kind.starts_with("hbm_") { self.pc_base + site } else { site };
+        self.inner.fault_event(site, now, kind, detail);
+    }
 }
 
 /// Result of one replica run.
@@ -176,12 +196,14 @@ struct ReplicaRun {
     shard_stats: Vec<ShardStats>,
     links: Vec<LinkStats>,
     core_cycles: u64,
+    faults: FaultTotals,
 }
 
 /// The fleet: N replicas of an M-shard pipeline.
 #[derive(Debug)]
 pub struct FleetSim {
     pp: PartitionPlan,
+    faults: Option<FaultPlan>,
 }
 
 impl FleetSim {
@@ -193,7 +215,18 @@ impl FleetSim {
             let down = w[1].net.input_shape();
             ensure!(up == down, "boundary shape mismatch: {up} -> {down}");
         }
-        Ok(Self { pp: pp.clone() })
+        Ok(Self { pp: pp.clone(), faults: None })
+    }
+
+    /// Arm a fault plan for subsequent runs. HBM error/throttle specs are
+    /// forwarded into each shard's weight subsystem (throttle windows use
+    /// fleet-global PC ids and are re-based per shard), link windows act
+    /// on the inter-device exchange, and replica outages switch the run
+    /// from the N-fold scale-out shortcut to simulating every replica.
+    pub fn apply_faults(&mut self, fp: &FaultPlan) -> Result<()> {
+        fp.validate()?;
+        self.faults = Some(fp.clone());
+        Ok(())
     }
 
     /// Run the fleet. One replica's shard pipeline is co-simulated
@@ -212,22 +245,57 @@ impl FleetSim {
         self.run_with(cfg, Some(probe))
     }
 
-    fn run_with(&self, cfg: &FleetConfig, probe: Option<&mut dyn Probe>) -> Result<FleetReport> {
+    fn run_with(&self, cfg: &FleetConfig, mut probe: Option<&mut dyn Probe>) -> Result<FleetReport> {
         ensure!(cfg.replicas >= 1, "need at least one replica");
         ensure!(cfg.link_capacity_lines >= 1, "link capacity must be >= 1 line");
-        let run = self.run_replica(cfg, probe)?;
+        if self.faults.is_none() {
+            // Healthy replicas share no simulated hardware and the run is
+            // deterministic, so N replicas are an exact N-fold scale-out.
+            let run = self.run_replica(cfg, probe, 0)?;
+            return Ok(FleetReport {
+                network: self.pp.network.clone(),
+                shards: self.pp.shards.len(),
+                replicas: cfg.replicas,
+                per_replica_throughput: run.throughput,
+                aggregate_throughput: run.throughput * cfg.replicas as f64,
+                latency: run.latency,
+                bottleneck_shard: run.bottleneck_shard,
+                bottleneck_engine: run.bottleneck_engine,
+                shard_stats: run.shard_stats,
+                links: run.links,
+                core_cycles: run.core_cycles,
+                faults: None,
+            });
+        }
+        // Faults break replica symmetry (outages name a replica index, and
+        // every site seed folds the replica in), so simulate each replica
+        // and sum. The probe watches replica 0.
+        let mut totals = FaultTotals::default();
+        let mut aggregate = 0.0;
+        let mut first: Option<ReplicaRun> = None;
+        for r in 0..cfg.replicas as usize {
+            let p = if r == 0 { probe.as_deref_mut() } else { None };
+            let run = self.run_replica(cfg, p, r)?;
+            totals.absorb(&run.faults);
+            aggregate += run.throughput;
+            if first.is_none() {
+                first = Some(run);
+            }
+        }
+        let run = first.expect("at least one replica ran");
         Ok(FleetReport {
             network: self.pp.network.clone(),
             shards: self.pp.shards.len(),
             replicas: cfg.replicas,
-            per_replica_throughput: run.throughput,
-            aggregate_throughput: run.throughput * cfg.replicas as f64,
+            per_replica_throughput: aggregate / cfg.replicas as f64,
+            aggregate_throughput: aggregate,
             latency: run.latency,
             bottleneck_shard: run.bottleneck_shard,
             bottleneck_engine: run.bottleneck_engine,
             shard_stats: run.shard_stats,
             links: run.links,
             core_cycles: run.core_cycles,
+            faults: Some(totals),
         })
     }
 
@@ -236,6 +304,7 @@ impl FleetSim {
         &self,
         cfg: &FleetConfig,
         mut probe: Option<&mut dyn Probe>,
+        rep_idx: usize,
     ) -> Result<ReplicaRun> {
         let images = cfg.images.max(cfg.warmup_images + 1);
         let shards = &self.pp.shards;
@@ -257,6 +326,46 @@ impl FleetSim {
             eb += s.plan.layers.len();
             pb += s.plan.device.hbm.total_pcs();
         }
+
+        // Arm per-shard HBM faults. Throttle windows address fleet-global
+        // PC ids, so each shard sees only the windows that fall inside its
+        // PC range, re-based to its local numbering; the site seed folds
+        // in (replica, shard) so no two devices share an error stream.
+        if let Some(fp) = &self.faults {
+            for i in 0..n {
+                let base = pc_bases[i] as usize;
+                let limit = base + shards[i].plan.device.hbm.total_pcs() as usize;
+                let mut local = fp.clone();
+                local.seed = site_seed(fp.seed, 0x0F1E_E700 + (rep_idx * n + i) as u64);
+                local.throttle = fp
+                    .throttle
+                    .iter()
+                    .filter(|t| t.pc >= base && t.pc < limit)
+                    .map(|t| {
+                        let mut t = t.clone();
+                        t.pc -= base;
+                        t
+                    })
+                    .collect();
+                if local.hbm.is_some() || !local.throttle.is_empty() {
+                    sims[i].apply_faults(&local);
+                }
+            }
+        }
+        // Link and outage windows for this replica, on the base-tick clock.
+        let link_faults: Vec<&crate::faults::LinkFault> =
+            self.faults.as_ref().map_or_else(Vec::new, |fp| fp.links.iter().collect());
+        let outages: Vec<&crate::faults::ReplicaOutage> = self
+            .faults
+            .as_ref()
+            .map_or_else(Vec::new, |fp| {
+                fp.replicas.iter().filter(|o| o.replica == rep_idx).collect()
+            });
+        let mut ftotals = FaultTotals::default();
+        let mut link_stalled = vec![0u64; n.saturating_sub(1)];
+        let mut stall_prev = vec![false; n.saturating_sub(1)];
+        let mut down_prev = false;
+
         let window = probe.as_deref().map_or(0, |p| p.window().max(1));
         let mut next_link_sample = window;
         let mut credits: Vec<CreditCounter> =
@@ -271,11 +380,36 @@ impl FleetSim {
         }
 
         let mut warmup_done_at: Option<u64> = None;
+        // Wall base-tick clock. Equals the sims' own base ticks on a
+        // healthy run; during an outage the sims freeze but the wall
+        // clock (and the fault windows defined on it) keeps advancing.
+        let mut t: u64 = 0;
         loop {
             ensure!(
-                sims[n - 1].base_ticks() < cfg.max_base_ticks,
+                t < cfg.max_base_ticks,
                 "fleet simulation exceeded max_base_ticks — pipeline wedged?"
             );
+            // Replica outage: the whole device pipeline freezes for the
+            // window (crash plus reboot are modelled as dead ticks — the
+            // wall-clock serving stack is where real reboot-from-artifact
+            // recovery lives). Queued work is delayed, never lost.
+            let down = outages.iter().any(|o| t >= o.start && t < o.end);
+            if down != down_prev {
+                let kind = if down { "replica_down" } else { "replica_up" };
+                if down {
+                    ftotals.injected += 1;
+                    ftotals.failed_over += 1;
+                }
+                if let Some(p) = probe.as_deref_mut() {
+                    p.fault_event(rep_idx as u32, t, kind, 0);
+                }
+                down_prev = down;
+            }
+            if down {
+                ftotals.outage_ticks += 1;
+                t += 1;
+                continue;
+            }
             for (i, s) in sims.iter_mut().enumerate() {
                 match probe.as_deref_mut() {
                     None => s.step_base_tick(images),
@@ -294,6 +428,39 @@ impl FleetSim {
             // minus lines retired downstream; the hardware-style counter
             // must never be overdrawn (that would mean dropped data).
             for i in 0..n - 1 {
+                // A stalled link moves nothing and returns no credits:
+                // both sides keep their last granted bounds, so upstream
+                // backpressure absorbs the window and no line is lost.
+                let stalled = link_faults.iter().any(|f| {
+                    f.link == i && f.kind == LinkFaultKind::Stall && t >= f.start && t < f.end
+                });
+                if stalled != stall_prev[i] {
+                    if stalled {
+                        ftotals.injected += 1;
+                        ftotals.retried += 1;
+                        if let Some(p) = probe.as_deref_mut() {
+                            p.fault_event(i as u32, t, "link_stall", 0);
+                        }
+                    }
+                    stall_prev[i] = stalled;
+                }
+                if stalled {
+                    link_stalled[i] += 1;
+                    ftotals.link_stall_ticks += 1;
+                    continue;
+                }
+                // Credit loss shrinks the window upstream may run ahead
+                // (floor 1 so the link still trickles); in-flight lines
+                // above the shrunken cap drain normally.
+                let lost: u32 = link_faults
+                    .iter()
+                    .filter(|f| f.link == i && t >= f.start && t < f.end)
+                    .filter_map(|f| match f.kind {
+                        LinkFaultKind::CreditLoss(l) => Some(l),
+                        LinkFaultKind::Stall => None,
+                    })
+                    .sum();
+                let eff_cap = cap.saturating_sub(u64::from(lost)).max(1);
                 let produced = sims[i].sink_lines_produced();
                 let consumed = sims[i + 1].head_lines_consumed();
                 let occupancy = produced - consumed;
@@ -307,7 +474,7 @@ impl FleetSim {
                     credits[i].release((held - occupancy) as u32);
                 }
                 peak[i] = peak[i].max(occupancy);
-                sims[i].set_sink_limit(consumed + cap);
+                sims[i].set_sink_limit(consumed + eff_cap);
                 sims[i + 1].set_input_limit(produced);
             }
             // Link windows sample on the sink shard's core-cycle window
@@ -336,6 +503,7 @@ impl FleetSim {
             if sims.iter().all(|s| s.all_done(images)) {
                 break;
             }
+            t += 1;
         }
 
         // Final flush: record the trailing partial window of every shard
@@ -390,8 +558,12 @@ impl FleetSim {
                 lines: sims[i].sink_lines_produced(),
                 peak_occupancy: peak[i],
                 upstream_blocked: sims[i].sink_output_blocked(),
+                stalled_ticks: link_stalled[i],
             })
             .collect();
+        for s in &sims {
+            ftotals.absorb(&s.fault_totals());
+        }
         Ok(ReplicaRun {
             throughput,
             latency,
@@ -400,6 +572,7 @@ impl FleetSim {
             shard_stats,
             links,
             core_cycles: last.core_cycles(),
+            faults: ftotals,
         })
     }
 }
@@ -442,6 +615,74 @@ mod tests {
             plain.throughput
         );
         assert!(rep.links.is_empty());
+    }
+
+    #[test]
+    fn link_stall_delays_but_conserves_lines() {
+        let d = DeviceConfig::stratix10_nx2100();
+        let net = zoo::resnet18();
+        let o = CompilerOptions::default();
+        let pp = partition(&net, &d, &o, &PartitionOptions { shards: Some(2), max_shards: 2 })
+            .unwrap();
+        let mut fleet = FleetSim::new(&pp).unwrap();
+        let mut fp = crate::faults::FaultPlan::new(11);
+        fp.links.push(crate::faults::LinkFault {
+            link: 0,
+            start: 5_000,
+            end: 60_000,
+            kind: LinkFaultKind::Stall,
+        });
+        fleet.apply_faults(&fp).unwrap();
+        let cfg = quick();
+        let rep = fleet.run(&cfg).unwrap();
+        let f = rep.faults.expect("fault plan armed");
+        assert_eq!(f.lost(), 0, "stall must delay, not drop");
+        assert!(f.injected >= 1 && f.link_stall_ticks > 0, "{f:?}");
+        assert!(rep.links[0].stalled_ticks > 0);
+        let boundary_h = pp.shards[0].net.layers().last().unwrap().out.h as u64;
+        assert_eq!(rep.links[0].lines, cfg.images * boundary_h, "no line lost or duplicated");
+        assert!(rep.links[0].peak_occupancy <= cfg.link_capacity_lines as u64);
+
+        let healthy = FleetSim::new(&pp).unwrap().run(&cfg).unwrap();
+        assert!(
+            rep.core_cycles >= healthy.core_cycles,
+            "a stalled link cannot finish earlier ({} < {})",
+            rep.core_cycles,
+            healthy.core_cycles
+        );
+        assert!(healthy.faults.is_none(), "healthy report keeps its pre-fault shape");
+    }
+
+    #[test]
+    fn replica_outage_is_absorbed_and_deterministic() {
+        let d = DeviceConfig::stratix10_nx2100();
+        let net = zoo::resnet18();
+        let o = CompilerOptions::default();
+        let pp = partition(&net, &d, &o, &PartitionOptions::default()).unwrap();
+        let mut fleet = FleetSim::new(&pp).unwrap();
+        let mut fp = crate::faults::FaultPlan::new(5);
+        fp.hbm = Some(crate::faults::HbmFaultSpec {
+            start: 0,
+            end: 100_000,
+            prob: 0.02,
+            max_replays: 3,
+        });
+        fp.replicas.push(crate::faults::ReplicaOutage { replica: 1, start: 10_000, end: 90_000 });
+        fleet.apply_faults(&fp).unwrap();
+        let cfg = FleetConfig { replicas: 2, ..quick() };
+        let rep = fleet.run(&cfg).unwrap();
+        let f = rep.faults.expect("fault plan armed");
+        assert_eq!(f.lost(), 0, "{f:?}");
+        assert!(f.outage_ticks > 0, "outage window must have been hit: {f:?}");
+        assert!(f.injected > 0 && f.injected == f.retried + f.failed_over + f.dropped, "{f:?}");
+        assert!(rep.aggregate_throughput > 0.0);
+
+        let again = fleet.run(&cfg).unwrap();
+        assert_eq!(
+            rep.to_json().to_string(),
+            again.to_json().to_string(),
+            "same seed, same scenario, same bytes"
+        );
     }
 
     #[test]

@@ -1,44 +1,68 @@
 //! Fleet-level request router: least-outstanding-requests over N replica
-//! servers.
+//! servers, with bounded failure recovery.
 //!
 //! Each replica is a full [`InferenceServer`] (own worker thread, own
 //! bounded queue, own batcher), standing in for one sharded accelerator
 //! fleet. The router keeps an outstanding-request count per replica,
 //! sends every request to the least-loaded replica (ties rotate
-//! round-robin so idle fleets still share work), and fails over to the
-//! next-least-loaded replica when a bounded queue rejects. Latency and
-//! rejection accounting happens at the router in a merged
-//! [`Metrics`], so the fleet report reflects what clients observed —
-//! including failover time — next to the per-replica breakdowns.
+//! round-robin so idle fleets still share work), and on failure retries
+//! through the remaining replicas in load order — capped by the recovery
+//! policy's attempt budget, with exponential backoff between sweeps, all
+//! inside the per-request deadline. A watchdog thread health-checks the
+//! workers and reboots crashed replicas from their boot config, so a
+//! `--faults` crash heals instead of shrinking the fleet forever.
+//! Latency, rejection, retry, failover, and reboot accounting happens at
+//! the router in a merged [`Metrics`], so the fleet report reflects what
+//! clients observed — including failover time — next to the per-replica
+//! breakdowns.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Mutex, MutexGuard, PoisonError};
-use std::time::Instant;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError, RwLock};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::{InferenceServer, Metrics, MetricsSnapshot, ServerConfig, ServerReport};
+use crate::coordinator::{
+    InferenceServer, Metrics, MetricsSnapshot, ServeError, ServerConfig, ServerReport,
+};
+use crate::faults::{FaultPlan, RecoveryPolicy};
 use crate::obs::RequestSpan;
 use crate::util::Json;
 
 #[derive(Debug)]
 struct Replica {
-    server: InferenceServer,
+    /// `RwLock` so `infer` holds a shared read while the watchdog swaps a
+    /// freshly booted server in under a write lock.
+    server: RwLock<InferenceServer>,
     outstanding: AtomicUsize,
+}
+
+impl Replica {
+    fn infer(&self, image: Vec<i32>) -> Result<Vec<i32>, ServeError> {
+        self.server.read().unwrap_or_else(PoisonError::into_inner).infer(image)
+    }
 }
 
 /// Router over N identical replicas.
 #[derive(Debug)]
 pub struct FleetRouter {
-    replicas: Vec<Replica>,
+    replicas: Arc<Vec<Replica>>,
     /// Round-robin tie-break cursor.
     rr: AtomicUsize,
-    metrics: Mutex<Metrics>,
+    metrics: Arc<Mutex<Metrics>>,
     /// Router boot time — the origin for request-span timestamps.
     started: Instant,
     /// Per-request spans for `serve --trace`; `None` = tracing off (the
     /// default: no per-request allocation on the serving path).
     spans: Option<Mutex<Vec<RequestSpan>>>,
+    /// Retry / deadline / admission knobs (defaults without a fault plan).
+    policy: RecoveryPolicy,
+    /// Whether a fault plan armed this router (gates the report's
+    /// `faults` block, keeping healthy-run reports byte-shaped as before).
+    faults_armed: bool,
+    /// Health-check watchdog (spawned only under a fault plan).
+    watchdog: Option<(Arc<AtomicBool>, JoinHandle<()>)>,
 }
 
 /// Fleet serving summary: merged client-side metrics plus the per-replica
@@ -62,6 +86,11 @@ pub struct FleetServeReport {
     /// Wall-clock request spans (empty unless the router was started with
     /// tracing enabled) — the input to `obs::trace::chrome_serve_trace`.
     pub request_spans: Vec<RequestSpan>,
+    /// Serve-side fault/recovery ledger — `Some` only on `--faults` runs.
+    /// `lost` is offered minus (completed + rejected): every request must
+    /// leave through exactly one of those doors, so it is 0 unless the
+    /// router itself leaks a request.
+    pub faults: Option<Json>,
 }
 
 impl FleetServeReport {
@@ -78,6 +107,9 @@ impl FleetServeReport {
             .set("metrics", self.metrics.clone())
             .set("modelled_throughput_rps", self.modelled_throughput)
             .set("per_replica", reps);
+        if let Some(f) = &self.faults {
+            o.set("faults", f.clone());
+        }
         o
     }
 }
@@ -85,29 +117,114 @@ impl FleetServeReport {
 impl FleetRouter {
     /// Boot `replicas` identical servers from one config.
     pub fn start(cfg: ServerConfig, replicas: usize) -> Result<Self> {
-        Self::start_with_tracing(cfg, replicas, false)
+        Self::start_full(cfg, replicas, false, None)
     }
 
     /// [`Self::start`], optionally recording one [`RequestSpan`] per
     /// completed request for `serve --trace`.
     pub fn start_with_tracing(cfg: ServerConfig, replicas: usize, trace: bool) -> Result<Self> {
+        Self::start_full(cfg, replicas, trace, None)
+    }
+
+    /// [`Self::start`] under a fault plan: per-replica serve faults are
+    /// armed from `plan.serve`, the recovery policy comes from
+    /// `plan.recovery`, and a watchdog thread reboots crashed replicas.
+    pub fn start_with_faults(
+        cfg: ServerConfig,
+        replicas: usize,
+        trace: bool,
+        plan: &FaultPlan,
+    ) -> Result<Self> {
+        plan.validate()?;
+        Self::start_full(cfg, replicas, trace, Some(plan))
+    }
+
+    fn start_full(
+        cfg: ServerConfig,
+        replicas: usize,
+        trace: bool,
+        plan: Option<&FaultPlan>,
+    ) -> Result<Self> {
         anyhow::ensure!(replicas >= 1, "need at least one replica");
+        let policy = plan.map_or_else(RecoveryPolicy::default, |p| p.recovery.clone());
+        // The healthy boot config: what the watchdog reboots from. The
+        // per-replica faults are one-shot — a rebooted replica comes back
+        // clean, as a re-provisioned machine would.
+        let mut boot_cfg = cfg;
+        boot_cfg.fault = None;
+        if plan.is_some() {
+            boot_cfg.request_deadline = Duration::from_millis(policy.request_deadline_ms);
+        }
         let replicas = (0..replicas)
             .map(|i| {
+                let mut rcfg = boot_cfg.clone();
+                if let Some(p) = plan {
+                    rcfg.fault = p.serve.iter().find(|s| s.replica == i).map(|s| s.kind);
+                }
                 Ok(Replica {
-                    server: InferenceServer::start(cfg.clone())
-                        .with_context(|| format!("starting replica {i}"))?,
+                    server: RwLock::new(
+                        InferenceServer::start(rcfg)
+                            .with_context(|| format!("starting replica {i}"))?,
+                    ),
                     outstanding: AtomicUsize::new(0),
                 })
             })
             .collect::<Result<Vec<_>>>()?;
+        let replicas = Arc::new(replicas);
+        let metrics = Arc::new(Mutex::new(Metrics::new()));
+        let watchdog = plan.map(|_| {
+            Self::spawn_watchdog(replicas.clone(), metrics.clone(), boot_cfg, policy.watchdog_ms)
+        });
         Ok(Self {
             replicas,
             rr: AtomicUsize::new(0),
-            metrics: Mutex::new(Metrics::new()),
+            metrics,
             started: Instant::now(),
             spans: trace.then(|| Mutex::new(Vec::new())),
+            faults_armed: plan.is_some(),
+            policy,
+            watchdog,
         })
+    }
+
+    /// The health-check loop: every `watchdog_ms`, any replica whose
+    /// worker thread has exited is rebooted from the healthy boot config.
+    /// Detection-to-serving time feeds the MTTR metric.
+    fn spawn_watchdog(
+        replicas: Arc<Vec<Replica>>,
+        metrics: Arc<Mutex<Metrics>>,
+        boot_cfg: ServerConfig,
+        watchdog_ms: u64,
+    ) -> (Arc<AtomicBool>, JoinHandle<()>) {
+        let stop = Arc::new(AtomicBool::new(false));
+        let s2 = stop.clone();
+        let handle = std::thread::spawn(move || {
+            while !s2.load(Ordering::SeqCst) {
+                std::thread::sleep(Duration::from_millis(watchdog_ms.max(1)));
+                for r in replicas.iter() {
+                    let healthy =
+                        r.server.read().unwrap_or_else(PoisonError::into_inner).is_healthy();
+                    if healthy {
+                        continue;
+                    }
+                    let t0 = Instant::now();
+                    match InferenceServer::start(boot_cfg.clone()) {
+                        Ok(fresh) => {
+                            *r.server.write().unwrap_or_else(PoisonError::into_inner) = fresh;
+                            let mut m =
+                                metrics.lock().unwrap_or_else(PoisonError::into_inner);
+                            m.reboots += 1;
+                            m.mttr_sum_ms += t0.elapsed().as_secs_f64() * 1e3;
+                        }
+                        Err(_) => {
+                            // Boot failed (transient resource issue):
+                            // leave the replica down and retry next tick.
+                        }
+                    }
+                }
+            }
+        });
+        (stop, handle)
     }
 
     pub fn num_replicas(&self) -> usize {
@@ -122,41 +239,86 @@ impl FleetRouter {
     }
 
     /// Route one request to the replica with the fewest outstanding
-    /// requests; on rejection, fail over through the remaining replicas
-    /// in load order before giving up.
-    pub fn infer(&self, image: Vec<i32>) -> Result<Vec<i32>> {
+    /// requests; on failure, retry through the remaining replicas in load
+    /// order, then back off exponentially and sweep again — all bounded
+    /// by the policy's attempt budget and the per-request deadline.
+    pub fn infer(&self, image: Vec<i32>) -> Result<Vec<i32>, ServeError> {
         let n = self.replicas.len();
         let start = Instant::now();
-        let rot = self.rr.fetch_add(1, Ordering::Relaxed);
-        let mut order: Vec<usize> = (0..n).map(|k| (rot + k) % n).collect();
-        // stable sort: equal loads keep the rotated order
-        order.sort_by_key(|&i| self.replicas[i].outstanding.load(Ordering::SeqCst));
-        let mut last_err = None;
-        for &i in &order {
-            let r = &self.replicas[i];
-            r.outstanding.fetch_add(1, Ordering::SeqCst);
-            let res = r.server.infer(image.clone());
-            r.outstanding.fetch_sub(1, Ordering::SeqCst);
-            match res {
-                Ok(out) => {
-                    self.metrics().record(start.elapsed().as_secs_f64());
-                    if let Some(spans) = &self.spans {
-                        let span = RequestSpan {
-                            start_us: (start - self.started).as_secs_f64() * 1e6,
-                            dur_us: start.elapsed().as_secs_f64() * 1e6,
-                            replica: i,
-                        };
-                        spans.lock().unwrap_or_else(PoisonError::into_inner).push(span);
-                    }
-                    return Ok(out);
+        let deadline = Duration::from_millis(self.policy.request_deadline_ms);
+        {
+            let mut m = self.metrics();
+            m.offered += 1;
+            if self.policy.admission_max_outstanding > 0 {
+                let in_flight: usize =
+                    self.replicas.iter().map(|r| r.outstanding.load(Ordering::SeqCst)).sum();
+                if in_flight >= self.policy.admission_max_outstanding {
+                    m.rejected += 1;
+                    m.shed += 1;
+                    return Err(ServeError::Overloaded);
                 }
-                Err(e) => last_err = Some(e),
             }
         }
+        let mut tries: u32 = 0;
+        let mut last = ServeError::ReplicaDown;
+        'sweeps: loop {
+            let rot = self.rr.fetch_add(1, Ordering::Relaxed);
+            let mut order: Vec<usize> = (0..n).map(|k| (rot + k) % n).collect();
+            // stable sort: equal loads keep the rotated order
+            order.sort_by_key(|&i| self.replicas[i].outstanding.load(Ordering::SeqCst));
+            for &i in &order {
+                if tries >= self.policy.max_attempts {
+                    break 'sweeps;
+                }
+                if start.elapsed() >= deadline {
+                    last = ServeError::Timeout;
+                    break 'sweeps;
+                }
+                tries += 1;
+                if tries > 1 {
+                    self.metrics().retries += 1;
+                }
+                let r = &self.replicas[i];
+                r.outstanding.fetch_add(1, Ordering::SeqCst);
+                let res = r.infer(image.clone());
+                r.outstanding.fetch_sub(1, Ordering::SeqCst);
+                match res {
+                    Ok(out) => {
+                        let mut m = self.metrics();
+                        m.record(start.elapsed().as_secs_f64());
+                        if tries > 1 {
+                            m.failovers += 1;
+                        }
+                        drop(m);
+                        if let Some(spans) = &self.spans {
+                            let span = RequestSpan {
+                                start_us: (start - self.started).as_secs_f64() * 1e6,
+                                dur_us: start.elapsed().as_secs_f64() * 1e6,
+                                replica: i,
+                            };
+                            spans.lock().unwrap_or_else(PoisonError::into_inner).push(span);
+                        }
+                        return Ok(out);
+                    }
+                    Err(e) => last = e,
+                }
+            }
+            if tries >= self.policy.max_attempts {
+                break;
+            }
+            // Exponential backoff before the next sweep, capped by the
+            // remaining deadline budget (a zero budget ends the request).
+            let remaining = deadline.saturating_sub(start.elapsed());
+            if remaining.is_zero() {
+                last = ServeError::Timeout;
+                break;
+            }
+            let backoff =
+                Duration::from_millis(self.policy.backoff_ms.saturating_mul(1 << tries.min(10)));
+            std::thread::sleep(backoff.min(remaining));
+        }
         self.metrics().rejected += 1;
-        // `start` guarantees replicas >= 1, so the loop ran at least once.
-        Err(last_err.expect("FleetRouter::start enforces replicas >= 1"))
-            .context("all replicas rejected the request")
+        Err(last)
     }
 
     /// Labelled live snapshots — the router's merged client-side view
@@ -165,7 +327,9 @@ impl FleetRouter {
     pub fn metrics_snapshots(&self) -> Vec<(String, MetricsSnapshot)> {
         let mut out = vec![("router".to_string(), self.metrics().snapshot())];
         for (i, r) in self.replicas.iter().enumerate() {
-            out.push((format!("replica{i}"), r.server.metrics_snapshot()));
+            let snap =
+                r.server.read().unwrap_or_else(PoisonError::into_inner).metrics_snapshot();
+            out.push((format!("replica{i}"), snap));
         }
         out
     }
@@ -176,15 +340,42 @@ impl FleetRouter {
         crate::obs::prometheus_text(&self.metrics_snapshots())
     }
 
-    /// Stop every replica and produce the merged fleet report.
-    pub fn shutdown(self) -> FleetServeReport {
-        let per_replica: Vec<ServerReport> =
-            self.replicas.into_iter().map(|r| r.server.shutdown()).collect();
-        let m = self.metrics.into_inner().unwrap_or_else(PoisonError::into_inner);
+    /// Stop the watchdog and every replica and produce the merged fleet
+    /// report.
+    pub fn shutdown(mut self) -> FleetServeReport {
+        if let Some((stop, handle)) = self.watchdog.take() {
+            stop.store(true, Ordering::SeqCst);
+            let _ = handle.join();
+        }
+        let replicas = Arc::try_unwrap(self.replicas)
+            .expect("watchdog joined; no other replica handles remain");
+        let per_replica: Vec<ServerReport> = replicas
+            .into_iter()
+            .map(|r| r.server.into_inner().unwrap_or_else(PoisonError::into_inner).shutdown())
+            .collect();
+        let m = Arc::try_unwrap(self.metrics)
+            .expect("watchdog joined; no other metrics handles remain")
+            .into_inner()
+            .unwrap_or_else(PoisonError::into_inner);
         let request_spans = self
             .spans
+            .take()
             .map(|s| s.into_inner().unwrap_or_else(PoisonError::into_inner))
             .unwrap_or_default();
+        let faults = self.faults_armed.then(|| {
+            let mut f = Json::obj();
+            f.set("injected", m.reboots)
+                .set("retried", m.retries)
+                .set("failed_over", m.failovers)
+                .set("dropped", m.rejected)
+                .set("recovered", m.failovers + m.reboots)
+                .set("lost", m.offered.saturating_sub(m.completed + m.rejected))
+                .set("timeouts", m.timeouts)
+                .set("shed", m.shed)
+                .set("reboots", m.reboots)
+                .set("mttr_ms", m.mttr_ms());
+            f
+        });
         FleetServeReport {
             replicas: per_replica.len(),
             completed: m.completed,
@@ -197,6 +388,7 @@ impl FleetRouter {
             metrics: m.to_json(),
             per_replica,
             request_spans,
+            faults,
         }
     }
 }
@@ -204,6 +396,7 @@ impl FleetRouter {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::faults::{ServeFault, ServeFaultKind};
 
     fn artifact_dir() -> String {
         format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
@@ -222,6 +415,7 @@ mod tests {
         let rep = router.shutdown();
         assert_eq!(rep.completed, 6);
         assert_eq!(rep.rejected, 0);
+        assert!(rep.faults.is_none(), "no fault plan, no faults block");
         for (i, r) in rep.per_replica.iter().enumerate() {
             assert_eq!(r.completed, 3, "replica {i} served {}", r.completed);
         }
@@ -285,5 +479,71 @@ mod tests {
         assert!((rep.modelled_throughput - 4000.0).abs() < 1.0);
         let j = rep.to_json().to_string();
         assert!(j.contains("\"replicas\":4"), "{j}");
+    }
+
+    #[test]
+    fn watchdog_reboots_a_crashed_replica_and_nothing_is_lost() {
+        let cfg = ServerConfig::cifarnet(&artifact_dir());
+        let mut plan = FaultPlan::new(3);
+        plan.serve =
+            vec![ServeFault { replica: 0, kind: ServeFaultKind::Crash { after_requests: 2 } }];
+        plan.recovery.watchdog_ms = 5;
+        plan.recovery.backoff_ms = 1;
+        let router = FleetRouter::start_with_faults(cfg, 2, false, &plan).unwrap();
+        let img = vec![1i32; 32 * 32 * 3];
+        // Enough sequential traffic to trip the crash and ride through
+        // the reboot; with failover every request must succeed.
+        for k in 0..16 {
+            router.infer(img.clone()).unwrap_or_else(|e| panic!("request {k}: {e}"));
+        }
+        // Wait for the watchdog to record the reboot.
+        let t0 = Instant::now();
+        while router.metrics().reboots == 0 && t0.elapsed() < Duration::from_secs(5) {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let rep = router.shutdown();
+        assert_eq!(rep.completed, 16);
+        assert_eq!(rep.rejected, 0);
+        let f = rep.faults.expect("fault plan arms the ledger");
+        let s = f.to_string();
+        assert!(s.contains("\"lost\":0"), "{s}");
+        let recovered = f.get("recovered").and_then(Json::as_u64).unwrap();
+        assert!(recovered > 0, "crash must surface as failover and/or reboot: {s}");
+        let reboots = f.get("reboots").and_then(Json::as_u64).unwrap();
+        assert!(reboots >= 1, "watchdog must have rebooted replica 0: {s}");
+        let j = rep.to_json().to_string();
+        assert!(j.contains("\"mttr_ms\":"), "{j}");
+    }
+
+    #[test]
+    fn admission_control_sheds_rather_than_queues_unboundedly() {
+        let mut cfg = ServerConfig::cifarnet(&artifact_dir());
+        cfg.batch_size = 1;
+        let mut plan = FaultPlan::new(4);
+        plan.serve = vec![ServeFault { replica: 0, kind: ServeFaultKind::Slow { extra_ms: 30 } }];
+        plan.recovery.admission_max_outstanding = 1;
+        plan.recovery.max_attempts = 1;
+        let router = std::sync::Arc::new(
+            FleetRouter::start_with_faults(cfg, 1, false, &plan).unwrap(),
+        );
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let r = router.clone();
+            handles.push(std::thread::spawn(move || {
+                let img = vec![2i32; 32 * 32 * 3];
+                for _ in 0..4 {
+                    let _ = r.infer(img.clone());
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let rep = std::sync::Arc::into_inner(router).unwrap().shutdown();
+        assert_eq!(rep.completed + rep.rejected, 32, "conservation");
+        let f = rep.faults.expect("fault plan arms the ledger");
+        assert!(f.to_string().contains("\"lost\":0"), "{f}");
+        let shed = f.get("shed").and_then(Json::as_u64).unwrap();
+        assert!(shed > 0, "8 clients against a 1-in-flight bound must shed: {f}");
     }
 }

@@ -10,10 +10,27 @@ pub struct Metrics {
     started: Instant,
     /// Wall-clock latency per request (seconds).
     latency: Percentiles,
+    /// Requests offered (router entry count). Zero on metrics that only
+    /// see completions (per-replica servers); when tracked, the
+    /// conservation invariant `offered == completed + rejected` is what
+    /// the fault ledger's `lost` is computed from.
+    pub offered: u64,
     /// Requests completed.
     pub completed: u64,
     /// Requests rejected by back-pressure.
     pub rejected: u64,
+    /// Retry attempts beyond a request's first try (router-level).
+    pub retries: u64,
+    /// Requests that completed on a later attempt than their first.
+    pub failovers: u64,
+    /// Requests that hit the per-request deadline.
+    pub timeouts: u64,
+    /// Requests shed by admission control (also counted in `rejected`).
+    pub shed: u64,
+    /// Watchdog reboots of crashed replicas.
+    pub reboots: u64,
+    /// Summed detection-to-recovered time across reboots (ms).
+    pub mttr_sum_ms: f64,
     /// Batches dispatched.
     pub batches: u64,
     /// Requests carried by those batches (batch-fill numerator).
@@ -30,6 +47,13 @@ pub struct Metrics {
 pub struct MetricsSnapshot {
     pub completed: u64,
     pub rejected: u64,
+    pub retries: u64,
+    pub failovers: u64,
+    pub timeouts: u64,
+    pub shed: u64,
+    pub reboots: u64,
+    /// Mean time to recovery across reboots (ms); 0 with no reboots.
+    pub mttr_ms: f64,
     pub batches: u64,
     pub batched_requests: u64,
     /// Seconds since the metrics window opened.
@@ -55,11 +79,28 @@ impl Metrics {
         Self {
             started: Instant::now(),
             latency: Percentiles::new(),
+            offered: 0,
             completed: 0,
             rejected: 0,
+            retries: 0,
+            failovers: 0,
+            timeouts: 0,
+            shed: 0,
+            reboots: 0,
+            mttr_sum_ms: 0.0,
             batches: 0,
             batched_requests: 0,
             batch_capacity: 0,
+        }
+    }
+
+    /// Mean time to recovery across watchdog reboots (ms); 0 when
+    /// nothing was ever rebooted.
+    pub fn mttr_ms(&self) -> f64 {
+        if self.reboots == 0 {
+            0.0
+        } else {
+            self.mttr_sum_ms / self.reboots as f64
         }
     }
 
@@ -123,6 +164,12 @@ impl Metrics {
         MetricsSnapshot {
             completed: self.completed,
             rejected: self.rejected,
+            retries: self.retries,
+            failovers: self.failovers,
+            timeouts: self.timeouts,
+            shed: self.shed,
+            reboots: self.reboots,
+            mttr_ms: self.mttr_ms(),
             batches: self.batches,
             batched_requests: self.batched_requests,
             uptime_s: self.uptime_s(),
@@ -143,6 +190,12 @@ impl Metrics {
         let mut o = Json::obj();
         o.set("completed", self.completed)
             .set("rejected", self.rejected)
+            .set("retries", self.retries)
+            .set("failovers", self.failovers)
+            .set("timeouts", self.timeouts)
+            .set("shed", self.shed)
+            .set("reboots", self.reboots)
+            .set("mttr_ms", self.mttr_ms())
             .set("batches", self.batches)
             .set("throughput_rps", self.throughput())
             .set("mean_latency_ms", self.mean_latency_ms())

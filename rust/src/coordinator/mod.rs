@@ -21,4 +21,4 @@ pub mod server;
 
 pub use boot::{boot_weights, BootReport};
 pub use metrics::{Metrics, MetricsSnapshot};
-pub use server::{InferenceServer, ServerConfig, ServerReport};
+pub use server::{InferenceServer, ServeError, ServerConfig, ServerReport};

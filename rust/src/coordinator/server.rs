@@ -16,8 +16,41 @@ use anyhow::{Context, Result};
 
 use crate::compiler::AcceleratorPlan;
 use crate::coordinator::metrics::Metrics;
+use crate::faults::ServeFaultKind;
 use crate::runtime::{reference, Executable, Runtime};
 use crate::util::Json;
+
+/// Typed serving failure — what a client can actually branch on (retry?
+/// fail over? shed load?), replacing the stringly `anyhow` errors the
+/// serving path used to surface.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// The bounded queue was full (back-pressure) or admission control
+    /// shed the request. Retrying elsewhere / later is reasonable.
+    Overloaded,
+    /// No response within the request deadline. The work may still
+    /// complete server-side; the response is discarded.
+    Timeout,
+    /// The worker thread is gone — crashed or shut down. Fail over and
+    /// let the watchdog reboot it.
+    ReplicaDown,
+    /// The backend rejected this specific request (bad input, model
+    /// error); retrying the same payload will fail again.
+    Backend(String),
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Overloaded => write!(f, "server overloaded (queue full or load shed)"),
+            Self::Timeout => write!(f, "request deadline exceeded"),
+            Self::ReplicaDown => write!(f, "replica worker is down"),
+            Self::Backend(e) => write!(f, "backend error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
 
 /// Server configuration.
 #[derive(Debug, Clone)]
@@ -39,6 +72,13 @@ pub struct ServerConfig {
     /// cycle sim's measured rate); left at 0.0 the report's
     /// `modelled_throughput` is 0 rather than wrong.
     pub modelled_image_s: f64,
+    /// Per-request response deadline for [`InferenceServer::infer`]'s
+    /// `recv_timeout` — the bound that turns a wedged worker into a
+    /// typed [`ServeError::Timeout`] instead of an unbounded hang.
+    pub request_deadline: Duration,
+    /// Serving-side fault injection for this server instance (`--faults`
+    /// runs only); `None` in production.
+    pub fault: Option<ServeFaultKind>,
 }
 
 impl ServerConfig {
@@ -60,6 +100,8 @@ impl ServerConfig {
             queue_depth: 256,
             batch_timeout: Duration::from_millis(2),
             modelled_image_s: 0.0,
+            request_deadline: Duration::from_secs(2),
+            fault: None,
         })
     }
 
@@ -162,22 +204,38 @@ impl InferenceServer {
         Ok(Self { tx: Some(tx), worker: Some(worker), metrics, cfg })
     }
 
-    /// Submit one image; blocks until the result arrives. Returns an
-    /// error when the queue is full (back-pressure).
-    pub fn infer(&self, image: Vec<i32>) -> Result<Vec<i32>> {
+    /// Submit one image; blocks until the result arrives or the
+    /// configured `request_deadline` expires. Every failure mode is a
+    /// typed [`ServeError`] — a full queue, a dead worker, and a blown
+    /// deadline are different decisions for the caller.
+    pub fn infer(&self, image: Vec<i32>) -> Result<Vec<i32>, ServeError> {
         let (rtx, rrx) = sync_channel(1);
         let req = Request { image, enqueued: Instant::now(), resp: rtx };
         match self.tx.as_ref().expect("server running").try_send(req) {
             Ok(()) => {}
             Err(std::sync::mpsc::TrySendError::Full(_)) => {
                 self.metrics.lock().unwrap().rejected += 1;
-                anyhow::bail!("server overloaded (queue full)");
+                return Err(ServeError::Overloaded);
             }
-            Err(e) => anyhow::bail!("server stopped: {e}"),
+            Err(std::sync::mpsc::TrySendError::Disconnected(_)) => {
+                return Err(ServeError::ReplicaDown);
+            }
         }
-        rrx.recv()
-            .context("worker dropped the response")?
-            .map_err(|e| anyhow::anyhow!(e))
+        match rrx.recv_timeout(self.cfg.request_deadline) {
+            Ok(Ok(out)) => Ok(out),
+            Ok(Err(e)) => Err(ServeError::Backend(e)),
+            Err(RecvTimeoutError::Timeout) => {
+                self.metrics.lock().unwrap().timeouts += 1;
+                Err(ServeError::Timeout)
+            }
+            Err(RecvTimeoutError::Disconnected) => Err(ServeError::ReplicaDown),
+        }
+    }
+
+    /// Is the worker thread still running? The watchdog polls this to
+    /// detect crashed replicas without submitting probe traffic.
+    pub fn is_healthy(&self) -> bool {
+        self.worker.as_ref().map_or(false, |w| !w.is_finished())
     }
 
     /// Fire-and-collect convenience used by load generators: submit a
@@ -230,6 +288,7 @@ fn worker_loop(
     cfg: ServerConfig,
     metrics: Arc<Mutex<Metrics>>,
 ) {
+    let mut served: u64 = 0;
     loop {
         // block for the first request of a batch
         let first = match rx.recv() {
@@ -246,11 +305,24 @@ fn worker_loop(
                 Err(RecvTimeoutError::Disconnected) => break,
             }
         }
+        if let Some(ServeFaultKind::Slow { extra_ms }) = cfg.fault {
+            std::thread::sleep(Duration::from_millis(extra_ms));
+        }
         let n = batch.len();
         for req in batch {
+            if let Some(ServeFaultKind::Crash { after_requests }) = cfg.fault {
+                if served >= after_requests {
+                    // Simulated worker crash: drop the queue and every
+                    // pending response sender. Clients observe
+                    // `ServeError::ReplicaDown`; the router's watchdog
+                    // sees the finished thread and reboots from config.
+                    return;
+                }
+            }
             let out = exe
                 .run_i32(&req.image, &cfg.input_dims)
                 .map_err(|e| format!("{e:#}"));
+            served += 1;
             let lat = req.enqueued.elapsed().as_secs_f64();
             metrics.lock().unwrap().record(lat);
             let _ = req.resp.send(out);
@@ -338,6 +410,39 @@ mod tests {
         let b = srv.infer(img).unwrap();
         assert_eq!(a, b);
         srv.shutdown();
+    }
+
+    #[test]
+    fn deadline_turns_a_straggler_into_a_typed_timeout() {
+        let mut cfg = ServerConfig::cifarnet(&artifact_dir());
+        cfg.fault = Some(ServeFaultKind::Slow { extra_ms: 500 });
+        cfg.request_deadline = Duration::from_millis(40);
+        let srv = InferenceServer::start(cfg).unwrap();
+        let err = srv.infer(vec![1i32; 32 * 32 * 3]).unwrap_err();
+        assert_eq!(err, ServeError::Timeout);
+        assert_eq!(srv.metrics_snapshot().timeouts, 1);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn crash_fault_surfaces_replica_down() {
+        let mut cfg = ServerConfig::cifarnet(&artifact_dir());
+        cfg.fault = Some(ServeFaultKind::Crash { after_requests: 2 });
+        cfg.request_deadline = Duration::from_millis(500);
+        let srv = InferenceServer::start(cfg).unwrap();
+        let img = vec![3i32; 32 * 32 * 3];
+        assert!(srv.infer(img.clone()).is_ok());
+        assert!(srv.infer(img.clone()).is_ok());
+        let err = srv.infer(img.clone()).unwrap_err();
+        assert_eq!(err, ServeError::ReplicaDown);
+        // the worker thread exits promptly after the crash fires
+        let t0 = Instant::now();
+        while srv.is_healthy() && t0.elapsed() < Duration::from_secs(2) {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(!srv.is_healthy(), "crashed worker must read as unhealthy");
+        let rep = srv.shutdown();
+        assert_eq!(rep.completed, 2);
     }
 
     #[test]

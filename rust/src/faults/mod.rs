@@ -1,0 +1,148 @@
+//! Deterministic fault injection and the accounting that proves recovery.
+//!
+//! H2PIPE sizes FIFOs so compute never stalls on an *imperfect* memory
+//! system (§IV–VI) — but a reproduction that only ever simulates the
+//! happy path cannot demonstrate that the margins hold. This module is
+//! the seeded chaos layer for the whole stack:
+//!
+//! * **What to break** is a [`FaultPlan`]: a serializable
+//!   `h2pipe.faults/v1` JSON artifact (same discipline as the
+//!   `h2pipe.plan/v1` plan artifact) describing HBM transient read
+//!   errors, per-PC thermal-throttle windows, inter-device link
+//!   stall/credit-loss windows, cycle-domain replica outages, and
+//!   wall-clock serving faults (replica crash / slow replica), plus the
+//!   [`RecoveryPolicy`] the serving stack uses to survive them.
+//! * **Where it breaks** is inside the real machinery, not a wrapper:
+//!   the [`crate::hbm::controller`] replays faulted read bursts at full
+//!   tRC/arbitration cost, [`crate::cluster::fleet`] stalls links and
+//!   freezes crashed replicas, and [`crate::cluster::router`] +
+//!   [`crate::coordinator::server`] exercise deadlines, retry with
+//!   backoff, failover, watchdog reboot and admission control.
+//! * **What must hold** is the conservation invariant carried by
+//!   [`FaultTotals`]: every injected fault is accounted as a
+//!   retried-success, a failover, or a counted drop —
+//!   `injected == retried + failed_over + dropped`, `lost == 0`.
+//!
+//! Determinism: every random decision draws from per-site
+//! [`crate::util::XorShift64`] streams derived from the plan seed, so the
+//! same `FaultPlan` against the same workload produces byte-identical
+//! cycle-domain reports (the CI chaos step diffs two same-seed runs).
+
+mod plan;
+
+pub use plan::{
+    FaultPlan, HbmFaultSpec, LinkFault, LinkFaultKind, RecoveryPolicy, ReplicaOutage, ServeFault,
+    ServeFaultKind, ThrottleWindow, FAULT_FORMAT,
+};
+
+use crate::util::Json;
+
+/// Per-PC RNG stream derivation: mixes the plan seed with a site index so
+/// independent injection sites never share a random stream (golden-ratio
+/// odd constant, same mixer family as `XorShift64`'s seed escape).
+pub fn site_seed(seed: u64, site: u64) -> u64 {
+    seed ^ (site.wrapping_add(1)).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+/// The conservation ledger: one accounting row summed across every
+/// injection site of a run. The invariant proved by tests and asserted by
+/// the CI chaos step is `lost() == 0` — no injected fault may vanish
+/// without being attributed to a recovery path or a counted drop.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultTotals {
+    /// Faults fired (HBM read errors, link stall windows entered,
+    /// replica crashes, ...).
+    pub injected: u64,
+    /// Recovered by retrying the same resource (HBM burst replays,
+    /// in-place request retries).
+    pub retried: u64,
+    /// Recovered by moving the work elsewhere (router failover, replica
+    /// reboot absorbing queued work).
+    pub failed_over: u64,
+    /// Deliberately given up and *counted* (replay budget exhausted,
+    /// admission-control shed). A drop is not a loss: the caller saw it.
+    pub dropped: u64,
+    /// Degradation-window cycles where a PC was denied CAS slots
+    /// (thermal throttle). Informational — not part of conservation.
+    pub throttled_cycles: u64,
+    /// Base ticks where an inter-device link was stalled.
+    pub link_stall_ticks: u64,
+    /// Base ticks replicas spent down (outage window + reboot).
+    pub outage_ticks: u64,
+}
+
+impl FaultTotals {
+    /// Faults that ended well: retried successfully or failed over.
+    pub fn recovered(&self) -> u64 {
+        self.retried + self.failed_over
+    }
+
+    /// Conservation residue — anything injected but never accounted.
+    /// Zero in every correct run.
+    pub fn lost(&self) -> u64 {
+        self.injected.saturating_sub(self.retried + self.failed_over + self.dropped)
+    }
+
+    /// Fold another site's ledger into this one.
+    pub fn absorb(&mut self, other: &FaultTotals) {
+        self.injected += other.injected;
+        self.retried += other.retried;
+        self.failed_over += other.failed_over;
+        self.dropped += other.dropped;
+        self.throttled_cycles += other.throttled_cycles;
+        self.link_stall_ticks += other.link_stall_ticks;
+        self.outage_ticks += other.outage_ticks;
+    }
+
+    /// Machine-scrapable form. The CI chaos step greps for `"lost":0`
+    /// and a nonzero `"recovered"` — keep those keys literal.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("injected", self.injected)
+            .set("retried", self.retried)
+            .set("failed_over", self.failed_over)
+            .set("dropped", self.dropped)
+            .set("recovered", self.recovered())
+            .set("lost", self.lost())
+            .set("throttled_cycles", self.throttled_cycles)
+            .set("link_stall_ticks", self.link_stall_ticks)
+            .set("outage_ticks", self.outage_ticks);
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conservation_arithmetic() {
+        let mut t = FaultTotals { injected: 10, retried: 6, ..FaultTotals::default() };
+        t.failed_over = 3;
+        t.dropped = 1;
+        assert_eq!(t.recovered(), 9);
+        assert_eq!(t.lost(), 0);
+        let mut sum = FaultTotals::default();
+        sum.absorb(&t);
+        sum.absorb(&t);
+        assert_eq!(sum.injected, 20);
+        assert_eq!(sum.lost(), 0);
+    }
+
+    #[test]
+    fn lost_surfaces_unaccounted_faults() {
+        let t = FaultTotals { injected: 5, retried: 2, dropped: 1, ..FaultTotals::default() };
+        assert_eq!(t.lost(), 2);
+        let j = t.to_json().to_string();
+        assert!(j.contains("\"lost\":2"), "{j}");
+        assert!(j.contains("\"recovered\":2"), "{j}");
+    }
+
+    #[test]
+    fn site_seeds_diverge() {
+        let a = site_seed(7, 0);
+        let b = site_seed(7, 1);
+        assert_ne!(a, b);
+        assert_eq!(a, site_seed(7, 0), "derivation must be pure");
+    }
+}

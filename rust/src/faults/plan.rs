@@ -1,0 +1,576 @@
+//! The `h2pipe.faults/v1` artifact: what to break, when, and how hard —
+//! plus the recovery policy the serving stack runs under.
+//!
+//! Same artifact discipline as [`crate::session::CompiledModel`]: a
+//! format-tagged JSON document with a byte-stable round trip, strict
+//! decoding (unknown format tags and malformed fields fail hard), and
+//! semantic validation on every load so an impossible scenario (a
+//! probability of 1.7, a throttle window denying more slots than its
+//! period has) is rejected before it can poison a run.
+
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::util::Json;
+
+/// Artifact format tag; bump on incompatible schema changes.
+pub const FAULT_FORMAT: &str = "h2pipe.faults/v1";
+
+/// HBM transient read errors: within `[start, end)` controller cycles,
+/// each read CAS issue fails with probability `prob`. A failed burst is
+/// replayed — re-enqueued at the back of the PC queue, paying the full
+/// re-arbitration + data-bus cost again — up to `max_replays` times per
+/// request, after which the corrupt burst is delivered and *counted* as
+/// a drop.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HbmFaultSpec {
+    /// First controller cycle (400 MHz domain) of the error window.
+    pub start: u64,
+    /// One past the last controller cycle of the error window.
+    pub end: u64,
+    /// Per-read-CAS error probability in `[0, 1]`.
+    pub prob: f64,
+    /// Replay budget per request before the fault is counted as dropped.
+    pub max_replays: u32,
+}
+
+/// A per-PC bandwidth-degradation window (thermal throttle): within
+/// `[start, end)`, the PC is denied column-command issue for `deny` out
+/// of every `period` cycles.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ThrottleWindow {
+    /// Global pseudo-channel index (stack-major, as reported by
+    /// `for_each_pc_stats`).
+    pub pc: usize,
+    pub start: u64,
+    pub end: u64,
+    /// Denied cycles per period; must be `< period`.
+    pub deny: u64,
+    pub period: u64,
+}
+
+impl ThrottleWindow {
+    /// Is CAS issue denied at `cycle`?
+    pub fn denies(&self, cycle: u64) -> bool {
+        cycle >= self.start && cycle < self.end && cycle % self.period < self.deny
+    }
+}
+
+/// What goes wrong on an inter-device link.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkFaultKind {
+    /// The link is down: no lines move, no credits return. Upstream
+    /// backpressure absorbs the window; nothing is dropped.
+    Stall,
+    /// `lost` credits are withheld (effective capacity shrinks, floor 1).
+    CreditLoss(u32),
+}
+
+/// A fault window on one inter-device fleet link, in base ticks
+/// (1200 MHz domain, matching `cluster::fleet`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LinkFault {
+    /// Link index (between shard `link` and shard `link + 1`).
+    pub link: usize,
+    pub start: u64,
+    pub end: u64,
+    pub kind: LinkFaultKind,
+}
+
+/// A cycle-domain replica outage: the replica freezes for `[start, end)`
+/// base ticks, then pays a reboot penalty (derived from the plan's
+/// §IV-C boot-weights time) before resuming. Work queued behind it is
+/// delayed, never lost.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ReplicaOutage {
+    pub replica: usize,
+    pub start: u64,
+    pub end: u64,
+}
+
+/// What goes wrong in the wall-clock serving stack.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServeFaultKind {
+    /// The replica's worker thread exits after serving this many
+    /// requests; the watchdog must detect and reboot it.
+    Crash { after_requests: u64 },
+    /// Every batch takes this much extra wall-clock time (a straggler).
+    Slow { extra_ms: u64 },
+}
+
+/// A serving-side fault bound to one replica index.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServeFault {
+    pub replica: usize,
+    pub kind: ServeFaultKind,
+}
+
+/// How the serving stack is allowed to fight back. Every knob has a
+/// production-shaped default so a plan may omit the whole block.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RecoveryPolicy {
+    /// Per-request deadline for `InferenceServer::infer`'s
+    /// `recv_timeout` and the router's total retry budget.
+    pub request_deadline_ms: u64,
+    /// Total attempts (first try + retries/failovers) per request.
+    pub max_attempts: u32,
+    /// Base backoff between attempts; doubles per attempt
+    /// (`backoff_ms << attempt`), capped by the remaining deadline.
+    pub backoff_ms: u64,
+    /// Watchdog health-check period; a dead worker is re-booted from the
+    /// plan artifact on the next check.
+    pub watchdog_ms: u64,
+    /// Admission control: reject new work when total in-flight requests
+    /// across the fleet reach this bound (0 disables shedding).
+    pub admission_max_outstanding: usize,
+}
+
+impl Default for RecoveryPolicy {
+    fn default() -> Self {
+        Self {
+            request_deadline_ms: 2_000,
+            max_attempts: 4,
+            backoff_ms: 2,
+            watchdog_ms: 25,
+            admission_max_outstanding: 0,
+        }
+    }
+}
+
+/// The full seeded fault scenario. See the field docs of the component
+/// specs for semantics; empty sections mean "that layer stays healthy".
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    /// Root seed; every injection site derives its own stream via
+    /// [`crate::faults::site_seed`].
+    pub seed: u64,
+    /// HBM transient read errors (applies to every weight-reading PC).
+    pub hbm: Option<HbmFaultSpec>,
+    /// Per-PC thermal-throttle windows.
+    pub throttle: Vec<ThrottleWindow>,
+    /// Inter-device link faults.
+    pub links: Vec<LinkFault>,
+    /// Cycle-domain replica outages.
+    pub replicas: Vec<ReplicaOutage>,
+    /// Wall-clock serving faults.
+    pub serve: Vec<ServeFault>,
+    /// Recovery knobs for the serving stack.
+    pub recovery: RecoveryPolicy,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        Self::new(1)
+    }
+}
+
+impl FaultPlan {
+    /// An empty (all-healthy) plan with the given seed.
+    pub fn new(seed: u64) -> Self {
+        Self {
+            seed,
+            hbm: None,
+            throttle: Vec::new(),
+            links: Vec::new(),
+            replicas: Vec::new(),
+            serve: Vec::new(),
+            recovery: RecoveryPolicy::default(),
+        }
+    }
+
+    /// The CI chaos scenario: an aggressive HBM error burst early in the
+    /// run, a thermal throttle on PC 0, a link stall, a mid-run outage of
+    /// replica 1, and a serving-side crash of replica 1 — all from one
+    /// seed. Kept in code so tests, docs and the workflow regenerate the
+    /// identical scenario from `h2pipe faults --preset chaos`.
+    pub fn chaos_preset(seed: u64) -> Self {
+        Self {
+            seed,
+            hbm: Some(HbmFaultSpec { start: 0, end: 200_000, prob: 0.02, max_replays: 3 }),
+            throttle: vec![ThrottleWindow { pc: 0, start: 0, end: 100_000, deny: 2, period: 8 }],
+            links: vec![LinkFault {
+                link: 0,
+                start: 30_000,
+                end: 60_000,
+                kind: LinkFaultKind::Stall,
+            }],
+            replicas: vec![ReplicaOutage { replica: 1, start: 50_000, end: 250_000 }],
+            serve: vec![ServeFault {
+                replica: 1,
+                kind: ServeFaultKind::Crash { after_requests: 8 },
+            }],
+            recovery: RecoveryPolicy {
+                request_deadline_ms: 5_000,
+                max_attempts: 5,
+                backoff_ms: 1,
+                watchdog_ms: 10,
+                admission_max_outstanding: 0,
+            },
+        }
+    }
+
+    /// Does any section touch the cycle-domain simulators?
+    pub fn touches_sim(&self) -> bool {
+        self.hbm.is_some()
+            || !self.throttle.is_empty()
+            || !self.links.is_empty()
+            || !self.replicas.is_empty()
+    }
+
+    /// Semantic validation; called on every load and before every run.
+    pub fn validate(&self) -> Result<()> {
+        if let Some(h) = &self.hbm {
+            ensure!(h.end > h.start, "hbm fault window is empty ({}..{})", h.start, h.end);
+            ensure!(
+                (0.0..=1.0).contains(&h.prob) && h.prob.is_finite(),
+                "hbm fault prob {} outside [0, 1]",
+                h.prob
+            );
+            ensure!(h.max_replays <= 64, "hbm max_replays {} is absurd (cap 64)", h.max_replays);
+        }
+        for (i, t) in self.throttle.iter().enumerate() {
+            ensure!(t.end > t.start, "throttle[{i}] window is empty");
+            ensure!(t.period > 0, "throttle[{i}] period must be positive");
+            ensure!(
+                t.deny < t.period,
+                "throttle[{i}] denies {} of every {} cycles — that is an outage, not a throttle",
+                t.deny,
+                t.period
+            );
+        }
+        for (i, l) in self.links.iter().enumerate() {
+            ensure!(l.end > l.start, "links[{i}] window is empty");
+            if let LinkFaultKind::CreditLoss(n) = l.kind {
+                ensure!(n > 0, "links[{i}] credit_loss of 0 is a no-op");
+            }
+        }
+        for (i, r) in self.replicas.iter().enumerate() {
+            ensure!(r.end > r.start, "replicas[{i}] outage window is empty");
+        }
+        for (i, s) in self.serve.iter().enumerate() {
+            match s.kind {
+                ServeFaultKind::Crash { after_requests } => {
+                    ensure!(after_requests > 0, "serve[{i}] crash after 0 requests never boots")
+                }
+                ServeFaultKind::Slow { extra_ms } => {
+                    ensure!(extra_ms > 0, "serve[{i}] slow fault of 0 ms is a no-op")
+                }
+            }
+        }
+        let r = &self.recovery;
+        ensure!(r.request_deadline_ms > 0, "recovery.request_deadline_ms must be positive");
+        ensure!(r.max_attempts > 0, "recovery.max_attempts must be at least 1");
+        ensure!(r.watchdog_ms > 0, "recovery.watchdog_ms must be positive");
+        Ok(())
+    }
+
+    /// Serialize (byte-stable: object keys are BTreeMap-ordered, empty
+    /// sections are omitted).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("format", FAULT_FORMAT).set("seed", self.seed);
+        if let Some(h) = &self.hbm {
+            let mut hj = Json::obj();
+            hj.set("start", h.start)
+                .set("end", h.end)
+                .set("prob", h.prob)
+                .set("max_replays", u64::from(h.max_replays));
+            o.set("hbm", hj);
+        }
+        if !self.throttle.is_empty() {
+            let mut arr = Json::Arr(Vec::new());
+            for t in &self.throttle {
+                let mut tj = Json::obj();
+                tj.set("pc", t.pc as u64)
+                    .set("start", t.start)
+                    .set("end", t.end)
+                    .set("deny", t.deny)
+                    .set("period", t.period);
+                arr.push(tj);
+            }
+            o.set("throttle", arr);
+        }
+        if !self.links.is_empty() {
+            let mut arr = Json::Arr(Vec::new());
+            for l in &self.links {
+                let mut lj = Json::obj();
+                lj.set("link", l.link as u64).set("start", l.start).set("end", l.end);
+                match l.kind {
+                    LinkFaultKind::Stall => {
+                        lj.set("kind", "stall");
+                    }
+                    LinkFaultKind::CreditLoss(n) => {
+                        lj.set("kind", "credit_loss").set("lost", u64::from(n));
+                    }
+                }
+                arr.push(lj);
+            }
+            o.set("links", arr);
+        }
+        if !self.replicas.is_empty() {
+            let mut arr = Json::Arr(Vec::new());
+            for r in &self.replicas {
+                let mut rj = Json::obj();
+                rj.set("replica", r.replica as u64).set("start", r.start).set("end", r.end);
+                arr.push(rj);
+            }
+            o.set("replicas", arr);
+        }
+        if !self.serve.is_empty() {
+            let mut arr = Json::Arr(Vec::new());
+            for s in &self.serve {
+                let mut sj = Json::obj();
+                sj.set("replica", s.replica as u64);
+                match s.kind {
+                    ServeFaultKind::Crash { after_requests } => {
+                        sj.set("kind", "crash").set("after_requests", after_requests);
+                    }
+                    ServeFaultKind::Slow { extra_ms } => {
+                        sj.set("kind", "slow").set("extra_ms", extra_ms);
+                    }
+                }
+                arr.push(sj);
+            }
+            o.set("serve", arr);
+        }
+        let r = &self.recovery;
+        let mut rj = Json::obj();
+        rj.set("request_deadline_ms", r.request_deadline_ms)
+            .set("max_attempts", u64::from(r.max_attempts))
+            .set("backoff_ms", r.backoff_ms)
+            .set("watchdog_ms", r.watchdog_ms)
+            .set("admission_max_outstanding", r.admission_max_outstanding as u64);
+        o.set("recovery", rj);
+        o
+    }
+
+    /// Decode and validate an artifact.
+    pub fn from_json(j: &Json) -> Result<Self> {
+        match j.get("format").and_then(Json::as_str) {
+            Some(FAULT_FORMAT) => {}
+            Some(other) => bail!("unsupported fault format {other:?} (expected {FAULT_FORMAT:?})"),
+            None => bail!("not a fault artifact (missing \"format\" tag)"),
+        }
+        let seed = j.get("seed").and_then(Json::as_u64).context("missing seed")?;
+        let hbm = match j.get("hbm") {
+            None => None,
+            Some(h) => Some(HbmFaultSpec {
+                start: h.get("start").and_then(Json::as_u64).context("hbm.start")?,
+                end: h.get("end").and_then(Json::as_u64).context("hbm.end")?,
+                prob: h.get("prob").and_then(Json::as_f64).context("hbm.prob")?,
+                max_replays: h
+                    .get("max_replays")
+                    .and_then(Json::as_u32)
+                    .context("hbm.max_replays")?,
+            }),
+        };
+        let mut throttle = Vec::new();
+        for (i, t) in j.get("throttle").and_then(Json::as_arr).unwrap_or(&[]).iter().enumerate() {
+            throttle.push(ThrottleWindow {
+                pc: t.get("pc").and_then(Json::as_usize).with_context(|| format!("throttle[{i}].pc"))?,
+                start: t
+                    .get("start")
+                    .and_then(Json::as_u64)
+                    .with_context(|| format!("throttle[{i}].start"))?,
+                end: t
+                    .get("end")
+                    .and_then(Json::as_u64)
+                    .with_context(|| format!("throttle[{i}].end"))?,
+                deny: t
+                    .get("deny")
+                    .and_then(Json::as_u64)
+                    .with_context(|| format!("throttle[{i}].deny"))?,
+                period: t
+                    .get("period")
+                    .and_then(Json::as_u64)
+                    .with_context(|| format!("throttle[{i}].period"))?,
+            });
+        }
+        let mut links = Vec::new();
+        for (i, l) in j.get("links").and_then(Json::as_arr).unwrap_or(&[]).iter().enumerate() {
+            let kind = match l.get("kind").and_then(Json::as_str) {
+                Some("stall") => LinkFaultKind::Stall,
+                Some("credit_loss") => LinkFaultKind::CreditLoss(
+                    l.get("lost")
+                        .and_then(Json::as_u32)
+                        .with_context(|| format!("links[{i}].lost"))?,
+                ),
+                other => bail!("links[{i}].kind {other:?} is not \"stall\" or \"credit_loss\""),
+            };
+            links.push(LinkFault {
+                link: l
+                    .get("link")
+                    .and_then(Json::as_usize)
+                    .with_context(|| format!("links[{i}].link"))?,
+                start: l
+                    .get("start")
+                    .and_then(Json::as_u64)
+                    .with_context(|| format!("links[{i}].start"))?,
+                end: l
+                    .get("end")
+                    .and_then(Json::as_u64)
+                    .with_context(|| format!("links[{i}].end"))?,
+                kind,
+            });
+        }
+        let mut replicas = Vec::new();
+        for (i, r) in j.get("replicas").and_then(Json::as_arr).unwrap_or(&[]).iter().enumerate() {
+            replicas.push(ReplicaOutage {
+                replica: r
+                    .get("replica")
+                    .and_then(Json::as_usize)
+                    .with_context(|| format!("replicas[{i}].replica"))?,
+                start: r
+                    .get("start")
+                    .and_then(Json::as_u64)
+                    .with_context(|| format!("replicas[{i}].start"))?,
+                end: r
+                    .get("end")
+                    .and_then(Json::as_u64)
+                    .with_context(|| format!("replicas[{i}].end"))?,
+            });
+        }
+        let mut serve = Vec::new();
+        for (i, s) in j.get("serve").and_then(Json::as_arr).unwrap_or(&[]).iter().enumerate() {
+            let kind = match s.get("kind").and_then(Json::as_str) {
+                Some("crash") => ServeFaultKind::Crash {
+                    after_requests: s
+                        .get("after_requests")
+                        .and_then(Json::as_u64)
+                        .with_context(|| format!("serve[{i}].after_requests"))?,
+                },
+                Some("slow") => ServeFaultKind::Slow {
+                    extra_ms: s
+                        .get("extra_ms")
+                        .and_then(Json::as_u64)
+                        .with_context(|| format!("serve[{i}].extra_ms"))?,
+                },
+                other => bail!("serve[{i}].kind {other:?} is not \"crash\" or \"slow\""),
+            };
+            serve.push(ServeFault {
+                replica: s
+                    .get("replica")
+                    .and_then(Json::as_usize)
+                    .with_context(|| format!("serve[{i}].replica"))?,
+                kind,
+            });
+        }
+        let recovery = match j.get("recovery") {
+            None => RecoveryPolicy::default(),
+            Some(r) => RecoveryPolicy {
+                request_deadline_ms: r
+                    .get("request_deadline_ms")
+                    .and_then(Json::as_u64)
+                    .context("recovery.request_deadline_ms")?,
+                max_attempts: r
+                    .get("max_attempts")
+                    .and_then(Json::as_u32)
+                    .context("recovery.max_attempts")?,
+                backoff_ms: r
+                    .get("backoff_ms")
+                    .and_then(Json::as_u64)
+                    .context("recovery.backoff_ms")?,
+                watchdog_ms: r
+                    .get("watchdog_ms")
+                    .and_then(Json::as_u64)
+                    .context("recovery.watchdog_ms")?,
+                admission_max_outstanding: r
+                    .get("admission_max_outstanding")
+                    .and_then(Json::as_usize)
+                    .context("recovery.admission_max_outstanding")?,
+            },
+        };
+        let plan = Self { seed, hbm, throttle, links, replicas, serve, recovery };
+        plan.validate().context("fault plan failed validation")?;
+        Ok(plan)
+    }
+
+    /// Write the artifact as pretty-printed JSON.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        self.validate().context("refusing to save an invalid fault plan")?;
+        std::fs::write(path, self.to_json().to_pretty())
+            .with_context(|| format!("writing fault plan {}", path.display()))
+    }
+
+    /// Load and validate an artifact written by [`Self::save`].
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading fault plan {}", path.display()))?;
+        let j = Json::parse(&text)
+            .with_context(|| format!("parsing fault plan {}", path.display()))?;
+        Self::from_json(&j).with_context(|| format!("loading fault plan {}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chaos_preset_round_trips_byte_identically() {
+        let p = FaultPlan::chaos_preset(42);
+        let j = p.to_json();
+        let back = FaultPlan::from_json(&j).unwrap();
+        assert_eq!(back, p);
+        assert_eq!(back.to_json().to_string(), j.to_string(), "stable re-serialization");
+    }
+
+    #[test]
+    fn empty_sections_are_omitted_and_default_on_load() {
+        let p = FaultPlan::new(7);
+        let s = p.to_json().to_string();
+        assert!(!s.contains("\"hbm\""), "{s}");
+        assert!(!s.contains("\"links\""), "{s}");
+        let back = FaultPlan::from_json(&p.to_json()).unwrap();
+        assert_eq!(back, p);
+        assert_eq!(back.recovery, RecoveryPolicy::default());
+    }
+
+    #[test]
+    fn format_tag_is_enforced() {
+        let mut j = FaultPlan::new(1).to_json();
+        j.set("format", "h2pipe.faults/v999");
+        let err = FaultPlan::from_json(&j).unwrap_err();
+        assert!(format!("{err:#}").contains("unsupported fault format"), "{err:#}");
+        let err = FaultPlan::from_json(&Json::obj()).unwrap_err();
+        assert!(format!("{err:#}").contains("missing \"format\""), "{err:#}");
+    }
+
+    #[test]
+    fn validation_rejects_nonsense() {
+        let mut p = FaultPlan::new(1);
+        p.hbm = Some(HbmFaultSpec { start: 10, end: 10, prob: 0.5, max_replays: 2 });
+        assert!(p.validate().is_err(), "empty window");
+        p.hbm = Some(HbmFaultSpec { start: 0, end: 10, prob: 1.5, max_replays: 2 });
+        assert!(p.validate().is_err(), "prob > 1");
+        p.hbm = None;
+        p.throttle.push(ThrottleWindow { pc: 0, start: 0, end: 10, deny: 8, period: 8 });
+        assert!(p.validate().is_err(), "deny == period is an outage");
+        p.throttle.clear();
+        p.recovery.max_attempts = 0;
+        assert!(p.validate().is_err(), "zero attempts");
+    }
+
+    #[test]
+    fn throttle_window_denies_deterministically() {
+        let t = ThrottleWindow { pc: 0, start: 100, end: 200, deny: 2, period: 8 };
+        assert!(!t.denies(99), "before window");
+        assert!(t.denies(104), "104 % 8 == 0 < 2");
+        assert!(t.denies(105), "105 % 8 == 1 < 2");
+        assert!(!t.denies(106), "106 % 8 == 2");
+        assert!(!t.denies(200), "after window");
+    }
+
+    #[test]
+    fn save_load_round_trip() {
+        let p = FaultPlan::chaos_preset(9);
+        let path = std::env::temp_dir().join("h2pipe_fault_plan_test.json");
+        p.save(&path).unwrap();
+        let back = FaultPlan::load(&path).unwrap();
+        assert_eq!(back, p);
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -22,8 +22,10 @@
 use std::collections::VecDeque;
 
 use crate::config::{HbmGeometry, HbmTiming};
+use crate::faults::{HbmFaultSpec, ThrottleWindow};
 use crate::hbm::bank::Bank;
 use crate::hbm::stack::CmdBus;
+use crate::util::XorShift64;
 
 /// Transfer direction.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -73,6 +75,19 @@ pub struct PcStats {
     /// Requests that reused an already-open row.
     pub row_hits: u64,
     pub row_misses: u64,
+    /// Fault injection (`simulate --faults`): transient read errors fired
+    /// by the plan's HBM spec. Conservation invariant:
+    /// `faults_injected == fault_replays + faults_dropped`.
+    pub faults_injected: u64,
+    /// Faulted bursts re-enqueued for replay (each pays the full
+    /// re-arbitration + data-bus cost again).
+    pub fault_replays: u64,
+    /// Faulted bursts whose replay budget was exhausted — delivered
+    /// corrupt and *counted*, never silently lost.
+    pub faults_dropped: u64,
+    /// Cycles a thermal-throttle window denied CAS issue while work was
+    /// queued.
+    pub throttled_cycles: u64,
 }
 
 impl PcStats {
@@ -113,6 +128,30 @@ struct Pending {
     /// Set when the scheduler issued an ACT on behalf of this request —
     /// used to classify row hits/misses at CAS time.
     caused_act: bool,
+    /// Times this request's burst was replayed after a transient read
+    /// error (fault injection only; always 0 on the happy path).
+    replays: u32,
+}
+
+/// Seeded fault state attached to one PC by `simulate --faults`.
+#[derive(Debug, Clone)]
+struct PcFaults {
+    spec: Option<HbmFaultSpec>,
+    throttle: Vec<ThrottleWindow>,
+    rng: XorShift64,
+}
+
+/// A discrete injection event, drained like completions so the weight
+/// subsystem can forward it to the observability probe.
+#[derive(Debug, Clone, Copy)]
+pub struct PcFaultEvent {
+    /// Controller cycle the faulted CAS issued.
+    pub cycle: u64,
+    /// The faulted request's caller-assigned id.
+    pub id: u64,
+    /// `true` → re-enqueued for replay; `false` → replay budget
+    /// exhausted, delivered and counted as dropped.
+    pub replayed: bool,
 }
 
 /// Scheduling/capacity knobs of the hardened controller model.
@@ -157,6 +196,8 @@ pub struct PseudoChannel {
     refresh_until: u64,
     cycle: u64,
     completions: Vec<Completion>,
+    faults: Option<PcFaults>,
+    fault_events: Vec<PcFaultEvent>,
     pub stats: PcStats,
 }
 
@@ -179,8 +220,26 @@ impl PseudoChannel {
             refresh_until: 0,
             cycle: 0,
             completions: Vec::new(),
+            faults: None,
+            fault_events: Vec::new(),
             stats: PcStats::default(),
         }
+    }
+
+    /// Arm fault injection on this PC: a transient read-error spec, the
+    /// throttle windows addressed to it, and the per-site RNG seed
+    /// (derive with [`crate::faults::site_seed`] so PCs never share a
+    /// stream). Passing `None` and an empty window list is a no-op.
+    pub fn inject_faults(
+        &mut self,
+        spec: Option<HbmFaultSpec>,
+        throttle: Vec<ThrottleWindow>,
+        seed: u64,
+    ) {
+        if spec.is_none() && throttle.is_empty() {
+            return;
+        }
+        self.faults = Some(PcFaults { spec, throttle, rng: XorShift64::new(seed) });
     }
 
     /// Current cycle.
@@ -198,6 +257,20 @@ impl PseudoChannel {
         self.queue.len()
     }
 
+    /// Beats currently held in the queue — the quantity bounded by
+    /// [`PcTuning::outstanding_beats`]. Exposed so property tests can
+    /// assert the bound is never exceeded (fault replays restore exactly
+    /// what the faulted issue subtracted, so the invariant holds under
+    /// injection too).
+    pub fn queued_beats(&self) -> u32 {
+        self.queued_beats
+    }
+
+    /// The configured outstanding-beats capacity.
+    pub fn outstanding_limit(&self) -> u32 {
+        self.tuning.outstanding_beats
+    }
+
     /// Accept a request. Returns false (and drops it) when back-pressured —
     /// callers should check [`Self::can_accept`] first, mirroring AXI
     /// `valid && ready`.
@@ -208,8 +281,14 @@ impl PseudoChannel {
         debug_assert!((1..=32).contains(&req.burst), "burst {} out of range", req.burst);
         let (bank, row) = self.map_addr(req.addr);
         self.queued_beats += req.burst;
-        self.queue
-            .push_back(Pending { req, accept_cycle: self.cycle, bank, row, caused_act: false });
+        self.queue.push_back(Pending {
+            req,
+            accept_cycle: self.cycle,
+            bank,
+            row,
+            caused_act: false,
+            replays: 0,
+        });
         true
     }
 
@@ -227,6 +306,31 @@ impl PseudoChannel {
     /// Drain completions recorded since the last call.
     pub fn drain_completions(&mut self) -> Vec<Completion> {
         std::mem::take(&mut self.completions)
+    }
+
+    /// Drain fault-injection events recorded since the last call.
+    pub fn drain_fault_events(&mut self) -> Vec<PcFaultEvent> {
+        std::mem::take(&mut self.fault_events)
+    }
+
+    /// Does the plan's read-error window fire for the CAS issuing now?
+    fn roll_fault(&mut self) -> bool {
+        let cycle = self.cycle;
+        match &mut self.faults {
+            Some(f) => match &f.spec {
+                Some(s) if cycle >= s.start && cycle < s.end => f.rng.next_bool(s.prob),
+                _ => false,
+            },
+            None => false,
+        }
+    }
+
+    /// Is CAS issue denied this cycle by a thermal-throttle window?
+    fn cas_throttled(&self) -> bool {
+        match &self.faults {
+            Some(f) => f.throttle.iter().any(|t| t.denies(self.cycle)),
+            None => false,
+        }
     }
 
     /// True if the controller has no queued requests and the data bus is
@@ -331,22 +435,32 @@ impl PseudoChannel {
 
         self.trim_act_window();
 
+        // Thermal-throttle window: CAS issue denied this cycle (row prep
+        // below still proceeds, as real throttling gates data, not
+        // maintenance). Only counted as degradation when work was queued.
+        let cas_denied = self.cas_throttled();
+        if cas_denied && !self.queue.is_empty() {
+            self.stats.throttled_cycles += 1;
+        }
+
         // --- FR-FCFS with a shallow reorder window ---------------------
         // Pass 1 (column): oldest CAS-ready request whose data lands
         // legally on the bus, if a column slot exists.
         let look = self.tuning.lookahead.max(1);
         let mut cas: Option<(usize, u64)> = None;
-        for (i, p) in self.queue.iter().take(look).enumerate() {
-            if self.banks[p.bank].can_cas(p.row, self.cycle) {
-                if let Some(start) = self.cas_data_start(p.req.dir, p.bank, p.row) {
-                    cas = Some((i, start));
-                    break;
+        if !cas_denied {
+            for (i, p) in self.queue.iter().take(look).enumerate() {
+                if self.banks[p.bank].can_cas(p.row, self.cycle) {
+                    if let Some(start) = self.cas_data_start(p.req.dir, p.bank, p.row) {
+                        cas = Some((i, start));
+                        break;
+                    }
                 }
             }
         }
         if let Some((i, start)) = cas {
             if cmd.take_col_slot() {
-                let p = self.queue.remove(i).expect("index valid");
+                let mut p = self.queue.remove(i).expect("index valid");
                 self.queued_beats -= p.req.burst;
                 if p.caused_act {
                     self.stats.row_misses += 1;
@@ -357,7 +471,6 @@ impl PseudoChannel {
                 self.data_free_at = end;
                 self.last_dir = Some(p.req.dir);
                 self.last_loc = Some((p.bank, p.row));
-                self.stats.data_cycles += p.req.burst as u64;
                 match p.req.dir {
                     Dir::Read => {
                         self.banks[p.bank].read_cas(self.cycle);
@@ -367,6 +480,45 @@ impl PseudoChannel {
                         self.banks[p.bank].write_cas(end, &self.timing);
                         self.stats.writes += 1;
                     }
+                }
+                // Transient read error (fault injection): the corrupt
+                // burst already occupied the data bus, so its beats are
+                // *not* counted as useful data. Within budget the request
+                // re-enqueues at the queue back — the replay pays the full
+                // re-arbitration + bus cost again (the real tRC-scale
+                // penalty). Out of budget, the burst is delivered and
+                // counted as dropped: conservation, never silence.
+                let faulted = p.req.dir == Dir::Read && self.roll_fault();
+                if faulted {
+                    self.stats.faults_injected += 1;
+                    let budget = self
+                        .faults
+                        .as_ref()
+                        .and_then(|f| f.spec.as_ref())
+                        .map_or(0, |s| s.max_replays);
+                    if p.replays < budget {
+                        p.replays += 1;
+                        self.stats.fault_replays += 1;
+                        self.fault_events.push(PcFaultEvent {
+                            cycle: self.cycle,
+                            id: p.req.id,
+                            replayed: true,
+                        });
+                        // Restores exactly what the issue subtracted, so
+                        // queued_beats never exceeds the accept bound.
+                        self.queued_beats += p.req.burst;
+                        self.queue.push_back(p);
+                        self.cycle += 1;
+                        return;
+                    }
+                    self.stats.faults_dropped += 1;
+                    self.fault_events.push(PcFaultEvent {
+                        cycle: self.cycle,
+                        id: p.req.id,
+                        replayed: false,
+                    });
+                } else {
+                    self.stats.data_cycles += p.req.burst as u64;
                 }
                 self.completions.push(Completion {
                     id: p.req.id,
@@ -601,6 +753,134 @@ mod tests {
             banks.insert(p.map_addr(i * 1024).0);
         }
         assert_eq!(banks.len(), 16, "sequential rows should interleave banks");
+    }
+
+    /// Saturate a PC with random BL8 reads for `ticks` cycles and return
+    /// it (fault knobs applied first via `arm`).
+    fn soak(arm: impl FnOnce(&mut PseudoChannel), ticks: u64) -> (PseudoChannel, u64, u64) {
+        let mut p = pc();
+        arm(&mut p);
+        let mut rng = crate::util::XorShift64::new(13);
+        let mut id = 0;
+        let mut pushed = 0u64;
+        let mut completed = 0u64;
+        for _ in 0..ticks {
+            if p.can_accept(8) {
+                let addr = rng.next_below(1 << 26) & !31;
+                p.push(Request { id, dir: Dir::Read, addr, burst: 8 });
+                id += 1;
+                pushed += 1;
+            }
+            assert!(p.queued_beats() <= p.outstanding_limit(), "accept bound violated");
+            tick_free(&mut p);
+            completed += p.drain_completions().len() as u64;
+        }
+        while !p.is_idle() {
+            tick_free(&mut p);
+            completed += p.drain_completions().len() as u64;
+        }
+        (p, pushed, completed)
+    }
+
+    #[test]
+    fn injected_read_faults_are_conserved_and_deterministic() {
+        let arm = |p: &mut PseudoChannel| {
+            p.inject_faults(
+                Some(HbmFaultSpec { start: 0, end: 30_000, prob: 0.05, max_replays: 2 }),
+                Vec::new(),
+                crate::faults::site_seed(42, 0),
+            );
+        };
+        let (p1, pushed, completed) = soak(arm, 30_000);
+        assert_eq!(pushed, completed, "every accepted request still completes under faults");
+        let s = &p1.stats;
+        assert!(s.faults_injected > 0, "window+prob must fire");
+        assert_eq!(
+            s.faults_injected,
+            s.fault_replays + s.faults_dropped,
+            "conservation: {} != {} + {}",
+            s.faults_injected,
+            s.fault_replays,
+            s.faults_dropped
+        );
+        let (p2, _, _) = soak(arm, 30_000);
+        assert_eq!(s.faults_injected, p2.stats.faults_injected, "same seed, same faults");
+        assert_eq!(s.reads, p2.stats.reads);
+        assert_eq!(s.data_cycles, p2.stats.data_cycles);
+    }
+
+    #[test]
+    fn fault_replays_cost_efficiency() {
+        let (healthy, ..) = soak(|_| {}, 40_000);
+        let (faulty, ..) = soak(
+            |p| {
+                p.inject_faults(
+                    Some(HbmFaultSpec { start: 0, end: 40_000, prob: 0.1, max_replays: 3 }),
+                    Vec::new(),
+                    1,
+                )
+            },
+            40_000,
+        );
+        assert!(
+            faulty.stats.efficiency() < healthy.stats.efficiency(),
+            "replays must burn bus time: {} !< {}",
+            faulty.stats.efficiency(),
+            healthy.stats.efficiency()
+        );
+    }
+
+    #[test]
+    fn throttle_window_degrades_bandwidth() {
+        let (healthy, ..) = soak(|_| {}, 40_000);
+        let (throttled, ..) = soak(
+            |p| {
+                p.inject_faults(
+                    None,
+                    vec![ThrottleWindow { pc: 0, start: 0, end: 40_000, deny: 4, period: 8 }],
+                    1,
+                )
+            },
+            40_000,
+        );
+        assert!(throttled.stats.throttled_cycles > 0);
+        assert_eq!(throttled.stats.faults_injected, 0, "throttle is not an error");
+        assert!(
+            throttled.stats.efficiency() < 0.75 * healthy.stats.efficiency(),
+            "denying half the CAS slots must show up: {} vs {}",
+            throttled.stats.efficiency(),
+            healthy.stats.efficiency()
+        );
+    }
+
+    #[test]
+    fn fault_events_drain_and_match_stats() {
+        let mut p = pc();
+        p.inject_faults(
+            Some(HbmFaultSpec { start: 0, end: 20_000, prob: 0.1, max_replays: 1 }),
+            Vec::new(),
+            7,
+        );
+        let mut rng = crate::util::XorShift64::new(3);
+        let mut id = 0;
+        let mut replay_events = 0u64;
+        let mut drop_events = 0u64;
+        for _ in 0..20_000 {
+            if p.can_accept(8) {
+                p.push(Request { id, dir: Dir::Read, addr: rng.next_below(1 << 24) & !31, burst: 8 });
+                id += 1;
+            }
+            tick_free(&mut p);
+            for e in p.drain_fault_events() {
+                if e.replayed {
+                    replay_events += 1;
+                } else {
+                    drop_events += 1;
+                }
+            }
+        }
+        assert_eq!(replay_events, p.stats.fault_replays);
+        assert_eq!(drop_events, p.stats.faults_dropped);
     }
 
     #[test]

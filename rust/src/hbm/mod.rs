@@ -17,7 +17,7 @@ pub mod stack;
 pub mod traffic;
 
 pub use bank::{Bank, BankState};
-pub use controller::{Completion, Dir, PcStats, PseudoChannel, Request};
+pub use controller::{Completion, Dir, PcFaultEvent, PcStats, PseudoChannel, Request};
 pub use stack::{CmdBus, Channel, HbmStack};
 pub use traffic::{AddressPattern, TrafficConfig, TrafficGen, TrafficReport};
 

@@ -48,6 +48,11 @@
 //!   criterion / proptest / serde, which are unavailable in the offline
 //!   crate set this build runs against.
 //!
+//! * [`faults`] — deterministic fault injection and recovery: the seeded
+//!   `h2pipe.faults/v1` scenario artifact (`FaultPlan`), HBM read-error
+//!   replay, thermal-throttle and link-stall windows, replica outages,
+//!   and the conservation ledger (`FaultTotals`) proving nothing is
+//!   silently lost (`simulate --faults` / `serve --faults`).
 //! * [`verify`] — `h2pipe check`: the static plan verifier. Re-derives
 //!   every invariant the compiler assumes (resource budgets, per-PC HBM
 //!   bandwidth, Fig. 5 deadlock freedom, Fig. 6 FIFO depth bounds,
@@ -67,6 +72,7 @@ pub mod compiler;
 pub mod config;
 pub mod coordinator;
 pub mod fabric;
+pub mod faults;
 pub mod hbm;
 pub mod nn;
 pub mod obs;

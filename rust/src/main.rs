@@ -70,7 +70,7 @@ const SPECS: &[CmdSpec] = &[
         name: "simulate",
         about: "cycle-simulate a plan (freshly compiled or loaded from --plan)",
         usage: "h2pipe simulate [--model NAME | --plan FILE.json] [--all-hbm] [--burst N] \
-                [--write-path-bits N] [--images N] [--warmup N] \
+                [--write-path-bits N] [--images N] [--warmup N] [--faults FILE.json] \
                 [--trace OUT.json] [--trace-csv OUT.csv] [--trace-window N]",
         keys: &[
             "model",
@@ -79,6 +79,7 @@ const SPECS: &[CmdSpec] = &[
             "write-path-bits",
             "images",
             "warmup",
+            "faults",
             "trace",
             "trace-csv",
             "trace-window",
@@ -128,7 +129,7 @@ const SPECS: &[CmdSpec] = &[
         usage: "h2pipe serve [--model NAME | --plan FILE.json] [--requests N] [--batch N] \
                 [--replicas N] [--shards M] [--clients N] [--seed N] \
                 [--serve-model cifarnet|resnet_block|mobilenet_edge] \
-                [--trace OUT.json] [--metrics-port P]",
+                [--faults FILE.json] [--trace OUT.json] [--metrics-port P]",
         keys: &[
             "model",
             "plan",
@@ -139,9 +140,17 @@ const SPECS: &[CmdSpec] = &[
             "clients",
             "seed",
             "serve-model",
+            "faults",
             "trace",
             "metrics-port",
         ],
+        flags: &[],
+    },
+    CmdSpec {
+        name: "faults",
+        about: "write a seeded h2pipe.faults/v1 fault-plan artifact",
+        usage: "h2pipe faults [--preset chaos] [--seed N] [--out FILE.json]",
+        keys: &["preset", "seed", "out"],
         flags: &[],
     },
     CmdSpec {
@@ -278,6 +287,14 @@ impl Args {
         }))
     }
 
+    /// The armed fault plan from `--faults`, if any.
+    fn fault_plan(&self) -> Result<Option<h2pipe::faults::FaultPlan>> {
+        match self.kv.get("faults") {
+            None => Ok(None),
+            Some(path) => Ok(Some(h2pipe::faults::FaultPlan::load(path)?)),
+        }
+    }
+
     /// The artifact stage: load `--plan` or compile from the knobs.
     fn compiled(&self) -> Result<CompiledModel> {
         match self.kv.get("plan") {
@@ -382,9 +399,24 @@ fn run() -> Result<()> {
             if let Some(t) = args.trace_options()? {
                 dep = dep.with_trace(t);
             }
+            if let Some(fp) = args.fault_plan()? {
+                dep = dep.with_faults(fp);
+            }
             let rep = dep.run()?;
             println!("{}", rep.summary());
             println!("{}", rep.to_json());
+        }
+        "faults" => {
+            let preset = args.kv.get("preset").map(String::as_str).unwrap_or("chaos");
+            anyhow::ensure!(preset == "chaos", "unknown preset {preset:?} (expected \"chaos\")");
+            let fp = h2pipe::faults::FaultPlan::chaos_preset(args.get("seed", 42u64)?);
+            match args.kv.get("out") {
+                Some(path) => {
+                    fp.save(path)?;
+                    println!("fault plan written to {path}");
+                }
+                None => println!("{}", fp.to_json()),
+            }
         }
         "characterize" => {
             let bursts: Vec<u32> = args
@@ -510,6 +542,9 @@ fn run() -> Result<()> {
             let mut dep = cm.deploy(DeploymentTarget::Serve(opts));
             if let Some(t) = args.trace_options()? {
                 dep = dep.with_trace(t);
+            }
+            if let Some(fp) = args.fault_plan()? {
+                dep = dep.with_faults(fp);
             }
             let rep = dep.run()?;
             println!("{}", rep.summary());

@@ -44,6 +44,30 @@ pub fn prometheus_text(snaps: &[(String, MetricsSnapshot)]) -> String {
     for (label, m) in snaps {
         let _ = writeln!(s, "h2pipe_requests_rejected_total{{scope=\"{label}\"}} {}", m.rejected);
     }
+    counter(&mut s, "retries_total", "Retry attempts beyond a request's first try.");
+    for (label, m) in snaps {
+        let _ = writeln!(s, "h2pipe_retries_total{{scope=\"{label}\"}} {}", m.retries);
+    }
+    counter(&mut s, "failovers_total", "Requests completed on a later attempt than their first.");
+    for (label, m) in snaps {
+        let _ = writeln!(s, "h2pipe_failovers_total{{scope=\"{label}\"}} {}", m.failovers);
+    }
+    counter(&mut s, "timeouts_total", "Requests that hit the per-request deadline.");
+    for (label, m) in snaps {
+        let _ = writeln!(s, "h2pipe_timeouts_total{{scope=\"{label}\"}} {}", m.timeouts);
+    }
+    counter(&mut s, "shed_total", "Requests shed by admission control.");
+    for (label, m) in snaps {
+        let _ = writeln!(s, "h2pipe_shed_total{{scope=\"{label}\"}} {}", m.shed);
+    }
+    counter(&mut s, "reboots_total", "Watchdog reboots of crashed replicas.");
+    for (label, m) in snaps {
+        let _ = writeln!(s, "h2pipe_reboots_total{{scope=\"{label}\"}} {}", m.reboots);
+    }
+    gauge(&mut s, "mttr_ms", "Mean time to recovery across reboots (ms).");
+    for (label, m) in snaps {
+        let _ = writeln!(s, "h2pipe_mttr_ms{{scope=\"{label}\"}} {:.3}", m.mttr_ms);
+    }
     counter(&mut s, "batches_total", "Batches dispatched.");
     for (label, m) in snaps {
         let _ = writeln!(s, "h2pipe_batches_total{{scope=\"{label}\"}} {}", m.batches);
@@ -178,6 +202,12 @@ mod tests {
         MetricsSnapshot {
             completed,
             rejected,
+            retries: 1,
+            failovers: 1,
+            timeouts: 0,
+            shed: 0,
+            reboots: 1,
+            mttr_ms: 12.5,
             batches: 2,
             batched_requests: completed,
             uptime_s: 1.5,
@@ -203,6 +233,10 @@ mod tests {
             "{text}"
         );
         assert!(text.contains("h2pipe_drop_rate{scope=\"router\"} 0.16666666666666666"), "{text}");
+        assert!(text.contains("# TYPE h2pipe_failovers_total counter"), "{text}");
+        assert!(text.contains("h2pipe_retries_total{scope=\"router\"} 1"), "{text}");
+        assert!(text.contains("h2pipe_reboots_total{scope=\"router\"} 1"), "{text}");
+        assert!(text.contains("h2pipe_mttr_ms{scope=\"router\"} 12.500"), "{text}");
     }
 
     #[test]

@@ -50,6 +50,16 @@ pub trait Probe {
     /// and completion cycles in the controller (400 MHz) domain, and the
     /// burst length in 256-bit beats.
     fn hbm_burst(&mut self, _pc: u32, _accept_cycle: u64, _done_cycle: u64, _beats: u32) {}
+
+    /// One discrete fault-injection or recovery event (`--faults` runs
+    /// only). `site` is the faulting resource index in its own namespace
+    /// (PC id for `hbm_*`, link index for `link_*`, replica index for
+    /// `replica_*`); `now` is in the emitting site's clock domain;
+    /// `kind` is a stable label (`"hbm_replay"`, `"hbm_drop"`,
+    /// `"link_stall"`, `"replica_down"`, `"replica_up"`, ...); `detail`
+    /// is a kind-specific payload (request id, window length, ...).
+    /// Unlike the sample hooks these are events, not cumulative counters.
+    fn fault_event(&mut self, _site: u32, _now: u64, _kind: &str, _detail: u64) {}
 }
 
 /// A probe that records nothing — for overhead measurements of the

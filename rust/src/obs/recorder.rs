@@ -20,6 +20,10 @@ use crate::util::Json;
 /// memory and trace size. Overflow is counted, never silent.
 pub const MAX_BURSTS: usize = 20_000;
 
+/// Cap on stored fault events, same rationale (a high-probability error
+/// window can fire tens of thousands of times).
+pub const MAX_FAULT_EVENTS: usize = 20_000;
+
 /// One engine stall-breakdown window (core-cycle deltas over
 /// `[start, end)`).
 #[derive(Debug, Clone, Default)]
@@ -127,6 +131,16 @@ pub struct BurstEvent {
     pub beats: u32,
 }
 
+/// One fault-injection / recovery event (`--faults` runs only). Cycles
+/// are in the emitting site's clock domain (see [`Probe::fault_event`]).
+#[derive(Debug, Clone)]
+pub struct FaultRecord {
+    pub site: u32,
+    pub now: u64,
+    pub kind: String,
+    pub detail: u64,
+}
+
 /// The windowed time-series collector.
 #[derive(Debug, Clone)]
 pub struct Recorder {
@@ -137,6 +151,8 @@ pub struct Recorder {
     pub links: BTreeMap<usize, LinkTrack>,
     pub bursts: Vec<BurstEvent>,
     pub bursts_dropped: u64,
+    pub fault_events: Vec<FaultRecord>,
+    pub fault_events_dropped: u64,
 }
 
 impl Recorder {
@@ -150,6 +166,8 @@ impl Recorder {
             links: BTreeMap::new(),
             bursts: Vec::new(),
             bursts_dropped: 0,
+            fault_events: Vec::new(),
+            fault_events_dropped: 0,
         }
     }
 
@@ -264,6 +282,10 @@ impl Recorder {
             .set("max_fifo_fill", max_fill)
             .set("bursts_recorded", self.bursts.len())
             .set("bursts_dropped", self.bursts_dropped);
+        if !self.fault_events.is_empty() || self.fault_events_dropped > 0 {
+            o.set("fault_events_recorded", self.fault_events.len())
+                .set("fault_events_dropped", self.fault_events_dropped);
+        }
         o
     }
 }
@@ -356,6 +378,14 @@ impl Probe for Recorder {
             return;
         }
         self.bursts.push(BurstEvent { pc, accept_cycle, done_cycle, beats });
+    }
+
+    fn fault_event(&mut self, site: u32, now: u64, kind: &str, detail: u64) {
+        if self.fault_events.len() >= MAX_FAULT_EVENTS {
+            self.fault_events_dropped += 1;
+            return;
+        }
+        self.fault_events.push(FaultRecord { site, now, kind: kind.to_string(), detail });
     }
 }
 

@@ -23,6 +23,7 @@ const PID_ENGINES: u64 = 1;
 const PID_HBM: u64 = 2;
 const PID_FIFOS: u64 = 3;
 const PID_LINKS: u64 = 4;
+const PID_FAULTS: u64 = 5;
 
 fn meta(pid: u64, tid: u64, what: &str, name: &str) -> Json {
     let mut args = Json::obj();
@@ -69,6 +70,7 @@ pub fn chrome_trace(rec: &Recorder, core_mhz: u32, controller_mhz: u32) -> Json 
     ev.push(meta(PID_HBM, 0, "process_name", "hbm"));
     ev.push(meta(PID_FIFOS, 0, "process_name", "weight_fifos"));
     ev.push(meta(PID_LINKS, 0, "process_name", "links"));
+    ev.push(meta(PID_FAULTS, 0, "process_name", "faults"));
 
     // Engine stall spans: each window's deltas partition [start, end) in
     // a fixed category order (active first).
@@ -145,6 +147,25 @@ pub fn chrome_trace(rec: &Recorder, core_mhz: u32, controller_mhz: u32) -> Json 
         }
     }
 
+    // Fault-injection / recovery events as Perfetto instants on the
+    // dedicated faults track (one thread per site). `hbm_*` events carry
+    // controller-domain cycles; everything else is core-domain.
+    for f in &rec.fault_events {
+        let ts = if f.kind.starts_with("hbm_") { hbm_us(f.now) } else { core_us(f.now) };
+        let mut args = Json::obj();
+        args.set("detail", f.detail).set("site", f.site);
+        let mut o = Json::obj();
+        o.set("ph", "i")
+            .set("cat", "fault")
+            .set("pid", PID_FAULTS)
+            .set("tid", f.site as u64 + 1)
+            .set("s", "t")
+            .set("name", f.kind.as_str())
+            .set("ts", ts)
+            .set("args", args);
+        ev.push(o);
+    }
+
     let mut o = Json::obj();
     o.set("traceEvents", ev)
         .set("displayTimeUnit", "ms")
@@ -211,6 +232,13 @@ pub fn csv(rec: &Recorder) -> String {
                 w.start, w.end, w.blocked
             );
         }
+    }
+    for f in &rec.fault_events {
+        let _ = writeln!(
+            s,
+            "fault,{},{},{},{},{},{}",
+            f.site, f.kind, f.now, f.now, f.kind, f.detail
+        );
     }
     s
 }
@@ -294,6 +322,21 @@ mod tests {
         assert!(text.starts_with("kind,track,name,start,end,metric,value\n"));
         assert!(text.contains("engine,0,conv1,0,100,active,60"), "{text}");
         assert!(text.contains("link,0,link0,0,100,lines,50"), "{text}");
+    }
+
+    #[test]
+    fn fault_events_render_as_instants_and_csv_rows() {
+        let mut r = recorded();
+        r.fault_event(3, 800, "hbm_replay", 17);
+        r.fault_event(0, 200, "replica_down", 1);
+        let j = chrome_trace(&r, 300, 400);
+        let text = j.to_string();
+        assert!(text.contains("\"name\":\"faults\""), "{text}");
+        assert!(text.contains("\"ph\":\"i\""), "{text}");
+        assert!(text.contains("\"name\":\"hbm_replay\""), "{text}");
+        assert!(Json::parse(&text).is_ok());
+        let c = csv(&r);
+        assert!(c.contains("fault,3,hbm_replay,800,800,hbm_replay,17"), "{c}");
     }
 
     #[test]

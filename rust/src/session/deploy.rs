@@ -20,10 +20,11 @@ use anyhow::{ensure, Context, Result};
 
 use crate::cluster::{partition, FleetConfig, FleetRouter, FleetSim, PartitionOptions};
 use crate::coordinator::ServerConfig;
+use crate::faults::FaultPlan;
 use crate::obs::{MetricsServer, Recorder};
 use crate::session::compiled::CompiledModel;
 use crate::session::report::RunReport;
-use crate::sim::pipeline::SimConfig;
+use crate::sim::pipeline::{PipelineSim, SimConfig};
 use crate::util::XorShift64;
 
 /// Flight-recorder / trace-export options (`--trace`, `--trace-window`).
@@ -113,17 +114,28 @@ pub struct Deployment<'a> {
     compiled: &'a CompiledModel,
     target: DeploymentTarget,
     trace: Option<TraceOptions>,
+    faults: Option<FaultPlan>,
 }
 
 impl<'a> Deployment<'a> {
     pub(crate) fn new(compiled: &'a CompiledModel, target: DeploymentTarget) -> Self {
-        Self { compiled, target, trace: None }
+        Self { compiled, target, trace: None, faults: None }
     }
 
     /// Attach flight-recorder tracing to this deployment (see
     /// [`TraceOptions`]).
     pub fn with_trace(mut self, trace: TraceOptions) -> Self {
         self.trace = Some(trace);
+        self
+    }
+
+    /// Arm a fault-injection plan (`--faults f.json`) for this
+    /// deployment. Cycle-domain sections drive the simulators; serve
+    /// sections drive the router's crash/recovery machinery. The plan is
+    /// validated at run time; an empty plan is a healthy run that still
+    /// reports the (all-zero) fault ledger.
+    pub fn with_faults(mut self, faults: FaultPlan) -> Self {
+        self.faults = Some(faults);
         self
     }
 
@@ -181,19 +193,42 @@ impl<'a> Deployment<'a> {
     }
 
     fn run_single(&self, cfg: &SimConfig) -> Result<RunReport> {
-        match &self.trace {
-            None => {
+        match (&self.trace, &self.faults) {
+            (None, None) => {
                 let rep = self.compiled.simulate(cfg)?;
                 Ok(self.report("simulate", rep.throughput, rep.latency * 1e3, rep.to_json()))
             }
-            Some(t) => {
-                let mut rec = Recorder::new(t.window);
-                let rep = self.compiled.simulate_probed(cfg, &mut rec)?;
-                let mut run =
-                    self.report("simulate", rep.throughput, rep.latency * 1e3, rep.to_json());
-                run.profile = rec.profile();
-                self.write_trace(t, &rec)?;
-                Ok(run)
+            (trace, faults) => {
+                let mut sim =
+                    PipelineSim::new(self.compiled.network(), self.compiled.plan())?;
+                if let Some(fp) = faults {
+                    fp.validate()?;
+                    sim.apply_faults(fp);
+                }
+                match trace {
+                    None => {
+                        let rep = sim.run(cfg)?;
+                        Ok(self.report(
+                            "simulate",
+                            rep.throughput,
+                            rep.latency * 1e3,
+                            rep.to_json(),
+                        ))
+                    }
+                    Some(t) => {
+                        let mut rec = Recorder::new(t.window);
+                        let rep = sim.run_probed(cfg, &mut rec)?;
+                        let mut run = self.report(
+                            "simulate",
+                            rep.throughput,
+                            rep.latency * 1e3,
+                            rep.to_json(),
+                        );
+                        run.profile = rec.profile();
+                        self.write_trace(t, &rec)?;
+                        Ok(run)
+                    }
+                }
             }
         }
     }
@@ -202,7 +237,10 @@ impl<'a> Deployment<'a> {
         let plan = self.compiled.plan();
         let pp = partition(self.compiled.network(), &plan.device, &plan.options, popts)
             .context("partitioning for fleet deployment")?;
-        let fleet = FleetSim::new(&pp)?;
+        let mut fleet = FleetSim::new(&pp)?;
+        if let Some(fp) = &self.faults {
+            fleet.apply_faults(fp).context("arming the fault plan on the fleet")?;
+        }
         let mut rec = self.trace.as_ref().map(|t| Recorder::new(t.window));
         let rep = match rec.as_mut() {
             None => fleet.run(fcfg)?,
@@ -251,8 +289,12 @@ impl<'a> Deployment<'a> {
         };
         let pixels: usize = cfg.input_dims.iter().product();
 
-        let router =
-            Arc::new(FleetRouter::start_with_tracing(cfg, opts.replicas, self.trace.is_some())?);
+        let router = Arc::new(match &self.faults {
+            None => FleetRouter::start_with_tracing(cfg, opts.replicas, self.trace.is_some())?,
+            Some(fp) => {
+                FleetRouter::start_with_faults(cfg, opts.replicas, self.trace.is_some(), fp)?
+            }
+        });
         // Live Prometheus exposition for the duration of the run. The
         // server's closure holds its own Arc over the router, so it must
         // be stopped before the router can be unwrapped for shutdown.

@@ -69,6 +69,10 @@ pub struct SimReport {
     pub core_cycles: u64,
     /// Per-engine stall accounting.
     pub engine_stats: Vec<EngineStat>,
+    /// Fault-injection ledger — `Some` only when a fault plan was armed
+    /// via [`PipelineSim::apply_faults`], so healthy-run reports stay
+    /// byte-identical to pre-fault builds.
+    pub faults: Option<crate::faults::FaultTotals>,
 }
 
 impl SimReport {
@@ -96,6 +100,9 @@ impl SimReport {
             .set("hbm_efficiency", self.hbm_efficiency)
             .set("core_cycles", self.core_cycles)
             .set("engines", engines);
+        if let Some(f) = &self.faults {
+            o.set("faults", f.to_json());
+        }
         o
     }
 }
@@ -135,6 +142,8 @@ pub struct PipelineSim {
     /// consumer — the credit bound of an inter-device link's receive
     /// FIFO. `u64::MAX` (default) models an always-ready consumer.
     sink_limit: u64,
+    /// Set by [`Self::apply_faults`]; gates the report's `faults` block.
+    faults_armed: bool,
 }
 
 impl PipelineSim {
@@ -195,6 +204,7 @@ impl PipelineSim {
             core_cycles: 0,
             input_limit: u64::MAX,
             sink_limit: u64::MAX,
+            faults_armed: false,
         };
         for i in 0..sim.engines.len() {
             sim.refresh_caches(i);
@@ -347,6 +357,19 @@ impl PipelineSim {
         &self.weights
     }
 
+    /// Arm a fault plan's HBM sections (read errors + throttle windows)
+    /// on this sim's weight subsystem. The resulting [`SimReport`] then
+    /// carries the conservation ledger under `faults`.
+    pub fn apply_faults(&mut self, fp: &crate::faults::FaultPlan) {
+        self.weights.apply_faults(fp.hbm.as_ref(), &fp.throttle, fp.seed);
+        self.faults_armed = true;
+    }
+
+    /// The current fault ledger (all-zero when nothing was armed).
+    pub fn fault_totals(&self) -> crate::faults::FaultTotals {
+        self.weights.fault_totals()
+    }
+
     /// One core-domain cycle across all engines.
     fn step_core(&mut self, images: u64) {
         let n = self.engines.len();
@@ -474,6 +497,7 @@ impl PipelineSim {
             hbm_efficiency: self.weights.mean_read_efficiency(),
             core_cycles: self.core_cycles,
             engine_stats,
+            faults: self.faults_armed.then(|| self.weights.fault_totals()),
         })
     }
 }
@@ -589,6 +613,37 @@ mod tests {
         }
         assert!(sim.sink_lines_produced() <= 1, "sink overran its credit bound");
         assert!(sim.sink_output_blocked() > 0, "sink must register the credit stall");
+    }
+
+    #[test]
+    fn faulted_simulation_completes_conserves_and_is_deterministic() {
+        use crate::faults::{FaultPlan, HbmFaultSpec};
+        let d = DeviceConfig::stratix10_nx2100();
+        let net = zoo::resnet18();
+        let plan = compile(&net, &d, &CompilerOptions::default()).unwrap();
+        let mut fp = FaultPlan::new(11);
+        fp.hbm = Some(HbmFaultSpec { start: 0, end: 500_000, prob: 0.02, max_replays: 3 });
+        let run = |fp: &FaultPlan| {
+            let mut sim = PipelineSim::new(&net, &plan).unwrap();
+            sim.apply_faults(fp);
+            sim.run(&quick_cfg()).unwrap()
+        };
+        let rep = run(&fp);
+        let t = rep.faults.expect("armed run must carry the ledger");
+        assert!(t.injected > 0, "error window must fire: {t:?}");
+        assert_eq!(t.lost(), 0, "conservation: {t:?}");
+        let j = rep.to_json().to_string();
+        assert!(j.contains("\"lost\":0"), "{j}");
+        assert!(j.contains("\"recovered\":"), "{j}");
+        // Same seed ⇒ byte-identical report (the CI determinism check).
+        let rep2 = run(&fp);
+        assert_eq!(rep.to_json().to_string(), rep2.to_json().to_string());
+        // A healthy run stays byte-identical to pre-fault builds.
+        let healthy = simulate(&net, &plan, &quick_cfg()).unwrap();
+        assert!(healthy.faults.is_none());
+        assert!(!healthy.to_json().to_string().contains("\"faults\""));
+        // Faults cost throughput, not correctness.
+        assert!(rep.throughput <= healthy.throughput * 1.001);
     }
 
     #[test]

@@ -17,6 +17,7 @@ use std::collections::HashMap;
 
 use crate::compiler::AcceleratorPlan;
 use crate::fabric::CreditCounter;
+use crate::faults::{site_seed, FaultTotals, HbmFaultSpec, ThrottleWindow};
 use crate::hbm::controller::{Dir, PcStats, PcTuning, Request};
 use crate::hbm::HbmStack;
 use crate::obs::Probe;
@@ -162,6 +163,44 @@ impl WeightSubsystem {
         self.streams.len()
     }
 
+    /// Arm the plan's HBM fault sections on every weight-carrying PC.
+    /// Each PC gets its own RNG stream ([`site_seed`] over the global PC
+    /// id) and only the throttle windows addressed to it, so injection is
+    /// deterministic and independent per site.
+    pub fn apply_faults(
+        &mut self,
+        hbm: Option<&HbmFaultSpec>,
+        throttle: &[ThrottleWindow],
+        seed: u64,
+    ) {
+        for gi in 0..self.pc_groups.len() {
+            let (stack_idx, local_pc) =
+                (self.pc_groups[gi].stack_idx, self.pc_groups[gi].local_pc);
+            let pc = stack_idx as u32 * self.pcs_per_stack + local_pc as u32;
+            let windows: Vec<ThrottleWindow> =
+                throttle.iter().filter(|t| t.pc == pc as usize).cloned().collect();
+            self.stacks[stack_idx].pc(local_pc).inject_faults(
+                hbm.cloned(),
+                windows,
+                site_seed(seed, u64::from(pc)),
+            );
+        }
+    }
+
+    /// The conservation ledger summed over every weight-carrying PC:
+    /// HBM read faults land as `injected`/`retried`(replays)/`dropped`,
+    /// throttle denial as `throttled_cycles`.
+    pub fn fault_totals(&self) -> FaultTotals {
+        let mut t = FaultTotals::default();
+        self.for_each_pc_stats(|_, s| {
+            t.injected += s.faults_injected;
+            t.retried += s.fault_replays;
+            t.dropped += s.faults_dropped;
+            t.throttled_cycles += s.throttled_cycles;
+        });
+        t
+    }
+
     /// Advance the HBM clock domain one controller cycle: issue prefetch
     /// reads (credit-gated) and collect completions.
     pub fn hbm_tick(&mut self) {
@@ -215,6 +254,16 @@ impl WeightSubsystem {
                             let pc = st as u32 * self.pcs_per_stack + (ch * 2 + k) as u32;
                             p.hbm_burst(pc, c.accept_cycle, c.done_cycle, self.burst);
                         }
+                    }
+                }
+                // Fault events must drain unconditionally (bounded
+                // memory); they reach the recorder's faults track only
+                // when a probe is attached.
+                for e in pcc.drain_fault_events() {
+                    if let Some(p) = probe.as_deref_mut() {
+                        let pc = st as u32 * self.pcs_per_stack + (ch * 2 + k) as u32;
+                        let kind = if e.replayed { "hbm_replay" } else { "hbm_drop" };
+                        p.fault_event(pc, e.cycle, kind, e.id);
                     }
                 }
             }
@@ -384,6 +433,45 @@ mod tests {
         assert!(consumed > 0);
         let freeze_frac = frozen as f64 / (consumed + frozen) as f64;
         assert!(freeze_frac < 0.35, "freeze fraction {freeze_frac:.3} too high");
+    }
+
+    #[test]
+    fn faulted_prefetch_conserves_and_still_supplies() {
+        let plan = plan_r50();
+        let mut ws = WeightSubsystem::new(&plan);
+        ws.apply_faults(
+            Some(&HbmFaultSpec { start: 0, end: 50_000, prob: 0.05, max_replays: 3 }),
+            &[ThrottleWindow { pc: 0, start: 0, end: 20_000, deny: 2, period: 8 }],
+            42,
+        );
+        let li = plan
+            .layers
+            .iter()
+            .enumerate()
+            .find(|(_, l)| !l.pcs.is_empty())
+            .map(|(i, _)| i)
+            .unwrap();
+        for _ in 0..50_000 {
+            ws.hbm_tick();
+        }
+        let t = ws.fault_totals();
+        assert!(t.injected > 0, "window must fire on a busy subsystem");
+        assert_eq!(t.lost(), 0, "conservation: {t:?}");
+        assert_eq!(t.injected, t.retried + t.dropped, "{t:?}");
+        assert!(t.throttled_cycles > 0, "PC 0 carries weights on r50");
+        assert!(ws.layer_ready(li), "bounded replay must not starve the FIFO");
+
+        // Same seed, same workload → identical ledger.
+        let mut ws2 = WeightSubsystem::new(&plan);
+        ws2.apply_faults(
+            Some(&HbmFaultSpec { start: 0, end: 50_000, prob: 0.05, max_replays: 3 }),
+            &[ThrottleWindow { pc: 0, start: 0, end: 20_000, deny: 2, period: 8 }],
+            42,
+        );
+        for _ in 0..50_000 {
+            ws2.hbm_tick();
+        }
+        assert_eq!(ws2.fault_totals(), t, "seeded injection must be deterministic");
     }
 
     #[test]

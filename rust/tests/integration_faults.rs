@@ -1,0 +1,249 @@
+//! Integration: deterministic fault injection + recovery (ISSUE 8
+//! acceptance).
+//!
+//! (a) a serving soak with a mid-run replica kill loses nothing: every
+//!     request leaves through a counted door and the recovery machinery
+//!     (failover + watchdog reboot) keeps the tail bounded;
+//! (b) HBM fault replays never break the controller's outstanding-beat
+//!     bound, and the per-PC ledger conserves (injected == replays +
+//!     drops);
+//! (c) same-seed chaos simulations are byte-identical, different seeds
+//!     are not, and healthy runs keep their pre-fault report shape;
+//! (d) the `h2pipe.faults/v1` artifact round-trips through disk and
+//!     rejects foreign format tags;
+//! (e) a sharded fleet run with an HBM error burst, a link stall, and a
+//!     replica crash-then-rejoin conserves lines and replays
+//!     byte-identically.
+
+use h2pipe::cluster::{FleetConfig, PartitionOptions};
+use h2pipe::config::DeviceConfig;
+use h2pipe::faults::{
+    FaultPlan, HbmFaultSpec, LinkFault, LinkFaultKind, ReplicaOutage, ServeFault, ServeFaultKind,
+};
+use h2pipe::hbm::controller::{Dir, PcTuning, PseudoChannel, Request};
+use h2pipe::hbm::CmdBus;
+use h2pipe::session::{CompiledModel, DeploymentTarget, ServeOptions, Session};
+use h2pipe::sim::pipeline::SimConfig;
+use h2pipe::testkit::{check, Gen};
+use h2pipe::util::Json;
+
+fn compiled_resnet18() -> CompiledModel {
+    Session::builder()
+        .model("resnet18")
+        .device(DeviceConfig::stratix10_nx2100())
+        .compile()
+        .unwrap()
+}
+
+fn artifact_dir() -> String {
+    format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+}
+
+#[test]
+fn chaos_serve_soak_survives_a_mid_run_replica_kill() {
+    // (a): 3 replicas, replica 1 crashes after 4 served requests, the
+    // watchdog reboots it while 2 clients keep the soak running.
+    let cm = compiled_resnet18();
+    let mut plan = FaultPlan::new(11);
+    plan.serve =
+        vec![ServeFault { replica: 1, kind: ServeFaultKind::Crash { after_requests: 4 } }];
+    plan.recovery.watchdog_ms = 2;
+    plan.recovery.backoff_ms = 1;
+    let deadline_ms = plan.recovery.request_deadline_ms as f64;
+    let opts = ServeOptions {
+        requests: 240,
+        batch: 4,
+        replicas: 3,
+        clients: 2,
+        artifact_dir: artifact_dir(),
+        // ~1 ms modelled service time stretches the soak far past the
+        // watchdog period, so the reboot happens mid-run, not post-run.
+        modelled_image_s: Some(0.001),
+        ..ServeOptions::default()
+    };
+    let rep = cm.deploy(DeploymentTarget::Serve(opts)).with_faults(plan).run().unwrap();
+
+    let f = rep.detail.get("faults").expect("armed run must carry the fault ledger");
+    let s = f.to_string();
+    assert!(s.contains("\"lost\":0"), "a request vanished: {s}");
+    assert!(
+        f.get("recovered").and_then(Json::as_u64).unwrap() > 0,
+        "the crash must surface as failover and/or reboot: {s}"
+    );
+    assert!(
+        f.get("reboots").and_then(Json::as_u64).unwrap() >= 1,
+        "watchdog must reboot the crashed replica mid-soak: {s}"
+    );
+    // conservation at the client boundary: every submitted request
+    // completed or was rejected — none hang, none are lost
+    let m = rep.detail.get("metrics").unwrap();
+    let completed = m.get("completed").and_then(Json::as_u64).unwrap();
+    let rejected = m.get("rejected").and_then(Json::as_u64).unwrap();
+    assert_eq!(completed + rejected, 240, "request accounting broken");
+    assert!(completed > 0, "the soak must make progress through the crash");
+    // bounded tail: a successful request's last attempt starts inside the
+    // router deadline and is itself server-deadline-bounded
+    let p99 = m.get("p99_ms").and_then(Json::as_f64).unwrap();
+    assert!(p99.is_finite() && p99 < 2.0 * deadline_ms, "p99 {p99} ms unbounded");
+}
+
+#[test]
+fn prop_fault_replays_respect_the_outstanding_beat_bound() {
+    // (b): random read traffic against an armed PC — the queued-beat
+    // bound must hold on every cycle (replays restore exactly what the
+    // faulted issue subtracted), and the per-PC ledger must conserve.
+    let d = DeviceConfig::stratix10_nx2100();
+    check("hbm-fault-queue-bound", 15, |g: &mut Gen| {
+        let mut pc = PseudoChannel::new(
+            &d.hbm,
+            &d.hbm_timing,
+            PcTuning { outstanding_beats: g.u32(32, 128), lookahead: g.usize(1, 8) },
+        );
+        pc.inject_faults(
+            Some(HbmFaultSpec {
+                start: 0,
+                end: 100_000,
+                prob: 0.2,
+                max_replays: g.u32(0, 3),
+            }),
+            Vec::new(),
+            g.u64(1, u64::MAX - 1),
+        );
+        let bursts = [1u32, 2, 4, 8, 16, 32];
+        let mut id = 0u64;
+        let mut step = |pc: &mut PseudoChannel| -> Option<String> {
+            let mut bus = CmdBus::new();
+            pc.tick(&mut bus);
+            pc.drain_completions();
+            if pc.queued_beats() > pc.outstanding_limit() {
+                return Some(format!(
+                    "queued {} beats > bound {}",
+                    pc.queued_beats(),
+                    pc.outstanding_limit()
+                ));
+            }
+            None
+        };
+        for _ in 0..g.usize(3_000, 8_000) {
+            let bl = *g.choose(&bursts);
+            if g.bool(0.7) && pc.can_accept(bl) {
+                let addr = g.u64(0, (1 << 26) - 1) & !31;
+                pc.push(Request { id, dir: Dir::Read, addr, burst: bl });
+                id += 1;
+            }
+            if let Some(e) = step(&mut pc) {
+                return Err(e);
+            }
+        }
+        let mut guard = 0u64;
+        while !pc.is_idle() {
+            if let Some(e) = step(&mut pc) {
+                return Err(e);
+            }
+            guard += 1;
+            if guard > 2_000_000 {
+                return Err("drain did not converge under fault replay".into());
+            }
+        }
+        let st = &pc.stats;
+        if st.faults_injected == 0 {
+            return Err("a 20% in-window fault rate must fire".into());
+        }
+        if st.faults_injected != st.fault_replays + st.faults_dropped {
+            return Err(format!(
+                "PC ledger broken: {} injected != {} replays + {} drops",
+                st.faults_injected, st.fault_replays, st.faults_dropped
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn chaos_simulate_reports_are_byte_identical_per_seed() {
+    // (c): determinism is the contract the CI chaos step diffs on.
+    let cm = compiled_resnet18();
+    let cfg = SimConfig { images: 3, warmup_images: 1, ..SimConfig::default() };
+    let run = |seed: u64| {
+        cm.deploy(DeploymentTarget::SingleDevice(cfg.clone()))
+            .with_faults(FaultPlan::chaos_preset(seed))
+            .run()
+            .unwrap()
+            .to_json()
+            .to_string()
+    };
+    let a = run(42);
+    assert_eq!(a, run(42), "same seed, same workload => byte-identical report");
+    assert_ne!(a, run(43), "a different seed must perturb the injected faults");
+
+    let f = Json::parse(&a)
+        .unwrap()
+        .get("detail")
+        .and_then(|d| d.get("faults"))
+        .cloned()
+        .expect("armed simulate must report the ledger");
+    assert!(f.get("injected").and_then(Json::as_u64).unwrap() > 0, "{f}");
+    assert_eq!(f.get("lost").and_then(Json::as_u64), Some(0), "{f}");
+    assert!(f.get("recovered").and_then(Json::as_u64).unwrap() > 0, "{f}");
+
+    // healthy runs keep their pre-fault shape: no faults key at all
+    let healthy = cm
+        .deploy(DeploymentTarget::SingleDevice(cfg.clone()))
+        .run()
+        .unwrap()
+        .to_json()
+        .to_string();
+    assert!(!healthy.contains("\"faults\""), "healthy report grew a faults block: {healthy}");
+}
+
+#[test]
+fn fault_plan_artifact_round_trips_and_rejects_bad_format() {
+    // (d): the h2pipe.faults/v1 artifact follows the plan-artifact
+    // discipline — stable bytes, strict format tag.
+    let dir = std::env::temp_dir().join("h2pipe_faults_roundtrip");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("chaos.json");
+    let plan = FaultPlan::chaos_preset(9);
+    plan.save(&path).unwrap();
+    let loaded = FaultPlan::load(&path).unwrap();
+    assert_eq!(plan, loaded, "round-trip must preserve every section");
+    assert_eq!(plan.to_json().to_string(), loaded.to_json().to_string());
+
+    let bad = dir.join("bad.json");
+    let text = std::fs::read_to_string(&path).unwrap().replace("faults/v1", "faults/v9");
+    std::fs::write(&bad, text).unwrap();
+    let err = FaultPlan::load(&bad).unwrap_err();
+    assert!(format!("{err:#}").contains("format"), "{err:#}");
+}
+
+#[test]
+fn fleet_chaos_crash_then_rejoin_conserves_and_replays_identically() {
+    // (e): HBM burst + link stall + replica outage on a 2-shard,
+    // 2-replica fleet. The outage freezes replica 1 mid-run; it rejoins
+    // and the run must still conserve lines and reproduce byte-for-byte.
+    let cm = compiled_resnet18();
+    let mut plan = FaultPlan::new(5);
+    plan.hbm = Some(HbmFaultSpec { start: 0, end: 150_000, prob: 0.05, max_replays: 2 });
+    plan.links = vec![LinkFault { link: 0, start: 5_000, end: 40_000, kind: LinkFaultKind::Stall }];
+    plan.replicas = vec![ReplicaOutage { replica: 1, start: 10_000, end: 60_000 }];
+    let target = DeploymentTarget::Fleet {
+        partition: PartitionOptions { shards: Some(2), max_shards: 2 },
+        fleet: FleetConfig { images: 3, warmup_images: 1, replicas: 2, ..FleetConfig::default() },
+    };
+    let run = || {
+        cm.deploy(target.clone()).with_faults(plan.clone()).run().unwrap().to_json().to_string()
+    };
+    let a = run();
+    assert_eq!(a, run(), "crash-then-rejoin must be deterministic");
+
+    let f = Json::parse(&a)
+        .unwrap()
+        .get("detail")
+        .and_then(|d| d.get("faults"))
+        .cloned()
+        .expect("armed fleet run must report the ledger");
+    assert!(f.get("injected").and_then(Json::as_u64).unwrap() > 0, "{f}");
+    assert_eq!(f.get("lost").and_then(Json::as_u64), Some(0), "{f}");
+    assert!(f.get("link_stall_ticks").and_then(Json::as_u64).unwrap() > 0, "{f}");
+    assert!(f.get("outage_ticks").and_then(Json::as_u64).unwrap() > 0, "{f}");
+}

@@ -10,7 +10,7 @@ pub mod parallelism;
 pub mod plan;
 pub mod resources;
 
-pub use offload::{algorithm1, assign_pcs, score};
+pub use offload::{algorithm1, algorithm1_sparse, assign_pcs, score, score_sparse};
 pub use parallelism::{allocate, Allocation, Budget, Parallelism};
 pub use plan::{AcceleratorPlan, LayerPlan};
 pub use resources::{memory_breakdown, LayerStats, MemoryBreakdown, ResourceUsage};
@@ -64,7 +64,7 @@ pub fn compile(
                 continue;
             }
             if offload[i] {
-                total += s.hbm_weight_m20k(trial_burst);
+                total += s.hbm_weight_m20k_at(trial_burst, opts.last_stage_fifo_depth);
             } else {
                 let cap = crate::util::ceil_div(s.weight_bits, resources::M20K_BITS);
                 let bank = 2 * par[i].chains() as u64;
@@ -87,14 +87,27 @@ pub fn compile(
         budget.max_tbs = (device.tensor_blocks as f64 * scale) as u64;
         budget.max_alms = (device.alms as f64 * scale.min(opts.max_utilization)) as u64;
         let alloc = allocate(&stats, &budget);
-        let off_plan = algorithm1(
+        let mut off_plan = offload::algorithm1_sparse(
             &stats,
             &alloc.par,
             device.usable_pcs() as u64,
             device.chains_per_pc() as u64,
             opts.all_hbm,
-            |offload| m20k_for(offload, &alloc.par) <= (m20k_budget as f64 * 0.98) as u64,
+            opts.sparsity_fraction,
+            |offload| {
+                // the greedy's fit check sees the forced placements too,
+                // so it stops (or keeps going) against the real memory
+                // system the overrides will produce
+                let mut trial = offload.to_vec();
+                for &(idx, to_hbm) in &opts.offload_overrides {
+                    if idx < trial.len() {
+                        trial[idx] = to_hbm;
+                    }
+                }
+                m20k_for(&trial, &alloc.par) <= (m20k_budget as f64 * 0.98) as u64
+            },
         );
+        apply_offload_overrides(&stats, &alloc.par, opts, device, &mut off_plan)?;
         if m20k_for(&off_plan.offload, &alloc.par) <= m20k_budget {
             break (alloc, off_plan);
         }
@@ -176,6 +189,50 @@ pub fn compile(
 
 fn ceil_div_m20k(bits: u64) -> u64 {
     crate::util::ceil_div(bits, resources::M20K_BITS)
+}
+
+/// Apply `CompilerOptions::offload_overrides` on top of an Algorithm 1
+/// result and re-derive the free-bandwidth count. Overrides share the
+/// pseudo-channel budget with the greedy's own picks, so a set of flips
+/// that oversubscribes the HBM chain slots (or names a layer that cannot
+/// hold weights) fails compilation here — the autotuner records such
+/// candidates as infeasible instead of ever scoring them.
+fn apply_offload_overrides(
+    stats: &[LayerStats],
+    par: &[Parallelism],
+    opts: &CompilerOptions,
+    device: &DeviceConfig,
+    off: &mut offload::OffloadPlan,
+) -> Result<()> {
+    if opts.offload_overrides.is_empty() {
+        return Ok(());
+    }
+    for &(idx, to_hbm) in &opts.offload_overrides {
+        ensure!(
+            idx < stats.len(),
+            "offload override targets layer {idx} but the network has {} layers",
+            stats.len()
+        );
+        ensure!(
+            stats[idx].has_weights,
+            "offload override targets weightless layer {idx} ({})",
+            stats[idx].name
+        );
+        off.offload[idx] = to_hbm;
+    }
+    let cap = device.usable_pcs() as u64 * device.chains_per_pc() as u64;
+    let used: u64 = stats
+        .iter()
+        .enumerate()
+        .filter(|&(i, _)| off.offload[i])
+        .map(|(i, _)| par[i].chains() as u64)
+        .sum();
+    ensure!(
+        used <= cap,
+        "offload overrides oversubscribe HBM bandwidth: {used} chain slots > {cap}"
+    );
+    off.free_bw = cap - used;
+    Ok(())
 }
 
 #[cfg(test)]
@@ -340,6 +397,50 @@ mod tests {
                 crate::config::EfficiencyTable::calibrated().lookup(bl)
             );
         }
+    }
+
+    #[test]
+    fn offload_overrides_flip_placements_and_rebalance_bandwidth() {
+        let d = device();
+        let base = compile(&zoo::resnet18(), &d, &CompilerOptions::default()).unwrap();
+        // force the two largest on-chip weight layers to HBM
+        let mut targets: Vec<usize> = base
+            .layers
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.stats.has_weights && l.placement == WeightPlacement::OnChip)
+            .map(|(i, _)| i)
+            .collect();
+        targets.sort_by_key(|&i| std::cmp::Reverse(base.layers[i].stats.weight_m20k));
+        targets.truncate(2);
+        targets.sort_unstable();
+        let mut o = CompilerOptions::default();
+        o.offload_overrides = targets.iter().map(|&i| (i, true)).collect();
+        let plan = compile(&zoo::resnet18(), &d, &o).unwrap();
+        for &i in &targets {
+            assert_eq!(plan.layers[i].placement, WeightPlacement::Hbm, "layer {i} must flip");
+            assert!(!plan.layers[i].pcs.is_empty(), "flipped layer {i} needs PC slots");
+        }
+        let cap = d.usable_pcs() as u64 * d.chains_per_pc() as u64;
+        let used: u64 = plan.hbm_layers().map(|l| l.par.chains() as u64).sum();
+        assert_eq!(used + plan.free_bw_slots, cap, "free bandwidth must be re-derived");
+    }
+
+    #[test]
+    fn bad_offload_overrides_fail_compilation() {
+        let d = device();
+        let net = zoo::resnet18();
+        let mut o = CompilerOptions::default();
+        o.offload_overrides = vec![(10_000, true)];
+        assert!(compile(&net, &d, &o).is_err(), "out-of-range layer index");
+        let weightless = net
+            .layers()
+            .iter()
+            .position(|l| l.weight_params() == 0 && l.id > 0)
+            .expect("resnet18 has pools/adds");
+        let mut o = CompilerOptions::default();
+        o.offload_overrides = vec![(weightless, true)];
+        assert!(compile(&net, &d, &o).is_err(), "weightless layer cannot offload");
     }
 
     #[test]

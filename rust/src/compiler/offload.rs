@@ -16,10 +16,23 @@ use crate::util::ceil_div;
 /// with a 2-M20K last-stage FIFO. Denominator: HBM weight bandwidth the
 /// layer will consume (bits per core cycle).
 pub fn score(s: &LayerStats, p: Parallelism) -> f64 {
+    score_sparse(s, p, 0.0)
+}
+
+/// Eq. 1 with an HPIPE-style sparsity discount: a sparsity-aware build
+/// skips zero weights, so the on-chip memory an offload would reclaim
+/// shrinks by `1 - sparsity`. Only the score numerator changes — storage
+/// and bandwidth accounting stay dense. `sparsity == 0.0` takes the exact
+/// integer path of [`score`], so default-compiled plans are byte-stable.
+pub fn score_sparse(s: &LayerStats, p: Parallelism, sparsity: f64) -> f64 {
     if !s.has_weights {
         return f64::NEG_INFINITY;
     }
-    let m20k_per_dup = ceil_div(s.weight_bits, M20K_BITS) as i64 - 2;
+    let m20k_per_dup = if sparsity > 0.0 {
+        (s.weight_bits as f64 * (1.0 - sparsity) / M20K_BITS as f64).ceil() as i64 - 2
+    } else {
+        ceil_div(s.weight_bits, M20K_BITS) as i64 - 2
+    };
     let saved = m20k_per_dup * s.dup as i64;
     let bw = (p.chains() as u64 * CHAIN_WEIGHT_BITS) as f64;
     saved as f64 / bw
@@ -49,11 +62,26 @@ pub fn algorithm1(
     n_pc: u64,
     chains_per_pc: u64,
     force_all: bool,
+    fits_on_chip: impl FnMut(&[bool]) -> bool,
+) -> OffloadPlan {
+    algorithm1_sparse(stats, par, n_pc, chains_per_pc, force_all, 0.0, fits_on_chip)
+}
+
+/// [`algorithm1`] ranking layers by [`score_sparse`] instead of [`score`]:
+/// the greedy is unchanged, only the offload ordering shifts when a
+/// sparsity fraction discounts the Eq. 1 numerator.
+pub fn algorithm1_sparse(
+    stats: &[LayerStats],
+    par: &[Parallelism],
+    n_pc: u64,
+    chains_per_pc: u64,
+    force_all: bool,
+    sparsity: f64,
     mut fits_on_chip: impl FnMut(&[bool]) -> bool,
 ) -> OffloadPlan {
     let l_count = stats.len();
     let scores: Vec<f64> =
-        stats.iter().zip(par.iter()).map(|(s, &p)| score(s, p)).collect();
+        stats.iter().zip(par.iter()).map(|(s, &p)| score_sparse(s, p, sparsity)).collect();
     let mut offload = vec![false; l_count];
 
     // order: layer indices sorted by score, best first
@@ -168,6 +196,41 @@ mod tests {
             score(&stats[fc6], par[fc6]) > score(&stats[conv1_1], par[conv1_1]),
             "fc6 (huge, 1 line) must outscore conv1_1 (tiny, 224 lines)"
         );
+    }
+
+    #[test]
+    fn sparse_score_discounts_onchip_cost_only() {
+        let net = zoo::vgg16();
+        let (stats, par) = stats_and_par(&net);
+        let fc6 = net.layers().iter().position(|l| l.name == "fc6").unwrap();
+        // sparsity 0.0 is bit-identical to the dense Eq. 1 path
+        assert_eq!(score_sparse(&stats[fc6], par[fc6], 0.0), score(&stats[fc6], par[fc6]));
+        // a sparse build reclaims fewer M20Ks, so offloading looks worse
+        let dense = score(&stats[fc6], par[fc6]);
+        let half = score_sparse(&stats[fc6], par[fc6], 0.5);
+        assert!(half < dense, "sparsity must shrink the score: {half} vs {dense}");
+        assert!(half > 0.0, "fc6 still saves memory at 50% sparsity");
+        // weightless layers stay -inf at any sparsity
+        let pool = net.layers().iter().position(|l| l.name == "pool5").unwrap();
+        assert_eq!(score_sparse(&stats[pool], par[pool], 0.5), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn sparse_ranking_can_reorder_algorithm1() {
+        let net = zoo::resnet50();
+        let (stats, par) = stats_and_par(&net);
+        let dense = algorithm1(&stats, &par, 31, 3, true, |_| false);
+        let sparse = algorithm1_sparse(&stats, &par, 31, 3, true, 0.5, |_| false);
+        // same greedy, same bandwidth cap — only the ordering input moves
+        assert_eq!(dense.offload.len(), sparse.offload.len());
+        for (i, s) in stats.iter().enumerate() {
+            if !s.has_weights {
+                assert!(!sparse.offload[i]);
+                assert_eq!(sparse.scores[i], f64::NEG_INFINITY);
+            } else {
+                assert!(sparse.scores[i] <= dense.scores[i], "{}", s.name);
+            }
+        }
     }
 
     #[test]

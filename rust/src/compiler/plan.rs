@@ -45,12 +45,19 @@ impl LayerPlan {
     }
 
     /// M20K cost when streamed from HBM (last-stage + burst-matching
-    /// FIFOs).
+    /// FIFOs) at the paper's 512-word last-stage depth.
     pub fn hbm_m20k(&self, burst_len: u32) -> u64 {
+        self.hbm_m20k_at(burst_len, 512)
+    }
+
+    /// [`Self::hbm_m20k`] at an explicit last-stage FIFO depth — the
+    /// accounting path for plans compiled with a tuned
+    /// `last_stage_fifo_depth`.
+    pub fn hbm_m20k_at(&self, burst_len: u32, fifo_depth: u32) -> u64 {
         if !self.stats.has_weights {
             return 0;
         }
-        self.stats.hbm_weight_m20k(burst_len)
+        self.stats.hbm_weight_m20k_at(burst_len, fifo_depth)
     }
 
     /// Activation-buffer M20K cost.
@@ -245,7 +252,7 @@ impl AcceleratorPlan {
                 match l.placement {
                     WeightPlacement::OnChip => m20k += l.onchip_weight_m20k(),
                     WeightPlacement::Hbm => {
-                        m20k += l.hbm_m20k(self.burst_len);
+                        m20k += l.hbm_m20k_at(self.burst_len, self.options.last_stage_fifo_depth);
                         alms += ALM_PER_HBM_LAYER;
                     }
                 }

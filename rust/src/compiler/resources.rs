@@ -183,7 +183,15 @@ impl LayerStats {
     /// M20K cost if offloaded: 2 M20Ks (512x40 last-stage FIFO) per
     /// duplicate (Eq. 1's "-2" term) plus the burst-matching FIFO.
     pub fn hbm_weight_m20k(&self, burst_len: u32) -> u64 {
-        let last_stage = 2 * self.dup;
+        self.hbm_weight_m20k_at(burst_len, 512)
+    }
+
+    /// [`Self::hbm_weight_m20k`] at an explicit last-stage FIFO depth.
+    /// The paper's 512-word sizing is where the Eq. 1 "-2" comes from;
+    /// the autotuner explores shallower/deeper FIFOs, whose M20K cost
+    /// scales with depth (never below one block per duplicate).
+    pub fn hbm_weight_m20k_at(&self, burst_len: u32, fifo_depth: u32) -> u64 {
+        let last_stage = last_stage_fifo_m20k(fifo_depth) * self.dup;
         // burst-matching FIFO: sized to hold 4 bursts of 256-bit words
         let bm_bits = 4 * burst_len as u64 * 256;
         last_stage + ceil_div(bm_bits, M20K_BITS)
@@ -193,6 +201,13 @@ impl LayerStats {
     pub fn m20k_saved(&self, burst_len: u32) -> i64 {
         self.onchip_weight_m20k() as i64 - self.hbm_weight_m20k(burst_len) as i64
     }
+}
+
+/// M20K blocks of one duplicated last-stage weight FIFO at `depth` 80-bit
+/// words: 2 blocks at the paper's 512 words (§IV-A), scaling linearly
+/// with depth and never dropping below one physical block.
+pub fn last_stage_fifo_m20k(depth: u32) -> u64 {
+    ceil_div(2 * depth as u64, 512).max(1)
 }
 
 /// Whole-accelerator resource totals.
@@ -374,6 +389,22 @@ mod tests {
         assert!(s.m20k_saved(8) > 4000, "fc6 must save thousands of M20Ks");
         // savings shrink as burst length grows (bigger burst-matching FIFOs)
         assert!(s.m20k_saved(32) < s.m20k_saved(8));
+    }
+
+    #[test]
+    fn fifo_depth_scales_last_stage_cost() {
+        // 512 words is the paper's 2-M20K sizing; the depth-aware cost
+        // must agree with it exactly so default plans are unchanged.
+        assert_eq!(last_stage_fifo_m20k(512), 2);
+        assert_eq!(last_stage_fifo_m20k(256), 1);
+        assert_eq!(last_stage_fifo_m20k(128), 1, "floor of one physical block");
+        assert_eq!(last_stage_fifo_m20k(1024), 4);
+        let net = zoo::vgg16();
+        let l = net.layers().iter().find(|l| l.name == "fc6").unwrap();
+        let s = LayerStats::from_layer(l, &opts());
+        assert_eq!(s.hbm_weight_m20k(8), s.hbm_weight_m20k_at(8, 512));
+        assert!(s.hbm_weight_m20k_at(8, 256) < s.hbm_weight_m20k(8));
+        assert!(s.hbm_weight_m20k_at(8, 1024) > s.hbm_weight_m20k(8));
     }
 
     #[test]

@@ -151,6 +151,19 @@ pub struct CompilerOptions {
     /// static deadlock rule (H2P030) whenever layers share a
     /// pseudo-channel.
     pub flow_control: FlowControl,
+    /// Assumed weight-sparsity fraction in `[0, 1)`. HPIPE (Hall & Betz)
+    /// skips zero weights, shrinking the *on-chip* cost side of Eq. 1;
+    /// this knob discounts the Eq. 1 score numerator by `1 - sparsity`
+    /// so the offload ordering reflects a sparsity-aware build. Storage
+    /// and HBM traffic accounting stay dense — the knob re-ranks
+    /// decisions, it never lets a plan under-report its footprint.
+    pub sparsity_fraction: f64,
+    /// Per-layer placement overrides `(layer index, offload_to_hbm)`,
+    /// applied after Algorithm 1 inside the memory-fit loop. The
+    /// autotuner's mechanism for exploring offload flips; indices must be
+    /// strictly increasing (one canonical form, so equal override sets
+    /// always hash equal) and must name weight layers.
+    pub offload_overrides: Vec<(usize, bool)>,
 }
 
 impl Default for CompilerOptions {
@@ -167,6 +180,8 @@ impl Default for CompilerOptions {
             max_chains_per_layer: 32,
             efficiency: EfficiencyTable::calibrated(),
             flow_control: FlowControl::Credit,
+            sparsity_fraction: 0.0,
+            offload_overrides: Vec::new(),
         }
     }
 }
@@ -187,6 +202,19 @@ impl CompilerOptions {
         );
         anyhow::ensure!(self.weight_bits == 8 || self.weight_bits == 16, "8- or 16-bit weights");
         self.efficiency.validate()?;
+        anyhow::ensure!(
+            self.sparsity_fraction.is_finite() && (0.0..1.0).contains(&self.sparsity_fraction),
+            "sparsity_fraction {} must be finite and in [0, 1)",
+            self.sparsity_fraction
+        );
+        for w in self.offload_overrides.windows(2) {
+            anyhow::ensure!(
+                w[0].0 < w[1].0,
+                "offload overrides must use strictly increasing layer indices ({} then {})",
+                w[0].0,
+                w[1].0
+            );
+        }
         Ok(())
     }
 }
@@ -247,6 +275,32 @@ mod tests {
         let mut o = CompilerOptions::default();
         o.efficiency = empty;
         assert!(o.validate().is_err());
+    }
+
+    #[test]
+    fn sparsity_fraction_bounds() {
+        let mut o = CompilerOptions::default();
+        assert_eq!(o.sparsity_fraction, 0.0, "dense by default");
+        o.sparsity_fraction = 0.75;
+        assert!(o.validate().is_ok());
+        o.sparsity_fraction = 1.0;
+        assert!(o.validate().is_err(), "fully sparse weights are meaningless");
+        o.sparsity_fraction = -0.1;
+        assert!(o.validate().is_err());
+        o.sparsity_fraction = f64::NAN;
+        assert!(o.validate().is_err());
+    }
+
+    #[test]
+    fn offload_overrides_must_be_canonical() {
+        let mut o = CompilerOptions::default();
+        assert!(o.offload_overrides.is_empty(), "no overrides by default");
+        o.offload_overrides = vec![(2, true), (5, false)];
+        assert!(o.validate().is_ok());
+        o.offload_overrides = vec![(5, true), (2, false)];
+        assert!(o.validate().is_err(), "unsorted override indices");
+        o.offload_overrides = vec![(2, true), (2, false)];
+        assert!(o.validate().is_err(), "duplicate override indices");
     }
 
     #[test]

@@ -53,6 +53,13 @@
 //!   replay, thermal-throttle and link-stall windows, replica outages,
 //!   and the conservation ledger (`FaultTotals`) proving nothing is
 //!   silently lost (`simulate --faults` / `serve --faults`).
+//! * [`tune`] — `h2pipe tune`: the parallel plan-space autotuner. A
+//!   seeded evolutionary search over burst, FIFO-depth, sparsity,
+//!   offload-override and fleet-cut decisions; every candidate compiles
+//!   through the real session pipeline, must pass the verifier, and is
+//!   scored by short cycle simulations on a deterministic worker pool.
+//!   Emits the `h2pipe.tune/v1` Pareto report plus the winning plan as a
+//!   replayable artifact.
 //! * [`verify`] — `h2pipe check`: the static plan verifier. Re-derives
 //!   every invariant the compiler assumes (resource budgets, per-PC HBM
 //!   bandwidth, Fig. 5 deadlock freedom, Fig. 6 FIFO depth bounds,
@@ -80,6 +87,7 @@ pub mod runtime;
 pub mod session;
 pub mod sim;
 pub mod testkit;
+pub mod tune;
 pub mod util;
 pub mod verify;
 

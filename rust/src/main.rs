@@ -160,6 +160,17 @@ const SPECS: &[CmdSpec] = &[
         keys: &[],
         flags: &[],
     },
+    CmdSpec {
+        name: "tune",
+        about: "autotune plan decisions (Pareto search over burst/FIFO/cut/offload)",
+        usage: "h2pipe tune [--model NAME|all] [--budget N] [--seed N] [--images N] \
+                [--shards M] [--workers N] [--out DIR] [--trace OUT.json] \
+                [--metrics OUT.prom]",
+        keys: &[
+            "model", "budget", "seed", "images", "shards", "workers", "out", "trace", "metrics",
+        ],
+        flags: &[],
+    },
 ];
 
 fn spec(cmd: &str) -> Option<&'static CmdSpec> {
@@ -557,6 +568,55 @@ fn run() -> Result<()> {
             let out = exe.run_i32(&img, &[32, 32, 3])?;
             println!("cifarnet logits: {out:?}");
         }
+        "tune" => {
+            let topts = h2pipe::tune::TuneOptions {
+                budget: args.get("budget", 12u32)?,
+                seed: args.get("seed", 7u64)?,
+                sim_images: args.get("images", 4u64)?,
+                workers: args.get("workers", 0usize)?,
+                shards: args.get("shards", 1usize)?,
+            };
+            let models: Vec<&str> = match args.kv.get("model").map(String::as_str) {
+                None | Some("all") => h2pipe::tune::DEFAULT_SWEEP.to_vec(),
+                Some(m) => vec![m],
+            };
+            let single = models.len() == 1;
+            anyhow::ensure!(
+                single || !(args.kv.contains_key("trace") || args.kv.contains_key("metrics")),
+                "--trace/--metrics need a single --model (got a {}-model sweep)",
+                models.len()
+            );
+            if let Some(dir) = args.kv.get("out") {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("creating output directory {dir}"))?;
+            }
+            for model in models {
+                let out = h2pipe::tune::tune_model(model, &device, &topts)?;
+                print!("{}", out.report.render());
+                if let Some(dir) = args.kv.get("out") {
+                    let rpath = format!("{dir}/{model}.tune.json");
+                    out.report.save(&rpath)?;
+                    println!("tune report written to {rpath}");
+                    if let Some(cm) = &out.winner {
+                        let ppath = format!("{dir}/{model}.plan.json");
+                        cm.save(&ppath)?;
+                        println!("winning plan written to {ppath}");
+                    }
+                }
+                if let Some(path) = args.kv.get("trace") {
+                    let trace = h2pipe::obs::chrome_tune_trace(&out.report.trace_spans());
+                    std::fs::write(path, trace.to_string())
+                        .with_context(|| format!("writing tune trace {path}"))?;
+                    println!("tune trace written to {path}");
+                }
+                if let Some(path) = args.kv.get("metrics") {
+                    let text = h2pipe::obs::tune_prometheus_text(model, &out.report.counters);
+                    std::fs::write(path, text)
+                        .with_context(|| format!("writing tune metrics {path}"))?;
+                    println!("tune metrics written to {path}");
+                }
+            }
+        }
         _ => unreachable!("parse_args only returns known commands"),
     }
     Ok(())
@@ -622,6 +682,18 @@ mod tests {
         let a = parse_args(Vec::new()).unwrap();
         assert_eq!(a.cmd, "help");
         assert!(general_help().contains("compile"));
+    }
+
+    #[test]
+    fn tune_spec_parses_sweep_and_budget() {
+        let a = parse_args(argv(&[
+            "tune", "--model", "all", "--budget", "6", "--seed", "42", "--out", "/tmp/t",
+        ]))
+        .unwrap();
+        assert_eq!(a.kv.get("model").unwrap(), "all");
+        assert_eq!(a.get("budget", 12u32).unwrap(), 6);
+        assert_eq!(a.get("seed", 7u64).unwrap(), 42);
+        assert!(cmd_help(spec("tune").unwrap()).contains("--budget"));
     }
 
     #[test]

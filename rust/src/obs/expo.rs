@@ -111,6 +111,54 @@ pub fn prometheus_text(snaps: &[(String, MetricsSnapshot)]) -> String {
     s
 }
 
+/// Render one model's autotuner counters in the same exposition format,
+/// labelled by model (`h2pipe tune --metrics out.prom`). Several runs
+/// concatenate by rendering each and joining — series names repeat but
+/// label sets differ, which Prometheus accepts.
+pub fn tune_prometheus_text(model: &str, c: &crate::tune::TuneCounters) -> String {
+    let mut s = String::new();
+    let series = [
+        (
+            "tune_candidates_total",
+            "counter",
+            "Candidates evaluated by the autotuner.",
+            c.evaluated as f64,
+        ),
+        (
+            "tune_scored_total",
+            "counter",
+            "Candidates that passed the legality gate and were simulated.",
+            c.scored as f64,
+        ),
+        (
+            "tune_rejected_total",
+            "counter",
+            "Candidates denied by the static verifier.",
+            c.rejected as f64,
+        ),
+        (
+            "tune_infeasible_total",
+            "counter",
+            "Candidates the compiler or simulator refused.",
+            c.infeasible as f64,
+        ),
+        ("tune_generations_total", "counter", "Search generations run.", c.generations as f64),
+        ("tune_pareto_size", "gauge", "Final Pareto-front size.", c.pareto_size as f64),
+        (
+            "tune_best_throughput",
+            "gauge",
+            "Best simulated throughput found (im/s).",
+            c.best_throughput,
+        ),
+    ];
+    for (name, kind, help, value) in series {
+        let _ = writeln!(s, "# HELP h2pipe_{name} {help}");
+        let _ = writeln!(s, "# TYPE h2pipe_{name} {kind}");
+        let _ = writeln!(s, "h2pipe_{name}{{model=\"{model}\"}} {value}");
+    }
+    s
+}
+
 /// A minimal HTTP exposition endpoint: every GET on any path returns the
 /// current rendering of `source` as `text/plain; version=0.0.4`.
 pub struct MetricsServer {
@@ -247,6 +295,26 @@ mod tests {
         m.mean_latency_ms = f64::NAN;
         let text = prometheus_text(&[("router".to_string(), m)]);
         assert!(!text.contains("quantile"), "NaN series must be omitted: {text}");
+    }
+
+    #[test]
+    fn tune_counters_expose_per_model_series() {
+        let c = crate::tune::TuneCounters {
+            evaluated: 12,
+            scored: 8,
+            rejected: 3,
+            infeasible: 1,
+            generations: 4,
+            pareto_size: 2,
+            best_throughput: 2600.5,
+        };
+        let text = tune_prometheus_text("resnet50", &c);
+        assert!(text.contains("# TYPE h2pipe_tune_candidates_total counter"), "{text}");
+        assert!(text.contains("h2pipe_tune_candidates_total{model=\"resnet50\"} 12"), "{text}");
+        assert!(text.contains("h2pipe_tune_rejected_total{model=\"resnet50\"} 3"), "{text}");
+        assert!(text.contains("# TYPE h2pipe_tune_pareto_size gauge"), "{text}");
+        assert!(text.contains("h2pipe_tune_best_throughput{model=\"resnet50\"} 2600.5"), "{text}");
+        assert_eq!(tune_prometheus_text("resnet50", &c), text, "deterministic");
     }
 
     #[test]

@@ -18,14 +18,20 @@
 //! * [`trace`] — Chrome/Perfetto `trace_event` JSON + compact CSV
 //!   rendering of a recording (`h2pipe simulate --trace out.json`).
 //! * [`expo`] — Prometheus text exposition of serving metrics over a
-//!   plain-`std` HTTP endpoint (`h2pipe serve --metrics-port P`).
+//!   plain-`std` HTTP endpoint (`h2pipe serve --metrics-port P`), plus
+//!   the autotuner's counter series (`h2pipe tune --metrics`).
+//!
+//! The autotuner publishes per-candidate scoring events on a dedicated
+//! trace track ([`trace::chrome_tune_trace`]) with a candidate-index time
+//! axis, so tuning runs are inspectable in the same Perfetto UI as cycle
+//! traces and stay byte-stable for a given seed.
 
 pub mod expo;
 pub mod probe;
 pub mod recorder;
 pub mod trace;
 
-pub use expo::{prometheus_text, MetricsServer};
+pub use expo::{prometheus_text, tune_prometheus_text, MetricsServer};
 pub use probe::{NullProbe, Probe};
 pub use recorder::Recorder;
-pub use trace::RequestSpan;
+pub use trace::{chrome_tune_trace, RequestSpan, TuneSpan};

@@ -24,6 +24,7 @@ const PID_HBM: u64 = 2;
 const PID_FIFOS: u64 = 3;
 const PID_LINKS: u64 = 4;
 const PID_FAULTS: u64 = 5;
+const PID_TUNE: u64 = 6;
 
 fn meta(pid: u64, tid: u64, what: &str, name: &str) -> Json {
     let mut args = Json::obj();
@@ -278,6 +279,71 @@ pub fn chrome_serve_trace(spans: &[RequestSpan], replicas: usize) -> Json {
     o
 }
 
+/// One autotuner candidate evaluation, as published by
+/// [`crate::tune::TuneReport::trace_spans`].
+#[derive(Debug, Clone)]
+pub struct TuneSpan {
+    /// Candidate id (0 is the default compiler plan).
+    pub id: u32,
+    /// Genome fingerprint (`b=8;f=512;...`).
+    pub genome: String,
+    /// `"pareto"`, `"dominated"`, `"rejected"` or `"infeasible"`.
+    pub outcome: String,
+    /// Simulated throughput in im/s (0 unless scored).
+    pub throughput: f64,
+    /// Simulated latency in ms (0 unless scored).
+    pub latency_ms: f64,
+    /// M20K + chain-slot footprint (0 unless scored).
+    pub footprint: u64,
+}
+
+/// Render tuner candidate evaluations as a Chrome trace on a dedicated
+/// track. The time axis is the candidate index (10 µs per candidate), not
+/// wall clock, so the trace is byte-stable for a given seed like the
+/// cycle-domain traces; a `best_throughput` counter tracks the running
+/// maximum over scored candidates.
+pub fn chrome_tune_trace(spans: &[TuneSpan]) -> Json {
+    const SLOT_US: f64 = 10.0;
+    let mut ev = Json::Arr(Vec::new());
+    ev.push(meta(PID_TUNE, 0, "process_name", "tune"));
+    ev.push(meta(PID_TUNE, 1, "thread_name", "candidates"));
+    let mut best = 0.0f64;
+    for s in spans {
+        let cname = match s.outcome.as_str() {
+            "pareto" => "good",
+            "dominated" => "yellow",
+            "rejected" => "bad",
+            _ => "terrible",
+        };
+        let mut args = Json::obj();
+        args.set("genome", s.genome.as_str())
+            .set("outcome", s.outcome.as_str())
+            .set("throughput", s.throughput)
+            .set("latency_ms", s.latency_ms)
+            .set("footprint", s.footprint);
+        let mut o = Json::obj();
+        o.set("ph", "X")
+            .set("cat", "tune")
+            .set("pid", PID_TUNE)
+            .set("tid", 1u64)
+            .set("name", format!("cand{}", s.id))
+            .set("cname", cname)
+            .set("ts", s.id as f64 * SLOT_US)
+            .set("dur", SLOT_US)
+            .set("args", args);
+        ev.push(o);
+        if s.outcome == "pareto" || s.outcome == "dominated" {
+            best = best.max(s.throughput);
+            let mut args = Json::obj();
+            args.set("im_per_s", best);
+            ev.push(counter(PID_TUNE, "best_throughput", s.id as f64 * SLOT_US, args));
+        }
+    }
+    let mut o = Json::obj();
+    o.set("traceEvents", ev).set("displayTimeUnit", "ms");
+    o
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -337,6 +403,54 @@ mod tests {
         assert!(Json::parse(&text).is_ok());
         let c = csv(&r);
         assert!(c.contains("fault,3,hbm_replay,800,800,hbm_replay,17"), "{c}");
+    }
+
+    #[test]
+    fn tune_trace_is_deterministic_and_tracks_running_best() {
+        let spans = vec![
+            TuneSpan {
+                id: 0,
+                genome: "b=8;f=512;s=0;h=false;ov=;c=".to_string(),
+                outcome: "dominated".to_string(),
+                throughput: 2400.0,
+                latency_ms: 2.5,
+                footprint: 7000,
+            },
+            TuneSpan {
+                id: 1,
+                genome: "b=16;f=512;s=0;h=false;ov=;c=".to_string(),
+                outcome: "pareto".to_string(),
+                throughput: 2600.0,
+                latency_ms: 2.4,
+                footprint: 6900,
+            },
+            TuneSpan {
+                id: 2,
+                genome: "b=8;f=128;s=0;h=false;ov=;c=".to_string(),
+                outcome: "rejected".to_string(),
+                throughput: 0.0,
+                latency_ms: 0.0,
+                footprint: 0,
+            },
+        ];
+        let j = chrome_tune_trace(&spans);
+        let text = j.to_string();
+        assert_eq!(chrome_tune_trace(&spans).to_string(), text, "byte-stable");
+        assert_eq!(Json::parse(&text).unwrap(), j, "strict parser round trip");
+        let ev = j.get("traceEvents").and_then(Json::as_arr).unwrap();
+        let counters: Vec<f64> = ev
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("C"))
+            .map(|e| e.get("args").unwrap().get("im_per_s").unwrap().as_f64().unwrap())
+            .collect();
+        assert_eq!(counters, vec![2400.0, 2600.0], "running max over scored candidates");
+        // the rejected candidate renders as a span but not a counter
+        let spans_out = ev
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("X"))
+            .count();
+        assert_eq!(spans_out, 3);
+        assert!(text.contains("\"cname\":\"bad\""), "{text}");
     }
 
     #[test]

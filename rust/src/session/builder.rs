@@ -107,6 +107,30 @@ impl SessionBuilder {
         self
     }
 
+    /// Last-stage weight-FIFO depth in 80-bit words (§IV-A default 512;
+    /// must be a power of two). Shallower FIFOs save M20Ks but trip the
+    /// H2P040 latency-coverage bound when HBM layers exist.
+    pub fn last_stage_fifo_depth(mut self, depth: u32) -> Self {
+        self.options.last_stage_fifo_depth = depth;
+        self
+    }
+
+    /// HPIPE-style assumed weight sparsity in `[0, 1)`: discounts the
+    /// Eq. 1 score numerator, re-ranking Algorithm 1's offload order
+    /// without changing dense storage accounting.
+    pub fn sparsity_fraction(mut self, sparsity: f64) -> Self {
+        self.options.sparsity_fraction = sparsity;
+        self
+    }
+
+    /// Force per-layer placements after Algorithm 1 (the autotuner's
+    /// offload-flip axis). Indices must be strictly increasing and name
+    /// weight layers; violations fail at compile time.
+    pub fn offload_overrides(mut self, overrides: Vec<(usize, bool)>) -> Self {
+        self.options.offload_overrides = overrides;
+        self
+    }
+
     /// Run the H2PIPE compiler, producing the persistable artifact stage.
     pub fn compile(self) -> Result<CompiledModel> {
         let net = match self.source {

@@ -332,6 +332,20 @@ pub fn options_to_json(o: &CompilerOptions) -> Json {
                 FlowControl::ReadyValid => "ready_valid",
             },
         );
+    // Tuner-era knobs are emitted only at non-default values so every
+    // pre-tuner artifact (and its provenance hash) stays byte-identical;
+    // any tuned value lands in the JSON and therefore in the FNV-1a
+    // options hash, so differently-tuned plans can never alias.
+    if o.sparsity_fraction != 0.0 {
+        j.set("sparsity_fraction", o.sparsity_fraction);
+    }
+    if !o.offload_overrides.is_empty() {
+        let mut ov = Json::Arr(Vec::new());
+        for &(idx, hbm) in &o.offload_overrides {
+            ov.push(Json::Arr(vec![Json::from(idx), Json::Bool(hbm)]));
+        }
+        j.set("offload_overrides", ov);
+    }
     j
 }
 
@@ -369,6 +383,27 @@ pub fn options_from_json(j: &Json) -> Result<CompilerOptions> {
         max_chains_per_layer: u32_field(j, "max_chains_per_layer")?,
         efficiency: EfficiencyTable { entries },
         flow_control,
+        sparsity_fraction: match j.get("sparsity_fraction") {
+            None => 0.0,
+            Some(v) => v.as_f64().ok_or_else(|| anyhow!("sparsity_fraction is not a number"))?,
+        },
+        offload_overrides: match j.get("offload_overrides") {
+            None => Vec::new(),
+            Some(v) => v
+                .as_arr()
+                .ok_or_else(|| anyhow!("offload_overrides is not an array"))?
+                .iter()
+                .map(|pair| -> Result<(usize, bool)> {
+                    let p =
+                        pair.as_arr().ok_or_else(|| anyhow!("override entry is not a pair"))?;
+                    anyhow::ensure!(p.len() == 2, "override entry is not a pair");
+                    Ok((
+                        p[0].as_usize().ok_or_else(|| anyhow!("bad override layer index"))?,
+                        p[1].as_bool().ok_or_else(|| anyhow!("bad override placement flag"))?,
+                    ))
+                })
+                .collect::<Result<_>>()?,
+        },
     };
     o.validate().context("loaded compiler options fail validation")?;
     Ok(o)
@@ -577,6 +612,47 @@ mod tests {
         let mut o = CompilerOptions::default();
         o.flow_control = FlowControl::ReadyValid;
         assert_ne!(options_hash(&o), base, "flow control must be hashed");
+        let mut o = CompilerOptions::default();
+        o.burst_length = BurstLengthPolicy::Fixed(16);
+        assert_ne!(options_hash(&o), base, "burst policy must be hashed");
+        let mut o = CompilerOptions::default();
+        o.last_stage_fifo_depth = 256;
+        assert_ne!(options_hash(&o), base, "FIFO depth override must be hashed");
+        let mut o = CompilerOptions::default();
+        o.sparsity_fraction = 0.25;
+        assert_ne!(options_hash(&o), base, "sparsity fraction must be hashed");
+        let mut o = CompilerOptions::default();
+        o.offload_overrides = vec![(3, true)];
+        assert_ne!(options_hash(&o), base, "offload overrides must be hashed");
+        let mut flipped = CompilerOptions::default();
+        flipped.offload_overrides = vec![(3, false)];
+        assert_ne!(
+            options_hash(&flipped),
+            options_hash(&o),
+            "override direction must be hashed"
+        );
+    }
+
+    #[test]
+    fn tuner_knobs_round_trip_and_defaults_stay_byte_identical() {
+        // Absent keys decode to the dense/no-override defaults, so every
+        // pre-tuner artifact keeps its serialized form and hash.
+        let dflt = CompilerOptions::default();
+        let j = options_to_json(&dflt);
+        assert!(j.get("sparsity_fraction").is_none(), "default knobs must not serialize");
+        assert!(j.get("offload_overrides").is_none(), "default knobs must not serialize");
+        let back = options_from_json(&j).unwrap();
+        assert_eq!(back.sparsity_fraction, 0.0);
+        assert!(back.offload_overrides.is_empty());
+        assert_eq!(options_to_json(&back).to_string(), j.to_string());
+
+        let mut o = CompilerOptions::default();
+        o.sparsity_fraction = 0.375;
+        o.offload_overrides = vec![(2, true), (7, false)];
+        let back = options_from_json(&options_to_json(&o)).unwrap();
+        assert_eq!(back.sparsity_fraction, 0.375);
+        assert_eq!(back.offload_overrides, vec![(2, true), (7, false)]);
+        assert_eq!(options_hash(&back), options_hash(&o));
     }
 
     #[test]

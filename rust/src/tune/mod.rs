@@ -1,0 +1,212 @@
+//! `h2pipe tune` — parallel plan-space autotuner with Pareto search.
+//!
+//! The H2PIPE compiler makes each decision with a local heuristic: Eq. 1
+//! ranks offload candidates, §VI-A picks the burst length from one
+//! bottleneck probe, the last-stage FIFOs are fixed at 512 words. Those
+//! defaults are good but not jointly optimal — burst length changes the
+//! FIFO bound, FIFO depth changes the M20K budget, the budget changes
+//! which layers Algorithm 1 offloads. This module searches the joint
+//! space instead:
+//!
+//! * [`SearchSpace`] enumerates mutations over the tunable knobs: burst
+//!   policy, last-stage FIFO depth, the Eq. 1 sparsity discount,
+//!   all-HBM, per-layer offload overrides, and fleet cut points.
+//! * [`tune_network`] runs a seeded evolutionary search. Every candidate
+//!   compiles through the real [`crate::session`] pipeline, must pass
+//!   the static verifier at `--deny warn` (the H2P0xx rules are a hard
+//!   legality gate), and is scored by a short [`crate::sim`] cycle
+//!   simulation on a worker pool with deterministic merge order.
+//! * A Pareto front over simulated throughput / latency / M20K+PC
+//!   footprint survives; the ranked winner is re-compiled into a normal
+//!   replayable plan artifact and diffed against the default plan.
+//!
+//! Determinism: the same `--seed` yields a byte-identical
+//! [`TuneReport`] at any `--workers` setting (per-candidate RNG streams
+//! via [`crate::faults::site_seed`], id-ordered merges, no wall-clock
+//! fields). The report artifact (`h2pipe.tune/v1`) round-trips
+//! byte-stably like every other artifact in the repo.
+
+mod report;
+mod search;
+mod space;
+
+pub use report::{plan_diff, CandidateRecord, TuneCounters, TuneReport, TUNE_FORMAT};
+pub use space::{Genome, SearchSpace};
+
+use anyhow::{ensure, Context, Result};
+
+use crate::config::{CompilerOptions, DeviceConfig};
+use crate::nn::{zoo, Network};
+use crate::session::{CompiledModel, Session};
+use crate::sim::pipeline::SimConfig;
+
+/// Models swept by `h2pipe tune` when no `--model` is given: the paper's
+/// headline hybrid case (ResNet-50), the BRAM-bound small net that still
+/// offloads (ResNet-18), and the weight-heaviest zoo member (VGG-16).
+pub const DEFAULT_SWEEP: &[&str] = &["resnet18", "resnet50", "vgg16"];
+
+/// Tuner parameters.
+#[derive(Debug, Clone)]
+pub struct TuneOptions {
+    /// Total candidates to evaluate (compile + gate + simulate).
+    pub budget: u32,
+    /// Root seed for every RNG stream in the run.
+    pub seed: u64,
+    /// Images per scoring simulation (short on purpose: steady state on
+    /// these pipelines is reached within a few images).
+    pub sim_images: u64,
+    /// Worker threads; 0 picks `min(4, available_parallelism)`. Any
+    /// value produces identical results.
+    pub workers: usize,
+    /// Devices to partition across; 1 tunes a single-device plan, >1
+    /// opens the fleet cut-point axis (and closes the per-layer offload
+    /// override axis, whose indices are not shard-portable).
+    pub shards: usize,
+}
+
+impl Default for TuneOptions {
+    fn default() -> Self {
+        Self { budget: 12, seed: 7, sim_images: 4, workers: 0, shards: 1 }
+    }
+}
+
+/// A finished tuning run.
+#[derive(Debug)]
+pub struct TuneOutcome {
+    pub report: TuneReport,
+    /// The winning plan as a normal replayable artifact — `None` in
+    /// fleet mode, where the winner is a set of per-shard plans recorded
+    /// in the report instead.
+    pub winner: Option<CompiledModel>,
+}
+
+fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).clamp(1, 4)
+}
+
+/// Tune a zoo model with default base options.
+pub fn tune_model(model: &str, device: &DeviceConfig, topts: &TuneOptions) -> Result<TuneOutcome> {
+    let net = zoo::by_name(model)
+        .with_context(|| format!("unknown zoo model {model:?} (see `h2pipe tune --help`)"))?;
+    tune_network(&net, device, &CompilerOptions::default(), topts)
+}
+
+/// Tune any network around a base option set. The base options are
+/// candidate 0, so a feasible baseline guarantees the winner's simulated
+/// throughput is at least the default plan's.
+pub fn tune_network(
+    net: &Network,
+    device: &DeviceConfig,
+    base: &CompilerOptions,
+    topts: &TuneOptions,
+) -> Result<TuneOutcome> {
+    ensure!(topts.budget >= 1, "tune budget must be >= 1");
+    ensure!(topts.shards >= 1, "shard count must be >= 1");
+    ensure!(topts.sim_images >= 2, "scoring needs at least 2 images (1 warmup + 1 measured)");
+    base.validate()?;
+    net.validate()?;
+
+    // Fleet mode: the planner's balanced cuts become the baseline genome.
+    let base_cuts = if topts.shards > 1 {
+        let popts = crate::cluster::PartitionOptions {
+            shards: Some(topts.shards),
+            max_shards: topts.shards,
+        };
+        let pp = crate::cluster::partition(net, device, base, &popts)
+            .context("baseline fleet partition")?;
+        pp.shards.iter().skip(1).map(|s| s.first_layer).collect()
+    } else {
+        Vec::new()
+    };
+
+    let space = SearchSpace::new(net, base, base_cuts);
+    let sim_cfg = SimConfig { images: topts.sim_images, warmup_images: 1, ..SimConfig::default() };
+    let workers = if topts.workers == 0 { default_workers() } else { topts.workers };
+    let sr = search::run_search(net, device, base, &space, topts, &sim_cfg, workers);
+
+    ensure!(
+        !sr.front.is_empty(),
+        "{}: no candidate survived the legality gate within budget {} (baseline included)",
+        net.name,
+        topts.budget
+    );
+    let winner_id = sr.front[0].id;
+    let winner_genome = sr.candidates[winner_id as usize].0.clone();
+
+    // Recompile the winner (and the default) for the artifact + diff.
+    // Both compiles are deterministic replays of evaluations that already
+    // succeeded, so errors here indicate a bug, not a bad candidate.
+    let (winner, winner_diff) = if topts.shards == 1 {
+        let compile = |opts: CompilerOptions| {
+            Session::builder().network(net.clone()).device(device.clone()).options(opts).compile()
+        };
+        let base_cm = compile(space.base().apply(base)).context("recompiling default plan")?;
+        let win_cm = compile(winner_genome.apply(base)).context("recompiling winning plan")?;
+        let diff = plan_diff(base_cm.plan(), win_cm.plan());
+        (Some(win_cm), diff)
+    } else {
+        let terms = winner_genome.diff_terms(space.base());
+        let diff = if terms.is_empty() {
+            "no decisions changed (the default plan is the winner)".to_string()
+        } else {
+            let mut s = format!("{} decision(s) changed", terms.len());
+            for t in &terms {
+                s.push_str("\n  ");
+                s.push_str(t);
+            }
+            s
+        };
+        (None, diff)
+    };
+
+    let report = report::build(&net.name, &device.name, topts, &sr, winner_diff);
+    Ok(TuneOutcome { report, winner })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_sweep_covers_resnet18() {
+        assert!(DEFAULT_SWEEP.contains(&"resnet18"));
+        for m in DEFAULT_SWEEP {
+            assert!(zoo::by_name(m).is_some(), "sweep model {m} missing from zoo");
+        }
+    }
+
+    #[test]
+    fn tiny_budget_still_produces_a_winner() {
+        let device = DeviceConfig::stratix10_nx2100();
+        let topts = TuneOptions { budget: 1, sim_images: 2, ..TuneOptions::default() };
+        let out = tune_model("resnet18", &device, &topts).unwrap();
+        assert_eq!(out.report.winner, Some(0), "budget 1 evaluates exactly the baseline");
+        assert_eq!(out.report.candidates.len(), 1);
+        let cm = out.winner.expect("single-device run must emit a plan artifact");
+        assert!(!cm.verify().denies(crate::verify::Severity::Warn));
+        assert!(out.report.winner_diff.contains("no decisions changed"));
+    }
+
+    #[test]
+    fn invalid_options_are_refused_up_front() {
+        let device = DeviceConfig::stratix10_nx2100();
+        assert!(tune_model("no_such_model", &device, &TuneOptions::default()).is_err());
+        let topts = TuneOptions { budget: 0, ..TuneOptions::default() };
+        assert!(tune_model("resnet18", &device, &topts).is_err());
+        let topts = TuneOptions { sim_images: 1, ..TuneOptions::default() };
+        assert!(tune_model("resnet18", &device, &topts).is_err());
+    }
+
+    #[test]
+    fn fleet_mode_tunes_cut_points_without_plan_artifact() {
+        let device = DeviceConfig::stratix10_nx2100();
+        let topts = TuneOptions { budget: 4, sim_images: 2, shards: 2, ..TuneOptions::default() };
+        let net = zoo::vgg16();
+        let out = tune_network(&net, &device, &CompilerOptions::default(), &topts).unwrap();
+        assert!(out.winner.is_none(), "fleet winners live in the report only");
+        assert_eq!(out.report.shards, 2);
+        let base = &out.report.candidates[0].genome;
+        assert_eq!(base.cuts.len(), 1, "2 shards = 1 cut in the baseline genome");
+        assert!(out.report.winner.is_some());
+    }
+}

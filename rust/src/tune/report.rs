@@ -1,0 +1,558 @@
+//! The `h2pipe.tune/v1` report artifact: every candidate the search
+//! evaluated, the Pareto front, the winner, and a human-readable diff of
+//! the winning plan against the default compiler plan.
+//!
+//! Like the plan and fault artifacts, the report round-trips through
+//! [`crate::util::Json`] byte-stably (BTreeMap-ordered objects, no
+//! wall-clock fields), so a repeated same-seed run diffs empty.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::compiler::AcceleratorPlan;
+use crate::config::WeightPlacement;
+use crate::tune::search::{Outcome, SearchResult};
+use crate::tune::space::Genome;
+use crate::util::Json;
+
+/// Tune-report format tag; bump on incompatible schema changes.
+pub const TUNE_FORMAT: &str = "h2pipe.tune/v1";
+
+/// One evaluated candidate, as recorded in the report.
+#[derive(Debug, Clone)]
+pub struct CandidateRecord {
+    /// Candidate id (index into [`TuneReport::candidates`]; 0 is always
+    /// the default compiler plan).
+    pub id: u32,
+    /// Pareto-front member this genome was mutated from (`None` for the
+    /// generation-0 axis seeds).
+    pub parent: Option<u32>,
+    pub genome: Genome,
+    /// `"pareto"`, `"dominated"`, `"rejected"` or `"infeasible"`.
+    pub outcome: String,
+    /// Verifier codes (rejected) or the compile/sim error (infeasible).
+    pub detail: String,
+    /// Simulated throughput in im/s (0 unless scored).
+    pub throughput: f64,
+    /// Simulated latency in ms (0 unless scored).
+    pub latency_ms: f64,
+    /// M20K + chain-slot footprint (0 unless scored).
+    pub footprint: u64,
+    /// `CompilerOptions` FNV-1a hash (scored candidates only).
+    pub options_hash: Option<u64>,
+}
+
+impl CandidateRecord {
+    fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("id", self.id);
+        match self.parent {
+            Some(p) => o.set("parent", p),
+            None => o.set("parent", Json::Null),
+        };
+        o.set("genome", self.genome.to_json())
+            .set("outcome", self.outcome.as_str())
+            .set("detail", self.detail.as_str())
+            .set("throughput", self.throughput)
+            .set("latency_ms", self.latency_ms)
+            .set("footprint", self.footprint);
+        if let Some(h) = self.options_hash {
+            o.set("options_hash", format!("{h:016x}"));
+        }
+        o
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let options_hash = match j.get("options_hash").and_then(Json::as_str) {
+            Some(hex) => Some(
+                u64::from_str_radix(hex, 16)
+                    .with_context(|| format!("bad candidate options hash {hex:?}"))?,
+            ),
+            None => None,
+        };
+        let field = |k: &str| j.get(k).ok_or_else(|| anyhow!("candidate missing {k:?}"));
+        Ok(Self {
+            id: field("id")?.as_u32().ok_or_else(|| anyhow!("bad candidate id"))?,
+            parent: j.get("parent").and_then(Json::as_u32),
+            genome: Genome::from_json(field("genome")?)?,
+            outcome: field("outcome")?
+                .as_str()
+                .ok_or_else(|| anyhow!("bad candidate outcome"))?
+                .to_string(),
+            detail: field("detail")?
+                .as_str()
+                .ok_or_else(|| anyhow!("bad candidate detail"))?
+                .to_string(),
+            throughput: field("throughput")?
+                .as_f64()
+                .ok_or_else(|| anyhow!("bad candidate throughput"))?,
+            latency_ms: field("latency_ms")?
+                .as_f64()
+                .ok_or_else(|| anyhow!("bad candidate latency"))?,
+            footprint: field("footprint")?
+                .as_u64()
+                .ok_or_else(|| anyhow!("bad candidate footprint"))?,
+            options_hash,
+        })
+    }
+}
+
+/// Tuner counters, exported to the metrics pipeline
+/// ([`crate::obs::tune_prometheus_text`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct TuneCounters {
+    /// Candidates evaluated (compile attempted).
+    pub evaluated: u64,
+    /// Candidates that compiled, passed the gate and were simulated.
+    pub scored: u64,
+    /// Candidates denied by the verifier legality gate.
+    pub rejected: u64,
+    /// Candidates the compiler / partition planner / simulator refused.
+    pub infeasible: u64,
+    /// Search generations run.
+    pub generations: u64,
+    /// Final Pareto-front size.
+    pub pareto_size: u64,
+    /// Best simulated throughput seen (im/s).
+    pub best_throughput: f64,
+}
+
+impl TuneCounters {
+    fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("evaluated", self.evaluated)
+            .set("scored", self.scored)
+            .set("rejected", self.rejected)
+            .set("infeasible", self.infeasible)
+            .set("generations", self.generations)
+            .set("pareto_size", self.pareto_size)
+            .set("best_throughput", self.best_throughput);
+        o
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let u = |k: &str| {
+            j.get(k).and_then(Json::as_u64).ok_or_else(|| anyhow!("counters missing {k:?}"))
+        };
+        Ok(Self {
+            evaluated: u("evaluated")?,
+            scored: u("scored")?,
+            rejected: u("rejected")?,
+            infeasible: u("infeasible")?,
+            generations: u("generations")?,
+            pareto_size: u("pareto_size")?,
+            best_throughput: j
+                .get("best_throughput")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("counters missing best_throughput"))?,
+        })
+    }
+}
+
+/// The complete tuning run: inputs, every candidate, the front, the
+/// winner, and its diff against the default plan.
+#[derive(Debug, Clone)]
+pub struct TuneReport {
+    pub model: String,
+    pub device: String,
+    pub seed: u64,
+    pub budget: u32,
+    pub sim_images: u64,
+    pub shards: usize,
+    /// Every evaluated candidate, id order.
+    pub candidates: Vec<CandidateRecord>,
+    /// Pareto-front candidate ids, rank order (winner first).
+    pub pareto: Vec<u32>,
+    /// Winning candidate id (`None` only when nothing scored).
+    pub winner: Option<u32>,
+    /// Human-readable winner-vs-default diff (also printed by the CLI as
+    /// the `plan-diff:` line).
+    pub winner_diff: String,
+    pub counters: TuneCounters,
+}
+
+impl TuneReport {
+    pub fn to_json(&self) -> Json {
+        let mut cands = Json::Arr(Vec::new());
+        for c in &self.candidates {
+            cands.push(c.to_json());
+        }
+        let mut o = Json::obj();
+        o.set("format", TUNE_FORMAT)
+            .set("model", self.model.as_str())
+            .set("device", self.device.as_str())
+            .set("seed", self.seed)
+            .set("budget", self.budget)
+            .set("sim_images", self.sim_images)
+            .set("shards", self.shards)
+            .set("candidates", cands)
+            .set("pareto", Json::Arr(self.pareto.iter().map(|&i| Json::from(i)).collect()));
+        match self.winner {
+            Some(w) => o.set("winner", w),
+            None => o.set("winner", Json::Null),
+        };
+        o.set("winner_diff", self.winner_diff.as_str()).set("counters", self.counters.to_json());
+        o
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        match j.get("format").and_then(Json::as_str) {
+            Some(TUNE_FORMAT) => {}
+            Some(other) => bail!("unsupported tune format {other:?} (expected {TUNE_FORMAT:?})"),
+            None => bail!("not a tune report (missing \"format\" tag)"),
+        }
+        let field = |k: &str| j.get(k).ok_or_else(|| anyhow!("tune report missing {k:?}"));
+        let candidates = field("candidates")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("candidates is not an array"))?
+            .iter()
+            .map(CandidateRecord::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let pareto = field("pareto")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("pareto is not an array"))?
+            .iter()
+            .map(|v| v.as_u32().ok_or_else(|| anyhow!("bad pareto id")))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self {
+            model: field("model")?.as_str().ok_or_else(|| anyhow!("bad model"))?.to_string(),
+            device: field("device")?.as_str().ok_or_else(|| anyhow!("bad device"))?.to_string(),
+            seed: field("seed")?.as_u64().ok_or_else(|| anyhow!("bad seed"))?,
+            budget: field("budget")?.as_u32().ok_or_else(|| anyhow!("bad budget"))?,
+            sim_images: field("sim_images")?.as_u64().ok_or_else(|| anyhow!("bad sim_images"))?,
+            shards: field("shards")?.as_usize().ok_or_else(|| anyhow!("bad shards"))?,
+            candidates,
+            pareto,
+            winner: j.get("winner").and_then(Json::as_u32),
+            winner_diff: field("winner_diff")?
+                .as_str()
+                .ok_or_else(|| anyhow!("bad winner_diff"))?
+                .to_string(),
+            counters: TuneCounters::from_json(field("counters")?)?,
+        })
+    }
+
+    /// Write the report as pretty-printed JSON.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        std::fs::write(path, self.to_json().to_pretty())
+            .with_context(|| format!("writing tune report {}", path.display()))
+    }
+
+    /// Load a report written by [`Self::save`].
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading tune report {}", path.display()))?;
+        let j = Json::parse(&text)
+            .with_context(|| format!("parsing tune report {}", path.display()))?;
+        Self::from_json(&j).with_context(|| format!("loading tune report {}", path.display()))
+    }
+
+    /// Human-readable run summary: header, counters, the rank-ordered
+    /// front (each member with its `old -> new` decision diff against
+    /// candidate 0), the winner, and the `plan-diff:` section.
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "=== h2pipe tune: {} on {} (seed {}, budget {}) ===",
+            self.model, self.device, self.seed, self.budget
+        );
+        if self.shards > 1 {
+            let _ = writeln!(s, "fleet mode: {} shards", self.shards);
+        }
+        let c = &self.counters;
+        let _ = writeln!(
+            s,
+            "evaluated {} candidate(s) in {} generation(s): {} scored, {} rejected by \
+             verify, {} infeasible",
+            c.evaluated, c.generations, c.scored, c.rejected, c.infeasible
+        );
+        if let Some(base) = self.candidates.first() {
+            let _ = writeln!(
+                s,
+                "baseline: {:.0} im/s  {:.3} ms  footprint {} ({})",
+                base.throughput, base.latency_ms, base.footprint, base.outcome
+            );
+            for (rank, &id) in self.pareto.iter().enumerate() {
+                let cand = &self.candidates[id as usize];
+                let terms = cand.genome.diff_terms(&base.genome);
+                let diff =
+                    if terms.is_empty() { "(default)".to_string() } else { terms.join(", ") };
+                let _ = writeln!(
+                    s,
+                    "pareto[{rank}] id={id} tp={:.0} im/s lat={:.3} ms fp={} {}",
+                    cand.throughput, cand.latency_ms, cand.footprint, diff
+                );
+            }
+        }
+        match self.winner {
+            Some(w) => {
+                let cand = &self.candidates[w as usize];
+                let _ = writeln!(s, "winner: id={w} ({:.0} im/s)", cand.throughput);
+            }
+            None => {
+                let _ = writeln!(s, "winner: none (no candidate scored)");
+            }
+        }
+        let _ = writeln!(s, "plan-diff: {}", self.winner_diff);
+        s
+    }
+
+    /// Per-candidate scoring events for the dedicated `obs` trace track.
+    pub fn trace_spans(&self) -> Vec<crate::obs::TuneSpan> {
+        self.candidates
+            .iter()
+            .map(|c| crate::obs::TuneSpan {
+                id: c.id,
+                genome: c.genome.fingerprint(),
+                outcome: c.outcome.clone(),
+                throughput: c.throughput,
+                latency_ms: c.latency_ms,
+                footprint: c.footprint,
+            })
+            .collect()
+    }
+}
+
+/// Assemble the report from a finished search. `winner_diff` is computed
+/// by the caller (it needs the recompiled plans, which only exist in
+/// single-device mode).
+pub(crate) fn build(
+    model: &str,
+    device: &str,
+    topts: &crate::tune::TuneOptions,
+    sr: &SearchResult,
+    winner_diff: String,
+) -> TuneReport {
+    let front_ids: std::collections::BTreeSet<u32> = sr.front.iter().map(|p| p.id).collect();
+    let mut counters = TuneCounters {
+        evaluated: sr.candidates.len() as u64,
+        generations: sr.generations as u64,
+        pareto_size: sr.front.len() as u64,
+        ..TuneCounters::default()
+    };
+    let mut candidates = Vec::with_capacity(sr.candidates.len());
+    for (i, (genome, parent, outcome)) in sr.candidates.iter().enumerate() {
+        let id = i as u32;
+        let (outcome_str, detail, tp, lat, fp, hash) = match outcome {
+            Outcome::Scored(sc) => {
+                counters.scored += 1;
+                counters.best_throughput = counters.best_throughput.max(sc.throughput);
+                let tag = if front_ids.contains(&id) { "pareto" } else { "dominated" };
+                let hash = Some(sc.options_hash);
+                (tag, String::new(), sc.throughput, sc.latency_ms, sc.footprint, hash)
+            }
+            Outcome::Rejected { codes } => {
+                counters.rejected += 1;
+                ("rejected", codes.join(","), 0.0, 0.0, 0, None)
+            }
+            Outcome::Infeasible { error } => {
+                counters.infeasible += 1;
+                ("infeasible", error.clone(), 0.0, 0.0, 0, None)
+            }
+        };
+        candidates.push(CandidateRecord {
+            id,
+            parent: *parent,
+            genome: genome.clone(),
+            outcome: outcome_str.to_string(),
+            detail,
+            throughput: tp,
+            latency_ms: lat,
+            footprint: fp,
+            options_hash: hash,
+        });
+    }
+    TuneReport {
+        model: model.to_string(),
+        device: device.to_string(),
+        seed: topts.seed,
+        budget: topts.budget,
+        sim_images: topts.sim_images,
+        shards: topts.shards,
+        candidates,
+        pareto: sr.front.iter().map(|p| p.id).collect(),
+        winner: sr.front.first().map(|p| p.id),
+        winner_diff,
+        counters,
+    }
+}
+
+/// Explain how `tuned` differs from `base`, decision by decision: the
+/// summary line first, then one indented `old -> new` term per changed
+/// knob, per-layer placement flip, and per-layer parallelism change.
+pub fn plan_diff(base: &AcceleratorPlan, tuned: &AcceleratorPlan) -> String {
+    let mut terms: Vec<String> = Vec::new();
+    if base.burst_len != tuned.burst_len {
+        terms.push(format!("burst_len: {} -> {}", base.burst_len, tuned.burst_len));
+    }
+    if base.options.last_stage_fifo_depth != tuned.options.last_stage_fifo_depth {
+        terms.push(format!(
+            "fifo_depth: {} -> {}",
+            base.options.last_stage_fifo_depth, tuned.options.last_stage_fifo_depth
+        ));
+    }
+    if base.options.sparsity_fraction != tuned.options.sparsity_fraction {
+        terms.push(format!(
+            "sparsity: {:.3} -> {:.3}",
+            base.options.sparsity_fraction, tuned.options.sparsity_fraction
+        ));
+    }
+    if base.options.all_hbm != tuned.options.all_hbm {
+        terms.push(format!("all_hbm: {} -> {}", base.options.all_hbm, tuned.options.all_hbm));
+    }
+    let place = |p: WeightPlacement| match p {
+        WeightPlacement::Hbm => "hbm",
+        WeightPlacement::OnChip => "chip",
+    };
+    let mut flips = 0usize;
+    for (a, b) in base.layers.iter().zip(&tuned.layers) {
+        if !a.stats.has_weights {
+            continue;
+        }
+        if a.placement != b.placement {
+            flips += 1;
+            let (from, to) = (place(a.placement), place(b.placement));
+            terms.push(format!("{}: {} -> {}", a.stats.name, from, to));
+        } else if a.par != b.par {
+            terms.push(format!(
+                "{}: p=({},{}) -> p=({},{})",
+                a.stats.name, a.par.p_i, a.par.p_o, b.par.p_i, b.par.p_o
+            ));
+        }
+    }
+    let mut s = if terms.is_empty() {
+        "no decisions changed (the default plan is the winner)".to_string()
+    } else {
+        format!("{} decision(s) changed ({flips} placement flip(s))", terms.len())
+    };
+    for t in &terms {
+        s.push_str("\n  ");
+        s.push_str(t);
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{CompilerOptions, DeviceConfig};
+    use crate::nn::zoo;
+    use crate::session::Session;
+
+    fn sample_report() -> TuneReport {
+        let base = Genome::baseline(&CompilerOptions::default(), Vec::new());
+        let mut tuned = base.clone();
+        tuned.burst = crate::config::BurstLengthPolicy::Fixed(16);
+        tuned.overrides = vec![(3, true)];
+        TuneReport {
+            model: "resnet18".to_string(),
+            device: "stratix10_nx2100".to_string(),
+            seed: 7,
+            budget: 8,
+            sim_images: 3,
+            shards: 1,
+            candidates: vec![
+                CandidateRecord {
+                    id: 0,
+                    parent: None,
+                    genome: base,
+                    outcome: "dominated".to_string(),
+                    detail: String::new(),
+                    throughput: 2400.0,
+                    latency_ms: 2.5,
+                    footprint: 7000,
+                    options_hash: Some(0xdead_beef_0123_4567),
+                },
+                CandidateRecord {
+                    id: 1,
+                    parent: Some(0),
+                    genome: tuned,
+                    outcome: "pareto".to_string(),
+                    detail: String::new(),
+                    throughput: 2600.0,
+                    latency_ms: 2.4,
+                    footprint: 6900,
+                    options_hash: Some(0x0123_4567_89ab_cdef),
+                },
+            ],
+            pareto: vec![1],
+            winner: Some(1),
+            winner_diff: "1 decision(s) changed (0 placement flip(s))\n  burst_len: 8 -> 16"
+                .to_string(),
+            counters: TuneCounters {
+                evaluated: 2,
+                scored: 2,
+                rejected: 0,
+                infeasible: 0,
+                generations: 1,
+                pareto_size: 1,
+                best_throughput: 2600.0,
+            },
+        }
+    }
+
+    #[test]
+    fn report_round_trips_byte_stably() {
+        let r = sample_report();
+        let j = r.to_json();
+        let text = j.to_pretty();
+        let back = TuneReport::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.to_json().to_pretty(), text, "re-serialization must be byte-identical");
+        assert_eq!(back.candidates.len(), 2);
+        assert_eq!(back.winner, Some(1));
+        assert_eq!(back.candidates[1].options_hash, Some(0x0123_4567_89ab_cdef));
+        assert_eq!(back.counters, r.counters);
+    }
+
+    #[test]
+    fn format_tag_is_enforced() {
+        let mut j = sample_report().to_json();
+        j.set("format", "h2pipe.tune/v0");
+        assert!(TuneReport::from_json(&j).is_err());
+        assert!(TuneReport::from_json(&Json::obj()).is_err());
+    }
+
+    #[test]
+    fn render_names_front_members_and_plan_diff() {
+        let text = sample_report().render();
+        assert!(text.contains("pareto[0] id=1"), "{text}");
+        assert!(text.contains(" -> "), "front diffs must show old -> new terms: {text}");
+        assert!(text.contains("plan-diff:"), "{text}");
+        assert!(text.contains("winner: id=1"), "{text}");
+    }
+
+    #[test]
+    fn plan_diff_names_changed_decisions() {
+        let device = DeviceConfig::stratix10_nx2100();
+        let compile = |opts: CompilerOptions| {
+            Session::builder()
+                .network(zoo::resnet18())
+                .device(device.clone())
+                .options(opts)
+                .compile()
+                .unwrap()
+        };
+        let base = compile(CompilerOptions::default());
+        let mut opts = CompilerOptions::default();
+        opts.burst_length = crate::config::BurstLengthPolicy::Fixed(16);
+        let tuned = compile(opts);
+        let d = plan_diff(base.plan(), tuned.plan());
+        assert!(d.contains("burst_len: 8 -> 16"), "{d}");
+        let same = plan_diff(base.plan(), base.plan());
+        assert!(same.contains("no decisions changed"), "{same}");
+    }
+
+    #[test]
+    fn trace_spans_cover_every_candidate() {
+        let r = sample_report();
+        let spans = r.trace_spans();
+        assert_eq!(spans.len(), r.candidates.len());
+        assert_eq!(spans[1].outcome, "pareto");
+        assert!(spans[1].genome.contains("b=16"), "{}", spans[1].genome);
+    }
+}

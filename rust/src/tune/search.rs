@@ -1,0 +1,447 @@
+//! The search loop: seeded evolutionary exploration with a hard legality
+//! gate, short cycle-simulation scoring on a worker pool, and a Pareto
+//! front over throughput / latency / footprint.
+//!
+//! Determinism contract (same as `faults`): every random draw comes from
+//! a [`XorShift64`] stream seeded via [`crate::faults::site_seed`] with a
+//! monotonically assigned site, results are merged in candidate-id order
+//! regardless of which worker produced them, and no wall-clock value ever
+//! enters a score — so `--seed S` reproduces the whole run byte for byte
+//! at any worker count.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::config::{CompilerOptions, DeviceConfig};
+use crate::nn::Network;
+use crate::session::{codec, Session};
+use crate::sim::pipeline::SimConfig;
+use crate::tune::space::{Genome, SearchSpace};
+use crate::tune::TuneOptions;
+use crate::util::XorShift64;
+use crate::verify::Severity;
+
+/// Candidates evaluated per generation before the front is re-ranked and
+/// new parents are drawn.
+const GEN_SIZE: usize = 4;
+
+/// Consecutive duplicate mutation draws before the space is declared
+/// exhausted and the search stops early.
+const MAX_DRY_DRAWS: u32 = 64;
+
+/// Scored objectives of one feasible candidate.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct Score {
+    /// Simulated steady-state throughput (im/s) — maximized.
+    pub throughput: f64,
+    /// Simulated first-image latency (ms; summed over shards in fleet
+    /// mode) — minimized.
+    pub latency_ms: f64,
+    /// M20K blocks plus chain slots in M20K-equivalents — minimized.
+    pub footprint: u64,
+    /// FNV-1a hash of the candidate's `CompilerOptions`.
+    pub options_hash: u64,
+}
+
+/// What happened to one candidate.
+#[derive(Debug, Clone)]
+pub(crate) enum Outcome {
+    /// Compiled, passed the verifier, simulated.
+    Scored(Score),
+    /// Compiled but denied by the `--deny warn` legality gate.
+    Rejected { codes: Vec<String> },
+    /// The compiler (or partition planner / simulator) refused it.
+    Infeasible { error: String },
+}
+
+/// One point on the Pareto front.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct ParetoPoint {
+    pub id: u32,
+    pub throughput: f64,
+    pub latency_ms: f64,
+    pub footprint: u64,
+}
+
+/// `a` is at least as good as `b` on every objective.
+fn weakly_dominates(a: &ParetoPoint, b: &ParetoPoint) -> bool {
+    a.throughput >= b.throughput && a.latency_ms <= b.latency_ms && a.footprint <= b.footprint
+}
+
+/// `a` weakly dominates `b` and is strictly better somewhere.
+fn strictly_dominates(a: &ParetoPoint, b: &ParetoPoint) -> bool {
+    weakly_dominates(a, b)
+        && (a.throughput > b.throughput || a.latency_ms < b.latency_ms || a.footprint < b.footprint)
+}
+
+/// Insert `c` into the front. Rejected if any member weakly dominates it
+/// (full ties keep the incumbent — candidates arrive in id order, so the
+/// lowest id wins ties); on acceptance, members it strictly dominates are
+/// evicted. Returns whether `c` joined.
+pub(crate) fn pareto_insert(front: &mut Vec<ParetoPoint>, c: ParetoPoint) -> bool {
+    if front.iter().any(|m| weakly_dominates(m, &c)) {
+        return false;
+    }
+    front.retain(|m| !strictly_dominates(&c, m));
+    front.push(c);
+    true
+}
+
+/// Rank order of the front (and the winner rule: `front[0]` after this
+/// sort): throughput down, then footprint up, then latency up, then id.
+pub(crate) fn rank(front: &mut [ParetoPoint]) {
+    front.sort_by(|a, b| {
+        b.throughput
+            .total_cmp(&a.throughput)
+            .then(a.footprint.cmp(&b.footprint))
+            .then(a.latency_ms.total_cmp(&b.latency_ms))
+            .then(a.id.cmp(&b.id))
+    });
+}
+
+/// Area-style scalar for the M20K+PC objective: M20K blocks consumed plus
+/// occupied chain slots converted at the device's blocks-per-slot ratio
+/// (6847 / 93 = 73 on the NX2100), so freeing a pseudo-channel and
+/// freeing BRAM trade in one currency.
+pub(crate) fn footprint(plan: &crate::compiler::AcceleratorPlan, device: &DeviceConfig) -> u64 {
+    let cap = plan.bw_slot_capacity().max(1);
+    let used = cap.saturating_sub(plan.free_bw_slots);
+    let slot_equiv = (device.m20k_blocks as u64 / cap).max(1);
+    plan.usage.m20k + slot_equiv * used
+}
+
+fn verify_codes(report: &crate::verify::Report) -> Vec<String> {
+    let mut codes: Vec<String> = report
+        .diagnostics
+        .iter()
+        .filter(|d| d.severity >= Severity::Warn)
+        .map(|d| d.code.as_str().to_string())
+        .collect();
+    codes.sort_unstable();
+    codes.dedup();
+    codes
+}
+
+/// Evaluate one genome end to end: compile through the real session
+/// pipeline, gate on the verifier at `--deny warn`, then score with a
+/// short cycle simulation.
+pub(crate) fn evaluate(
+    net: &Network,
+    device: &DeviceConfig,
+    base: &CompilerOptions,
+    genome: &Genome,
+    sim_cfg: &SimConfig,
+) -> Outcome {
+    let opts = genome.apply(base);
+    if let Err(e) = opts.validate() {
+        return Outcome::Infeasible { error: format!("{e:#}") };
+    }
+    if genome.cuts.is_empty() {
+        evaluate_single(net, device, opts, sim_cfg)
+    } else {
+        evaluate_fleet(net, device, opts, &genome.cuts, sim_cfg)
+    }
+}
+
+fn evaluate_single(
+    net: &Network,
+    device: &DeviceConfig,
+    opts: CompilerOptions,
+    sim_cfg: &SimConfig,
+) -> Outcome {
+    let cm = match Session::builder()
+        .network(net.clone())
+        .device(device.clone())
+        .options(opts)
+        .compile()
+    {
+        Ok(cm) => cm,
+        Err(e) => return Outcome::Infeasible { error: format!("{e:#}") },
+    };
+    let report = cm.verify();
+    if report.denies(Severity::Warn) {
+        return Outcome::Rejected { codes: verify_codes(&report) };
+    }
+    let sim = match cm.simulate(sim_cfg) {
+        Ok(r) => r,
+        Err(e) => return Outcome::Infeasible { error: format!("simulation: {e:#}") },
+    };
+    Outcome::Scored(Score {
+        throughput: sim.throughput,
+        latency_ms: sim.latency * 1e3,
+        footprint: footprint(cm.plan(), device),
+        options_hash: cm.provenance().options_hash,
+    })
+}
+
+fn evaluate_fleet(
+    net: &Network,
+    device: &DeviceConfig,
+    opts: CompilerOptions,
+    cuts: &[usize],
+    sim_cfg: &SimConfig,
+) -> Outcome {
+    let pp = match crate::cluster::partition_at(net, device, &opts, cuts) {
+        Ok(p) => p,
+        Err(e) => return Outcome::Infeasible { error: format!("{e:#}") },
+    };
+    let mut report = crate::verify::check_partition(net, &pp);
+    for sh in &pp.shards {
+        report.diagnostics.extend(crate::verify::check_plan(&sh.plan).diagnostics);
+    }
+    if report.denies(Severity::Warn) {
+        return Outcome::Rejected { codes: verify_codes(&report) };
+    }
+    // Fleet objectives: the slowest shard paces throughput, fill latency
+    // and footprint accumulate across devices.
+    let mut throughput = f64::INFINITY;
+    let mut latency_ms = 0.0;
+    let mut fp = 0u64;
+    for sh in &pp.shards {
+        let sim = match crate::sim::pipeline::simulate(&sh.net, &sh.plan, sim_cfg) {
+            Ok(r) => r,
+            Err(e) => return Outcome::Infeasible { error: format!("simulation: {e:#}") },
+        };
+        throughput = throughput.min(sim.throughput);
+        latency_ms += sim.latency * 1e3;
+        fp += footprint(&sh.plan, device);
+    }
+    Outcome::Scored(Score {
+        throughput,
+        latency_ms,
+        footprint: fp,
+        options_hash: codec::options_hash(&opts),
+    })
+}
+
+/// Evaluate a generation on a `std::thread` worker pool. Results land in
+/// per-candidate slots and are read back in index order, so the output is
+/// provably independent of worker count and scheduling.
+fn evaluate_generation(
+    net: &Network,
+    device: &DeviceConfig,
+    base: &CompilerOptions,
+    genomes: &[Genome],
+    sim_cfg: &SimConfig,
+    workers: usize,
+) -> Vec<Outcome> {
+    let n = genomes.len();
+    let workers = workers.clamp(1, n.max(1));
+    if n == 0 {
+        return Vec::new();
+    }
+    if workers == 1 {
+        return genomes.iter().map(|g| evaluate(net, device, base, g, sim_cfg)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<Outcome>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::SeqCst);
+                if i >= n {
+                    break;
+                }
+                let out = evaluate(net, device, base, &genomes[i], sim_cfg);
+                *slots[i].lock().unwrap() = Some(out);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worker pool left an evaluation slot empty"))
+        .collect()
+}
+
+/// Everything the search produced, in candidate-id order.
+#[derive(Debug)]
+pub(crate) struct SearchResult {
+    /// `(genome, parent id, outcome)`; index == candidate id.
+    pub candidates: Vec<(Genome, Option<u32>, Outcome)>,
+    /// Rank-sorted Pareto front.
+    pub front: Vec<ParetoPoint>,
+    pub generations: u32,
+}
+
+/// Run the seeded search: generation 0 is the deterministic axis seed
+/// set, later generations mutate parents drawn from the rank-sorted
+/// front. Stops at the budget or when [`MAX_DRY_DRAWS`] consecutive
+/// mutation draws produce nothing new.
+pub(crate) fn run_search(
+    net: &Network,
+    device: &DeviceConfig,
+    base: &CompilerOptions,
+    space: &SearchSpace,
+    topts: &TuneOptions,
+    sim_cfg: &SimConfig,
+    workers: usize,
+) -> SearchResult {
+    let budget = topts.budget.max(1) as usize;
+    let mut seen = std::collections::BTreeSet::new();
+    let mut candidates: Vec<(Genome, Option<u32>, Outcome)> = Vec::new();
+    let mut front: Vec<ParetoPoint> = Vec::new();
+    let mut generations = 0u32;
+    // Monotonic site counter for mutation draws: one RNG stream per
+    // attempt, never reused, never dependent on evaluation timing.
+    let mut draw_site = 0u64;
+
+    let mut gen: Vec<(Genome, Option<u32>)> = space
+        .seeds(budget)
+        .into_iter()
+        .filter(|g| seen.insert(g.fingerprint()))
+        .map(|g| (g, None))
+        .collect();
+
+    while !gen.is_empty() {
+        generations += 1;
+        let first_id = candidates.len() as u32;
+        let genomes: Vec<Genome> = gen.iter().map(|(g, _)| g.clone()).collect();
+        let outcomes = evaluate_generation(net, device, base, &genomes, sim_cfg, workers);
+        for (k, out) in outcomes.into_iter().enumerate() {
+            let id = first_id + k as u32;
+            if let Outcome::Scored(sc) = &out {
+                pareto_insert(
+                    &mut front,
+                    ParetoPoint {
+                        id,
+                        throughput: sc.throughput,
+                        latency_ms: sc.latency_ms,
+                        footprint: sc.footprint,
+                    },
+                );
+            }
+            let (g, parent) = gen[k].clone();
+            candidates.push((g, parent, out));
+        }
+
+        let remaining = budget.saturating_sub(candidates.len());
+        if remaining == 0 || front.is_empty() {
+            break;
+        }
+        let mut ranked = front.clone();
+        rank(&mut ranked);
+        gen = Vec::new();
+        let mut dry = 0u32;
+        while gen.len() < remaining.min(GEN_SIZE) && dry < MAX_DRY_DRAWS {
+            let mut rng = XorShift64::new(crate::faults::site_seed(topts.seed, draw_site));
+            draw_site += 1;
+            let parent = ranked[rng.next_below(ranked.len() as u64) as usize];
+            let child = space.mutate(&candidates[parent.id as usize].0, &mut rng);
+            if seen.insert(child.fingerprint()) {
+                dry = 0;
+                gen.push((child, Some(parent.id)));
+            } else {
+                dry += 1;
+            }
+        }
+    }
+
+    rank(&mut front);
+    SearchResult { candidates, front, generations }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::zoo;
+
+    fn point(id: u32, tp: f64, lat: f64, fp: u64) -> ParetoPoint {
+        ParetoPoint { id, throughput: tp, latency_ms: lat, footprint: fp }
+    }
+
+    #[test]
+    fn pareto_keeps_tradeoffs_and_evicts_dominated() {
+        let mut front = Vec::new();
+        assert!(pareto_insert(&mut front, point(0, 100.0, 10.0, 1000)));
+        // worse everywhere: rejected
+        assert!(!pareto_insert(&mut front, point(1, 90.0, 11.0, 1100)));
+        // exact tie: incumbent (lower id) wins
+        assert!(!pareto_insert(&mut front, point(2, 100.0, 10.0, 1000)));
+        // trade-off (slower but smaller): joins
+        assert!(pareto_insert(&mut front, point(3, 80.0, 10.0, 500)));
+        // strictly better than candidate 0: joins, evicts it
+        assert!(pareto_insert(&mut front, point(4, 120.0, 9.0, 900)));
+        let ids: Vec<u32> = front.iter().map(|p| p.id).collect();
+        assert_eq!(ids, vec![3, 4]);
+    }
+
+    #[test]
+    fn rank_orders_throughput_then_footprint() {
+        let mut front =
+            vec![point(5, 80.0, 5.0, 500), point(1, 100.0, 10.0, 900), point(2, 100.0, 8.0, 700)];
+        rank(&mut front);
+        let ids: Vec<u32> = front.iter().map(|p| p.id).collect();
+        assert_eq!(ids, vec![2, 1, 5], "ties on throughput break on footprint");
+    }
+
+    #[test]
+    fn worker_count_does_not_change_outcomes() {
+        let net = zoo::resnet18();
+        let device = DeviceConfig::stratix10_nx2100();
+        let base = CompilerOptions::default();
+        let space = SearchSpace::new(&net, &base, Vec::new());
+        let genomes = space.seeds(4);
+        let cfg = SimConfig { images: 2, warmup_images: 1, ..SimConfig::default() };
+        let a = evaluate_generation(&net, &device, &base, &genomes, &cfg, 1);
+        let b = evaluate_generation(&net, &device, &base, &genomes, &cfg, 3);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            match (x, y) {
+                (Outcome::Scored(p), Outcome::Scored(q)) => {
+                    assert_eq!(p.throughput.to_bits(), q.throughput.to_bits());
+                    assert_eq!(p.latency_ms.to_bits(), q.latency_ms.to_bits());
+                    assert_eq!(p.footprint, q.footprint);
+                    assert_eq!(p.options_hash, q.options_hash);
+                }
+                (Outcome::Rejected { codes: p }, Outcome::Rejected { codes: q }) => {
+                    assert_eq!(p, q)
+                }
+                (Outcome::Infeasible { error: p }, Outcome::Infeasible { error: q }) => {
+                    assert_eq!(p, q)
+                }
+                other => panic!("outcome kind diverged across worker counts: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn shallow_fifo_candidate_is_rejected_not_scored() {
+        // 128-word FIFOs sit below the H2P040 coverage bound whenever HBM
+        // layers exist — the legality gate must catch what the compiler
+        // accepts.
+        let net = zoo::resnet50();
+        let device = DeviceConfig::stratix10_nx2100();
+        let base = CompilerOptions::default();
+        let mut g = Genome::baseline(&base, Vec::new());
+        g.fifo_depth = 128;
+        let cfg = SimConfig { images: 2, warmup_images: 1, ..SimConfig::default() };
+        match evaluate(&net, &device, &base, &g, &cfg) {
+            Outcome::Rejected { codes } => {
+                assert!(codes.iter().any(|c| c == "H2P040"), "expected H2P040, got {codes:?}")
+            }
+            other => panic!("128-word FIFO must be rejected, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn search_is_deterministic_and_budget_bounded() {
+        let net = zoo::resnet18();
+        let device = DeviceConfig::stratix10_nx2100();
+        let base = CompilerOptions::default();
+        let space = SearchSpace::new(&net, &base, Vec::new());
+        let topts = TuneOptions { budget: 6, seed: 9, ..TuneOptions::default() };
+        let cfg = SimConfig { images: 2, warmup_images: 1, ..SimConfig::default() };
+        let a = run_search(&net, &device, &base, &space, &topts, &cfg, 2);
+        let b = run_search(&net, &device, &base, &space, &topts, &cfg, 1);
+        assert!(a.candidates.len() <= 6);
+        assert_eq!(a.candidates.len(), b.candidates.len());
+        assert!(!a.front.is_empty(), "baseline must be feasible");
+        let ids = |sr: &SearchResult| sr.front.iter().map(|p| p.id).collect::<Vec<_>>();
+        assert_eq!(ids(&a), ids(&b));
+        for ((ga, pa, _), (gb, pb, _)) in a.candidates.iter().zip(&b.candidates) {
+            assert_eq!(ga, gb);
+            assert_eq!(pa, pb);
+        }
+        assert_eq!(&a.candidates[0].0, space.base(), "candidate 0 is the default plan");
+    }
+}

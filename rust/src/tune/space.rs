@@ -1,0 +1,494 @@
+//! The plan-space genome: one point in the tuner's search space and the
+//! mutation operators that move through it.
+//!
+//! A [`Genome`] is a compact, exactly-comparable encoding of every
+//! decision the tuner may revisit: burst-length policy, last-stage FIFO
+//! depth, the Eq. 1 sparsity discount (stored in per-mille so genomes
+//! hash and compare exactly), the all-HBM toggle, per-layer offload
+//! overrides, and fleet cut points. [`Genome::apply`] folds a genome into
+//! a [`CompilerOptions`], so every candidate travels through the same
+//! `session` pipeline a hand-written configuration would.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::{BurstLengthPolicy, CompilerOptions};
+use crate::nn::Network;
+use crate::util::{Json, XorShift64};
+
+/// Burst lengths the mutation operator draws from (`Fixed` arms) plus the
+/// §VI-A policy itself. BL1/BL2 are legal but never competitive (Fig. 3a
+/// efficiency collapses below 0.5), so the space omits them.
+const BURST_CHOICES: [BurstLengthPolicy; 5] = [
+    BurstLengthPolicy::Auto,
+    BurstLengthPolicy::Fixed(4),
+    BurstLengthPolicy::Fixed(8),
+    BurstLengthPolicy::Fixed(16),
+    BurstLengthPolicy::Fixed(32),
+];
+
+/// Last-stage FIFO depths (80-bit words). 128 sits below the H2P040
+/// latency-coverage bound whenever HBM layers exist — it stays in the
+/// space deliberately, as a live test that the legality gate fires.
+const FIFO_CHOICES: [u32; 4] = [128, 256, 512, 1024];
+
+/// Sparsity fractions in per-mille.
+const SPARSITY_CHOICES: [u32; 6] = [0, 125, 250, 375, 500, 750];
+
+/// One candidate's decisions. Integer-only so equality, hashing and the
+/// artifact encoding are all exact.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Genome {
+    /// Burst-length policy for offloaded layers.
+    pub burst: BurstLengthPolicy,
+    /// Last-stage weight-FIFO depth in 80-bit words.
+    pub fifo_depth: u32,
+    /// Eq. 1 sparsity discount in per-mille (250 = 0.25).
+    pub sparsity_milli: u32,
+    /// Offload everything bandwidth allows instead of Algorithm 1's
+    /// hybrid split.
+    pub all_hbm: bool,
+    /// Forced placements `(layer index, offload_to_hbm)`, sorted by
+    /// index (the canonical form `CompilerOptions` validation requires).
+    pub overrides: Vec<(usize, bool)>,
+    /// Fleet cut points (shard boundaries); empty in single-device mode.
+    pub cuts: Vec<usize>,
+}
+
+impl Genome {
+    /// The genome equivalent to compiling `base` unchanged (with the
+    /// given fleet cuts, if any) — always candidate 0 of a search.
+    pub fn baseline(base: &CompilerOptions, cuts: Vec<usize>) -> Self {
+        Self {
+            burst: base.burst_length,
+            fifo_depth: base.last_stage_fifo_depth,
+            sparsity_milli: (base.sparsity_fraction * 1000.0).round() as u32,
+            all_hbm: base.all_hbm,
+            overrides: base.offload_overrides.clone(),
+            cuts,
+        }
+    }
+
+    /// Fold this genome's decisions into a copy of `base`.
+    pub fn apply(&self, base: &CompilerOptions) -> CompilerOptions {
+        let mut o = base.clone();
+        o.burst_length = self.burst;
+        o.last_stage_fifo_depth = self.fifo_depth;
+        o.sparsity_fraction = self.sparsity_milli as f64 / 1000.0;
+        o.all_hbm = self.all_hbm;
+        o.offload_overrides = self.overrides.clone();
+        o
+    }
+
+    /// Canonical text form — the dedup key of the search loop. Two
+    /// genomes produce the same compiled plan iff their fingerprints are
+    /// equal (every field is integer-encoded, so no float aliasing).
+    pub fn fingerprint(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        match self.burst {
+            BurstLengthPolicy::Auto => s.push_str("b=auto"),
+            BurstLengthPolicy::Fixed(bl) => {
+                let _ = write!(s, "b={bl}");
+            }
+        }
+        let _ = write!(s, ";f={};s={};h={}", self.fifo_depth, self.sparsity_milli, self.all_hbm);
+        s.push_str(";ov=");
+        for (k, &(i, d)) in self.overrides.iter().enumerate() {
+            if k > 0 {
+                s.push(',');
+            }
+            let _ = write!(s, "{i}{}", if d { '+' } else { '-' });
+        }
+        s.push_str(";c=");
+        for (k, &c) in self.cuts.iter().enumerate() {
+            if k > 0 {
+                s.push(',');
+            }
+            let _ = write!(s, "{c}");
+        }
+        s
+    }
+
+    /// Human-readable `old -> new` terms for every decision that differs
+    /// from `base` (the Pareto-front listing and the fleet plan diff).
+    pub fn diff_terms(&self, base: &Genome) -> Vec<String> {
+        let burst_name = |b: BurstLengthPolicy| match b {
+            BurstLengthPolicy::Auto => "auto".to_string(),
+            BurstLengthPolicy::Fixed(bl) => format!("fixed{bl}"),
+        };
+        let mut terms = Vec::new();
+        if self.burst != base.burst {
+            terms.push(format!("burst: {} -> {}", burst_name(base.burst), burst_name(self.burst)));
+        }
+        if self.fifo_depth != base.fifo_depth {
+            terms.push(format!("fifo: {} -> {}", base.fifo_depth, self.fifo_depth));
+        }
+        if self.sparsity_milli != base.sparsity_milli {
+            terms.push(format!(
+                "sparsity: {:.3} -> {:.3}",
+                base.sparsity_milli as f64 / 1000.0,
+                self.sparsity_milli as f64 / 1000.0
+            ));
+        }
+        if self.all_hbm != base.all_hbm {
+            terms.push(format!("all_hbm: {} -> {}", base.all_hbm, self.all_hbm));
+        }
+        for &(i, d) in &self.overrides {
+            if !base.overrides.contains(&(i, d)) {
+                terms.push(format!("layer{i}: forced -> {}", if d { "hbm" } else { "chip" }));
+            }
+        }
+        for &(i, d) in &base.overrides {
+            if !self.overrides.iter().any(|&(j, _)| j == i) {
+                let _ = d;
+                terms.push(format!("layer{i}: override -> dropped"));
+            }
+        }
+        if self.cuts != base.cuts {
+            terms.push(format!("cuts: {:?} -> {:?}", base.cuts, self.cuts));
+        }
+        terms
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        match self.burst {
+            BurstLengthPolicy::Auto => o.set("burst", "auto"),
+            BurstLengthPolicy::Fixed(bl) => o.set("burst", bl),
+        };
+        o.set("fifo_depth", self.fifo_depth)
+            .set("sparsity_milli", self.sparsity_milli)
+            .set("all_hbm", self.all_hbm)
+            .set(
+                "overrides",
+                Json::Arr(
+                    self.overrides
+                        .iter()
+                        .map(|&(i, d)| Json::Arr(vec![Json::from(i), Json::Bool(d)]))
+                        .collect(),
+                ),
+            )
+            .set("cuts", Json::Arr(self.cuts.iter().map(|&c| Json::from(c)).collect()));
+        o
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let burst = match j.get("burst") {
+            Some(Json::Str(s)) if s == "auto" => BurstLengthPolicy::Auto,
+            Some(v) => BurstLengthPolicy::Fixed(
+                v.as_u32().ok_or_else(|| anyhow!("genome burst is neither \"auto\" nor a u32"))?,
+            ),
+            None => bail!("genome missing burst"),
+        };
+        let overrides = j
+            .get("overrides")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("genome overrides missing or not an array"))?
+            .iter()
+            .map(|pair| -> Result<(usize, bool)> {
+                let p = pair.as_arr().ok_or_else(|| anyhow!("override entry is not a pair"))?;
+                anyhow::ensure!(p.len() == 2, "override entry is not a pair");
+                Ok((
+                    p[0].as_usize().ok_or_else(|| anyhow!("bad override index"))?,
+                    p[1].as_bool().ok_or_else(|| anyhow!("bad override flag"))?,
+                ))
+            })
+            .collect::<Result<_>>()?;
+        let cuts = j
+            .get("cuts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("genome cuts missing or not an array"))?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad cut position")))
+            .collect::<Result<_>>()?;
+        Ok(Self {
+            burst,
+            fifo_depth: j
+                .get("fifo_depth")
+                .and_then(Json::as_u32)
+                .ok_or_else(|| anyhow!("genome missing fifo_depth"))?,
+            sparsity_milli: j
+                .get("sparsity_milli")
+                .and_then(Json::as_u32)
+                .ok_or_else(|| anyhow!("genome missing sparsity_milli"))?,
+            all_hbm: j
+                .get("all_hbm")
+                .and_then(Json::as_bool)
+                .ok_or_else(|| anyhow!("genome missing all_hbm"))?,
+            overrides,
+            cuts,
+        })
+    }
+}
+
+/// The enumerable design space around one network: which layers can take
+/// offload overrides, which cut positions are stream-legal, and the
+/// baseline genome every diff is measured against.
+#[derive(Debug, Clone)]
+pub struct SearchSpace {
+    /// Weight-layer indices (override targets). Emptied in fleet mode:
+    /// override indices are network-global while each shard compiles its
+    /// own sub-network, so the flip axis only exists on single devices.
+    weight_layers: Vec<usize>,
+    /// Stream-legal interior cut positions (fleet mode only).
+    cut_positions: Vec<usize>,
+    base: Genome,
+}
+
+impl SearchSpace {
+    /// Build the space for `net` with the given baseline options. A
+    /// non-empty `base_cuts` puts the search in fleet mode: the cut axis
+    /// opens and the per-layer offload-override axis closes.
+    pub fn new(net: &Network, base: &CompilerOptions, base_cuts: Vec<usize>) -> Self {
+        let fleet = !base_cuts.is_empty();
+        let weight_layers = if fleet {
+            Vec::new()
+        } else {
+            net.layers()
+                .iter()
+                .filter(|l| l.weight_params() > 0)
+                .map(|l| l.id)
+                .collect()
+        };
+        let cut_positions = if fleet {
+            let ok = crate::cluster::valid_cuts(net);
+            (2..net.len()).filter(|&p| ok[p]).collect()
+        } else {
+            Vec::new()
+        };
+        Self { weight_layers, cut_positions, base: Genome::baseline(base, base_cuts) }
+    }
+
+    /// The baseline genome (candidate 0 of every search).
+    pub fn base(&self) -> &Genome {
+        &self.base
+    }
+
+    /// Deterministic generation-0 seed set: the baseline first, then one
+    /// representative per axis (fixed bursts, FIFO resizes, sparsity
+    /// discounts, all-HBM), truncated to `budget`.
+    pub fn seeds(&self, budget: usize) -> Vec<Genome> {
+        let mut v = vec![self.base.clone()];
+        for bl in [8u32, 16, 32, 4] {
+            if self.base.burst != BurstLengthPolicy::Fixed(bl) {
+                let mut g = self.base.clone();
+                g.burst = BurstLengthPolicy::Fixed(bl);
+                v.push(g);
+            }
+        }
+        for depth in [256u32, 1024] {
+            if self.base.fifo_depth != depth {
+                let mut g = self.base.clone();
+                g.fifo_depth = depth;
+                v.push(g);
+            }
+        }
+        for sm in [250u32, 500] {
+            if self.base.sparsity_milli != sm {
+                let mut g = self.base.clone();
+                g.sparsity_milli = sm;
+                v.push(g);
+            }
+        }
+        let mut g = self.base.clone();
+        g.all_hbm = !g.all_hbm;
+        v.push(g);
+        v.truncate(budget.max(1));
+        v
+    }
+
+    /// One mutation step: pick an applicable operator, draw its new value
+    /// from `rng`. Identical `(parent, rng state)` always yields the same
+    /// child — the search loop seeds `rng` per attempt via `site_seed`.
+    pub fn mutate(&self, parent: &Genome, rng: &mut XorShift64) -> Genome {
+        let mut g = parent.clone();
+        let mut ops: Vec<u32> = vec![0, 1, 2, 3];
+        if !self.weight_layers.is_empty() {
+            ops.push(4);
+        }
+        if !g.overrides.is_empty() {
+            ops.push(5);
+        }
+        if !self.cut_positions.is_empty() && !g.cuts.is_empty() {
+            ops.push(6);
+        }
+        match *rng.choose(&ops) {
+            0 => {
+                g.burst = loop {
+                    let c = *rng.choose(&BURST_CHOICES);
+                    if c != g.burst {
+                        break c;
+                    }
+                };
+            }
+            1 => {
+                g.fifo_depth = loop {
+                    let c = *rng.choose(&FIFO_CHOICES);
+                    if c != g.fifo_depth {
+                        break c;
+                    }
+                };
+            }
+            2 => {
+                g.sparsity_milli = loop {
+                    let c = *rng.choose(&SPARSITY_CHOICES);
+                    if c != g.sparsity_milli {
+                        break c;
+                    }
+                };
+            }
+            3 => g.all_hbm = !g.all_hbm,
+            4 => {
+                let li = *rng.choose(&self.weight_layers);
+                match g.overrides.iter().position(|&(i, _)| i == li) {
+                    Some(p) => g.overrides[p].1 = !g.overrides[p].1,
+                    None => {
+                        let to_hbm = rng.next_bool(0.5);
+                        g.overrides.push((li, to_hbm));
+                        g.overrides.sort_unstable_by_key(|&(i, _)| i);
+                    }
+                }
+            }
+            5 => {
+                let p = rng.next_below(g.overrides.len() as u64) as usize;
+                g.overrides.remove(p);
+            }
+            _ => {
+                let ci = rng.next_below(g.cuts.len() as u64) as usize;
+                let cand = *rng.choose(&self.cut_positions);
+                if !g.cuts.contains(&cand) {
+                    g.cuts[ci] = cand;
+                    g.cuts.sort_unstable();
+                }
+            }
+        }
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::zoo;
+
+    fn space() -> SearchSpace {
+        SearchSpace::new(&zoo::resnet18(), &CompilerOptions::default(), Vec::new())
+    }
+
+    #[test]
+    fn baseline_genome_round_trips_options() {
+        let base = CompilerOptions::default();
+        let g = Genome::baseline(&base, Vec::new());
+        let applied = g.apply(&base);
+        assert_eq!(applied.burst_length, base.burst_length);
+        assert_eq!(applied.last_stage_fifo_depth, base.last_stage_fifo_depth);
+        assert_eq!(applied.sparsity_fraction, base.sparsity_fraction);
+        assert_eq!(applied.all_hbm, base.all_hbm);
+        assert_eq!(applied.offload_overrides, base.offload_overrides);
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_every_axis() {
+        let base = Genome::baseline(&CompilerOptions::default(), Vec::new());
+        let mut seen = std::collections::BTreeSet::new();
+        assert!(seen.insert(base.fingerprint()));
+        let mut g = base.clone();
+        g.burst = BurstLengthPolicy::Fixed(16);
+        assert!(seen.insert(g.fingerprint()));
+        let mut g = base.clone();
+        g.fifo_depth = 256;
+        assert!(seen.insert(g.fingerprint()));
+        let mut g = base.clone();
+        g.sparsity_milli = 250;
+        assert!(seen.insert(g.fingerprint()));
+        let mut g = base.clone();
+        g.all_hbm = true;
+        assert!(seen.insert(g.fingerprint()));
+        let mut g = base.clone();
+        g.overrides = vec![(3, true)];
+        assert!(seen.insert(g.fingerprint()));
+        let mut g = base.clone();
+        g.overrides = vec![(3, false)];
+        assert!(seen.insert(g.fingerprint()), "override direction must fingerprint");
+        let mut g = base.clone();
+        g.cuts = vec![6];
+        assert!(seen.insert(g.fingerprint()));
+    }
+
+    #[test]
+    fn genome_json_round_trip() {
+        let mut g = Genome::baseline(&CompilerOptions::default(), vec![6, 12]);
+        g.burst = BurstLengthPolicy::Fixed(32);
+        g.sparsity_milli = 375;
+        g.overrides = vec![(2, true), (9, false)];
+        let j = g.to_json();
+        let back = Genome::from_json(&j).unwrap();
+        assert_eq!(back, g);
+        assert_eq!(back.to_json().to_string(), j.to_string());
+        assert!(Genome::from_json(&Json::obj()).is_err());
+    }
+
+    #[test]
+    fn seeds_start_with_baseline_and_stay_unique() {
+        let sp = space();
+        let seeds = sp.seeds(64);
+        assert_eq!(&seeds[0], sp.base(), "candidate 0 is always the default plan");
+        let fps: std::collections::BTreeSet<String> =
+            seeds.iter().map(Genome::fingerprint).collect();
+        assert_eq!(fps.len(), seeds.len(), "seed set must be duplicate-free");
+        assert!(seeds.len() >= 8, "every axis is represented: {}", seeds.len());
+        assert_eq!(sp.seeds(3).len(), 3, "budget truncates the seed set");
+    }
+
+    #[test]
+    fn mutation_is_deterministic_per_rng_stream() {
+        let sp = space();
+        let parent = sp.base().clone();
+        for site in 0..16u64 {
+            let mut a = XorShift64::new(crate::faults::site_seed(7, site));
+            let mut b = XorShift64::new(crate::faults::site_seed(7, site));
+            assert_eq!(sp.mutate(&parent, &mut a), sp.mutate(&parent, &mut b));
+        }
+        // different streams explore different moves eventually
+        let kids: std::collections::BTreeSet<String> = (0..16u64)
+            .map(|site| {
+                let mut rng = XorShift64::new(crate::faults::site_seed(7, site));
+                sp.mutate(&parent, &mut rng).fingerprint()
+            })
+            .collect();
+        assert!(kids.len() > 1, "16 streams produced a single child");
+    }
+
+    #[test]
+    fn mutated_overrides_stay_canonical() {
+        let sp = space();
+        let mut g = sp.base().clone();
+        for site in 0..64u64 {
+            let mut rng = XorShift64::new(crate::faults::site_seed(11, site));
+            g = sp.mutate(&g, &mut rng);
+            for w in g.overrides.windows(2) {
+                assert!(w[0].0 < w[1].0, "overrides must stay sorted: {:?}", g.overrides);
+            }
+            assert!(g.apply(&CompilerOptions::default()).validate().is_ok(), "{g:?}");
+        }
+    }
+
+    #[test]
+    fn fleet_space_swaps_override_axis_for_cut_axis() {
+        let net = zoo::vgg16();
+        let sp = SearchSpace::new(&net, &CompilerOptions::default(), vec![6]);
+        assert!(sp.weight_layers.is_empty(), "no global offload flips across shards");
+        assert!(!sp.cut_positions.is_empty(), "cut axis must open in fleet mode");
+        // a cut mutation eventually moves the cut
+        let mut moved = false;
+        for site in 0..64u64 {
+            let mut rng = XorShift64::new(crate::faults::site_seed(3, site));
+            let g = sp.mutate(sp.base(), &mut rng);
+            assert_eq!(g.cuts.len(), 1, "cut count is fixed by --shards");
+            if g.cuts != sp.base().cuts {
+                moved = true;
+            }
+        }
+        assert!(moved, "64 mutation streams never moved the cut");
+    }
+}

@@ -41,12 +41,21 @@ fn main() {
     println!("  -> {:.1} M HBM ticks/s", tick_rate / 1e6);
     b.record("hbm_ticks_per_s", tick_rate);
 
-    // 2. Pipeline simulation rate (ResNet-50 hybrid, 3 images).
+    // 2. Pipeline simulation rate (ResNet-50 hybrid, 3 images), on the
+    // event-driven fast path (the default) and on the exact per-tick
+    // reference path. Both produce byte-identical reports (see
+    // tests/integration_eventsim.rs); the ratio is the headline win of
+    // the skip-ahead scheduler.
     let net = zoo::resnet50();
     let plan = compile(&net, &device, &CompilerOptions::default()).unwrap();
-    let cfg = SimConfig { images: scaled(3, 2), warmup_images: 1, ..SimConfig::default() };
+    let cfg = SimConfig {
+        images: scaled(3, 2),
+        warmup_images: 1,
+        exact_stepping: false,
+        ..SimConfig::default()
+    };
     let mut core_cycles = 0u64;
-    let m = b.time("pipeline_sim_resnet50_3img", scaled(1, 0) as u32, scaled(3, 1) as u32, || {
+    let m = b.time("pipeline_sim_resnet50_event", scaled(1, 0) as u32, scaled(3, 1) as u32, || {
         let mut sim = PipelineSim::new(&net, &plan).unwrap();
         let rep = sim.run(&cfg).unwrap();
         core_cycles = rep.core_cycles;
@@ -54,6 +63,30 @@ fn main() {
     let sim_rate = core_cycles as f64 / m.mean_s;
     println!("  -> {:.1} M model-cycles/s ({core_cycles} cycles)", sim_rate / 1e6);
     b.record("sim_model_cycles_per_s", sim_rate);
+
+    // 2a. Exact per-tick reference path on the same workload.
+    let slow_cfg = SimConfig { exact_stepping: true, ..cfg.clone() };
+    let m = b.time("pipeline_sim_resnet50_exact", 0, scaled(2, 1) as u32, || {
+        let mut sim = PipelineSim::new(&net, &plan).unwrap();
+        let rep = sim.run(&slow_cfg).unwrap();
+        core_cycles = rep.core_cycles;
+    });
+    let exact_rate = core_cycles as f64 / m.mean_s;
+    let speedup = sim_rate / exact_rate;
+    println!(
+        "  -> {:.1} M model-cycles/s exact ({speedup:.1}x event-path speedup)",
+        exact_rate / 1e6
+    );
+    b.record("sim_exact_cycles_per_s", exact_rate);
+    b.record("sim_event_speedup", speedup);
+    if h2pipe::bench_harness::full_run() {
+        // Conservative floor: the measured win is far larger (see
+        // BENCH_10.json); this guards against the fast path silently
+        // degenerating into per-tick stepping.
+        assert!(speedup >= 3.0, "event path speedup regressed: {speedup:.2}x < 3x");
+    } else if speedup < 1.0 {
+        println!("  (smoke run: speedup {speedup:.2}x below 1x — timing noise expected)");
+    }
 
     // 2b. Probe plumbing overhead: the same run with a NullProbe attached
     // (every hook a no-op) isolates the cost of the observability wiring
@@ -73,6 +106,46 @@ fn main() {
     );
     b.record("sim_nullprobe_cycles_per_s", probed_rate);
     b.record("sim_probe_overhead_frac", overhead);
+
+    // 2c. Fleet co-simulation rate (ResNet-18 split across 2 devices),
+    // event-driven vs exact — the same scheduler drives every shard on a
+    // shared clock plus the link-exchange events.
+    let fnet = zoo::resnet18();
+    let pp = h2pipe::cluster::partition(
+        &fnet,
+        &device,
+        &CompilerOptions::default(),
+        &h2pipe::cluster::PartitionOptions { shards: Some(2), max_shards: 2 },
+    )
+    .unwrap();
+    let fleet = h2pipe::cluster::FleetSim::new(&pp).unwrap();
+    let fcfg = h2pipe::cluster::FleetConfig {
+        images: scaled(4, 2),
+        warmup_images: 1,
+        exact_stepping: false,
+        ..h2pipe::cluster::FleetConfig::default()
+    };
+    let mut fleet_cycles = 0u64;
+    let m = b.time("fleet_sim_resnet18_2shard_event", 0, scaled(3, 1) as u32, || {
+        let rep = fleet.run(&fcfg).unwrap();
+        fleet_cycles = rep.core_cycles;
+    });
+    let fleet_rate = fleet_cycles as f64 / m.mean_s;
+    println!("  -> {:.1} M model-cycles/s ({fleet_cycles} cycles)", fleet_rate / 1e6);
+    b.record("fleet_event_cycles_per_s", fleet_rate);
+    let fslow_cfg = h2pipe::cluster::FleetConfig { exact_stepping: true, ..fcfg.clone() };
+    let m = b.time("fleet_sim_resnet18_2shard_exact", 0, scaled(2, 1) as u32, || {
+        let rep = fleet.run(&fslow_cfg).unwrap();
+        fleet_cycles = rep.core_cycles;
+    });
+    let fleet_exact_rate = fleet_cycles as f64 / m.mean_s;
+    let fleet_speedup = fleet_rate / fleet_exact_rate;
+    println!(
+        "  -> {:.1} M model-cycles/s exact ({fleet_speedup:.1}x event-path speedup)",
+        fleet_exact_rate / 1e6
+    );
+    b.record("fleet_exact_cycles_per_s", fleet_exact_rate);
+    b.record("fleet_event_speedup", fleet_speedup);
 
     // 3. Compiler end-to-end.
     b.time("compile_resnet50", 1, scaled(10, 2) as u32, || {
@@ -101,5 +174,19 @@ fn main() {
         .set("sim_model_cycles_per_s_target", 50_000_000u64)
         .set("note", "see EXPERIMENTS.md §Perf for the iteration log");
     b.record("targets", targets);
+
+    // Machine-readable summary line for CI to grep off stdout (the full
+    // JSON also lands under target/bench_results/).
+    let mut summary = Json::obj();
+    summary
+        .set("bench", "perf_hotpath")
+        .set("hbm_mticks_per_s", tick_rate / 1e6)
+        .set("sim_event_mcycles_per_s", sim_rate / 1e6)
+        .set("sim_exact_mcycles_per_s", exact_rate / 1e6)
+        .set("sim_event_speedup", speedup)
+        .set("fleet_event_mcycles_per_s", fleet_rate / 1e6)
+        .set("fleet_exact_mcycles_per_s", fleet_exact_rate / 1e6)
+        .set("fleet_event_speedup", fleet_speedup);
+    println!("PERF_HOTPATH_JSON {summary}");
     b.finish();
 }

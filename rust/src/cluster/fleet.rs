@@ -12,7 +12,7 @@
 //! from the same 1200 MHz base tick, so the core/HBM clock-domain
 //! relationship of the single-device simulator composes unchanged.
 
-use anyhow::{ensure, Result};
+use anyhow::{bail, ensure, Result};
 
 use crate::cluster::partition::PartitionPlan;
 use crate::fabric::CreditCounter;
@@ -37,6 +37,11 @@ pub struct FleetConfig {
     pub link_capacity_lines: u32,
     /// Identical replicas of the whole sharded pipeline.
     pub replicas: u32,
+    /// Step every base tick of every shard (the reference interpreter)
+    /// instead of the event-driven scheduler. Both paths produce
+    /// identical reports, artifacts and probe streams; see
+    /// [`crate::sim::pipeline::SimConfig::exact_stepping`].
+    pub exact_stepping: bool,
 }
 
 impl Default for FleetConfig {
@@ -47,8 +52,68 @@ impl Default for FleetConfig {
             max_base_ticks: 40_000_000_000,
             link_capacity_lines: 4,
             replicas: 1,
+            exact_stepping: crate::sim::pipeline::slow_sim_from_env(),
         }
     }
+}
+
+/// Merge `[start, end)` windows into sorted, disjoint, non-adjacent
+/// intervals (the shape the closed-form tick accounting needs).
+fn merge_windows(mut iv: Vec<(u64, u64)>) -> Vec<(u64, u64)> {
+    iv.retain(|&(s, e)| e > s);
+    iv.sort_unstable();
+    let mut out: Vec<(u64, u64)> = Vec::new();
+    for (s, e) in iv {
+        match out.last_mut() {
+            Some(last) if s <= last.1 => last.1 = last.1.max(e),
+            _ => out.push((s, e)),
+        }
+    }
+    out
+}
+
+/// Wall base tick at which the `local`-th *executed* tick runs — replica
+/// outages freeze the shards but not the wall clock, so executed ticks
+/// skip over the merged outage intervals.
+fn to_wall(local: u64, outages: &[(u64, u64)]) -> u64 {
+    let mut w = local;
+    for &(s, e) in outages {
+        if w >= s {
+            w += e - s;
+        } else {
+            break;
+        }
+    }
+    w
+}
+
+/// Number of executed ticks strictly before wall tick `wall` (the local
+/// clock an executed wall tick runs at).
+fn executed_before(wall: u64, outages: &[(u64, u64)]) -> u64 {
+    let mut dead = 0;
+    for &(s, e) in outages {
+        if s >= wall {
+            break;
+        }
+        dead += e.min(wall) - s;
+    }
+    wall - dead
+}
+
+/// First executed wall tick at or after `wall`.
+fn first_executed(wall: u64, outages: &[(u64, u64)]) -> u64 {
+    let mut w = wall;
+    for &(s, e) in outages {
+        if s <= w && w < e {
+            w = e;
+        }
+    }
+    w
+}
+
+/// `|[a.0, a.1) ∩ [b.0, b.1)|`
+fn overlap(a: (u64, u64), b: (u64, u64)) -> u64 {
+    a.1.min(b.1).saturating_sub(a.0.max(b.0))
 }
 
 /// Per-link measurement (shard `i` -> shard `i + 1`).
@@ -380,130 +445,333 @@ impl FleetSim {
         }
 
         let mut warmup_done_at: Option<u64> = None;
-        // Wall base-tick clock. Equals the sims' own base ticks on a
-        // healthy run; during an outage the sims freeze but the wall
-        // clock (and the fault windows defined on it) keeps advancing.
-        let mut t: u64 = 0;
-        loop {
-            ensure!(
-                t < cfg.max_base_ticks,
-                "fleet simulation exceeded max_base_ticks — pipeline wedged?"
-            );
-            // Replica outage: the whole device pipeline freezes for the
-            // window (crash plus reboot are modelled as dead ticks — the
-            // wall-clock serving stack is where real reboot-from-artifact
-            // recovery lives). Queued work is delayed, never lost.
-            let down = outages.iter().any(|o| t >= o.start && t < o.end);
-            if down != down_prev {
-                let kind = if down { "replica_down" } else { "replica_up" };
-                if down {
-                    ftotals.injected += 1;
-                    ftotals.failed_over += 1;
-                }
-                if let Some(p) = probe.as_deref_mut() {
-                    p.fault_event(rep_idx as u32, t, kind, 0);
-                }
-                down_prev = down;
-            }
-            if down {
-                ftotals.outage_ticks += 1;
-                t += 1;
-                continue;
-            }
-            for (i, s) in sims.iter_mut().enumerate() {
-                match probe.as_deref_mut() {
-                    None => s.step_base_tick(images),
-                    Some(p) => {
-                        let mut sp = ShardProbe {
-                            inner: p,
-                            shard: i,
-                            engine_base: engine_bases[i],
-                            pc_base: pc_bases[i],
-                        };
-                        s.step_base_tick_probed(images, Some(&mut sp));
+        if cfg.exact_stepping {
+            // Wall base-tick clock. Equals the sims' own base ticks on a
+            // healthy run; during an outage the sims freeze but the wall
+            // clock (and the fault windows defined on it) keeps advancing.
+            let mut t: u64 = 0;
+            loop {
+                if t >= cfg.max_base_ticks {
+                    let mut msg = String::new();
+                    for (i, s) in sims.iter().enumerate() {
+                        msg.push_str(&format!("shard {i}: {}\n", s.wedge_breakdown()));
                     }
+                    bail!(
+                        "fleet simulation exceeded max_base_ticks — pipeline wedged?\n{}",
+                        msg.trim_end()
+                    );
                 }
-            }
-            // Exchange link state: occupancy is lines offered upstream
-            // minus lines retired downstream; the hardware-style counter
-            // must never be overdrawn (that would mean dropped data).
-            for i in 0..n - 1 {
-                // A stalled link moves nothing and returns no credits:
-                // both sides keep their last granted bounds, so upstream
-                // backpressure absorbs the window and no line is lost.
-                let stalled = link_faults.iter().any(|f| {
-                    f.link == i && f.kind == LinkFaultKind::Stall && t >= f.start && t < f.end
-                });
-                if stalled != stall_prev[i] {
-                    if stalled {
+                // Replica outage: the whole device pipeline freezes for the
+                // window (crash plus reboot are modelled as dead ticks — the
+                // wall-clock serving stack is where real reboot-from-artifact
+                // recovery lives). Queued work is delayed, never lost.
+                let down = outages.iter().any(|o| t >= o.start && t < o.end);
+                if down != down_prev {
+                    let kind = if down { "replica_down" } else { "replica_up" };
+                    if down {
                         ftotals.injected += 1;
-                        ftotals.retried += 1;
-                        if let Some(p) = probe.as_deref_mut() {
-                            p.fault_event(i as u32, t, "link_stall", 0);
-                        }
+                        ftotals.failed_over += 1;
                     }
-                    stall_prev[i] = stalled;
+                    if let Some(p) = probe.as_deref_mut() {
+                        p.fault_event(rep_idx as u32, t, kind, 0);
+                    }
+                    down_prev = down;
                 }
-                if stalled {
-                    link_stalled[i] += 1;
-                    ftotals.link_stall_ticks += 1;
+                if down {
+                    ftotals.outage_ticks += 1;
+                    t += 1;
                     continue;
                 }
-                // Credit loss shrinks the window upstream may run ahead
-                // (floor 1 so the link still trickles); in-flight lines
-                // above the shrunken cap drain normally.
-                let lost: u32 = link_faults
-                    .iter()
-                    .filter(|f| f.link == i && t >= f.start && t < f.end)
-                    .filter_map(|f| match f.kind {
-                        LinkFaultKind::CreditLoss(l) => Some(l),
-                        LinkFaultKind::Stall => None,
-                    })
-                    .sum();
-                let eff_cap = cap.saturating_sub(u64::from(lost)).max(1);
-                let produced = sims[i].sink_lines_produced();
-                let consumed = sims[i + 1].head_lines_consumed();
-                let occupancy = produced - consumed;
-                let held = credits[i].outstanding() as u64;
-                if occupancy > held {
-                    ensure!(
-                        credits[i].acquire((occupancy - held) as u32),
-                        "link {i} overran its credit window"
-                    );
-                } else if held > occupancy {
-                    credits[i].release((held - occupancy) as u32);
+                for (i, s) in sims.iter_mut().enumerate() {
+                    match probe.as_deref_mut() {
+                        None => s.step_base_tick(images),
+                        Some(p) => {
+                            let mut sp = ShardProbe {
+                                inner: p,
+                                shard: i,
+                                engine_base: engine_bases[i],
+                                pc_base: pc_bases[i],
+                            };
+                            s.step_base_tick_probed(images, Some(&mut sp));
+                        }
+                    }
                 }
-                peak[i] = peak[i].max(occupancy);
-                sims[i].set_sink_limit(consumed + eff_cap);
-                sims[i + 1].set_input_limit(produced);
-            }
-            // Link windows sample on the sink shard's core-cycle window
-            // boundary: cumulative lines/blocked plus the instantaneous
-            // in-flight occupancy.
-            if let Some(p) = probe.as_deref_mut() {
-                let now = sims[n - 1].core_cycles();
-                if now >= next_link_sample {
-                    for i in 0..n - 1 {
-                        let produced = sims[i].sink_lines_produced();
-                        let consumed = sims[i + 1].head_lines_consumed();
-                        p.link_sample(
-                            now,
-                            i,
-                            produced - consumed,
-                            produced,
-                            sims[i].sink_output_blocked(),
+                // Exchange link state: occupancy is lines offered upstream
+                // minus lines retired downstream; the hardware-style counter
+                // must never be overdrawn (that would mean dropped data).
+                for i in 0..n - 1 {
+                    // A stalled link moves nothing and returns no credits:
+                    // both sides keep their last granted bounds, so upstream
+                    // backpressure absorbs the window and no line is lost.
+                    let stalled = link_faults.iter().any(|f| {
+                        f.link == i && f.kind == LinkFaultKind::Stall && t >= f.start && t < f.end
+                    });
+                    if stalled != stall_prev[i] {
+                        if stalled {
+                            ftotals.injected += 1;
+                            ftotals.retried += 1;
+                            if let Some(p) = probe.as_deref_mut() {
+                                p.fault_event(i as u32, t, "link_stall", 0);
+                            }
+                        }
+                        stall_prev[i] = stalled;
+                    }
+                    if stalled {
+                        link_stalled[i] += 1;
+                        ftotals.link_stall_ticks += 1;
+                        continue;
+                    }
+                    // Credit loss shrinks the window upstream may run ahead
+                    // (floor 1 so the link still trickles); in-flight lines
+                    // above the shrunken cap drain normally.
+                    let lost: u32 = link_faults
+                        .iter()
+                        .filter(|f| f.link == i && t >= f.start && t < f.end)
+                        .filter_map(|f| match f.kind {
+                            LinkFaultKind::CreditLoss(l) => Some(l),
+                            LinkFaultKind::Stall => None,
+                        })
+                        .sum();
+                    let eff_cap = cap.saturating_sub(u64::from(lost)).max(1);
+                    let produced = sims[i].sink_lines_produced();
+                    let consumed = sims[i + 1].head_lines_consumed();
+                    let occupancy = produced - consumed;
+                    let held = credits[i].outstanding() as u64;
+                    if occupancy > held {
+                        ensure!(
+                            credits[i].acquire((occupancy - held) as u32),
+                            "link {i} overran its credit window"
                         );
+                    } else if held > occupancy {
+                        credits[i].release((held - occupancy) as u32);
+                    }
+                    peak[i] = peak[i].max(occupancy);
+                    sims[i].set_sink_limit(consumed + eff_cap);
+                    sims[i + 1].set_input_limit(produced);
+                }
+                // Link windows sample on the sink shard's core-cycle window
+                // boundary: cumulative lines/blocked plus the instantaneous
+                // in-flight occupancy.
+                if let Some(p) = probe.as_deref_mut() {
+                    let now = sims[n - 1].core_cycles();
+                    if now >= next_link_sample {
+                        for i in 0..n - 1 {
+                            let produced = sims[i].sink_lines_produced();
+                            let consumed = sims[i + 1].head_lines_consumed();
+                            p.link_sample(
+                                now,
+                                i,
+                                produced - consumed,
+                                produced,
+                                sims[i].sink_output_blocked(),
+                            );
+                        }
+                        next_link_sample = now + window;
+                    }
+                }
+                if warmup_done_at.is_none() && sims[n - 1].sink_images_done() >= cfg.warmup_images {
+                    warmup_done_at = Some(sims[n - 1].core_cycles());
+                }
+                if sims.iter().all(|s| s.all_done(images)) {
+                    break;
+                }
+                t += 1;
+            }
+        } else {
+            // Event-driven co-simulation: one skip-ahead scheduler per
+            // shard on a shared *local* (executed-tick) clock, plus fleet
+            // events for fault-window boundaries and link samples. The
+            // exchange is idempotent — limits are pure functions of
+            // produced/consumed/eff_cap, which only change at processed
+            // ticks — so running it at event ticks only is exact.
+            use crate::sim::events::FastCore;
+            let merged = merge_windows(outages.iter().map(|o| (o.start, o.end)).collect());
+            let mut boundaries: Vec<u64> = link_faults
+                .iter()
+                .flat_map(|f| [first_executed(f.start, &merged), first_executed(f.end, &merged)])
+                .collect();
+            boundaries.sort_unstable();
+            boundaries.dedup();
+            let (mut oi, mut bi) = (0usize, 0usize);
+            let mut cores: Vec<FastCore> =
+                sims.iter().map(|s| FastCore::new(s, images, window)).collect();
+            let mut prev_sink = vec![cap; n.saturating_sub(1)];
+            let mut prev_input = vec![0u64; n.saturating_sub(1)];
+            let local_done;
+            loop {
+                let local_next = cores.iter().filter_map(|c| c.next_tick()).min();
+                let mut t = local_next.map_or(u64::MAX, |l| to_wall(l, &merged));
+                if bi < boundaries.len() {
+                    t = t.min(boundaries[bi]);
+                }
+                if window > 0 && n > 1 {
+                    t = t.min(to_wall(4 * (next_link_sample - 1), &merged));
+                }
+                // Replica outages wholly before the next executed tick:
+                // fire both edges and close over the dead ticks. The run
+                // never ends mid-outage (executed ticks skip the windows),
+                // so an interval is either fully behind the next event or
+                // fully ahead of the end of the run.
+                while oi < merged.len() && merged[oi].0 < t.min(cfg.max_base_ticks) {
+                    let (s, e) = merged[oi];
+                    ftotals.injected += 1;
+                    ftotals.failed_over += 1;
+                    ftotals.outage_ticks += e.min(cfg.max_base_ticks) - s;
+                    if let Some(p) = probe.as_deref_mut() {
+                        p.fault_event(rep_idx as u32, s, "replica_down", 0);
+                        if e < cfg.max_base_ticks {
+                            p.fault_event(rep_idx as u32, e, "replica_up", 0);
+                        }
+                    }
+                    oi += 1;
+                }
+                if t >= cfg.max_base_ticks {
+                    let local_cap = executed_before(cfg.max_base_ticks, &merged);
+                    let mut msg = String::new();
+                    for (i, core) in cores.iter_mut().enumerate() {
+                        core.settle_for_wedge(&mut sims[i], local_cap);
+                        msg.push_str(&format!("shard {i}: {}\n", sims[i].wedge_breakdown()));
+                    }
+                    bail!(
+                        "fleet simulation exceeded max_base_ticks — pipeline wedged?\n{}",
+                        msg.trim_end()
+                    );
+                }
+                let tau = executed_before(t, &merged);
+                for i in 0..n {
+                    match probe.as_deref_mut() {
+                        None => cores[i].process_tick(&mut sims[i], tau, None),
+                        Some(p) => {
+                            let mut sp = ShardProbe {
+                                inner: p,
+                                shard: i,
+                                engine_base: engine_bases[i],
+                                pc_base: pc_bases[i],
+                            };
+                            cores[i].process_tick(&mut sims[i], tau, Some(&mut sp));
+                        }
+                    }
+                }
+                // The slow path's exchange, run at event ticks only; the
+                // per-tick stall counters are closed over after the loop.
+                for i in 0..n - 1 {
+                    let stalled = link_faults.iter().any(|f| {
+                        f.link == i && f.kind == LinkFaultKind::Stall && t >= f.start && t < f.end
+                    });
+                    if stalled != stall_prev[i] {
+                        if stalled {
+                            ftotals.injected += 1;
+                            ftotals.retried += 1;
+                            if let Some(p) = probe.as_deref_mut() {
+                                p.fault_event(i as u32, t, "link_stall", 0);
+                            }
+                        }
+                        stall_prev[i] = stalled;
+                    }
+                    if stalled {
+                        continue;
+                    }
+                    let lost: u32 = link_faults
+                        .iter()
+                        .filter(|f| f.link == i && t >= f.start && t < f.end)
+                        .filter_map(|f| match f.kind {
+                            LinkFaultKind::CreditLoss(l) => Some(l),
+                            LinkFaultKind::Stall => None,
+                        })
+                        .sum();
+                    let eff_cap = cap.saturating_sub(u64::from(lost)).max(1);
+                    let produced = sims[i].sink_lines_produced();
+                    let consumed = sims[i + 1].head_lines_consumed();
+                    let occupancy = produced - consumed;
+                    let held = credits[i].outstanding() as u64;
+                    if occupancy > held {
+                        ensure!(
+                            credits[i].acquire((occupancy - held) as u32),
+                            "link {i} overran its credit window"
+                        );
+                    } else if held > occupancy {
+                        credits[i].release((held - occupancy) as u32);
+                    }
+                    peak[i] = peak[i].max(occupancy);
+                    // A bound granted at tick tau is first consulted by a
+                    // core evaluation at cycle tau/4 + 2 (the next core
+                    // tick); changed bounds wake the affected engines.
+                    let vis = tau / 4 + 2;
+                    let new_sink = consumed + eff_cap;
+                    if new_sink != prev_sink[i] {
+                        let shrunk = new_sink < prev_sink[i];
+                        sims[i].set_sink_limit(new_sink);
+                        cores[i].note_sink_limit_changed(&mut sims[i], vis, shrunk);
+                        prev_sink[i] = new_sink;
+                    }
+                    if produced != prev_input[i] {
+                        sims[i + 1].set_input_limit(produced);
+                        cores[i + 1].note_input_limit_raised(vis);
+                        prev_input[i] = produced;
+                    }
+                }
+                // Link samples on the sink shard's window boundary — the
+                // sink shard's core tick for that cycle is always in the
+                // processed set, so `now` matches the slow path exactly.
+                if window > 0 && n > 1 && tau == 4 * (next_link_sample - 1) {
+                    let now = next_link_sample;
+                    if let Some(p) = probe.as_deref_mut() {
+                        for i in 0..n - 1 {
+                            let sink_idx = sims[i].engines.len() - 1;
+                            cores[i].materialize_engine_stats(&mut sims[i], sink_idx, now);
+                            let produced = sims[i].sink_lines_produced();
+                            let consumed = sims[i + 1].head_lines_consumed();
+                            p.link_sample(
+                                now,
+                                i,
+                                produced - consumed,
+                                produced,
+                                sims[i].sink_output_blocked(),
+                            );
+                        }
                     }
                     next_link_sample = now + window;
                 }
+                if warmup_done_at.is_none() && sims[n - 1].sink_images_done() >= cfg.warmup_images {
+                    warmup_done_at = Some(sims[n - 1].core_cycles());
+                }
+                if cores.iter().all(|c| c.finished()) {
+                    local_done = tau;
+                    break;
+                }
+                while bi < boundaries.len() && boundaries[bi] <= t {
+                    bi += 1;
+                }
             }
-            if warmup_done_at.is_none() && sims[n - 1].sink_images_done() >= cfg.warmup_images {
-                warmup_done_at = Some(sims[n - 1].core_cycles());
+            // Closed form for the per-tick stall counters the skipped
+            // exchanges would have bumped: executed ticks under a stall
+            // window, clipped to the run, minus outage overlap.
+            let wall_done = to_wall(local_done, &merged);
+            for i in 0..n.saturating_sub(1) {
+                let stalls = merge_windows(
+                    link_faults
+                        .iter()
+                        .filter(|f| f.link == i && f.kind == LinkFaultKind::Stall)
+                        .map(|f| (f.start, f.end.min(wall_done + 1)))
+                        .collect(),
+                );
+                let mut ticks = 0u64;
+                for &w in &stalls {
+                    ticks += w.1 - w.0;
+                    for &o in &merged {
+                        ticks -= overlap(w, o);
+                    }
+                }
+                link_stalled[i] = ticks;
+                ftotals.link_stall_ticks += ticks;
             }
-            if sims.iter().all(|s| s.all_done(images)) {
-                break;
+            // The run breaks at the final core event of the last shard to
+            // finish, so the break tick is a core tick.
+            debug_assert_eq!(local_done % 4, 0, "fleet break off a core tick");
+            let c_done = local_done / 4 + 1;
+            for i in 0..n {
+                cores[i].finalize(&mut sims[i], c_done);
             }
-            t += 1;
         }
 
         // Final flush: record the trailing partial window of every shard

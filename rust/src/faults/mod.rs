@@ -31,8 +31,8 @@
 mod plan;
 
 pub use plan::{
-    FaultPlan, HbmFaultSpec, LinkFault, LinkFaultKind, RecoveryPolicy, ReplicaOutage, ServeFault,
-    ServeFaultKind, ThrottleWindow, FAULT_FORMAT,
+    count_denied, next_allowed, FaultPlan, HbmFaultSpec, LinkFault, LinkFaultKind, RecoveryPolicy,
+    ReplicaOutage, ServeFault, ServeFaultKind, ThrottleWindow, FAULT_FORMAT,
 };
 
 use crate::util::Json;

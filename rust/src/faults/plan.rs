@@ -55,6 +55,79 @@ impl ThrottleWindow {
     pub fn denies(&self, cycle: u64) -> bool {
         cycle >= self.start && cycle < self.end && cycle % self.period < self.deny
     }
+
+    /// Denied cycles of this window alone within `[lo, hi)`, in closed
+    /// form (no per-cycle loop). The deny pattern is anchored at absolute
+    /// cycle 0 (`cycle % period < deny`), so the count is a difference of
+    /// the pattern's prefix function.
+    pub fn denied_in(&self, lo: u64, hi: u64) -> u64 {
+        let lo = lo.max(self.start);
+        let hi = hi.min(self.end);
+        if lo >= hi {
+            return 0;
+        }
+        let prefix = |x: u64| (x / self.period) * self.deny + (x % self.period).min(self.deny);
+        prefix(hi) - prefix(lo)
+    }
+}
+
+/// Denied cycles in `[lo, hi)` under the union of `windows` (a cycle
+/// denied by two overlapping windows counts once, exactly as the
+/// per-cycle `any(denies)` check the slow simulation path runs).
+///
+/// Non-overlapping windows sum in closed form; if two windows overlap
+/// within the span, the overlapping region falls back to a bounded
+/// per-cycle walk (window unions are finite, so this stays cheap and is
+/// only ever paid inside armed fault plans).
+pub fn count_denied(windows: &[ThrottleWindow], lo: u64, hi: u64) -> u64 {
+    if lo >= hi || windows.is_empty() {
+        return 0;
+    }
+    let hit: Vec<&ThrottleWindow> =
+        windows.iter().filter(|w| w.start.max(lo) < w.end.min(hi)).collect();
+    match hit.len() {
+        0 => 0,
+        1 => hit[0].denied_in(lo, hi),
+        _ => {
+            let overlapping = hit.iter().enumerate().any(|(i, a)| {
+                hit.iter().skip(i + 1).any(|b| {
+                    a.start.max(b.start).max(lo) < a.end.min(b.end).min(hi)
+                })
+            });
+            if !overlapping {
+                return hit.iter().map(|w| w.denied_in(lo, hi)).sum();
+            }
+            let a = hit.iter().map(|w| w.start).min().unwrap_or(lo).max(lo);
+            let b = hit.iter().map(|w| w.end).max().unwrap_or(hi).min(hi);
+            (a..b).filter(|&c| hit.iter().any(|w| w.denies(c))).count() as u64
+        }
+    }
+}
+
+/// First cycle `>= from` at which no window denies CAS issue.
+///
+/// Jump-based: each denied candidate skips to the end of the window's
+/// current deny run. The iteration count is capped; on pathological
+/// window sets the early (possibly still denied) candidate is returned,
+/// which is safe for the event scheduler — waking early only costs a
+/// no-op tick, never correctness.
+pub fn next_allowed(windows: &[ThrottleWindow], from: u64) -> u64 {
+    let mut c = from;
+    for _ in 0..64 {
+        let mut bumped = false;
+        for w in windows {
+            if w.denies(c) {
+                // end of this deny run: either the deny phase boundary or
+                // the window end, whichever is first
+                c = (c - c % w.period + w.deny).min(w.end);
+                bumped = true;
+            }
+        }
+        if !bumped {
+            return c;
+        }
+    }
+    c
 }
 
 /// What goes wrong on an inter-device link.

@@ -76,6 +76,22 @@ impl Bank {
         self.row_hit(row) && cycle >= self.cas_ready_at
     }
 
+    /// Earliest cycle a CAS to the open row may issue (tRCD stamp) — the
+    /// event scheduler's wake bound; only meaningful while a row is open.
+    pub fn cas_ready_at(&self) -> u64 {
+        self.cas_ready_at
+    }
+
+    /// Earliest cycle a PRECHARGE may issue (tRAS / tWR stamp).
+    pub fn pre_ready_at(&self) -> u64 {
+        self.pre_ready_at
+    }
+
+    /// Earliest cycle an ACTIVATE may issue (tRP stamp).
+    pub fn act_ready_at(&self) -> u64 {
+        self.act_ready_at
+    }
+
     /// Issue ACTIVATE of `row` at `cycle`. Caller must have checked
     /// `can_activate`.
     pub fn activate(&mut self, row: u64, cycle: u64, t: &HbmTiming) {

@@ -367,6 +367,15 @@ impl PseudoChannel {
             Dir::Write => self.timing.t_cwl as u64,
         };
         let start = self.cycle + cas_lat;
+        (start >= self.bus_ready_for(dir, bank, row)).then_some(start)
+    }
+
+    /// Earliest cycle the data bus could carry a new burst to
+    /// `(bank, row)` in direction `dir`: the bus-free stamp plus re-steer,
+    /// bank-group, and turnaround gaps. Pure function of bus state, so the
+    /// event scheduler can solve `cycle + CAS latency >= bus_ready` for
+    /// the earliest legal CAS cycle in closed form.
+    fn bus_ready_for(&self, dir: Dir, bank: usize, row: u64) -> u64 {
         let mut bus_ready = self.data_free_at;
         // Streaming within one open row continues gap-free (the hardened
         // controller keeps its pipeline steered); switching transaction
@@ -393,7 +402,101 @@ impl PseudoChannel {
                 bus_ready += turn;
             }
         }
-        (start >= bus_ready).then_some(start)
+        bus_ready
+    }
+
+    /// Fast-forward this controller over `[self.cycle, to)` — a span the
+    /// event scheduler has proven command-inert (no CAS / ACT / PRE / REF
+    /// can issue and no request arrives; see [`Self::next_wake`]). Only
+    /// the per-cycle counters advance, applied here in closed form. The
+    /// queue, bank stamps, bus stamps, and refresh bookkeeping are all
+    /// constant across such a span by construction.
+    pub(crate) fn catch_up(&mut self, to: u64) {
+        if to <= self.cycle {
+            return;
+        }
+        let span = to - self.cycle;
+        self.stats.total_cycles += span;
+        let busy = if self.queue.is_empty() {
+            self.data_free_at.saturating_sub(self.cycle).min(span)
+        } else {
+            span
+        };
+        self.stats.busy_cycles += busy;
+        // Throttle denial is only accounted in the normal scheduling phase
+        // (the slow path early-returns before the throttle check while
+        // refresh-blocked or refresh-urgent) and only with work queued.
+        if !self.queue.is_empty() {
+            if let Some(f) = &self.faults {
+                let lo = self.cycle.max(self.refresh_until);
+                let hi = to.min(self.next_refresh_at);
+                if lo < hi {
+                    self.stats.throttled_cycles +=
+                        crate::faults::count_denied(&f.throttle, lo, hi);
+                }
+            }
+        }
+        self.cycle = to;
+    }
+
+    /// Conservative next-event bound: the earliest cycle `>= now` at
+    /// which this controller could issue *any* command (CAS, ACT, PRE, or
+    /// REF), assuming no new requests arrive. Never late — every cycle
+    /// strictly before the bound is command-inert, so [`Self::catch_up`]
+    /// may skip it; waking early is harmless (the real tick no-ops and
+    /// the bound is recomputed).
+    pub(crate) fn next_wake(&self, now: u64) -> u64 {
+        // No commands issue before an in-progress refresh block ends.
+        let start = now.max(self.refresh_until);
+        // REF: urgent from next_refresh_at on, firing once in-flight data
+        // is within CL of draining (the row slot is free on a tick where
+        // neither PC commands; contended ticks are real ticks anyway).
+        let ref_at = start
+            .max(self.next_refresh_at)
+            .max(self.data_free_at.saturating_sub(self.timing.t_cl as u64));
+        let mut w = ref_at;
+        if start < self.next_refresh_at {
+            let look = self.tuning.lookahead.max(1);
+            for p in self.queue.iter().take(look) {
+                let bank = &self.banks[p.bank];
+                let cand = if bank.row_hit(p.row) {
+                    let cas_lat = match p.req.dir {
+                        Dir::Read => self.timing.t_cl as u64,
+                        Dir::Write => self.timing.t_cwl as u64,
+                    };
+                    let c = start
+                        .max(bank.cas_ready_at())
+                        .max(
+                            self.bus_ready_for(p.req.dir, p.bank, p.row)
+                                .saturating_sub(cas_lat),
+                        );
+                    match &self.faults {
+                        Some(f) => crate::faults::next_allowed(&f.throttle, c),
+                        None => c,
+                    }
+                } else if self.banks[p.bank].state() == crate::hbm::bank::BankState::Idle {
+                    // ACT path: bank tRP plus inter-bank tRRD / tFAW gates.
+                    let mut c = start
+                        .max(bank.act_ready_at())
+                        .max(self.last_act_at + self.timing.t_rrd as u64);
+                    if self.act_window.len() >= 4 {
+                        if let Some(&t0) = self.act_window.front() {
+                            c = c.max(t0 + self.timing.t_faw as u64);
+                        }
+                    }
+                    c
+                } else {
+                    // PRE path (row open on another row).
+                    start.max(bank.pre_ready_at())
+                };
+                // A candidate at or past next_refresh_at never issues —
+                // the urgent-refresh branch preempts normal scheduling.
+                if cand < self.next_refresh_at && cand < w {
+                    w = cand;
+                }
+            }
+        }
+        w
     }
 
     /// Advance one controller cycle. `cmd` is this PC's view of the shared

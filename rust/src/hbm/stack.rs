@@ -59,12 +59,23 @@ impl Channel {
 
     /// Advance both PCs one cycle, arbitrating the shared command bus.
     pub fn tick(&mut self) {
-        let mut bus = CmdBus::new();
         let first = self.priority;
+        self.tick_with_priority(first);
+        self.priority = 1 - first;
+    }
+
+    /// One channel cycle with the command-bus priority given explicitly.
+    ///
+    /// The event-driven simulation path ticks channels sparsely; since
+    /// [`Self::tick`] alternates priority every cycle starting from PC 0,
+    /// the priority at controller cycle `h` is exactly `h % 2`, which the
+    /// caller passes here. Does not advance the internal alternation
+    /// state (the fast path derives it from the cycle instead).
+    pub fn tick_with_priority(&mut self, first: usize) {
+        let mut bus = CmdBus::new();
         let second = 1 - first;
         self.pcs[first].tick(&mut bus);
         self.pcs[second].tick(&mut bus);
-        self.priority = second;
     }
 }
 

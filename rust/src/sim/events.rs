@@ -1,0 +1,689 @@
+//! Event-driven (skip-ahead) scheduler for the pipeline simulation.
+//!
+//! The slow path advances one 1200 MHz base tick at a time and touches
+//! every engine, prefetch group and HBM channel on every domain cycle.
+//! Steady state is overwhelmingly *inert*, though: an engine deep inside
+//! a line neither stalls nor completes, an empty HBM channel does nothing
+//! until its next refresh, a credit-starved prefetch group cannot issue
+//! until a scheduled FIFO consume returns words. This module exploits
+//! that by keeping, per component, the earliest cycle at which its state
+//! can possibly change, and jumping the clock between those cycles.
+//!
+//! Exactness contract (see DESIGN.md §14): every *observable* action —
+//! an engine's per-cycle `tick`, a group's issue attempt, a channel's
+//! command cycle, a probe sample — runs the **same code at the same
+//! cycle** as the slow path. Skipped spans are closed over only when the
+//! outcome of every skipped cycle is provably inert and its counter
+//! effect has a closed form:
+//!
+//! * a *running* engine mid-line accrues `active` cycles and FIFO
+//!   consumes (`stream_apply_consumes`) — the batch never includes the
+//!   line-completion cycle, so every gate re-check happens for real;
+//! * a *stalled* engine accrues exactly one stall class — each gate
+//!   input (producer lines, consumer progress, FIFO refills, external
+//!   limits) generates a wake at its visibility cycle, so the earliest
+//!   wake bounds the span;
+//! * an idle or command-blocked pseudo-channel accrues busy/total
+//!   counters via [`PseudoChannel::catch_up`] and wakes at the
+//!   conservative [`PseudoChannel::next_wake`] bound (never late, may be
+//!   early — early wakes re-evaluate and reschedule, which is harmless).
+//!
+//! Clock mapping: core cycle `c` executes at base tick `4*(c-1)`, HBM
+//! controller cycle `h` at base tick `3*h`. Within one base tick the HBM
+//! phase runs before the core phase and the probe boundary after the
+//! core phase, exactly like `step_base_tick_probed`.
+//!
+//! [`PseudoChannel::catch_up`]: crate::hbm::controller::PseudoChannel::catch_up
+//! [`PseudoChannel::next_wake`]: crate::hbm::controller::PseudoChannel::next_wake
+
+// Index loops below deliberately re-index through `sim` / `self` inside
+// the body (the iterator form would hold a shared borrow across the
+// `&mut` calls the body makes), which trips this purely syntactic lint.
+#![allow(clippy::needless_range_loop)]
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use anyhow::{bail, Result};
+
+use crate::obs::Probe;
+use crate::sim::engine::EngineState;
+use crate::sim::pipeline::{PipelineSim, SimConfig};
+
+/// Same-tick phase order (must match `step_base_tick_probed`).
+const ORD_HBM: u8 = 0;
+const ORD_CORE: u8 = 1;
+const ORD_PROBE: u8 = 2;
+
+/// Scheduler-side view of one engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum EngMode {
+    /// Must be re-evaluated at `eng_next` (no committed span).
+    Pending,
+    /// Accrues one stall class until an external wake; `eng_next` holds
+    /// the earliest wake (or `u64::MAX`).
+    Stalled(EngineState),
+    /// Provably active through `until` (exclusive of the line-completion
+    /// cycle); re-evaluated at `until + 1`.
+    Running { until: u64 },
+    /// Finished all images — never evaluated again.
+    Done,
+}
+
+/// Core-cycle at which a consume executed at core cycle `c` becomes
+/// visible to the HBM domain, and vice versa. A consume at core `c`
+/// (base tick `4*(c-1)`) is visible to HBM cycle `h` iff `4*(c-1) < 3h`;
+/// a refill at HBM `h` (base tick `3h`) is visible to core `c` iff
+/// `3h <= 4*(c-1)` (the HBM phase runs first within a tick).
+#[inline]
+fn hbm_visible_core(h: u64) -> u64 {
+    // last core cycle whose consume is visible at HBM cycle h
+    (3 * h + 3) / 4
+}
+
+#[inline]
+fn core_wake_for_hbm(h: u64) -> u64 {
+    // first core cycle that sees a refill performed at HBM cycle h
+    hbm_visible_core(h) + 1
+}
+
+#[inline]
+fn hbm_wake_for_core(c: u64) -> u64 {
+    // first HBM cycle that sees a consume executed at core cycle c
+    (4 * (c - 1)) / 3 + 1
+}
+
+/// The event-wheel state for one [`PipelineSim`].
+///
+/// Owns no simulator state itself — everything observable lives in the
+/// `PipelineSim`; this struct holds only scheduling metadata (next-event
+/// bounds, committed consume schedules, the event heap). The fleet
+/// driver holds one `FastCore` per shard and advances all of them on a
+/// shared local clock via [`FastCore::next_tick`] /
+/// [`FastCore::process_tick`].
+#[derive(Debug)]
+pub(crate) struct FastCore {
+    images: u64,
+    /// Next core cycle each engine must be evaluated at (`u64::MAX` for
+    /// stalled engines awaiting a wake and finished engines).
+    eng_next: Vec<u64>,
+    mode: Vec<EngMode>,
+    /// Last core cycle with stats applied, per engine.
+    synced: Vec<u64>,
+    /// Committed consume schedule per stream: consumes for core cycles
+    /// `(applied, until]` have happened logically but are not yet
+    /// applied to the FIFO counters.
+    sched_applied: Vec<u64>,
+    sched_until: Vec<u64>,
+    /// Prefetch group feeding each stream (for credit-wake re-arming).
+    stream_group: Vec<usize>,
+    /// Next HBM cycle each prefetch group attempts an issue at.
+    group_next: Vec<u64>,
+    /// Next HBM cycle each weight channel must run a command cycle at.
+    chan_next: Vec<u64>,
+    /// Active-channel index serving each group.
+    group_channel: Vec<usize>,
+    /// Groups on each channel, by pseudo-channel parity.
+    chan_groups: Vec<[Option<usize>; 2]>,
+    /// Every stream whose FIFO lives on each channel.
+    chan_streams: Vec<Vec<usize>>,
+    /// Every stream (for probe / finalize materialization).
+    all_streams: Vec<usize>,
+    /// Next probe-boundary core cycle (unused when `window == 0`).
+    probe_next: u64,
+    window: u64,
+    /// Event heap over `(base_tick, phase)`; lazy — stale duplicates pop
+    /// as no-ops because every due-check consults the `*_next` arrays.
+    heap: BinaryHeap<Reverse<(u64, u8)>>,
+    /// Scratch buffer for refilled layers (avoids per-event allocation).
+    refill_buf: Vec<usize>,
+    done_count: usize,
+    finished: bool,
+    finished_cycle: u64,
+}
+
+impl FastCore {
+    pub(crate) fn new(sim: &PipelineSim, images: u64, probe_window: u64) -> Self {
+        let n = sim.engines.len();
+        let ng = sim.weights.num_groups();
+        let nc = sim.weights.num_active_channels();
+        let mut stream_group = Vec::new();
+        let mut group_channel = vec![0usize; ng];
+        let mut chan_groups = vec![[None, None]; nc];
+        let mut chan_streams: Vec<Vec<usize>> = vec![Vec::new(); nc];
+        let mut all_streams = Vec::new();
+        for gi in 0..ng {
+            let ci = sim.weights.channel_index_for_group(gi);
+            let (_, local_pc) = sim.weights.group_target(gi);
+            group_channel[gi] = ci;
+            chan_groups[ci][local_pc % 2] = Some(gi);
+            for &si in sim.weights.group_streams(gi) {
+                if stream_group.len() <= si {
+                    stream_group.resize(si + 1, usize::MAX);
+                }
+                stream_group[si] = gi;
+                chan_streams[ci].push(si);
+                all_streams.push(si);
+            }
+        }
+        let ns = stream_group.len();
+        let mut heap = BinaryHeap::new();
+        // Every engine evaluates at core cycle 1 (base tick 0); groups
+        // attempt their first issue and channels run their first command
+        // cycle at HBM cycle 0 (also base tick 0).
+        heap.push(Reverse((0, ORD_CORE)));
+        if ng > 0 || nc > 0 {
+            heap.push(Reverse((0, ORD_HBM)));
+        }
+        let window = probe_window;
+        if window > 0 {
+            heap.push(Reverse((4 * (window - 1), ORD_PROBE)));
+        }
+        Self {
+            images,
+            eng_next: vec![1; n],
+            mode: vec![EngMode::Pending; n],
+            synced: vec![0; n],
+            sched_applied: vec![0; ns],
+            sched_until: vec![0; ns],
+            stream_group,
+            group_next: vec![0; ng],
+            chan_next: vec![0; nc],
+            group_channel,
+            chan_groups,
+            chan_streams,
+            all_streams,
+            probe_next: window,
+            window,
+            heap,
+            refill_buf: Vec::new(),
+            done_count: 0,
+            finished: false,
+            finished_cycle: 0,
+        }
+    }
+
+    pub(crate) fn finished(&self) -> bool {
+        self.finished
+    }
+
+    pub(crate) fn finished_cycle(&self) -> u64 {
+        self.finished_cycle
+    }
+
+    /// Base tick of the next scheduled event, if any.
+    pub(crate) fn next_tick(&self) -> Option<u64> {
+        self.heap.peek().map(|Reverse((t, _))| *t)
+    }
+
+    #[inline]
+    fn push_core(&mut self, cycle: u64) {
+        self.heap.push(Reverse((4 * (cycle - 1), ORD_CORE)));
+    }
+
+    #[inline]
+    fn push_hbm(&mut self, h: u64) {
+        self.heap.push(Reverse((3 * h, ORD_HBM)));
+    }
+
+    /// Process every event scheduled at base tick `tau` (HBM phase, then
+    /// core phase, then probe boundary — the slow path's in-tick order).
+    pub(crate) fn process_tick(
+        &mut self,
+        sim: &mut PipelineSim,
+        tau: u64,
+        mut probe: Option<&mut dyn Probe>,
+    ) {
+        while let Some(&Reverse((t, ord))) = self.heap.peek() {
+            if t != tau {
+                debug_assert!(t > tau, "event at {t} missed (now {tau})");
+                break;
+            }
+            self.heap.pop();
+            match ord {
+                ORD_HBM => self.hbm_phase(sim, tau / 3, probe.as_deref_mut()),
+                ORD_CORE => self.core_phase(sim, tau / 4 + 1),
+                _ => self.probe_phase(sim, tau / 4 + 1, probe.as_deref_mut()),
+            }
+        }
+    }
+
+    /// Apply the committed consume schedule of stream `si` through core
+    /// cycle `cyc` (inclusive) in closed form.
+    fn apply_stream_to(&mut self, sim: &mut PipelineSim, si: usize, cyc: u64) {
+        let target = cyc.min(self.sched_until[si]);
+        let applied = self.sched_applied[si];
+        if target > applied {
+            sim.weights.stream_apply_consumes(si, target - applied);
+            self.sched_applied[si] = target;
+        }
+    }
+
+    /// Close the stats gap of engine `i` through core cycle `to`
+    /// (inclusive): a committed span accrues its single known outcome.
+    pub(crate) fn materialize_engine_stats(&mut self, sim: &mut PipelineSim, i: usize, to: u64) {
+        let from = self.synced[i];
+        if to <= from {
+            return;
+        }
+        let span = to - from;
+        match self.mode[i] {
+            EngMode::Running { until } => {
+                debug_assert!(to <= until, "running span overran its commitment");
+                let e = &mut sim.engines[i];
+                e.stats.active += span;
+                e.line_cycle += span;
+                debug_assert!(e.line_cycle < e.cycles_per_line, "batch crossed a line boundary");
+            }
+            EngMode::Stalled(class) => {
+                let e = &mut sim.engines[i];
+                match class {
+                    EngineState::InputStarved => e.stats.input_starved += span,
+                    EngineState::OutputBlocked => e.stats.output_blocked += span,
+                    EngineState::WeightFrozen => e.stats.weight_frozen += span,
+                    _ => unreachable!("not a stall class"),
+                }
+            }
+            EngMode::Done => {}
+            EngMode::Pending => {
+                debug_assert!(false, "pending engine left a stats gap of {span}");
+            }
+        }
+        self.synced[i] = to;
+    }
+
+    /// HBM controller cycle `h`: prefetch issue for every due group
+    /// (slow-path phase 1), then a real command cycle with completion
+    /// and fault drains for every due channel (slow-path phase 2).
+    fn hbm_phase(&mut self, sim: &mut PipelineSim, h: u64, mut probe: Option<&mut dyn Probe>) {
+        let vis = hbm_visible_core(h);
+        for gi in 0..self.group_next.len() {
+            if self.group_next[gi] > h {
+                continue;
+            }
+            // Credits must reflect every consume visible at h before the
+            // acquire check, and the PC must sit at cycle h to accept.
+            let n_streams = sim.weights.group_streams(gi).len();
+            let mut any_acquirable = false;
+            for k in 0..n_streams {
+                let si = sim.weights.group_streams(gi)[k];
+                self.apply_stream_to(sim, si, vis);
+                any_acquirable |= sim.weights.stream_acquire_deficit(si) == 0;
+            }
+            let (st, pc) = sim.weights.group_target(gi);
+            sim.weights.pc_catch_up(st, pc, h);
+            if sim.weights.try_issue_group(gi) {
+                // Data now queues on the channel; it must run command
+                // cycles from h on, and the group may issue again at h+1.
+                let ci = self.group_channel[gi];
+                self.chan_next[ci] = self.chan_next[ci].min(h);
+                self.group_next[gi] = h + 1;
+                self.push_hbm(h + 1);
+            } else if any_acquirable {
+                // Controller back-pressure: capacity frees exactly when a
+                // burst completes, which the channel event reports.
+                self.group_next[gi] = u64::MAX;
+            } else {
+                // Credit-starved: the earliest committed consume that
+                // returns a full burst of credit words bounds the wake.
+                let mut wake = u64::MAX;
+                for k in 0..n_streams {
+                    let si = sim.weights.group_streams(gi)[k];
+                    let deficit = sim.weights.stream_acquire_deficit(si);
+                    let chains = sim.weights.stream_chains(si) as u64;
+                    let cstar = self.sched_applied[si] + deficit.div_ceil(chains);
+                    if cstar <= self.sched_until[si] {
+                        wake = wake.min(hbm_wake_for_core(cstar));
+                    }
+                }
+                self.group_next[gi] = wake;
+                if wake != u64::MAX {
+                    self.push_hbm(wake);
+                }
+                // wake == MAX: re-armed when a consumer engine commits a
+                // new batch (see eval_engine).
+            }
+        }
+        for ci in 0..self.chan_next.len() {
+            if self.chan_next[ci] > h {
+                continue;
+            }
+            // FIFO levels must be current before refills so occupancy
+            // peaks are sampled exactly as the slow path would.
+            for k in 0..self.chan_streams[ci].len() {
+                let si = self.chan_streams[ci][k];
+                self.apply_stream_to(sim, si, vis);
+            }
+            let mut refills = std::mem::take(&mut self.refill_buf);
+            refills.clear();
+            let mut cas_issued = [false; 2];
+            sim.weights.channel_event(ci, h, probe.as_deref_mut(), &mut refills, &mut cas_issued);
+            for &layer in &refills {
+                if self.mode[layer] == EngMode::Stalled(EngineState::WeightFrozen) {
+                    let w = core_wake_for_hbm(h);
+                    if w < self.eng_next[layer] {
+                        self.eng_next[layer] = w;
+                        self.push_core(w);
+                    }
+                }
+            }
+            self.refill_buf = refills;
+            for (k, &fired) in cas_issued.iter().enumerate() {
+                if !fired {
+                    continue;
+                }
+                if let Some(gi) = self.chan_groups[ci][k] {
+                    if self.group_next[gi] > h + 1 {
+                        self.group_next[gi] = h + 1;
+                        self.push_hbm(h + 1);
+                    }
+                }
+            }
+            let nw = sim.weights.channel_next_wake(ci, h + 1);
+            self.chan_next[ci] = nw;
+            self.push_hbm(nw);
+        }
+    }
+
+    /// Core cycle `c`: evaluate every due engine in index order (the
+    /// slow path's `step_core` loop order, which line-event wakes rely
+    /// on: consumers sit at higher indices and are swept later in the
+    /// same cycle; producers see relaxed back-pressure at `c + 1`).
+    fn core_phase(&mut self, sim: &mut PipelineSim, c: u64) {
+        sim.core_cycles = c;
+        for i in 0..self.eng_next.len() {
+            if self.eng_next[i] <= c {
+                self.eval_engine(sim, i, c);
+            }
+        }
+        if self.done_count == self.eng_next.len() && !self.finished {
+            self.finished = true;
+            self.finished_cycle = c;
+        }
+    }
+
+    /// Run the real per-cycle step for engine `i` at core cycle `c`,
+    /// then commit the longest provably-inert span that follows.
+    fn eval_engine(&mut self, sim: &mut PipelineSim, i: usize, c: u64) {
+        let images = self.images;
+        // 1. catch this engine's weight streams up to the cycle before
+        //    the real tick (layer_ready must see exact FIFO levels)
+        if sim.engines[i].hbm_fed {
+            for k in 0..sim.weights.layer_streams(i).len() {
+                let si = sim.weights.layer_streams(i)[k];
+                self.apply_stream_to(sim, si, c - 1);
+            }
+        }
+        // 2. close the committed stats span
+        self.materialize_engine_stats(sim, i, c - 1);
+        self.synced[i] = c; // the real tick below accounts cycle c
+        if sim.engines[i].done(images) {
+            if self.mode[i] != EngMode::Done {
+                self.mode[i] = EngMode::Done;
+                self.done_count += 1;
+            }
+            self.eng_next[i] = u64::MAX;
+            return;
+        }
+        // 3. the real tick — gate computation identical to step_core
+        let sink = sim.engines.len() - 1;
+        let input_ok = if i == 0 {
+            sim.engines[0].lines_produced < sim.input_limit
+        } else {
+            sim.producers_meta[i]
+                .iter()
+                .zip(sim.need_cache[i].iter())
+                .all(|(&(p, _), &need)| sim.engines[p].lines_produced >= need)
+        };
+        let lines = sim.engines[i].lines_produced;
+        let mut output_ok = sim.consumers_meta[i]
+            .iter()
+            .zip(sim.limit_cache[i].iter())
+            .all(|(&(cj, _), &limit)| lines < limit || sim.engines[cj].done(images));
+        if i == sink {
+            output_ok = output_ok && lines < sim.sink_limit;
+        }
+        let wa = if !sim.engines[i].hbm_fed || sim.weights.layer_ready(i) {
+            u64::MAX
+        } else {
+            0
+        };
+        let st = sim.engines[i].tick(c, images, input_ok, output_ok, wa);
+        // 4. commit the follow-on span and schedule the next evaluation
+        match st {
+            EngineState::Active => {
+                if sim.engines[i].hbm_fed {
+                    sim.weights.consume(i);
+                }
+                let line_event = sim.engines[i].lines_produced != lines;
+                if line_event {
+                    sim.refresh_caches(i);
+                    for k in 0..sim.consumers_meta[i].len() {
+                        let cj = sim.consumers_meta[i][k].0;
+                        debug_assert!(cj > i, "consumers sit later in the sweep");
+                        self.wake_stalled(cj, c, false);
+                    }
+                    for k in 0..sim.producers_meta[i].len() {
+                        let p = sim.producers_meta[i][k].0;
+                        self.wake_stalled(p, c + 1, true);
+                    }
+                }
+                if sim.engines[i].done(images) {
+                    self.mode[i] = EngMode::Done;
+                    self.done_count += 1;
+                    self.eng_next[i] = u64::MAX;
+                    // producers may now run unbounded past this engine
+                    for k in 0..sim.producers_meta[i].len() {
+                        let p = sim.producers_meta[i][k].0;
+                        self.wake_stalled(p, c + 1, true);
+                    }
+                    return;
+                }
+                if line_event {
+                    // gates change at line boundaries: re-check for real
+                    self.mode[i] = EngMode::Pending;
+                    self.eng_next[i] = c + 1;
+                    self.push_core(c + 1);
+                    return;
+                }
+                // mid-line: active through the cycle before completion,
+                // bounded by the FIFO words already on chip
+                let e = &sim.engines[i];
+                let mut batch = e.cycles_per_line - e.line_cycle - 1;
+                if sim.engines[i].hbm_fed {
+                    for k in 0..sim.weights.layer_streams(i).len() {
+                        let si = sim.weights.layer_streams(i)[k];
+                        batch = batch.min(sim.weights.stream_budget_cycles(si));
+                    }
+                }
+                if batch == 0 {
+                    self.mode[i] = EngMode::Pending;
+                    self.eng_next[i] = c + 1;
+                    self.push_core(c + 1);
+                    return;
+                }
+                let until = c + batch;
+                self.mode[i] = EngMode::Running { until };
+                self.eng_next[i] = until + 1;
+                self.push_core(until + 1);
+                if sim.engines[i].hbm_fed {
+                    for k in 0..sim.weights.layer_streams(i).len() {
+                        let si = sim.weights.layer_streams(i)[k];
+                        debug_assert_eq!(
+                            self.sched_applied[si], self.sched_until[si],
+                            "new schedule over an unapplied one"
+                        );
+                        self.sched_applied[si] = c;
+                        self.sched_until[si] = until;
+                        // the committed consumes may refund the credits a
+                        // starved prefetch group is waiting for
+                        let gi = self.stream_group[si];
+                        if self.group_next[gi] == u64::MAX {
+                            let hw = hbm_wake_for_core(c + 1);
+                            self.group_next[gi] = hw;
+                            self.push_hbm(hw);
+                        }
+                    }
+                }
+            }
+            EngineState::InputStarved | EngineState::OutputBlocked | EngineState::WeightFrozen => {
+                self.mode[i] = EngMode::Stalled(st);
+                self.eng_next[i] = u64::MAX;
+            }
+            EngineState::Done => unreachable!("done handled before the tick"),
+        }
+    }
+
+    /// Wake a stalled engine at core cycle `at` (spurious wakes are
+    /// harmless: evaluation is exact at any cycle and re-stalls cleanly).
+    fn wake_stalled(&mut self, i: usize, at: u64, push: bool) {
+        if !matches!(self.mode[i], EngMode::Stalled(_)) {
+            return;
+        }
+        if at < self.eng_next[i] {
+            self.eng_next[i] = at;
+            if push {
+                self.push_core(at);
+            }
+        }
+    }
+
+    /// External head-limit raise (fleet exchange), visible at `at`.
+    pub(crate) fn note_input_limit_raised(&mut self, at: u64) {
+        if self.mode[0] == EngMode::Stalled(EngineState::InputStarved) {
+            self.wake_stalled(0, at, true);
+        }
+    }
+
+    /// External sink-limit change (fleet exchange), visible at `at`. A
+    /// decrease can invalidate a committed active span (the slow path
+    /// would stall the sink mid-line once the bound bites), so the batch
+    /// is truncated to end just before visibility; an increase can only
+    /// unblock, so a stalled sink is re-evaluated.
+    pub(crate) fn note_sink_limit_changed(
+        &mut self,
+        sim: &mut PipelineSim,
+        at: u64,
+        decreased: bool,
+    ) {
+        let sink = self.mode.len() - 1;
+        match self.mode[sink] {
+            EngMode::Stalled(_) => self.wake_stalled(sink, at, true),
+            EngMode::Running { until } if decreased && until >= at => {
+                self.materialize_engine_stats(sim, sink, at - 1);
+                self.mode[sink] = EngMode::Running { until: at - 1 };
+                self.eng_next[sink] = at;
+                self.push_core(at);
+                if sim.engines[sink].hbm_fed {
+                    for k in 0..sim.weights.layer_streams(sink).len() {
+                        let si = sim.weights.layer_streams(sink)[k];
+                        debug_assert!(self.sched_applied[si] < at);
+                        self.sched_until[si] = self.sched_until[si].min(at - 1);
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+
+    /// Probe boundary at core cycle `b`: bring every observable counter
+    /// current (engines, FIFOs, PC stats) and publish one cumulative
+    /// sample — byte-identical to the slow path's in-tick sample.
+    fn probe_phase(&mut self, sim: &mut PipelineSim, b: u64, probe: Option<&mut dyn Probe>) {
+        if self.window == 0 || b != self.probe_next {
+            return; // stale duplicate entry
+        }
+        if let Some(p) = probe {
+            for i in 0..self.eng_next.len() {
+                self.materialize_engine_stats(sim, i, b);
+            }
+            for k in 0..self.all_streams.len() {
+                let si = self.all_streams[k];
+                self.apply_stream_to(sim, si, b);
+            }
+            let hh = hbm_wake_for_core(b);
+            for ci in 0..self.chan_next.len() {
+                sim.weights.channel_catch_up(ci, hh);
+            }
+            sim.core_cycles = b;
+            sim.sample_probe(p);
+        }
+        self.probe_next += self.window;
+        self.heap.push(Reverse((4 * (self.probe_next - 1), ORD_PROBE)));
+    }
+
+    /// Land the simulator on the exact slow-path end state: all stream
+    /// schedules applied, every PC caught up to the last executed HBM
+    /// cycle, and the base-tick/core-cycle clocks set as if the run had
+    /// stepped tick by tick and broken out after core cycle `c_done`.
+    pub(crate) fn finalize(&mut self, sim: &mut PipelineSim, c_done: u64) {
+        for i in 0..self.eng_next.len() {
+            self.materialize_engine_stats(sim, i, c_done);
+        }
+        for k in 0..self.all_streams.len() {
+            let si = self.all_streams[k];
+            self.apply_stream_to(sim, si, c_done);
+        }
+        let hh = hbm_wake_for_core(c_done);
+        for ci in 0..self.chan_next.len() {
+            sim.weights.channel_catch_up(ci, hh);
+        }
+        sim.core_cycles = c_done;
+        sim.t = 4 * (c_done - 1) + 1;
+    }
+
+    /// Bring counters current at a wedge bail so the embedded stall
+    /// breakdown matches what the slow path would report at tick `max`.
+    pub(crate) fn settle_for_wedge(&mut self, sim: &mut PipelineSim, max_base_ticks: u64) {
+        let c_bail = (max_base_ticks.saturating_sub(1)) / 4 + 1;
+        for i in 0..self.eng_next.len() {
+            let to = match self.mode[i] {
+                EngMode::Running { until } => c_bail.min(until),
+                _ => c_bail,
+            };
+            self.materialize_engine_stats(sim, i, to);
+        }
+        for k in 0..self.all_streams.len() {
+            let si = self.all_streams[k];
+            self.apply_stream_to(sim, si, c_bail);
+        }
+        sim.core_cycles = c_bail;
+        sim.t = max_base_ticks;
+    }
+}
+
+/// Event-driven replacement for the slow path's run loop. Returns the
+/// core cycle at which the warmup-image threshold was crossed, exactly
+/// as `run_inner`'s per-tick check would have recorded it.
+pub(crate) fn run_fast(
+    sim: &mut PipelineSim,
+    cfg: &SimConfig,
+    images: u64,
+    mut probe: Option<&mut dyn Probe>,
+) -> Result<Option<u64>> {
+    let window = probe.as_deref().map_or(0, |p| p.window().max(1));
+    let mut fc = FastCore::new(sim, images, window);
+    let mut warmup_done_at: Option<u64> = None;
+    loop {
+        let tau = fc.next_tick().unwrap_or(u64::MAX);
+        if tau >= cfg.max_base_ticks {
+            fc.settle_for_wedge(sim, cfg.max_base_ticks);
+            bail!(
+                "simulation exceeded max_base_ticks — pipeline wedged?\n{}",
+                sim.wedge_breakdown()
+            );
+        }
+        fc.process_tick(sim, tau, probe.as_deref_mut());
+        // sink image completions only happen inside core phases, where
+        // core_cycles is kept current — same value the slow path records
+        if warmup_done_at.is_none() && sim.sink_images_done() >= cfg.warmup_images {
+            warmup_done_at = Some(sim.core_cycles);
+        }
+        if fc.finished() {
+            break;
+        }
+    }
+    let c_done = fc.finished_cycle();
+    fc.finalize(sim, c_done);
+    Ok(warmup_done_at)
+}

@@ -13,6 +13,7 @@
 //! sits between them.
 
 pub mod engine;
+pub(crate) mod events;
 pub mod pipeline;
 pub mod weights;
 

@@ -24,12 +24,31 @@ pub struct SimConfig {
     pub warmup_images: u64,
     /// Safety valve on base ticks.
     pub max_base_ticks: u64,
+    /// Step every base tick through every component (the reference
+    /// interpreter) instead of the event-driven scheduler in
+    /// [`crate::sim::events`]. Both paths produce identical reports,
+    /// artifacts and probe streams — this switch exists for
+    /// cross-checking and debugging. Defaults to `false`, or to the
+    /// `H2PIPE_SLOW_SIM=1` environment variable.
+    pub exact_stepping: bool,
 }
 
 impl Default for SimConfig {
     fn default() -> Self {
-        Self { images: 6, warmup_images: 2, max_base_ticks: 40_000_000_000 }
+        Self {
+            images: 6,
+            warmup_images: 2,
+            max_base_ticks: 40_000_000_000,
+            exact_stepping: slow_sim_from_env(),
+        }
     }
+}
+
+/// `H2PIPE_SLOW_SIM=1` forces the exact-stepping reference path
+/// everywhere a `SimConfig`/`FleetConfig` is built from defaults — the
+/// CI equivalence job runs every suite once per value.
+pub(crate) fn slow_sim_from_env() -> bool {
+    std::env::var("H2PIPE_SLOW_SIM").map_or(false, |v| v == "1")
 }
 
 /// One engine's end-of-run stall accounting, by name.
@@ -116,32 +135,35 @@ impl SimReport {
 #[derive(Debug)]
 pub struct PipelineSim {
     plan: AcceleratorPlan,
-    engines: Vec<LayerEngineSim>,
+    /// Crate visibility on the stepping state below: the event-driven
+    /// scheduler ([`crate::sim::events`]) runs the same per-cycle code
+    /// against these fields, just at sparse cycles.
+    pub(crate) engines: Vec<LayerEngineSim>,
     /// producers_meta[i] = (producer idx, producer out_h).
-    producers_meta: Vec<Vec<(usize, u32)>>,
+    pub(crate) producers_meta: Vec<Vec<(usize, u32)>>,
     /// consumers_meta[i] = (consumer idx, edge capacity in producer lines).
-    consumers_meta: Vec<Vec<(usize, u64)>>,
+    pub(crate) consumers_meta: Vec<Vec<(usize, u64)>>,
     /// §Perf caches: dependency thresholds only change when an engine
     /// crosses a line boundary, so they are recomputed on line events
     /// instead of every cycle.
     /// need_cache[i][k] = cumulative producer-k lines engine i waits for.
-    need_cache: Vec<Vec<u64>>,
+    pub(crate) need_cache: Vec<Vec<u64>>,
     /// limit_cache[i][j] = line bound imposed on producer i by consumer j
     /// (consumer's oldest needed line + edge capacity).
-    limit_cache: Vec<Vec<u64>>,
-    weights: WeightSubsystem,
+    pub(crate) limit_cache: Vec<Vec<u64>>,
+    pub(crate) weights: WeightSubsystem,
     /// Base-tick (1200 MHz) counter the clock domains derive from.
-    t: u64,
+    pub(crate) t: u64,
     /// Core cycles elapsed (one per 4 base ticks).
-    core_cycles: u64,
+    pub(crate) core_cycles: u64,
     /// Cumulative line budget granted to the head (Input) engine by an
     /// external feeder — the lines that have arrived over an inter-device
     /// link. `u64::MAX` (default) models a free-running source.
-    input_limit: u64,
+    pub(crate) input_limit: u64,
     /// Cumulative line budget granted to the sink engine by a downstream
     /// consumer — the credit bound of an inter-device link's receive
     /// FIFO. `u64::MAX` (default) models an always-ready consumer.
-    sink_limit: u64,
+    pub(crate) sink_limit: u64,
     /// Set by [`Self::apply_faults`]; gates the report's `faults` block.
     faults_armed: bool,
 }
@@ -215,7 +237,7 @@ impl PipelineSim {
     /// Recompute the dependency thresholds that depend on engine `i`'s
     /// position: what it waits for (need_cache[i]) and the back-pressure
     /// bound it imposes on each of its producers (limit_cache[p][..]).
-    fn refresh_caches(&mut self, i: usize) {
+    pub(crate) fn refresh_caches(&mut self, i: usize) {
         for (k, &(p, p_out_h)) in self.producers_meta[i].iter().enumerate() {
             self.need_cache[i][k] = self.engines[i].cum_input_needed(p_out_h);
             let oldest = self.engines[i].oldest_input_needed(p_out_h);
@@ -431,16 +453,70 @@ impl PipelineSim {
         self.run_inner(cfg, Some(probe))
     }
 
-    fn run_inner(
+    /// Stall diagnosis embedded in the `max_base_ticks` bail: per-class
+    /// totals plus the engines deepest into a stall, with their image /
+    /// line position — enough to see *which* dependency wedged without
+    /// re-running under a probe.
+    pub(crate) fn wedge_breakdown(&self) -> String {
+        use std::fmt::Write as _;
+        let (mut active, mut starved, mut blocked, mut frozen) = (0u64, 0u64, 0u64, 0u64);
+        for e in &self.engines {
+            active += e.stats.active;
+            starved += e.stats.input_starved;
+            blocked += e.stats.output_blocked;
+            frozen += e.stats.weight_frozen;
+        }
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "stall breakdown at core cycle {} (base tick {}):",
+            self.core_cycles, self.t
+        );
+        let _ = writeln!(
+            s,
+            "  totals: active={active} input_starved={starved} output_blocked={blocked} \
+             weight_frozen={frozen}"
+        );
+        let mut worst: Vec<usize> = (0..self.engines.len()).collect();
+        worst.sort_by_key(|&i| {
+            let st = &self.engines[i].stats;
+            std::cmp::Reverse(st.input_starved + st.output_blocked + st.weight_frozen)
+        });
+        for &i in worst.iter().take(4) {
+            let e = &self.engines[i];
+            let _ = writeln!(
+                s,
+                "  [{i}] {}: image {} line-cycle {}/{} ({} lines out), starved={} blocked={} \
+                 frozen={}",
+                self.plan.layers[e.layer_idx].stats.name,
+                e.image,
+                e.line_cycle,
+                e.cycles_per_line,
+                e.lines_produced,
+                e.stats.input_starved,
+                e.stats.output_blocked,
+                e.stats.weight_frozen,
+            );
+        }
+        s.trim_end().to_string()
+    }
+
+    /// The reference run loop: one base tick at a time, every component
+    /// touched every domain cycle. The event-driven path in
+    /// [`crate::sim::events`] must match this tick for tick.
+    fn run_exact(
         &mut self,
         cfg: &SimConfig,
+        images: u64,
         mut probe: Option<&mut dyn Probe>,
-    ) -> Result<SimReport> {
-        let images = cfg.images.max(cfg.warmup_images + 1);
+    ) -> Result<Option<u64>> {
         let mut warmup_done_at: Option<u64> = None;
         loop {
             if self.t >= cfg.max_base_ticks {
-                bail!("simulation exceeded max_base_ticks — pipeline wedged?");
+                bail!(
+                    "simulation exceeded max_base_ticks — pipeline wedged?\n{}",
+                    self.wedge_breakdown()
+                );
             }
             self.step_base_tick_probed(images, probe.as_deref_mut());
             if warmup_done_at.is_none() && self.sink_images_done() >= cfg.warmup_images {
@@ -450,6 +526,20 @@ impl PipelineSim {
                 break;
             }
         }
+        Ok(warmup_done_at)
+    }
+
+    fn run_inner(
+        &mut self,
+        cfg: &SimConfig,
+        mut probe: Option<&mut dyn Probe>,
+    ) -> Result<SimReport> {
+        let images = cfg.images.max(cfg.warmup_images + 1);
+        let warmup_done_at = if cfg.exact_stepping {
+            self.run_exact(cfg, images, probe.as_deref_mut())?
+        } else {
+            crate::sim::events::run_fast(self, cfg, images, probe.as_deref_mut())?
+        };
         if let Some(p) = probe {
             self.sample_probe(p);
         }
@@ -525,7 +615,12 @@ mod tests {
     use crate::nn::zoo;
 
     fn quick_cfg() -> SimConfig {
-        SimConfig { images: 3, warmup_images: 1, max_base_ticks: 20_000_000_000 }
+        SimConfig {
+            images: 3,
+            warmup_images: 1,
+            max_base_ticks: 20_000_000_000,
+            ..Default::default()
+        }
     }
 
     #[test]

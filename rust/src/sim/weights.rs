@@ -324,6 +324,180 @@ impl WeightSubsystem {
         }
     }
 
+    // --- event-driven fast path (crate-internal) ------------------------
+    //
+    // The skip-ahead scheduler in `sim::events` drives the subsystem
+    // through these hooks instead of `hbm_tick_probed`. Semantics are
+    // tick-exact: `try_issue_group` is the slow path's phase-1 body for
+    // one group, `channel_event` is its phase-2 body for one channel, and
+    // consume/catch-up closed forms replace only cycles proven inert.
+
+    /// Number of prefetch groups (one per weight-carrying PC).
+    pub(crate) fn num_groups(&self) -> usize {
+        self.pc_groups.len()
+    }
+
+    /// Number of weight-carrying channels.
+    pub(crate) fn num_active_channels(&self) -> usize {
+        self.active_channels.len()
+    }
+
+    /// `(stack, local_pc)` a group issues to.
+    pub(crate) fn group_target(&self, gi: usize) -> (usize, usize) {
+        (self.pc_groups[gi].stack_idx, self.pc_groups[gi].local_pc)
+    }
+
+    /// Stream indices arbitrated by group `gi`.
+    pub(crate) fn group_streams(&self, gi: usize) -> &[usize] {
+        &self.pc_groups[gi].streams
+    }
+
+    /// Index into the active-channel list for a group's PC.
+    pub(crate) fn channel_index_for_group(&self, gi: usize) -> usize {
+        let key = (self.pc_groups[gi].stack_idx, self.pc_groups[gi].local_pc / 2);
+        self.active_channels.iter().position(|&c| c == key).expect("group channel active")
+    }
+
+    /// Streams feeding `layer` (empty for on-chip layers).
+    pub(crate) fn layer_streams(&self, layer_idx: usize) -> &[usize] {
+        &self.by_layer[layer_idx]
+    }
+
+    /// Words consumed from stream `si` per engine compute cycle.
+    pub(crate) fn stream_chains(&self, si: usize) -> u32 {
+        self.streams[si].chains
+    }
+
+    /// Whole compute cycles stream `si` can currently fuel.
+    pub(crate) fn stream_budget_cycles(&self, si: usize) -> u64 {
+        let s = &self.streams[si];
+        s.fifo_words / s.chains as u64
+    }
+
+    /// Credit words still missing before stream `si` could accept another
+    /// burst issue (0 = `can_acquire` already holds).
+    pub(crate) fn stream_acquire_deficit(&self, si: usize) -> u64 {
+        (self.words_per_burst as u32).saturating_sub(self.streams[si].credits.available()) as u64
+    }
+
+    /// Apply `n` engine compute cycles of consumption to stream `si` in
+    /// closed form — the exact aggregate of `n` per-cycle [`Self::consume`]
+    /// effects on this stream (FIFO drain plus credit return).
+    pub(crate) fn stream_apply_consumes(&mut self, si: usize, n: u64) {
+        if n == 0 {
+            return;
+        }
+        let s = &mut self.streams[si];
+        let words = n * s.chains as u64;
+        debug_assert!(s.fifo_words >= words, "consume schedule overran the FIFO");
+        s.fifo_words -= words;
+        s.credits.release(words as u32);
+    }
+
+    /// Catch both PCs of active channel `ci` up to controller cycle `to`
+    /// (closed-form counter accrual over a command-inert span).
+    pub(crate) fn channel_catch_up(&mut self, ci: usize, to: u64) {
+        let (st, ch) = self.active_channels[ci];
+        let channel = &mut self.stacks[st].channels[ch];
+        channel.pcs[0].catch_up(to);
+        channel.pcs[1].catch_up(to);
+    }
+
+    /// Conservative next-command bound over both PCs of channel `ci`.
+    pub(crate) fn channel_next_wake(&self, ci: usize, now: u64) -> u64 {
+        let (st, ch) = self.active_channels[ci];
+        let channel = &self.stacks[st].channels[ch];
+        channel.pcs[0].next_wake(now).min(channel.pcs[1].next_wake(now))
+    }
+
+    /// Catch one PC up to controller cycle `to` (issue-side bookkeeping:
+    /// a request accepted at cycle `h` must see `pc.now() == h`).
+    pub(crate) fn pc_catch_up(&mut self, stack: usize, local_pc: usize, to: u64) {
+        self.stacks[stack].pc(local_pc).catch_up(to);
+    }
+
+    /// One issue attempt for group `gi` — exactly the slow path's phase-1
+    /// body. The caller must have materialized the group's stream consume
+    /// schedules through the core cycles visible at the current controller
+    /// cycle and caught the target PC up to it. Returns true on issue.
+    pub(crate) fn try_issue_group(&mut self, gi: usize) -> bool {
+        let words_per_burst = self.words_per_burst;
+        let g = &mut self.pc_groups[gi];
+        let n = g.streams.len();
+        for k in 0..n {
+            let si = g.streams[(g.rr + k) % n];
+            let s = &mut self.streams[si];
+            if !s.credits.can_acquire(words_per_burst as u32) {
+                continue;
+            }
+            let ctrl = self.stacks[g.stack_idx].pc(g.local_pc);
+            if !ctrl.can_accept(self.burst) {
+                break; // controller back-pressure: stop for this PC
+            }
+            let id = self.next_id;
+            self.next_id += 1;
+            let addr = s.base + s.next_off;
+            s.next_off += self.burst as u64 * 32;
+            if s.next_off + self.burst as u64 * 32 > s.region {
+                s.next_off = 0; // kernel replay (per-line reload)
+            }
+            s.credits.acquire(words_per_burst as u32);
+            ctrl.push(Request { id, dir: Dir::Read, addr, burst: self.burst });
+            self.pending.insert(id, (si, words_per_burst));
+            g.rr = (g.rr + k + 1) % n;
+            return true;
+        }
+        false
+    }
+
+    /// The fast path's channel event at controller cycle `h`: catch both
+    /// PCs up, run the real channel tick with priority `h % 2`, and drain
+    /// completions / fault events exactly as the slow path does within
+    /// the same controller cycle. The caller must have materialized the
+    /// consume schedules of every stream on this channel through the core
+    /// cycles visible at `h` (FIFO peaks are sampled at refill time).
+    ///
+    /// `refilled_layers` collects the layer of each refilled stream (for
+    /// engine wake-up); `cas_issued[k]` is set when PC `k` completed a
+    /// burst this cycle (its queue drained, so issue may resume).
+    pub(crate) fn channel_event(
+        &mut self,
+        ci: usize,
+        h: u64,
+        mut probe: Option<&mut dyn Probe>,
+        refilled_layers: &mut Vec<usize>,
+        cas_issued: &mut [bool; 2],
+    ) {
+        let (st, ch) = self.active_channels[ci];
+        let channel = &mut self.stacks[st].channels[ch];
+        channel.pcs[0].catch_up(h);
+        channel.pcs[1].catch_up(h);
+        channel.tick_with_priority((h % 2) as usize);
+        for (k, pcc) in channel.pcs.iter_mut().enumerate() {
+            for c in pcc.drain_completions() {
+                cas_issued[k] = true;
+                if let Some((si, words)) = self.pending.remove(&c.id) {
+                    let s = &mut self.streams[si];
+                    s.fifo_words += words;
+                    s.max_words = s.max_words.max(s.fifo_words);
+                    self.beats_read += self.burst as u64;
+                    refilled_layers.push(s.layer_idx);
+                    if let Some(p) = probe.as_deref_mut() {
+                        let pc = st as u32 * self.pcs_per_stack + (ch * 2 + k) as u32;
+                        p.hbm_burst(pc, c.accept_cycle, c.done_cycle, self.burst);
+                    }
+                }
+            }
+            for e in pcc.drain_fault_events() {
+                if let Some(p) = probe.as_deref_mut() {
+                    let pc = st as u32 * self.pcs_per_stack + (ch * 2 + k) as u32;
+                    let kind = if e.replayed { "hbm_replay" } else { "hbm_drop" };
+                    p.fault_event(pc, e.cycle, kind, e.id);
+                }
+            }
+        }
+    }
+
     /// Mean HBM read efficiency across active PCs (busy-cycle basis).
     pub fn mean_read_efficiency(&mut self) -> f64 {
         let mut sum = 0.0;

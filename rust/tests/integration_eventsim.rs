@@ -1,0 +1,171 @@
+//! Integration: the event-driven fast simulation path is bit-exact
+//! against the per-tick reference path (ISSUE 10 acceptance).
+//!
+//! The skip-ahead scheduler is only allowed to exist because it is
+//! indistinguishable from per-tick stepping: every test here runs the
+//! same workload through both paths and demands byte-identical report
+//! JSON — engine stall breakdowns, PC efficiency counters, FIFO peaks,
+//! fault ledgers and all. Covered workloads:
+//!
+//! (a) every Table I zoo model, single device;
+//! (b) a 2-shard fleet with credit-based inter-device links;
+//! (c) a probed run (flight recorder attached): windowed samples are
+//!     taken at identical cycles with identical cumulative counters;
+//! (d) a seeded chaos run (HBM read errors + a thermal-throttle window)
+//!     on one device, and a fleet run with a link stall, credit loss,
+//!     and a replica outage;
+//! (e) the `next_allowed` skip bound never jumps an allowed cycle
+//!     inside a throttle window (checked against `denies()` directly).
+
+use h2pipe::cluster::{partition, FleetConfig, FleetSim, PartitionOptions};
+use h2pipe::compiler::compile;
+use h2pipe::config::{CompilerOptions, DeviceConfig};
+use h2pipe::faults::{
+    next_allowed, FaultPlan, HbmFaultSpec, LinkFault, LinkFaultKind, ReplicaOutage, ThrottleWindow,
+};
+use h2pipe::nn::zoo;
+use h2pipe::obs::Recorder;
+use h2pipe::sim::pipeline::{PipelineSim, SimConfig};
+
+fn device() -> DeviceConfig {
+    DeviceConfig::stratix10_nx2100()
+}
+
+fn cfg(exact: bool) -> SimConfig {
+    SimConfig { images: 3, warmup_images: 1, exact_stepping: exact, ..SimConfig::default() }
+}
+
+#[test]
+fn fast_path_is_byte_identical_on_every_zoo_model() {
+    let d = device();
+    let o = CompilerOptions::default();
+    for net in zoo::table1_models() {
+        let plan = compile(&net, &d, &o).unwrap();
+        let exact = PipelineSim::new(&net, &plan).unwrap().run(&cfg(true)).unwrap();
+        let fast = PipelineSim::new(&net, &plan).unwrap().run(&cfg(false)).unwrap();
+        assert_eq!(
+            exact.to_json().to_string(),
+            fast.to_json().to_string(),
+            "{}: event path diverged from per-tick reference",
+            net.name
+        );
+    }
+}
+
+#[test]
+fn fast_path_is_byte_identical_on_a_two_shard_fleet() {
+    let d = device();
+    let net = zoo::resnet18();
+    let o = CompilerOptions::default();
+    let pp = partition(&net, &d, &o, &PartitionOptions { shards: Some(2), max_shards: 2 }).unwrap();
+    let fleet = FleetSim::new(&pp).unwrap();
+    let base = FleetConfig { images: 3, warmup_images: 1, ..FleetConfig::default() };
+    let exact = fleet.run(&FleetConfig { exact_stepping: true, ..base.clone() }).unwrap();
+    let fast = fleet.run(&FleetConfig { exact_stepping: false, ..base }).unwrap();
+    assert_eq!(
+        exact.to_json().to_string(),
+        fast.to_json().to_string(),
+        "fleet event path diverged from per-tick reference"
+    );
+}
+
+#[test]
+fn fast_path_is_byte_identical_with_a_recorder_attached() {
+    let d = device();
+    let net = zoo::resnet18();
+    let plan = compile(&net, &d, &CompilerOptions::default()).unwrap();
+    let run = |exact: bool| {
+        let mut rec = Recorder::new(2048);
+        let rep = PipelineSim::new(&net, &plan).unwrap().run_probed(&cfg(exact), &mut rec).unwrap();
+        (rep.to_json().to_string(), rec.profile().to_string())
+    };
+    let (exact_rep, exact_prof) = run(true);
+    let (fast_rep, fast_prof) = run(false);
+    assert_eq!(exact_rep, fast_rep, "probed report diverged");
+    assert_eq!(exact_prof, fast_prof, "recorder profile diverged");
+}
+
+#[test]
+fn fast_path_is_byte_identical_under_seeded_chaos() {
+    // HBM read errors force replay scheduling and a thermal throttle
+    // denies CAS issue in a duty-cycled window — both perturb command
+    // timing, so any scheduler skip over a window boundary would show
+    // up as a diverged stall/fault ledger.
+    let d = device();
+    let net = zoo::resnet18();
+    let plan = compile(&net, &d, &CompilerOptions::default()).unwrap();
+    let mut fp = FaultPlan::new(7);
+    fp.hbm = Some(HbmFaultSpec { start: 0, end: 200_000, prob: 0.01, max_replays: 3 });
+    fp.throttle.push(ThrottleWindow { pc: 0, start: 1_000, end: 150_000, deny: 3, period: 8 });
+    fp.throttle.push(ThrottleWindow { pc: 1, start: 50_000, end: 90_000, deny: 5, period: 16 });
+    let run = |exact: bool| {
+        let mut sim = PipelineSim::new(&net, &plan).unwrap();
+        sim.apply_faults(&fp);
+        sim.run(&cfg(exact)).unwrap().to_json().to_string()
+    };
+    assert_eq!(run(true), run(false), "chaos event path diverged from per-tick reference");
+}
+
+#[test]
+fn fast_path_is_byte_identical_on_a_chaos_fleet() {
+    let d = device();
+    let net = zoo::resnet18();
+    let o = CompilerOptions::default();
+    let pp = partition(&net, &d, &o, &PartitionOptions { shards: Some(2), max_shards: 2 }).unwrap();
+    let mut fp = FaultPlan::new(13);
+    fp.hbm = Some(HbmFaultSpec { start: 0, end: 100_000, prob: 0.02, max_replays: 3 });
+    fp.links.push(LinkFault { link: 0, start: 5_000, end: 60_000, kind: LinkFaultKind::Stall });
+    fp.links.push(LinkFault {
+        link: 0,
+        start: 80_000,
+        end: 400_000,
+        kind: LinkFaultKind::CreditLoss(6),
+    });
+    fp.replicas.push(ReplicaOutage { replica: 0, start: 10_000, end: 90_000 });
+    let run = |exact: bool| {
+        let mut fleet = FleetSim::new(&pp).unwrap();
+        fleet.apply_faults(&fp).unwrap();
+        let cfg = FleetConfig {
+            images: 3,
+            warmup_images: 1,
+            exact_stepping: exact,
+            ..FleetConfig::default()
+        };
+        fleet.run(&cfg).unwrap().to_json().to_string()
+    };
+    assert_eq!(run(true), run(false), "chaos fleet event path diverged");
+}
+
+#[test]
+fn next_allowed_never_jumps_an_allowed_cycle() {
+    // The scheduler's throttle skip bound must land on the first cycle
+    // the per-tick path would have issued at: every cycle it skips is
+    // denied, and (when it converges) the landing cycle is allowed.
+    let mut sets: Vec<Vec<ThrottleWindow>> = Vec::new();
+    for period in [2u64, 5, 8] {
+        for deny in 1..period {
+            sets.push(vec![ThrottleWindow { pc: 0, start: 10, end: 100, deny, period }]);
+        }
+    }
+    // overlapping pair with different phases/periods
+    sets.push(vec![
+        ThrottleWindow { pc: 0, start: 0, end: 120, deny: 2, period: 6 },
+        ThrottleWindow { pc: 0, start: 30, end: 80, deny: 3, period: 4 },
+    ]);
+    for ws in &sets {
+        for from in 0..160u64 {
+            let a = next_allowed(ws, from);
+            assert!(a >= from);
+            for c in from..a {
+                assert!(
+                    ws.iter().any(|w| w.denies(c)),
+                    "skip from {from} to {a} jumped allowed cycle {c} ({ws:?})"
+                );
+            }
+            assert!(
+                !ws.iter().any(|w| w.denies(a)),
+                "landing cycle {a} from {from} is still denied ({ws:?})"
+            );
+        }
+    }
+}
